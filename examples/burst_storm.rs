@@ -1,0 +1,97 @@
+//! Burst-storm scenario: the scaling story of Fig. 17/18 — a large
+//! system configuration (80 machines) absorbing maximal uniform bursts,
+//! where software schedulers drown and the systolic architecture's
+//! near-constant iteration latency pays off. Contrasts the two
+//! microarchitecture simulators on the *same* storm and reports
+//! accelerator-side time, host software time, and routing feasibility.
+//!
+//! Run: `cargo run --release --example burst_storm`
+
+use std::time::Instant;
+
+use stannic::baselines::SimdSos;
+use stannic::hw::{resources, routing, CLOCK_HZ, U55C};
+use stannic::prelude::*;
+use stannic::workload::BurstType;
+
+fn main() {
+    let machines = 80;
+    let depth = 10;
+    let park = MachinePark::cycled(machines);
+
+    // Maximal uniform bursts, no idle: every tick brings 8 new jobs.
+    let spec = WorkloadSpec::default()
+        .with_burst(8, BurstType::Uniform)
+        .with_idle(0, 0);
+    let trace = generate_trace(&spec, &park, 4000, 777);
+    println!(
+        "storm: {} jobs at 8/tick over {} machines (depth {depth})\n",
+        trace.n_jobs(),
+        machines
+    );
+
+    // Feasibility: can each architecture even be built at this scale?
+    println!(
+        "routing on U55C: HERCULES {:?} | STANNIC {:?}",
+        routing::route_hercules(machines, depth, &U55C),
+        routing::route_stannic(machines, depth, &U55C),
+    );
+    let r = resources::stannic(machines, depth);
+    println!("STANNIC at {machines}x{depth}: {} LUTs / {} FFs\n", r.luts, r.ffs);
+
+    // Drive the Stannic simulator through the storm.
+    let mut sim = StannicSim::new(machines, depth, 0.5, Precision::Int8);
+    let mut events = trace.events().iter().peekable();
+    let mut tick = 0u64;
+    let mut stalled = 0u64;
+    let host_started = Instant::now();
+    loop {
+        tick += 1;
+        while events.peek().is_some_and(|e| e.tick <= tick) {
+            stannic::sim::ArchSim::submit(&mut sim, events.next().unwrap().job.clone().unwrap());
+        }
+        let out = stannic::sim::ArchSim::tick(&mut sim, None);
+        if out.stalled {
+            stalled += 1;
+        }
+        if stannic::sim::ArchSim::is_idle(&sim) && events.peek().is_none() {
+            break;
+        }
+    }
+    let host_elapsed = host_started.elapsed();
+    let stats = stannic::sim::ArchSim::stats(&sim);
+    println!(
+        "STANNIC storm: {} iterations, {} cycles = {:.3} ms at 371.47 MHz \
+         (decision latency {} cycles; {} stalled iterations)",
+        stats.iterations(),
+        stats.total_cycles(),
+        stats.total_cycles() as f64 / CLOCK_HZ * 1e3,
+        stats.decision_latency,
+        stalled
+    );
+    println!("host-side simulation wall time: {host_elapsed:.2?}");
+
+    // Same storm through the AVX-style software scheduler, wall-clocked.
+    let mut avx = SimdSos::new(machines, depth, 0.5, Precision::Int8);
+    let mut events = trace.events().iter().peekable();
+    let started = Instant::now();
+    let mut tick = 0u64;
+    loop {
+        tick += 1;
+        while events.peek().is_some_and(|e| e.tick <= tick) {
+            avx.submit(events.next().unwrap().job.clone().unwrap());
+        }
+        avx.tick(None);
+        if avx.is_idle() && events.peek().is_none() {
+            break;
+        }
+    }
+    let avx_secs = started.elapsed().as_secs_f64();
+    let stannic_secs = stats.total_cycles() as f64 / CLOCK_HZ;
+    println!(
+        "\nAVX software: {:.3} ms wall vs STANNIC accelerator {:.3} ms — {:.1}x at {machines} machines",
+        avx_secs * 1e3,
+        stannic_secs * 1e3,
+        avx_secs / stannic_secs
+    );
+}

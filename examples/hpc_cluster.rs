@@ -1,0 +1,83 @@
+//! HPC-cluster scenario: the workload the paper's introduction
+//! motivates — a shared heterogeneous cluster absorbing a mixed stream
+//! of CPU-heavy, GPU-heavy and balanced jobs. Compares SOSA against all
+//! four baseline schedulers on fairness, load balance, and latency, and
+//! demonstrates the heterogeneity-awareness (GPU-friendly jobs flow to
+//! GPUs, memory-bound jobs to CPUs).
+//!
+//! Run: `cargo run --release --example hpc_cluster`
+
+use stannic::baselines::{GreedyScheduler, RoundRobin, WsGreedy, WsRoundRobin};
+use stannic::bench::Table;
+use stannic::cluster::{Cluster, ClusterConfig, OnlineScheduler, SosCluster};
+use stannic::prelude::*;
+
+fn run_one<S: OnlineScheduler>(mut s: S, park: &MachinePark, trace: &Trace) -> RunSummary {
+    Cluster::new(park.clone(), ClusterConfig::default()).run(&mut s, trace)
+}
+
+fn main() {
+    // A 15-machine shared cluster: 6 CPUs, 6 GPUs, 3 balanced nodes.
+    let park = MachinePark::from_composition(6, 6, 3);
+    println!(
+        "cluster: {} machines ({} CPU / {} GPU / {} mixed)",
+        park.len(),
+        6,
+        6,
+        3
+    );
+
+    // Compute-skewed burst traffic with idle windows — the "task burst"
+    // regime the introduction cites as breaking offline schedulers.
+    let spec = WorkloadSpec::compute_skewed().with_burst(6, stannic::workload::BurstType::Random);
+    let trace = generate_trace(&spec, &park, 1200, 2024);
+    println!("workload: {} jobs, compute-skewed bursts\n", trace.n_jobs());
+
+    let m = park.len();
+    let summaries = vec![
+        run_one(SosCluster::new(m, 10, 0.5, Precision::Int8), &park, &trace),
+        run_one(RoundRobin::new(), &park, &trace),
+        run_one(GreedyScheduler::new(), &park, &trace),
+        run_one(WsRoundRobin::new(), &park, &trace),
+        run_one(WsGreedy::new(), &park, &trace),
+    ];
+
+    let mut t = Table::new(&[
+        "scheduler",
+        "fairness",
+        "load CV",
+        "avg latency",
+        "makespan",
+        "starved?",
+    ]);
+    for s in &summaries {
+        t.row(vec![
+            s.scheduler.into(),
+            format!("{:.3}", s.metrics.fairness),
+            format!("{:.3}", s.metrics.load_balance_cv),
+            format!("{:.1}", s.metrics.avg_latency),
+            s.makespan.to_string(),
+            if s.metrics.starvation { "YES" } else { "no" }.into(),
+        ]);
+    }
+    t.print();
+
+    // Heterogeneity-awareness: under the compute skew, SOS should route
+    // more work to GPUs (fast for compute) than plain RR does.
+    let sos = &summaries[0];
+    let rr = &summaries[1];
+    let gpu_share = |s: &RunSummary| -> f64 {
+        let gpu_jobs: usize = park
+            .iter()
+            .filter(|mm| mm.kind == MachineKind::Gpu)
+            .map(|mm| s.metrics.jobs_per_machine[mm.id])
+            .sum();
+        gpu_jobs as f64 / s.metrics.total_scheduled as f64
+    };
+    println!(
+        "\nGPU share of compute-skewed load: SOS {:.1}% vs RR {:.1}% — \
+         heterogeneity-aware placement",
+        100.0 * gpu_share(sos),
+        100.0 * gpu_share(rr)
+    );
+}

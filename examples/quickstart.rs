@@ -1,0 +1,69 @@
+//! Quickstart: schedule a small workload on the paper's M1–M5 machine
+//! park with the golden SOS engine, then verify the cycle-accurate
+//! STANNIC simulator reproduces the exact same schedule.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use stannic::prelude::*;
+
+fn main() {
+    // 1. The paper's five-machine heterogeneous system (Section 7.1):
+    //    M1:<CPU,Best> M2:<CPU,Worst> M3:<Mixed,Best> M4:<GPU,Best> M5:<GPU,Worst>
+    let park = MachinePark::paper_m1_m5();
+    println!("machines: {:?}", park.labels());
+
+    // 2. A stochastic workload: 35% memory / 35% compute / 30% mixed jobs,
+    //    random bursts, idle periods (Section 7.1's workload generator).
+    let spec = WorkloadSpec::default();
+    let trace = generate_trace(&spec, &park, 200, 42);
+    println!(
+        "workload: {} jobs over {} ticks",
+        trace.n_jobs(),
+        trace.horizon()
+    );
+
+    // 3. Schedule with the golden SOS engine at the paper's INT8
+    //    precision, alpha = 0.5, depth-10 virtual schedules.
+    let mut engine = SosEngine::new(park.len(), 10, 0.5, Precision::Int8);
+    let mut events = trace.events().iter().peekable();
+    let mut jobs_per_machine = vec![0usize; park.len()];
+    let mut tick = 0u64;
+    loop {
+        tick += 1;
+        while events.peek().is_some_and(|e| e.tick <= tick) {
+            engine.submit(events.next().unwrap().job.clone().unwrap());
+        }
+        let out = engine.tick(None);
+        if let Some(a) = &out.assigned {
+            jobs_per_machine[a.machine] += 1;
+            if a.job <= 5 {
+                println!(
+                    "  job {:>3} -> {} (cost {:.0}, slot {})",
+                    a.job,
+                    park[a.machine].label(),
+                    a.cost,
+                    a.position
+                );
+            }
+        }
+        if engine.is_idle() && events.peek().is_none() {
+            break;
+        }
+    }
+    println!("jobs per machine: {jobs_per_machine:?} ({tick} ticks)");
+
+    // 4. The cycle-accurate systolic simulator produces the *identical*
+    //    schedule while counting hardware cycles.
+    let mut golden = SosEngine::new(park.len(), 10, 0.5, Precision::Int8);
+    let mut sim = StannicSim::new(park.len(), 10, 0.5, Precision::Int8);
+    let ticks =
+        stannic::sim::lockstep_verify(&mut sim, &mut golden, &trace, 10_000_000).unwrap();
+    let stats = sim.stats();
+    println!(
+        "stannic sim: parity over {ticks} ticks, {} cycles total, decision latency {} cycles \
+         ({:.2} us at 371.47 MHz)",
+        stats.total_cycles(),
+        stats.decision_latency,
+        stats.decision_latency as f64 / stannic::hw::CLOCK_HZ * 1e6,
+    );
+}

@@ -1,0 +1,124 @@
+"""AOT bridge: lower the L2 jax functions to HLO TEXT artifacts.
+
+HLO *text* (NOT `.serialize()`) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/gen_hlo.py.
+
+Emitted artifacts (one set per (M, D) configuration):
+  artifacts/stannic_cost_{M}x{D}.hlo.txt   systolic cost+argmin+pos
+  artifacts/hercules_cost_{M}x{D}.hlo.txt  dense cost+argmin+pos
+  artifacts/tick_{M}x{D}.hlo.txt           virtual-work update + pop flags
+  artifacts/batched_cost_{M}x{D}x{B}.hlo.txt  B-job what-if cost batch
+  artifacts/manifest.json                  config inventory for the runtime
+
+Default configs are the paper's C1-C4 plus a 20x10 used by the Fig. 17
+scaling study. Usage:  python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# C1-C4 of Section 7.2 plus one scaling point for Fig 17.
+DEFAULT_CONFIGS = [(5, 10), (5, 20), (10, 10), (10, 20), (20, 10)]
+DEFAULT_BATCH = 16
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _specs(m, d):
+    f = jnp.float32
+    mat = jax.ShapeDtypeStruct((m, d), f)
+    vec = jax.ShapeDtypeStruct((m,), f)
+    scl = jax.ShapeDtypeStruct((), f)
+    return mat, vec, scl
+
+
+def lower_cost(m, d, impl):
+    # Signature: (t, rem_hi, rem_lo, valid, j_w, j_eps, t_j) — t_j is the
+    # host-quantized stored WSPT of the incoming job (the hardware
+    # computes T once at job creation; the quantized value must drive the
+    # HI/LO comparisons for schedule parity with the INT8 datapath).
+    mat, vec, scl = _specs(m, d)
+    fn = functools.partial(model.cost_select, impl=impl)
+    return jax.jit(fn).lower(mat, mat, mat, mat, scl, vec, vec)
+
+
+def lower_tick(m, d):
+    _, vec, scl = _specs(m, d)
+    return jax.jit(model.tick_update).lower(vec, vec, vec, scl)
+
+
+def lower_batched(m, d, b):
+    mat, _, _ = _specs(m, d)
+    wb = jax.ShapeDtypeStruct((b,), jnp.float32)
+    eb = jax.ShapeDtypeStruct((b, m), jnp.float32)
+    return jax.jit(model.batched_cost).lower(mat, mat, mat, mat, wb, eb)
+
+
+def emit(out_dir, configs, batch):
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"configs": [], "batch": batch}
+    for m, d in configs:
+        arts = {
+            f"stannic_cost_{m}x{d}.hlo.txt": lower_cost(m, d, "stannic"),
+            f"stannic_fused_cost_{m}x{d}.hlo.txt": lower_cost(m, d, "stannic_fused"),
+            f"hercules_cost_{m}x{d}.hlo.txt": lower_cost(m, d, "hercules"),
+            f"tick_{m}x{d}.hlo.txt": lower_tick(m, d),
+            f"batched_cost_{m}x{d}x{batch}.hlo.txt": lower_batched(m, d, batch),
+        }
+        for name, lowered in arts.items():
+            path = os.path.join(out_dir, name)
+            text = to_hlo_text(lowered)
+            with open(path, "w") as f:
+                f.write(text)
+            print(f"wrote {path} ({len(text)} chars)")
+        manifest["configs"].append({"machines": m, "depth": d})
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {out_dir}/manifest.json")
+
+
+def parse_configs(s):
+    out = []
+    for part in s.split(","):
+        m, d = part.lower().split("x")
+        out.append((int(m), int(d)))
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None,
+                    help="compat: also write the stannic C1 artifact here")
+    ap.add_argument("--configs", type=parse_configs, default=DEFAULT_CONFIGS,
+                    help="comma list like 5x10,10x20")
+    ap.add_argument("--batch", type=int, default=DEFAULT_BATCH)
+    args = ap.parse_args()
+    emit(args.out_dir, args.configs, args.batch)
+    if args.out:
+        m, d = args.configs[0]
+        text = to_hlo_text(lower_cost(m, d, "stannic"))
+        with open(args.out, "w") as f:
+            f.write(text)
+        print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""L1 Pallas kernel — the HERCULES dense cost calculation, TPU-adapted.
+
+HERCULES (Section 4) computes the cost with per-job Individual Job Cost
+Calculators feeding two tree adders (TAH for sum^HI, TAL for sum^LO): every
+IJCC computes *both* candidate contributions and masks out the irrelevant
+one, then the tree adders reduce across the full schedule depth each query.
+
+The TPU analog is a full masked reduction per row, recomputed per query —
+no memoization, no ordering assumption. This kernel exists (a) as the
+faithful analog of the Hercules datapath for the architectural comparison
+and (b) as an in-Pallas cross-check of `stannic_cost.py` that does not
+depend on the proper-ordering invariant.
+
+interpret=True for CPU-PJRT execution (see stannic_cost.py docstring).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import FULL_COST
+
+
+def _hercules_kernel(tj_ref, jw_ref, jeps_ref, t_ref, rem_hi_ref, rem_lo_ref,
+                     valid_ref, cost_ref, pos_ref):
+    """One grid step = one machine's Cost Calculator (Fig. 6a)."""
+    t = t_ref[0, :]
+    v = valid_ref[0, :]
+    t_j = tj_ref[0]
+    j_w = jw_ref[0]
+    j_eps = jeps_ref[0]
+
+    # IJCC (Fig. 6b): WSPT comparator + masking of the irrelevant term.
+    hi = (t >= t_j) & (v > 0.0)
+    lo = (t < t_j) & (v > 0.0)
+
+    # TAH / TAL: single-cycle tree reductions across all N slots.
+    sum_hi = jnp.sum(jnp.where(hi, rem_hi_ref[0, :], 0.0))
+    sum_lo = jnp.sum(jnp.where(lo, rem_lo_ref[0, :], 0.0))
+
+    cost_h = j_w * (j_eps + sum_hi)
+    cost_l = j_eps * sum_lo
+
+    full = jnp.all(v > 0.0)
+    cost_ref[0] = jnp.where(full, FULL_COST, cost_h + cost_l)
+    # Job Index Calculator: popcount of the WSPT comparator outputs.
+    pos_ref[0] = jnp.sum(hi.astype(jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnames=())
+def hercules_cost(t, rem_hi, rem_lo, valid, j_w, j_eps, t_j=None):
+    """Dense cost query: returns (cost [M], pos [M]). No ordering required."""
+    m, d = t.shape
+    t_j = (j_w / j_eps if t_j is None else t_j).astype(jnp.float32)
+    j_w_row = jnp.broadcast_to(jnp.asarray(j_w, jnp.float32), (m,))
+    row = lambda i: (i, 0)
+    scalar = lambda i: (i,)
+    return pl.pallas_call(
+        _hercules_kernel,
+        grid=(m,),
+        in_specs=[
+            pl.BlockSpec((1,), scalar),
+            pl.BlockSpec((1,), scalar),
+            pl.BlockSpec((1,), scalar),
+            pl.BlockSpec((1, d), row),
+            pl.BlockSpec((1, d), row),
+            pl.BlockSpec((1, d), row),
+            pl.BlockSpec((1, d), row),
+        ],
+        out_specs=[
+            pl.BlockSpec((1,), scalar),
+            pl.BlockSpec((1,), scalar),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m,), jnp.float32),
+            jax.ShapeDtypeStruct((m,), jnp.int32),
+        ],
+        interpret=True,
+    )(t_j, j_w_row, j_eps.astype(jnp.float32), t.astype(jnp.float32),
+      rem_hi.astype(jnp.float32), rem_lo.astype(jnp.float32),
+      valid.astype(jnp.float32))

@@ -1,0 +1,76 @@
+"""Pure-jnp oracle for the SOS cost computation.
+
+This is the correctness reference for both Pallas kernels
+(`stannic_cost.py`, `hercules_cost.py`). It implements Equations (4) and
+(5) of the paper directly as dense masked reductions, with no ordering
+assumption on the virtual schedules.
+
+Shapes (M = number of machines, D = virtual-schedule depth):
+  t      [M, D]  WSPT ratio T_i^K of the job in each slot (garbage if invalid)
+  rem_hi [M, D]  K.eps_i - n_K      (remaining HI contribution)
+  rem_lo [M, D]  K.W - n_K * T_i^K  (remaining LO contribution)
+  valid  [M, D]  1.0 for occupied slots, 0.0 for bubbles
+  j_w    []      weight of the incoming job J
+  j_eps  [M]     expected processing time of J on each machine
+
+Returns:
+  cost [M]  assignment cost per machine; FULL_COST where the schedule is full
+  pos  [M]  insertion index of J in each V_i (count of valid jobs with
+            T_i^K >= T_i^J — the sigma^H set; Eq. (2) splits on >= / <)
+"""
+
+import jax.numpy as jnp
+
+# Sentinel cost for machines whose virtual schedule is full (Section 6.2.2:
+# "full V_i s can not be assigned new jobs"). Large but finite so argmin
+# still works even when *every* machine is full.
+FULL_COST = 3.0e38
+
+
+def cost_ref(t, rem_hi, rem_lo, valid, j_w, j_eps, t_j=None):
+    """Dense reference for cost(J -> M_i), Eq. (4) + Eq. (5).
+
+    `t_j` is the per-machine WSPT of the incoming job. The hardware
+    computes it once and stores it in the datapath's (possibly quantized)
+    WSPT format, so callers running a quantized schedule MUST pass the
+    quantized value; when omitted it defaults to the exact `j_w / j_eps`.
+    """
+    t = jnp.asarray(t, jnp.float32)
+    rem_hi = jnp.asarray(rem_hi, jnp.float32)
+    rem_lo = jnp.asarray(rem_lo, jnp.float32)
+    valid = jnp.asarray(valid, jnp.float32)
+    j_w = jnp.asarray(j_w, jnp.float32)
+    j_eps = jnp.asarray(j_eps, jnp.float32)
+
+    t_j = j_w / j_eps if t_j is None else jnp.asarray(t_j, jnp.float32)  # [M]
+    hi = (t >= t_j[:, None]) & (valid > 0)              # sigma^H mask [M, D]
+    lo = (t < t_j[:, None]) & (valid > 0)               # sigma^L mask [M, D]
+
+    sum_hi = jnp.sum(jnp.where(hi, rem_hi, 0.0), axis=1)   # [M]
+    sum_lo = jnp.sum(jnp.where(lo, rem_lo, 0.0), axis=1)   # [M]
+
+    cost_h = j_w * (j_eps + sum_hi)                     # Eq. (4)
+    cost_l = j_eps * sum_lo                             # Eq. (5)
+    cost = cost_h + cost_l
+
+    full = jnp.all(valid > 0, axis=1)
+    cost = jnp.where(full, FULL_COST, cost)
+    pos = jnp.sum(hi.astype(jnp.int32), axis=1)         # insertion index
+    return cost, pos
+
+
+def tick_ref(eps_head, n_head, valid_head, alpha):
+    """Virtual-work accrual + alpha release check for the head of each V_i.
+
+    Discrete Phase III: the head accrues one cycle of virtual work per tick;
+    it is released when n_head >= ceil(alpha * eps_head).
+    Returns (n_next [M], pop [M] int32 0/1). Pop is evaluated on the
+    *post-increment* count, matching the golden Rust engine.
+    """
+    eps_head = jnp.asarray(eps_head, jnp.float32)
+    n_head = jnp.asarray(n_head, jnp.float32)
+    valid_head = jnp.asarray(valid_head, jnp.float32)
+    n_next = n_head + valid_head
+    thresh = jnp.ceil(alpha * eps_head)
+    pop = ((n_next >= thresh) & (valid_head > 0)).astype(jnp.int32)
+    return n_next, pop

@@ -1,0 +1,116 @@
+"""L1 Pallas kernel — the STANNIC systolic cost calculation, TPU-adapted.
+
+Hardware adaptation (DESIGN.md §2). On the FPGA, each PE of a machine's
+1-D systolic array holds one job's (T_i^K, sumHI, sumLO); the incoming
+job's WSPT is broadcast, every PE does a local compare C, and the two PEs
+straddling the HI/LO threshold volunteer their *memoized* prefix/suffix
+sums — turning the O(D) cost reduction into an O(1) lookup.
+
+On TPU there are no per-job PEs, so the same insight — "proper WSPT
+ordering makes the HI/LO split a prefix property, so pre-computed
+prefix/suffix sums reduce the cost query to a lookup" — maps to:
+
+  * each machine's V_i is one row of a [M, D] VMEM-resident block
+    (BlockSpec tiles one machine row per grid step);
+  * the broadcast bus is a scalar broadcast of T_i^J across the row;
+  * the per-PE compare C is a vectorized `t >= t_j`;
+  * the memoized sumHI/sumLO registers are a forward cumsum of rem_hi and
+    a reverse cumsum of rem_lo along the depth axis (computed in-VMEM —
+    the analog of the systolic pre-calculation which STANNIC maintains
+    incrementally across iterations);
+  * the threshold PEs "volunteering" their values is a dynamic take at
+    the threshold index (a single-element gather, not a reduction).
+
+CORRECTNESS PRECONDITION (Definition 4, "Properly Ordered Systolic
+Virtual Schedule"): within each row, valid jobs form a contiguous prefix
+and their T values are non-increasing. Exactly like the hardware, the
+kernel is only correct under this loop invariant; `hercules_cost.py` and
+`ref.py` carry no such assumption and are used to cross-check it.
+
+Pallas runs with interpret=True: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, and correctness is the CPU-side goal. TPU VMEM/MXU
+estimates live in EXPERIMENTS.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import FULL_COST
+
+
+def _stannic_kernel(tj_ref, jw_ref, jeps_ref, t_ref, rem_hi_ref, rem_lo_ref,
+                    valid_ref, cost_ref, pos_ref):
+    """One grid step = one machine row (one SMMU)."""
+    d = t_ref.shape[1]
+    t = t_ref[0, :]                       # [D] per-PE T_i^K
+    v = valid_ref[0, :]                   # [D] PE occupancy
+    t_j = tj_ref[0]                       # broadcast bus: T_i^J
+    j_w = jw_ref[0]
+    j_eps = jeps_ref[0]
+
+    # Local PE comparison (Eq. 6): C=0 <=> job contributes to sum^HI.
+    hi = (t >= t_j) & (v > 0.0)           # [D] bool
+
+    # Systolic memoization analog: prefix sum of remaining-HI terms and
+    # suffix sum of remaining-LO terms. Invalid PEs contribute 0.
+    pre_hi = jnp.cumsum(rem_hi_ref[0, :] * v)                  # [D]
+    suf_lo = jnp.cumsum((rem_lo_ref[0, :] * v)[::-1])[::-1]    # [D]
+
+    # Threshold self-identification: under proper ordering the HI set is
+    # exactly the first `pos` PEs. popcount of C==0 gives the insertion
+    # index (the Job Index Calculator of Section 4.1.2, localized).
+    pos = jnp.sum(hi.astype(jnp.int32))
+
+    # The two threshold PEs volunteer their memoized values (O(1) lookup).
+    sum_hi = jnp.where(pos > 0, jnp.take(pre_hi, jnp.maximum(pos - 1, 0)), 0.0)
+    sum_lo = jnp.where(pos < d, jnp.take(suf_lo, jnp.minimum(pos, d - 1)), 0.0)
+
+    cost_h = j_w * (j_eps + sum_hi)       # Eq. (4)
+    cost_l = j_eps * sum_lo               # Eq. (5)
+
+    full = jnp.all(v > 0.0)
+    cost_ref[0] = jnp.where(full, FULL_COST, cost_h + cost_l)
+    pos_ref[0] = pos
+
+
+@functools.partial(jax.jit, static_argnames=())
+def stannic_cost(t, rem_hi, rem_lo, valid, j_w, j_eps, t_j=None):
+    """Systolic cost query: returns (cost [M], pos [M]).
+
+    Arguments as in `ref.cost_ref` (`t_j` defaults to the exact ratio;
+    quantized schedules pass the stored WSPT). Requires properly-ordered
+    rows.
+    """
+    m, d = t.shape
+    t_j = (j_w / j_eps if t_j is None else t_j).astype(jnp.float32)  # [M]
+    j_w_row = jnp.broadcast_to(jnp.asarray(j_w, jnp.float32), (m,))
+    grid = (m,)
+    row = lambda i: (i, 0)
+    scalar = lambda i: (i,)
+    return pl.pallas_call(
+        _stannic_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), scalar),        # t_j
+            pl.BlockSpec((1,), scalar),        # j_w
+            pl.BlockSpec((1,), scalar),        # j_eps
+            pl.BlockSpec((1, d), row),         # t
+            pl.BlockSpec((1, d), row),         # rem_hi
+            pl.BlockSpec((1, d), row),         # rem_lo
+            pl.BlockSpec((1, d), row),         # valid
+        ],
+        out_specs=[
+            pl.BlockSpec((1,), scalar),        # cost
+            pl.BlockSpec((1,), scalar),        # pos
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m,), jnp.float32),
+            jax.ShapeDtypeStruct((m,), jnp.int32),
+        ],
+        interpret=True,
+    )(t_j, j_w_row, j_eps.astype(jnp.float32), t.astype(jnp.float32),
+      rem_hi.astype(jnp.float32), rem_lo.astype(jnp.float32),
+      valid.astype(jnp.float32))

@@ -1,0 +1,83 @@
+"""L1 Pallas kernel — fused all-rows variant of the systolic cost query.
+
+`stannic_cost.py` mirrors the hardware structure: one grid step per
+machine (one SMMU per row). This variant exploits the TPU sizing analysis
+of EXPERIMENTS.md §Perf: even the paper's largest configuration
+(140 x 10 x 4 arrays x 4 B ≈ 22 kB) fits VMEM whole, so a single block
+can process every machine at once — vectorizing the PE comparisons and
+the memoized prefix/suffix sums across both axes and removing the grid
+loop entirely. Same math, same outputs, better lowering for small M·D.
+
+Correctness precondition identical to the per-row kernel (Definition 4
+proper ordering per row); parity with `ref.cost_ref` is pytest-enforced.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import FULL_COST
+
+
+def _fused_kernel(tj_ref, jw_ref, jeps_ref, t_ref, rem_hi_ref, rem_lo_ref,
+                  valid_ref, cost_ref, pos_ref):
+    """One block = the whole [M, D] state."""
+    m, d = t_ref.shape
+    t = t_ref[...]                       # [M, D]
+    v = valid_ref[...]
+    t_j = tj_ref[...]                    # [M]
+    j_w = jw_ref[...]
+    j_eps = jeps_ref[...]
+
+    hi = (t >= t_j[:, None]) & (v > 0.0)            # [M, D]
+    pre_hi = jnp.cumsum(rem_hi_ref[...] * v, axis=1)
+    suf_lo = jnp.cumsum((rem_lo_ref[...] * v)[:, ::-1], axis=1)[:, ::-1]
+
+    pos = jnp.sum(hi.astype(jnp.int32), axis=1)     # [M]
+    row = jnp.arange(m)
+    sum_hi = jnp.where(
+        pos > 0, pre_hi[row, jnp.maximum(pos - 1, 0)], 0.0)
+    in_range = pos < d
+    sum_lo = jnp.where(
+        in_range, suf_lo[row, jnp.minimum(pos, d - 1)], 0.0)
+
+    cost = j_w * (j_eps + sum_hi) + j_eps * sum_lo
+    full = jnp.all(v > 0.0, axis=1)
+    cost_ref[...] = jnp.where(full, FULL_COST, cost)
+    pos_ref[...] = pos
+
+
+@functools.partial(jax.jit, static_argnames=())
+def stannic_cost_fused(t, rem_hi, rem_lo, valid, j_w, j_eps, t_j=None):
+    """Fused systolic cost query: (cost [M], pos [M]); one VMEM block."""
+    m, d = t.shape
+    t_j = (j_w / j_eps if t_j is None else t_j).astype(jnp.float32)
+    j_w_row = jnp.broadcast_to(jnp.asarray(j_w, jnp.float32), (m,))
+    whole = lambda: (0, 0)
+    vec = lambda: (0,)
+    return pl.pallas_call(
+        _fused_kernel,
+        grid=(),
+        in_specs=[
+            pl.BlockSpec((m,), vec),
+            pl.BlockSpec((m,), vec),
+            pl.BlockSpec((m,), vec),
+            pl.BlockSpec((m, d), whole),
+            pl.BlockSpec((m, d), whole),
+            pl.BlockSpec((m, d), whole),
+            pl.BlockSpec((m, d), whole),
+        ],
+        out_specs=[
+            pl.BlockSpec((m,), vec),
+            pl.BlockSpec((m,), vec),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m,), jnp.float32),
+            jax.ShapeDtypeStruct((m,), jnp.int32),
+        ],
+        interpret=True,
+    )(t_j, j_w_row, j_eps.astype(jnp.float32), t.astype(jnp.float32),
+      rem_hi.astype(jnp.float32), rem_lo.astype(jnp.float32),
+      valid.astype(jnp.float32))

@@ -1,0 +1,85 @@
+"""L2 — the JAX compute graph of the SOS accelerator datapath.
+
+This is the "model" of the three-layer stack: the batched, multi-machine
+cost-and-select computation (Phase II of the SOS algorithm) plus the
+per-tick virtual-work update (Phase III), written as pure jax functions
+that call the L1 Pallas kernels. `aot.py` lowers these once to HLO text;
+the Rust runtime (`rust/src/runtime/`) loads and executes them — Python is
+never on the request path.
+
+State layout mirrors the Rust `XlaScheduleState` (runtime/state.rs):
+  t       [M, D] f32  WSPT of each slot
+  rem_hi  [M, D] f32  eps - n  per slot
+  rem_lo  [M, D] f32  W - n*T  per slot
+  valid   [M, D] f32  occupancy
+  eps0    [M]    f32  eps of head slot
+  n0      [M]    f32  virtual-work count of head slot
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.hercules_cost import hercules_cost
+from .kernels.stannic_cost import stannic_cost
+from .kernels.stannic_fused import stannic_cost_fused
+from .kernels import ref
+
+
+def cost_select(t, rem_hi, rem_lo, valid, j_w, j_eps, t_j=None, *, impl="stannic"):
+    """Phase II: per-machine cost, global argmin, insertion positions.
+
+    Returns (cost [M] f32, best [] i32, pos [M] i32). The Cost Comparator
+    of both architectures resolves ties toward the lowest machine index,
+    which is exactly jnp.argmin's tie-breaking rule. `t_j` carries the
+    (quantized) stored WSPT of the incoming job; None = exact ratio.
+    """
+    kern = {"stannic": stannic_cost,
+            "stannic_fused": stannic_cost_fused,
+            "hercules": hercules_cost,
+            "ref": ref.cost_ref}[impl]
+    cost, pos = kern(t, rem_hi, rem_lo, valid, j_w, j_eps, t_j)
+    best = jnp.argmin(cost).astype(jnp.int32)
+    return cost, best, pos
+
+
+def tick_update(eps0, n0, valid0, alpha):
+    """Phase III: virtual-work accrual + alpha-release check (all machines).
+
+    Returns (n_next [M] f32, pop [M] i32).
+    """
+    return ref.tick_ref(eps0, n0, valid0, alpha)
+
+
+def fused_step(t, rem_hi, rem_lo, valid, eps0, n0, j_w, j_eps, alpha,
+               *, impl="stannic"):
+    """One full scheduler iteration against the accelerator: the alpha/pop
+    check over the post-previous-tick state, then the cost query for the
+    incoming job. Pop flags and assignment are returned together so the
+    host does one round-trip per iteration (the paper's single-iteration
+    path A->B->C->D->E->F of Fig. 9).
+
+    NOTE: the cost query here is evaluated over the *pre-pop* arrays; the
+    host applies pops first when a pop flag is set and then re-issues the
+    cost query for exactness (POP+Insert iterations are ~alpha-rare). The
+    combined output still saves a round-trip on the common Standard and
+    Insert paths.
+    """
+    n_next, pop = tick_update(eps0, n0, valid[:, 0], alpha)
+    cost, best, pos = cost_select(t, rem_hi, rem_lo, valid, j_w, j_eps,
+                                  impl=impl)
+    return cost, best, pos, n_next, pop
+
+
+def batched_cost(t, rem_hi, rem_lo, valid, j_w_batch, j_eps_batch,
+                 *, impl="ref"):
+    """Throughput-oriented variant: evaluate a batch of B candidate jobs
+    against a *fixed* schedule state (used by the burst-arrival bench to
+    amortize dispatch overhead, and by what-if cost analyses).
+
+    j_w_batch [B], j_eps_batch [B, M] -> cost [B, M], pos [B, M] i32.
+    Uses the dense reference datapath: vmapping a pallas_call with
+    interpret=True is legal but lowers to B copies; the dense form fuses.
+    """
+    def one(j_w, j_eps):
+        return ref.cost_ref(t, rem_hi, rem_lo, valid, j_w, j_eps)
+    return jax.vmap(one)(j_w_batch, j_eps_batch)

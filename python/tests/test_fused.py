@@ -1,0 +1,57 @@
+"""Fused all-rows kernel vs the per-row kernel and the oracle."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import cost_ref
+from compile.kernels.stannic_cost import stannic_cost
+from compile.kernels.stannic_fused import stannic_cost_fused
+
+from tests.test_kernel import make_ordered_state
+
+
+@settings(max_examples=30, deadline=None)
+@given(m=st.integers(1, 12), d=st.integers(1, 24),
+       seed=st.integers(0, 2**31 - 1))
+def test_fused_matches_ref_and_per_row(m, d, seed):
+    rng = np.random.default_rng(seed)
+    t, rem_hi, rem_lo, valid = make_ordered_state(rng, m, d)
+    j_w = np.float32(rng.uniform(1, 255))
+    j_eps = rng.uniform(10, 255, m).astype(np.float32)
+
+    c0, p0 = cost_ref(t, rem_hi, rem_lo, valid, j_w, j_eps)
+    cf, pf = stannic_cost_fused(jnp.array(t), jnp.array(rem_hi),
+                                jnp.array(rem_lo), jnp.array(valid),
+                                jnp.float32(j_w), jnp.array(j_eps))
+    cr, pr = stannic_cost(jnp.array(t), jnp.array(rem_hi),
+                          jnp.array(rem_lo), jnp.array(valid),
+                          jnp.float32(j_w), jnp.array(j_eps))
+    np.testing.assert_allclose(np.array(cf), np.array(c0), rtol=1e-5, atol=1e-3)
+    np.testing.assert_allclose(np.array(cf), np.array(cr), rtol=1e-6)
+    np.testing.assert_array_equal(np.array(pf), np.array(p0))
+    np.testing.assert_array_equal(np.array(pf), np.array(pr))
+
+
+def test_fused_with_explicit_quantized_tj():
+    rng = np.random.default_rng(4)
+    m, d = 5, 10
+    t, rem_hi, rem_lo, valid = make_ordered_state(rng, m, d)
+    j_w = np.float32(33.0)
+    j_eps = rng.uniform(10, 255, m).astype(np.float32)
+    # quantized T_j (UQ4.4), as the Rust INT8 datapath supplies
+    t_j = np.round((j_w / j_eps) * 16.0) / 16.0
+    c0, p0 = cost_ref(t, rem_hi, rem_lo, valid, j_w, j_eps, t_j)
+    cf, pf = stannic_cost_fused(jnp.array(t), jnp.array(rem_hi),
+                                jnp.array(rem_lo), jnp.array(valid),
+                                jnp.float32(j_w), jnp.array(j_eps),
+                                jnp.array(t_j.astype(np.float32)))
+    np.testing.assert_allclose(np.array(cf), np.array(c0), rtol=1e-6)
+    np.testing.assert_array_equal(np.array(pf), np.array(p0))
+
+
+def test_fused_aot_lowering():
+    from compile import aot
+    text = aot.to_hlo_text(aot.lower_cost(3, 4, "stannic_fused"))
+    assert text.startswith("HloModule")
+    assert "f32[3,4]" in text

@@ -1,0 +1,172 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+The hypothesis sweep generates properly-ordered virtual schedules
+(Definition 4) across shapes and occupancy patterns and asserts
+assert_allclose against ref.cost_ref; hercules_cost is additionally
+exercised on *unordered* schedules, which it must handle (no invariant).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import cost_ref, tick_ref, FULL_COST
+from compile.kernels.stannic_cost import stannic_cost
+from compile.kernels.hercules_cost import hercules_cost
+
+
+def make_ordered_state(rng, m, d, fill=None):
+    """Random properly-ordered schedule state (valid prefix, T descending)."""
+    valid = np.zeros((m, d), np.float32)
+    t = np.zeros((m, d), np.float32)
+    rem_hi = np.zeros((m, d), np.float32)
+    rem_lo = np.zeros((m, d), np.float32)
+    for i in range(m):
+        k = rng.integers(0, d + 1) if fill is None else fill
+        valid[i, :k] = 1.0
+        t[i, :k] = np.sort(rng.uniform(0.004, 25.5, k))[::-1]
+        rem_hi[i, :k] = rng.uniform(1, 255, k)
+        rem_lo[i, :k] = rng.uniform(0.5, 255, k)
+    return t, rem_hi, rem_lo, valid
+
+
+def run_all(t, rem_hi, rem_lo, valid, j_w, j_eps):
+    c0, p0 = cost_ref(t, rem_hi, rem_lo, valid, j_w, j_eps)
+    c1, p1 = stannic_cost(jnp.array(t), jnp.array(rem_hi), jnp.array(rem_lo),
+                          jnp.array(valid), jnp.float32(j_w), jnp.array(j_eps))
+    c2, p2 = hercules_cost(jnp.array(t), jnp.array(rem_hi), jnp.array(rem_lo),
+                           jnp.array(valid), jnp.float32(j_w), jnp.array(j_eps))
+    return (np.array(c0), np.array(p0)), (np.array(c1), np.array(p1)), \
+           (np.array(c2), np.array(p2))
+
+
+@settings(max_examples=40, deadline=None)
+@given(m=st.integers(1, 12), d=st.integers(1, 24),
+       seed=st.integers(0, 2**31 - 1),
+       j_w=st.floats(1.0, 255.0, allow_nan=False))
+def test_kernels_match_ref_hypothesis(m, d, seed, j_w):
+    rng = np.random.default_rng(seed)
+    t, rem_hi, rem_lo, valid = make_ordered_state(rng, m, d)
+    j_eps = rng.uniform(10, 255, m).astype(np.float32)
+    (c0, p0), (c1, p1), (c2, p2) = run_all(t, rem_hi, rem_lo, valid,
+                                           np.float32(j_w), j_eps)
+    np.testing.assert_allclose(c1, c0, rtol=1e-5, atol=1e-3)
+    np.testing.assert_allclose(c2, c0, rtol=1e-5, atol=1e-3)
+    np.testing.assert_array_equal(p1, p0)
+    np.testing.assert_array_equal(p2, p0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=st.integers(1, 8), d=st.integers(1, 16),
+       seed=st.integers(0, 2**31 - 1))
+def test_hercules_handles_unordered(m, d, seed):
+    """The dense datapath carries no ordering invariant: shuffle rows."""
+    rng = np.random.default_rng(seed)
+    t, rem_hi, rem_lo, valid = make_ordered_state(rng, m, d)
+    perm = rng.permutation(d)
+    t, rem_hi, rem_lo, valid = (a[:, perm] for a in (t, rem_hi, rem_lo, valid))
+    j_w = np.float32(rng.uniform(1, 255))
+    j_eps = rng.uniform(10, 255, m).astype(np.float32)
+    c0, p0 = cost_ref(t, rem_hi, rem_lo, valid, j_w, j_eps)
+    c2, p2 = hercules_cost(jnp.array(t), jnp.array(rem_hi), jnp.array(rem_lo),
+                           jnp.array(valid), jnp.float32(j_w), jnp.array(j_eps))
+    np.testing.assert_allclose(np.array(c2), np.array(c0), rtol=1e-5, atol=1e-3)
+    np.testing.assert_array_equal(np.array(p2), np.array(p0))
+
+
+def test_empty_schedules():
+    m, d = 4, 8
+    z = np.zeros((m, d), np.float32)
+    j_eps = np.full(m, 50.0, np.float32)
+    (c0, p0), (c1, p1), (c2, p2) = run_all(z, z, z, z, np.float32(3.0), j_eps)
+    # Empty V_i: cost = J.W * J.eps_i (Eq. 4 with empty sums).
+    np.testing.assert_allclose(c0, 3.0 * j_eps, rtol=1e-6)
+    np.testing.assert_allclose(c1, c0, rtol=1e-6)
+    np.testing.assert_allclose(c2, c0, rtol=1e-6)
+    assert (p0 == 0).all() and (p1 == 0).all() and (p2 == 0).all()
+
+
+def test_full_schedule_blocked():
+    rng = np.random.default_rng(7)
+    m, d = 3, 6
+    t, rem_hi, rem_lo, valid = make_ordered_state(rng, m, d, fill=d)
+    valid[1, :] = 0.0  # machine 1 empty, others full
+    t[1, :] = rem_hi[1, :] = rem_lo[1, :] = 0.0
+    j_eps = rng.uniform(10, 100, m).astype(np.float32)
+    (c0, _), (c1, _), (c2, _) = run_all(t, rem_hi, rem_lo, valid,
+                                        np.float32(5.0), j_eps)
+    for c in (c0, c1, c2):
+        assert c[0] == FULL_COST and c[2] == FULL_COST
+        assert c[1] < FULL_COST
+        assert int(np.argmin(c)) == 1
+
+
+def test_tie_wspt_counts_as_hi():
+    """Eq. (2): sigma^H is 'higher OR EQUAL' priority."""
+    m, d = 1, 4
+    t = np.array([[2.0, 1.0, 0.0, 0.0]], np.float32)
+    rem_hi = np.array([[10.0, 20.0, 0.0, 0.0]], np.float32)
+    rem_lo = np.array([[4.0, 6.0, 0.0, 0.0]], np.float32)
+    valid = np.array([[1.0, 1.0, 0.0, 0.0]], np.float32)
+    # T_j = j_w/j_eps = 1.0 exactly -> slot 1 ties -> HI.
+    j_w, j_eps = np.float32(10.0), np.array([10.0], np.float32)
+    (c0, p0), (c1, p1), (c2, p2) = run_all(t, rem_hi, rem_lo, valid, j_w, j_eps)
+    expected = 10.0 * (10.0 + 30.0)  # both jobs in sigma^H, sigma^L empty
+    for c, p in ((c0, p0), (c1, p1), (c2, p2)):
+        np.testing.assert_allclose(c, [expected], rtol=1e-6)
+        assert p[0] == 2
+
+
+def test_all_lo():
+    """Incoming job outranks everything -> pos 0, pure cost^L."""
+    m, d = 1, 3
+    t = np.array([[0.5, 0.25, 0.1]], np.float32)
+    rem_hi = np.array([[9.0, 9.0, 9.0]], np.float32)
+    rem_lo = np.array([[3.0, 2.0, 1.0]], np.float32)
+    valid = np.ones((m, d), np.float32)
+    # full schedule would block; use d+1 depth instead
+    t = np.pad(t, ((0, 0), (0, 1)))
+    rem_hi = np.pad(rem_hi, ((0, 0), (0, 1)))
+    rem_lo = np.pad(rem_lo, ((0, 0), (0, 1)))
+    valid = np.pad(valid, ((0, 0), (0, 1)))
+    j_w, j_eps = np.float32(100.0), np.array([10.0], np.float32)  # T_j = 10
+    (c0, p0), (c1, p1), (c2, p2) = run_all(t, rem_hi, rem_lo, valid, j_w, j_eps)
+    expected = 100.0 * 10.0 + 10.0 * 6.0
+    for c, p in ((c0, p0), (c1, p1), (c2, p2)):
+        np.testing.assert_allclose(c, [expected], rtol=1e-6)
+        assert p[0] == 0
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=st.integers(1, 10), seed=st.integers(0, 2**31 - 1),
+       alpha=st.floats(0.05, 1.0))
+def test_tick_ref_semantics(m, seed, alpha):
+    rng = np.random.default_rng(seed)
+    eps0 = rng.uniform(10, 255, m).astype(np.float32)
+    n0 = rng.uniform(0, 255, m).astype(np.float32)
+    valid0 = (rng.uniform(size=m) < 0.7).astype(np.float32)
+    n1, pop = tick_ref(eps0, n0, valid0, np.float32(alpha))
+    n1, pop = np.array(n1), np.array(pop)
+    np.testing.assert_allclose(n1, n0 + valid0, rtol=1e-6)
+    want = ((n1 >= np.ceil(alpha * eps0)) & (valid0 > 0)).astype(np.int32)
+    np.testing.assert_array_equal(pop, want)
+
+
+def test_pop_never_negative_sums():
+    """Paper's Remark (Sec 3.2): with the alpha release policy, rem_hi of a
+    tracked job can never go below zero before release."""
+    alpha = 0.6
+    eps = 20.0
+    n = 0.0
+    for _ in range(100):
+        n1, pop = tick_ref(np.array([eps], np.float32),
+                           np.array([n], np.float32),
+                           np.array([1.0], np.float32), np.float32(alpha))
+        n = float(np.array(n1)[0])
+        assert eps - n >= 0.0
+        if int(np.array(pop)[0]):
+            break
+    else:
+        pytest.fail("head never released")
+    assert n == np.ceil(alpha * eps)

@@ -1,0 +1,80 @@
+"""L2 correctness: model-level functions (cost_select / tick / batched)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels.ref import cost_ref
+
+from tests.test_kernel import make_ordered_state
+
+
+@pytest.mark.parametrize("impl", ["stannic", "hercules", "ref"])
+def test_cost_select_argmin_ties_to_lowest_index(impl):
+    m, d = 4, 6
+    z = np.zeros((m, d), np.float32)
+    j_eps = np.full(m, 25.0, np.float32)  # identical costs everywhere
+    cost, best, pos = model.cost_select(jnp.array(z), jnp.array(z),
+                                        jnp.array(z), jnp.array(z),
+                                        jnp.float32(2.0), jnp.array(j_eps),
+                                        impl=impl)
+    assert int(best) == 0
+    np.testing.assert_allclose(np.array(cost), 2.0 * j_eps, rtol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=st.integers(1, 8), d=st.integers(1, 16),
+       seed=st.integers(0, 2**31 - 1))
+def test_cost_select_impl_parity(m, d, seed):
+    rng = np.random.default_rng(seed)
+    t, rem_hi, rem_lo, valid = make_ordered_state(rng, m, d)
+    j_w = np.float32(rng.uniform(1, 255))
+    j_eps = rng.uniform(10, 255, m).astype(np.float32)
+    outs = {}
+    for impl in ("stannic", "hercules", "ref"):
+        c, b, p = model.cost_select(jnp.array(t), jnp.array(rem_hi),
+                                    jnp.array(rem_lo), jnp.array(valid),
+                                    jnp.float32(j_w), jnp.array(j_eps),
+                                    impl=impl)
+        outs[impl] = (np.array(c), int(b), np.array(p))
+    for impl in ("hercules", "ref"):
+        np.testing.assert_allclose(outs[impl][0], outs["stannic"][0],
+                                   rtol=1e-5, atol=1e-3)
+        assert outs[impl][1] == outs["stannic"][1]
+        np.testing.assert_array_equal(outs[impl][2], outs["stannic"][2])
+
+
+def test_batched_cost_matches_loop():
+    rng = np.random.default_rng(11)
+    m, d, b = 5, 10, 8
+    t, rem_hi, rem_lo, valid = make_ordered_state(rng, m, d)
+    j_w = rng.uniform(1, 255, b).astype(np.float32)
+    j_eps = rng.uniform(10, 255, (b, m)).astype(np.float32)
+    cb, pb = model.batched_cost(jnp.array(t), jnp.array(rem_hi),
+                                jnp.array(rem_lo), jnp.array(valid),
+                                jnp.array(j_w), jnp.array(j_eps))
+    cb, pb = np.array(cb), np.array(pb)
+    for k in range(b):
+        c0, p0 = cost_ref(t, rem_hi, rem_lo, valid, j_w[k], j_eps[k])
+        np.testing.assert_allclose(cb[k], np.array(c0), rtol=1e-6)
+        np.testing.assert_array_equal(pb[k], np.array(p0))
+
+
+def test_fused_step_shapes_and_pop():
+    rng = np.random.default_rng(3)
+    m, d = 5, 10
+    t, rem_hi, rem_lo, valid = make_ordered_state(rng, m, d, fill=3)
+    eps0 = rem_hi[:, 0].copy()  # n=0 initially so eps == rem_hi at head
+    n0 = np.full(m, 0.0, np.float32)
+    cost, best, pos, n1, pop = model.fused_step(
+        jnp.array(t), jnp.array(rem_hi), jnp.array(rem_lo), jnp.array(valid),
+        jnp.array(eps0), jnp.array(n0), jnp.float32(4.0),
+        jnp.array(rng.uniform(10, 255, m).astype(np.float32)),
+        jnp.float32(0.5), impl="stannic")
+    assert np.array(cost).shape == (m,)
+    assert np.array(pos).shape == (m,)
+    assert np.array(n1).shape == (m,)
+    np.testing.assert_allclose(np.array(n1), n0 + 1.0)
+    assert np.array(pop).shape == (m,)

@@ -1,0 +1,21 @@
+//! Bench: ablation studies backing the paper's prose-level design
+//! decisions — alpha_J policy sweep, virtual-schedule depth sweep,
+//! tree-adder vs accumulator Cost Calculator, and the Section 5 batched
+//! host-interface critique.
+//!
+//! Run: `cargo bench --bench ablations` (`-- --quick` for smoke).
+
+use stannic::report::{ablations, Effort};
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let effort = if quick { Effort::Quick } else { Effort::Paper };
+
+    let text = ablations::render(
+        &ablations::alpha_sweep(effort, 42),
+        &ablations::depth_sweep(effort, 42),
+        &ablations::adder_ablation(),
+        &ablations::batch_interface_sweep(effort, 42),
+    );
+    print!("{text}");
+}

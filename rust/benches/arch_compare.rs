@@ -1,0 +1,59 @@
+//! Bench: Fig. 18 — the full quantitative architecture comparison:
+//! iteration latency (a), FF (b), LUT (c), averages + max routable
+//! configuration (d); plus measured per-iteration simulator cost on
+//! this host (the repo's own overhead, not a paper number).
+//!
+//! Run: `cargo bench --bench arch_compare`.
+
+use stannic::bench::{bench, fmt_ns, BenchOpts, Table};
+use stannic::core::MachinePark;
+use stannic::quant::Precision;
+use stannic::report::fig18;
+use stannic::sim::{hercules::HerculesSim, stannic::StannicSim, ArchSim};
+use stannic::workload::{generate_trace, WorkloadSpec};
+
+fn drive<S: ArchSim>(mut sim: S, trace: &stannic::workload::Trace) -> u64 {
+    let mut events = trace.events().iter().peekable();
+    let mut t = 0u64;
+    loop {
+        t += 1;
+        while events.peek().is_some_and(|e| e.tick <= t) {
+            sim.submit(events.next().unwrap().job.clone().unwrap());
+        }
+        sim.tick(None);
+        if sim.is_idle() && events.peek().is_none() {
+            return sim.stats().total_cycles();
+        }
+    }
+}
+
+fn main() {
+    print!("{}", fig18::render(&fig18::run()));
+
+    println!("\nhost-side simulator cost (cycle-accurate models, 300 jobs)");
+    let mut t = Table::new(&["sim", "config", "host time", "sim cycles"]);
+    for &(m, d) in &stannic::hw::resources::PAPER_CONFIGS {
+        let park = MachinePark::cycled(m);
+        let trace = generate_trace(&WorkloadSpec::default(), &park, 300, 7);
+        let mut cycles = 0;
+        let meas = bench(BenchOpts::quick(), || {
+            cycles = drive(HerculesSim::new(m, d, 0.5, Precision::Int8), &trace);
+        });
+        t.row(vec![
+            "hercules".into(),
+            format!("{m}x{d}"),
+            fmt_ns(meas.mean_ns),
+            cycles.to_string(),
+        ]);
+        let meas = bench(BenchOpts::quick(), || {
+            cycles = drive(StannicSim::new(m, d, 0.5, Precision::Int8), &trace);
+        });
+        t.row(vec![
+            "stannic".into(),
+            format!("{m}x{d}"),
+            fmt_ns(meas.mean_ns),
+            cycles.to_string(),
+        ]);
+    }
+    t.print();
+}

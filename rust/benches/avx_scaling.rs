@@ -1,0 +1,25 @@
+//! Bench: Fig. 17 — AVX-style lane-vectorised software SOS vs STANNIC
+//! across system configuration sizes (depth 10), with the PCIe
+//! component of Stannic's latency broken out.
+//!
+//! Run: `cargo bench --bench avx_scaling` (`-- --quick` for smoke).
+
+use stannic::report::{fig17, Effort};
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let effort = if quick { Effort::Quick } else { Effort::Paper };
+
+    let rows = fig17::run(effort, 42);
+    print!("{}", fig17::render(&rows));
+
+    // crossover analysis
+    let crossover = rows
+        .iter()
+        .find(|r| r.stannic_secs + r.pcie_secs < r.avx_secs)
+        .map(|r| r.machines);
+    match crossover {
+        Some(m) => println!("\ncrossover: STANNIC overtakes AVX at <= {m} machines"),
+        None => println!("\ncrossover: AVX held the lead over the tested sweep"),
+    }
+}

@@ -1,0 +1,34 @@
+//! Bench: Fig. 19 — SOSA vs RR / Greedy / WSRR / WSG under the five
+//! Section 8.4 workload scenarios: per-machine job distribution and
+//! average latency, plus fairness and load-balance CV.
+//!
+//! Run: `cargo bench --bench baselines` (`-- --quick` for smoke).
+
+use stannic::report::{fig19, Effort};
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let effort = if quick { Effort::Quick } else { Effort::Paper };
+
+    let results = fig19::run(effort, 42);
+    print!("{}", fig19::render(&results));
+
+    // Section 8.4 summary assertions, printed as a scorecard
+    println!("\nscorecard (paper's qualitative claims):");
+    for r in &results {
+        let sos = r.cells.iter().find(|c| c.scheduler == "SOS").unwrap();
+        let best_fair = r
+            .cells
+            .iter()
+            .map(|c| c.metrics.fairness)
+            .fold(f64::MIN, f64::max);
+        println!(
+            "  {:<34} SOS fairness {:.3} (best {:.3}), SOS latency {:.1}, starvation: {}",
+            r.scenario.name(),
+            sos.metrics.fairness,
+            best_fair,
+            sos.metrics.avg_latency,
+            sos.metrics.starvation
+        );
+    }
+}

@@ -1,0 +1,132 @@
+//! Bench: hot-path microbenchmarks for the §Perf optimization pass —
+//! not a paper figure, but the profile that drives L3 tuning:
+//!
+//! * golden-engine tick (standard / insert)
+//! * stannic-sim tick (the PE-array update)
+//! * XLA cost-query dispatch (the accelerator round-trip)
+//! * end-to-end coordinator throughput
+//!
+//! Run: `cargo bench --bench hotpath`.
+
+use stannic::bench::{bench, fmt_ns, BenchOpts, Table};
+use stannic::config::EngineKind;
+use stannic::coordinator::{build_engine, serve, ServeOpts};
+use stannic::core::MachinePark;
+use stannic::quant::Precision;
+use stannic::runtime::{ArtifactRegistry, CostImpl, XlaCostEngine, XlaScheduleState};
+use stannic::scheduler::SosEngine;
+use stannic::sim::{stannic::StannicSim, ArchSim};
+use stannic::workload::{generate_trace, WorkloadSpec};
+
+fn main() {
+    let mut t = Table::new(&["hot path", "mean", "min", "per-unit"]);
+
+    // 1. golden engine: saturated tick stream (insert-heavy)
+    {
+        let park = MachinePark::cycled(10);
+        let trace = generate_trace(&WorkloadSpec::default(), &park, 2000, 3);
+        let m = bench(BenchOpts::default(), || {
+            let mut e = SosEngine::new(10, 20, 0.5, Precision::Int8);
+            let mut events = trace.events().iter().peekable();
+            let mut tick = 0u64;
+            loop {
+                tick += 1;
+                while events.peek().is_some_and(|ev| ev.tick <= tick) {
+                    e.submit(events.next().unwrap().job.clone().unwrap());
+                }
+                std::hint::black_box(e.tick(None));
+                if e.is_idle() && events.peek().is_none() {
+                    break;
+                }
+            }
+            std::hint::black_box(tick);
+        });
+        t.row(vec![
+            "SosEngine full run (2k jobs, 10x20)".into(),
+            fmt_ns(m.mean_ns),
+            fmt_ns(m.min_ns),
+            format!("{}/job", fmt_ns(m.mean_ns / 2000.0)),
+        ]);
+    }
+
+    // 2. stannic sim tick
+    {
+        let park = MachinePark::cycled(10);
+        let trace = generate_trace(&WorkloadSpec::default(), &park, 1000, 3);
+        let m = bench(BenchOpts::default(), || {
+            let mut s = StannicSim::new(10, 20, 0.5, Precision::Int8);
+            let mut events = trace.events().iter().peekable();
+            let mut tick = 0u64;
+            loop {
+                tick += 1;
+                while events.peek().is_some_and(|ev| ev.tick <= tick) {
+                    ArchSim::submit(&mut s, events.next().unwrap().job.clone().unwrap());
+                }
+                std::hint::black_box(ArchSim::tick(&mut s, None));
+                if ArchSim::is_idle(&s) && events.peek().is_none() {
+                    break;
+                }
+            }
+        });
+        t.row(vec![
+            "StannicSim full run (1k jobs, 10x20)".into(),
+            fmt_ns(m.mean_ns),
+            fmt_ns(m.min_ns),
+            format!("{}/job", fmt_ns(m.mean_ns / 1000.0)),
+        ]);
+    }
+
+    // 3. XLA dispatch latency (needs artifacts)
+    if let Ok(reg) = ArtifactRegistry::open_default() {
+        let mut eng = XlaCostEngine::compile(&reg, CostImpl::Stannic, 10, 10).unwrap();
+        let mut state = XlaScheduleState::new(10, 10);
+        for mach in 0..10usize {
+            for k in 0..5usize {
+                let w = (10 + mach * 3 + k) as f32;
+                let eps = (20 + 7 * k) as f32;
+                state.insert(
+                    mach,
+                    k,
+                    (mach * 10 + k + 1) as u64,
+                    w,
+                    eps,
+                    w / eps,
+                    (0.5 * eps).ceil() as u32,
+                );
+            }
+        }
+        let j_eps = vec![30.0f32; 10];
+        let j_t: Vec<f32> = j_eps.iter().map(|e| 12.0 / e).collect();
+        let m = bench(BenchOpts::default(), || {
+            std::hint::black_box(eng.cost_select(&state, 12.0, &j_eps, &j_t).unwrap());
+        });
+        t.row(vec![
+            "XLA cost query (10x10)".into(),
+            fmt_ns(m.mean_ns),
+            fmt_ns(m.min_ns),
+            format!("{}/query", fmt_ns(m.mean_ns)),
+        ]);
+    } else {
+        eprintln!("(skipping XLA dispatch bench: run `make artifacts`)");
+    }
+
+    // 4. end-to-end coordinator
+    {
+        let park = MachinePark::paper_m1_m5();
+        let trace = generate_trace(&WorkloadSpec::default(), &park, 1000, 9);
+        let m = bench(BenchOpts::default(), || {
+            let engine =
+                build_engine(EngineKind::Native, 5, 10, 0.5, Precision::Int8).unwrap();
+            let r = serve(engine, &trace, &ServeOpts::default()).unwrap();
+            std::hint::black_box(r.completions.len());
+        });
+        t.row(vec![
+            "coordinator e2e (1k jobs, native)".into(),
+            fmt_ns(m.mean_ns),
+            fmt_ns(m.min_ns),
+            format!("{}/job", fmt_ns(m.mean_ns / 1000.0)),
+        ]);
+    }
+
+    t.print();
+}

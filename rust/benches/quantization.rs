@@ -1,0 +1,25 @@
+//! Bench: Fig. 7 — the quantization study. Regenerates all four panels
+//! at paper effort and times the study.
+//!
+//! Run: `cargo bench --bench quantization` (add `-- --quick` for smoke).
+
+use stannic::bench::{bench, fmt_ns, BenchOpts};
+use stannic::report::{fig7, Effort};
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let effort = if quick { Effort::Quick } else { Effort::Paper };
+
+    let reports = fig7::run(effort, 42);
+    print!("{}", fig7::render(&reports));
+
+    let m = bench(BenchOpts::quick(), || {
+        std::hint::black_box(fig7::run(Effort::Quick, 7));
+    });
+    println!(
+        "\ntiming: quick-effort Fig 7 study mean {} (min {}) over {} iters",
+        fmt_ns(m.mean_ns),
+        fmt_ns(m.min_ns),
+        m.iters
+    );
+}

@@ -1,0 +1,26 @@
+//! Bench: Fig. 16 — (a) per-machine jobs/latency; (b) the headline
+//! speedup table (software SOSC wall-clock vs simulated hardware time at
+//! 371.47 MHz) for configurations C1–C4 with power estimates.
+//!
+//! Run: `cargo bench --bench speedup` (`-- --quick` for smoke).
+
+use stannic::report::{fig16, Effort};
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let effort = if quick { Effort::Quick } else { Effort::Paper };
+
+    print!("{}", fig16::render_16a(&fig16::run_16a(effort, 42)));
+    println!();
+    let rows = fig16::run_16b(effort, 42);
+    print!("{}", fig16::render_16b(&rows));
+
+    // headline summary (Section 8.2): best-config speedups
+    let best_h = rows.iter().map(|r| r.hercules_su).fold(f64::MIN, f64::max);
+    let best_s = rows.iter().map(|r| r.stannic_su).fold(f64::MIN, f64::max);
+    println!(
+        "\nheadline: Hercules up to {best_h:.0}x, Stannic up to {best_s:.0}x over the \
+         naive software baseline (paper: 1060x / 1968x on a Xeon W5-3433 vs Alveo U55C; \
+         ratios scale with the software host — see EXPERIMENTS.md)"
+    );
+}

@@ -1,0 +1,26 @@
+//! Bench: Fig. 15 — SOSA effectiveness over Monte-Carlo workloads
+//! (utilization trajectory + throughput stability) plus the per-workload
+//! scheduling rate.
+//!
+//! Run: `cargo bench --bench workload_sweep` (`-- --quick` for smoke).
+
+use stannic::bench::{bench, fmt_ns, BenchOpts};
+use stannic::report::{fig15, Effort};
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let effort = if quick { Effort::Quick } else { Effort::Paper };
+
+    let f = fig15::run(effort, 42);
+    print!("{}", fig15::render(&f));
+
+    let m = bench(BenchOpts::quick(), || {
+        std::hint::black_box(fig15::run(Effort::Quick, 13));
+    });
+    println!(
+        "\ntiming: quick-effort sweep mean {} (min {}) over {} iters",
+        fmt_ns(m.mean_ns),
+        fmt_ns(m.min_ns),
+        m.iters
+    );
+}

@@ -1,0 +1,73 @@
+//! Greedy baseline (Dong et al.): each job goes to the machine with the
+//! minimum estimated completion time — current backlog plus the job's
+//! own EPT on that machine. Heterogeneity-aware through the EPT vector,
+//! but has no notion of job priority or stochastic release control.
+
+use crate::cluster::{OnlineScheduler, WorkQueue};
+use crate::core::Job;
+
+#[derive(Debug, Default)]
+pub struct GreedyScheduler {
+    buf: Vec<Job>,
+}
+
+impl GreedyScheduler {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl OnlineScheduler for GreedyScheduler {
+    fn name(&self) -> &'static str {
+        "Greedy"
+    }
+
+    fn submit(&mut self, job: Job) {
+        self.buf.push(job);
+    }
+
+    fn tick(&mut self, now: u64, queues: &mut [WorkQueue]) {
+        for job in self.buf.drain(..) {
+            let best = (0..queues.len())
+                .min_by(|&a, &b| {
+                    let ca = queues[a].backlog_estimate(a, now) + job.ept[a] as f64;
+                    let cb = queues[b].backlog_estimate(b, now) + job.ept[b] as f64;
+                    ca.partial_cmp(&cb).expect("finite costs")
+                })
+                .expect("at least one machine");
+            queues[best].pending.push_back(job);
+        }
+    }
+
+    fn idle(&self) -> bool {
+        self.buf.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::JobNature;
+
+    #[test]
+    fn picks_min_completion_machine() {
+        let mut g = GreedyScheduler::new();
+        let mut queues: Vec<WorkQueue> = (0..2).map(|_| WorkQueue::default()).collect();
+        // machine 0 is cheaper for the job but has a big backlog
+        queues[0]
+            .pending
+            .push_back(Job::new(99, 1.0, vec![100.0, 100.0], JobNature::Mixed));
+        g.submit(Job::new(1, 1.0, vec![10.0, 30.0], JobNature::Mixed));
+        g.tick(1, &mut queues);
+        assert_eq!(queues[1].pending.len(), 1, "avoids the backlog");
+    }
+
+    #[test]
+    fn empty_queues_pick_fastest_ept() {
+        let mut g = GreedyScheduler::new();
+        let mut queues: Vec<WorkQueue> = (0..3).map(|_| WorkQueue::default()).collect();
+        g.submit(Job::new(1, 1.0, vec![30.0, 10.0, 20.0], JobNature::Mixed));
+        g.tick(1, &mut queues);
+        assert_eq!(queues[1].pending.len(), 1);
+    }
+}

@@ -1,0 +1,100 @@
+//! Baseline schedulers and software SOS implementations (Section 7.1
+//! "Baseline schedulers" and Section 8.2's software comparators).
+//!
+//! * [`RoundRobin`] — classic cyclic dispatch (Silberschatz et al.).
+//! * [`GreedyScheduler`] — assign to the machine with the least estimated
+//!   completion time (Dong et al.).
+//! * [`WsRoundRobin`] / [`WsGreedy`] — the work-stealing variants
+//!   (Taskflow-style): idle machines steal pending jobs from the most
+//!   loaded queue.
+//! * [`SoscEngine`] — the paper's single-threaded C software baseline:
+//!   a deliberately naive SOS implementation (per-query divisions, full
+//!   recomputation) that must produce schedules identical to the golden
+//!   engine while being much slower (it is the ST column of Fig. 16b).
+//! * [`simd`] — the AVX-style lane-vectorised SOS of Fig. 17.
+
+mod greedy;
+mod rr;
+pub mod simd;
+mod sosc;
+mod ws;
+
+pub use greedy::GreedyScheduler;
+pub use rr::RoundRobin;
+pub use simd::SimdSos;
+pub use sosc::SoscEngine;
+pub use ws::{WsGreedy, WsRoundRobin};
+
+use crate::cluster::WorkQueue;
+use crate::core::MachineId;
+
+/// Work stealing used by WSRR/WSG: every idle machine (not busy, empty
+/// queue) steals the *tail* job of the longest pending queue, provided
+/// that queue holds more than one job. Returns the moves performed.
+pub(crate) fn steal(queues: &mut [WorkQueue]) -> Vec<(MachineId, MachineId)> {
+    let mut moves = Vec::new();
+    loop {
+        let Some(thief) = queues
+            .iter()
+            .position(|q| !q.busy && q.pending.is_empty())
+        else {
+            break;
+        };
+        let Some(victim) = (0..queues.len())
+            .filter(|&m| queues[m].pending.len() > 1)
+            .max_by_key(|&m| queues[m].pending.len())
+        else {
+            break;
+        };
+        if victim == thief {
+            break;
+        }
+        let job = queues[victim].pending.pop_back().expect("len > 1");
+        queues[thief].pending.push_back(job);
+        moves.push((victim, thief));
+        // Loop again: several machines can be idle in the same tick, but
+        // each steal fills one thief's queue, so the loop terminates.
+    }
+    moves
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{Job, JobNature};
+
+    fn job(id: u64, m: usize) -> Job {
+        Job::new(id, 1.0, vec![10.0; m], JobNature::Mixed)
+    }
+
+    #[test]
+    fn idle_machine_steals_from_longest_queue() {
+        let mut queues: Vec<WorkQueue> = (0..3).map(|_| WorkQueue::default()).collect();
+        for i in 0..4 {
+            queues[0].pending.push_back(job(i, 3));
+        }
+        queues[1].pending.push_back(job(9, 3));
+        let moves = steal(&mut queues);
+        assert!(moves.contains(&(0, 2)));
+        assert_eq!(queues[2].pending.len(), 1);
+        assert_eq!(queues[2].pending[0].id, 3, "steals the tail");
+    }
+
+    #[test]
+    fn no_steal_from_single_job_queue() {
+        let mut queues: Vec<WorkQueue> = (0..2).map(|_| WorkQueue::default()).collect();
+        queues[0].pending.push_back(job(1, 2));
+        assert!(steal(&mut queues).is_empty());
+        assert_eq!(queues[0].pending.len(), 1);
+    }
+
+    #[test]
+    fn busy_machines_do_not_steal() {
+        let mut queues: Vec<WorkQueue> = (0..2).map(|_| WorkQueue::default()).collect();
+        for i in 0..3 {
+            queues[0].pending.push_back(job(i, 2));
+        }
+        queues[1].busy = true;
+        assert!(steal(&mut queues).is_empty());
+    }
+}

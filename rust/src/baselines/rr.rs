@@ -1,0 +1,58 @@
+//! Round-Robin baseline: jobs dispatch immediately to machines in cyclic
+//! order, ignoring heterogeneity entirely.
+
+use crate::cluster::{OnlineScheduler, WorkQueue};
+use crate::core::Job;
+
+#[derive(Debug, Default)]
+pub struct RoundRobin {
+    buf: Vec<Job>,
+    next: usize,
+}
+
+impl RoundRobin {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl OnlineScheduler for RoundRobin {
+    fn name(&self) -> &'static str {
+        "RR"
+    }
+
+    fn submit(&mut self, job: Job) {
+        self.buf.push(job);
+    }
+
+    fn tick(&mut self, _now: u64, queues: &mut [WorkQueue]) {
+        for job in self.buf.drain(..) {
+            queues[self.next].pending.push_back(job);
+            self.next = (self.next + 1) % queues.len();
+        }
+    }
+
+    fn idle(&self) -> bool {
+        self.buf.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::JobNature;
+
+    #[test]
+    fn cycles_through_machines() {
+        let mut rr = RoundRobin::new();
+        let mut queues: Vec<WorkQueue> = (0..3).map(|_| WorkQueue::default()).collect();
+        for id in 0..7 {
+            rr.submit(Job::new(id + 1, 1.0, vec![10.0; 3], JobNature::Mixed));
+        }
+        rr.tick(1, &mut queues);
+        assert_eq!(queues[0].pending.len(), 3);
+        assert_eq!(queues[1].pending.len(), 2);
+        assert_eq!(queues[2].pending.len(), 2);
+        assert!(rr.idle());
+    }
+}

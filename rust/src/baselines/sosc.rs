@@ -1,0 +1,285 @@
+//! SOSC — the paper's software baseline: a deliberately *naive*
+//! single-threaded implementation of the discretized SOS algorithm,
+//! mirroring a straightforward C translation of Equations (1)–(5)
+//! without any of the Section 3.3 design optimizations:
+//!
+//! * WSPT ratios are **recomputed with a division on every use** (the
+//!   hardware stores `T_i^K` once);
+//! * virtual work `n_K(t)` is **reconstructed by scanning the job's
+//!   head-occupancy history** (the hardware keeps an incrementally
+//!   updated counter);
+//! * `sum^H` / `sum^L` are **fully re-accumulated per cost query** (the
+//!   hardware decrements memoized partial sums).
+//!
+//! It must produce schedules *identical* to [`crate::scheduler::SosEngine`]
+//! (integration-tested) — only its per-iteration wall time differs, which
+//! is exactly what the ST column of Fig. 16b measures.
+
+use std::collections::VecDeque;
+
+use crate::core::{Job, JobId, MachineId};
+use crate::quant::Precision;
+use crate::scheduler::TickOutcome;
+
+/// A tracked job with the naive representation: no derived values cached.
+#[derive(Debug, Clone)]
+struct NaiveEntry {
+    id: JobId,
+    weight: f32,
+    ept: f32,
+    /// Tick-stamped head-occupancy log: entry per cycle this job spent at
+    /// the head (the naive reconstruction of `n_K(t)` from history —
+    /// deliberately memory- and scan-heavy).
+    head_cycles: Vec<u64>,
+}
+
+impl NaiveEntry {
+    /// Division on every use — the cost the paper's opt. 1 removes. The
+    /// quotient is still rounded through the datapath's WSPT format so
+    /// the *numerical semantics* match the golden engine exactly (a C
+    /// baseline of the same quantized algorithm would do the same); only
+    /// the repeated-division work differs.
+    fn wspt(&self, precision: Precision) -> f32 {
+        precision.q_wspt(self.weight / self.ept)
+    }
+
+    fn n(&self) -> u32 {
+        // Scan the history instead of keeping a counter. The scan is
+        // intentionally O(n); `black_box` prevents the optimizer from
+        // collapsing it to `len()`.
+        let mut count = 0u32;
+        for &c in &self.head_cycles {
+            count += std::hint::black_box((c != u64::MAX) as u32);
+        }
+        count
+    }
+}
+
+/// Naive software SOS scheduler.
+#[derive(Debug)]
+pub struct SoscEngine {
+    schedules: Vec<Vec<NaiveEntry>>, // each sorted by wspt desc
+    depth: usize,
+    alpha: f32,
+    precision: Precision,
+    pending: VecDeque<Job>,
+    tick_no: u64,
+}
+
+impl SoscEngine {
+    pub fn new(machines: usize, depth: usize, alpha: f32, precision: Precision) -> Self {
+        SoscEngine {
+            schedules: vec![Vec::new(); machines],
+            depth,
+            alpha,
+            precision,
+            pending: VecDeque::new(),
+            tick_no: 0,
+        }
+    }
+
+    pub fn submit(&mut self, job: Job) {
+        self.pending.push_back(job);
+    }
+
+    pub fn backlog(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn in_flight(&self) -> usize {
+        self.schedules.iter().map(|v| v.len()).sum()
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.pending.is_empty() && self.in_flight() == 0
+    }
+
+    /// Naive per-machine cost: full rescan of the virtual schedule with
+    /// fresh divisions, per Eq. (4)/(5).
+    fn cost(&self, m: MachineId, j_w: f32, j_eps: f32, j_t: f32) -> (f32, usize) {
+        let mut sum_hi = 0.0f32;
+        let mut sum_lo = 0.0f32;
+        let mut pos = 0usize;
+        for e in &self.schedules[m] {
+            let t_k = e.wspt(self.precision); // division per entry per query
+            let n = e.n() as f32; // history scan per entry per query
+            if t_k >= j_t {
+                sum_hi += e.ept - n;
+                pos += 1;
+            } else {
+                sum_lo += e.weight - n * t_k;
+            }
+        }
+        (j_w * (j_eps + sum_hi) + j_eps * sum_lo, pos)
+    }
+
+    /// One scheduler tick — same semantics as the golden engine:
+    /// pop alpha-ready heads, assign one pending arrival, accrue VW.
+    pub fn tick(&mut self, arrival: Option<&Job>) -> TickOutcome {
+        self.tick_no += 1;
+        if let Some(j) = arrival {
+            self.pending.push_back(j.clone());
+        }
+        let mut out = TickOutcome::default();
+
+        // POP: heads that reached ceil(alpha * eps)
+        for (m, vs) in self.schedules.iter_mut().enumerate() {
+            if let Some(head) = vs.first() {
+                let release_at = (self.alpha * head.ept).ceil() as u32;
+                if head.n() >= release_at {
+                    let e = vs.remove(0);
+                    out.released.push((e.id, m));
+                }
+            }
+        }
+
+        // ASSIGN one pending job
+        if !self.pending.is_empty() {
+            if self.schedules.iter().any(|v| v.len() < self.depth) {
+                let job = self.pending.pop_front().expect("front checked");
+                out.assigned = Some(self.assign(&job));
+            } else {
+                out.stalled = true;
+            }
+        }
+
+        // VW: heads accrue one cycle (append to history log)
+        let now = self.tick_no;
+        for vs in &mut self.schedules {
+            if let Some(h) = vs.first_mut() {
+                h.head_cycles.push(now);
+            }
+        }
+
+        // Per-cycle re-evaluation: the hardware's incremental updates
+        // "prevent the need for explicit evaluation across each job K"
+        // every cycle (Section 3.3 opt. 2) — the naive software has no
+        // such memoization, so it refreshes every job's derived state
+        // (WSPT division + virtual-work reconstruction + ordering check)
+        // each tick, exactly the work the paper's C baseline pays for.
+        self.revalidate();
+        out
+    }
+
+    /// Explicit per-cycle evaluation across every tracked job.
+    fn revalidate(&mut self) {
+        let precision = self.precision;
+        for vs in &self.schedules {
+            let mut prev_t = f32::MAX;
+            for e in vs {
+                let t_k = e.wspt(precision); // division
+                let n = e.n(); // history scan
+                // remaining contributions, recomputed from scratch
+                let rem_hi = e.ept - n as f32;
+                let rem_lo = e.weight - n as f32 * t_k;
+                std::hint::black_box((rem_hi, rem_lo));
+                // "complex reconstruction of V_i": verify ordering by
+                // re-deriving priorities
+                debug_assert!(prev_t >= t_k || (prev_t - t_k).abs() < 1e-6 || prev_t >= t_k);
+                prev_t = std::hint::black_box(t_k);
+            }
+        }
+    }
+
+    fn assign(&mut self, job: &Job) -> crate::scheduler::Assignment {
+        let m_count = self.schedules.len();
+        let mut cost_vec = vec![crate::scheduler::FULL_COST; m_count];
+        let mut best: Option<(usize, f32, usize)> = None;
+        for m in 0..m_count {
+            if self.schedules[m].len() >= self.depth {
+                continue;
+            }
+            let (j_w, j_eps, j_t) = self.precision.q_job(job.weight, job.ept[m]);
+            let (c, p) = self.cost(m, j_w, j_eps, j_t);
+            cost_vec[m] = c;
+            if best.map_or(true, |(_, bc, _)| c < bc) {
+                best = Some((m, c, p));
+            }
+        }
+        let (machine, cost, position) = best.expect("caller ensured a free machine");
+        let (j_w, j_eps, j_t) = self.precision.q_job(job.weight, job.ept[machine]);
+        let entry = NaiveEntry {
+            id: job.id,
+            weight: j_w,
+            ept: j_eps,
+            head_cycles: Vec::new(),
+        };
+        // insert at WSPT position (ties after incumbents)
+        let pos = self.schedules[machine]
+            .iter()
+            .take_while(|e| e.wspt(self.precision) >= j_t)
+            .count();
+        debug_assert_eq!(pos, position);
+        self.schedules[machine].insert(pos, entry);
+        crate::scheduler::Assignment {
+            job: job.id,
+            machine,
+            position,
+            cost,
+            cost_vector: cost_vec,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::JobNature;
+    use crate::scheduler::SosEngine;
+    use crate::workload::{generate_trace, WorkloadSpec};
+    use crate::core::MachinePark;
+
+    #[test]
+    fn schedule_parity_with_golden_engine() {
+        let park = MachinePark::paper_m1_m5();
+        let trace = generate_trace(&WorkloadSpec::default(), &park, 300, 17);
+        let mut golden = SosEngine::new(5, 10, 0.5, Precision::Int8);
+        let mut naive = SoscEngine::new(5, 10, 0.5, Precision::Int8);
+
+        let mut events = trace.events().iter().peekable();
+        for t in 1..=200_000u64 {
+            let mut arrivals = Vec::new();
+            while events.peek().is_some_and(|e| e.tick <= t) {
+                arrivals.push(events.next().unwrap().job.clone().unwrap());
+            }
+            for a in &arrivals {
+                golden.submit(a.clone());
+                naive.submit(a.clone());
+            }
+            let g = golden.tick(None);
+            let n = naive.tick(None);
+            assert_eq!(g.released, n.released, "tick {t} releases");
+            match (&g.assigned, &n.assigned) {
+                (Some(a), Some(b)) => {
+                    assert_eq!(a.job, b.job, "tick {t}");
+                    assert_eq!(a.machine, b.machine, "tick {t}");
+                    assert_eq!(a.position, b.position, "tick {t}");
+                }
+                (None, None) => {}
+                other => panic!("tick {t}: assignment divergence {other:?}"),
+            }
+            if golden.is_idle() && naive.is_idle() && events.peek().is_none() {
+                break;
+            }
+        }
+        assert!(golden.is_idle() && naive.is_idle());
+    }
+
+    #[test]
+    fn naive_engine_basic_flow() {
+        let mut e = SoscEngine::new(2, 4, 0.5, Precision::Fp32);
+        let j = Job::new(1, 2.0, vec![50.0, 10.0], JobNature::Mixed);
+        let out = e.tick(Some(&j));
+        assert_eq!(out.assigned.unwrap().machine, 1);
+        assert_eq!(e.in_flight(), 1);
+        // drain: alpha_pt = 5 -> released on tick 6
+        let mut released = false;
+        for _ in 0..8 {
+            if !e.tick(None).released.is_empty() {
+                released = true;
+                break;
+            }
+        }
+        assert!(released);
+    }
+}

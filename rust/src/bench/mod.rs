@@ -1,0 +1,188 @@
+//! Measurement harness (criterion is unavailable offline): warmup +
+//! timed iterations with mean / median / p95 / min reporting, plus a
+//! tiny table printer shared by the figure-regeneration benches.
+
+use std::time::{Duration, Instant};
+
+/// One measured statistic set, in nanoseconds.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Measurement {
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+    pub total: Duration,
+}
+
+impl Measurement {
+    pub fn mean_secs(&self) -> f64 {
+        self.mean_ns / 1e9
+    }
+
+    /// Throughput in ops/sec given `ops` units of work per iteration.
+    pub fn ops_per_sec(&self, ops: f64) -> f64 {
+        ops / self.mean_secs()
+    }
+}
+
+/// Benchmark options.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchOpts {
+    pub warmup_iters: u64,
+    pub sample_iters: u64,
+    /// Hard wall-clock budget; sampling stops early once exceeded.
+    pub max_time: Duration,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        BenchOpts {
+            warmup_iters: 3,
+            sample_iters: 30,
+            max_time: Duration::from_secs(10),
+        }
+    }
+}
+
+impl BenchOpts {
+    pub fn quick() -> Self {
+        BenchOpts {
+            warmup_iters: 1,
+            sample_iters: 5,
+            max_time: Duration::from_secs(3),
+        }
+    }
+}
+
+/// Run `f` repeatedly and collect timing statistics. `f` should perform
+/// one logical unit of work; use `std::hint::black_box` inside to keep
+/// the optimizer honest.
+pub fn bench<F: FnMut()>(opts: BenchOpts, mut f: F) -> Measurement {
+    for _ in 0..opts.warmup_iters {
+        f();
+    }
+    let started = Instant::now();
+    let mut samples: Vec<f64> = Vec::with_capacity(opts.sample_iters as usize);
+    for _ in 0..opts.sample_iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_nanos() as f64);
+        if started.elapsed() > opts.max_time && samples.len() >= 3 {
+            break;
+        }
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).expect("finite"));
+    let n = samples.len();
+    let mean = samples.iter().sum::<f64>() / n as f64;
+    Measurement {
+        iters: n as u64,
+        mean_ns: mean,
+        median_ns: samples[n / 2],
+        p95_ns: samples[(((n - 1) as f64) * 0.95) as usize],
+        min_ns: samples[0],
+        total: started.elapsed(),
+    }
+}
+
+/// Fixed-width table printer for bench/report output.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let cols = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for c in 0..cols {
+                widths[c] = widths[c].max(row[c].len());
+            }
+        }
+        let mut out = String::new();
+        let line = |out: &mut String, cells: &[String], widths: &[usize]| {
+            for (c, cell) in cells.iter().enumerate() {
+                out.push_str(&format!("{:<w$}  ", cell, w = widths[c]));
+            }
+            out.push('\n');
+        };
+        line(&mut out, &self.headers, &widths);
+        out.push_str(&format!(
+            "{}\n",
+            widths
+                .iter()
+                .map(|w| "-".repeat(*w))
+                .collect::<Vec<_>>()
+                .join("  ")
+        ));
+        for row in &self.rows {
+            line(&mut out, row, &widths);
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Humanized duration for report output.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} us", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_counts_iterations() {
+        let mut count = 0u64;
+        let m = bench(BenchOpts::quick(), || {
+            count += 1;
+            std::hint::black_box(count);
+        });
+        assert_eq!(count, m.iters + BenchOpts::quick().warmup_iters);
+        assert!(m.mean_ns >= 0.0);
+        assert!(m.min_ns <= m.median_ns);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["config", "cycles"]);
+        t.row(vec!["5x10".into(), "50".into()]);
+        t.row(vec!["10x20".into(), "75".into()]);
+        let r = t.render();
+        assert!(r.contains("config"));
+        assert!(r.lines().count() == 4);
+    }
+
+    #[test]
+    fn fmt_ns_scales() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert_eq!(fmt_ns(1500.0), "1.50 us");
+        assert_eq!(fmt_ns(2.5e6), "2.50 ms");
+        assert_eq!(fmt_ns(3.2e9), "3.200 s");
+    }
+}

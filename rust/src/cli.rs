@@ -1,0 +1,176 @@
+//! Command-line argument substrate (clap is unavailable offline):
+//! subcommand + `--flag value` / `--flag` parsing with typed accessors
+//! and generated usage text.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: a subcommand, positionals, and `--key value` flags.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: Option<String>,
+    pub positionals: Vec<String>,
+    flags: BTreeMap<String, String>,
+    bools: Vec<String>,
+}
+
+/// A flag specification for usage text + validation.
+#[derive(Debug, Clone)]
+pub struct FlagSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub takes_value: bool,
+}
+
+impl Args {
+    /// Parse raw arguments (without argv[0]). Flags may appear anywhere;
+    /// the first non-flag token is the subcommand, the rest positionals.
+    pub fn parse<I: IntoIterator<Item = String>>(
+        raw: I,
+        specs: &[FlagSpec],
+    ) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                let (name, inline) = match name.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (name, None),
+                };
+                let spec = specs
+                    .iter()
+                    .find(|s| s.name == name)
+                    .ok_or_else(|| format!("unknown flag --{name}"))?;
+                if spec.takes_value {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| format!("--{name} requires a value"))?,
+                    };
+                    out.flags.insert(name.to_string(), v);
+                } else {
+                    if inline.is_some() {
+                        return Err(format!("--{name} takes no value"));
+                    }
+                    out.bools.push(name.to_string());
+                }
+            } else if out.command.is_none() {
+                out.command = Some(tok);
+            } else {
+                out.positionals.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.bools.iter().any(|b| b == name)
+    }
+
+    pub fn usize_flag(&self, name: &str, default: usize) -> Result<usize, String> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| format!("--{name}: expected integer ({e})")),
+        }
+    }
+
+    pub fn u64_flag(&self, name: &str, default: u64) -> Result<u64, String> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| format!("--{name}: expected integer ({e})")),
+        }
+    }
+
+    pub fn f32_flag(&self, name: &str, default: f32) -> Result<f32, String> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| format!("--{name}: expected number ({e})")),
+        }
+    }
+
+    pub fn str_flag<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.flag(name).unwrap_or(default)
+    }
+}
+
+/// Render usage text from specs.
+pub fn usage(program: &str, commands: &[(&str, &str)], specs: &[FlagSpec]) -> String {
+    let mut s = format!("usage: {program} <command> [flags]\n\ncommands:\n");
+    for (name, help) in commands {
+        s.push_str(&format!("  {name:<14} {help}\n"));
+    }
+    s.push_str("\nflags:\n");
+    for f in specs {
+        let v = if f.takes_value { " <value>" } else { "" };
+        s.push_str(&format!("  --{}{v:<10} {}\n", f.name, f.help));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<FlagSpec> {
+        vec![
+            FlagSpec {
+                name: "machines",
+                help: "machine count",
+                takes_value: true,
+            },
+            FlagSpec {
+                name: "quick",
+                help: "fast mode",
+                takes_value: false,
+            },
+        ]
+    }
+
+    fn parse(args: &[&str]) -> Result<Args, String> {
+        Args::parse(args.iter().map(|s| s.to_string()), &specs())
+    }
+
+    #[test]
+    fn parses_subcommand_flags_positionals() {
+        let a = parse(&["run", "--machines", "10", "trace.txt", "--quick"]).unwrap();
+        assert_eq!(a.command.as_deref(), Some("run"));
+        assert_eq!(a.flag("machines"), Some("10"));
+        assert!(a.has("quick"));
+        assert_eq!(a.positionals, vec!["trace.txt"]);
+        assert_eq!(a.usize_flag("machines", 5).unwrap(), 10);
+        assert_eq!(a.usize_flag("depth", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn inline_equals_form() {
+        let a = parse(&["run", "--machines=42"]).unwrap();
+        assert_eq!(a.usize_flag("machines", 0).unwrap(), 42);
+    }
+
+    #[test]
+    fn rejects_unknown_and_malformed() {
+        assert!(parse(&["run", "--nope"]).is_err());
+        assert!(parse(&["run", "--machines"]).is_err());
+        assert!(parse(&["run", "--quick=1"]).is_err());
+        let a = parse(&["run", "--machines", "abc"]).unwrap();
+        assert!(a.usize_flag("machines", 0).is_err());
+    }
+
+    #[test]
+    fn usage_mentions_everything() {
+        let u = usage("stannic", &[("report", "render a figure")], &specs());
+        assert!(u.contains("report"));
+        assert!(u.contains("--machines"));
+        assert!(u.contains("--quick"));
+    }
+}

@@ -1,0 +1,227 @@
+//! Run configuration: a single [`RunConfig`] consumed by the CLI, the
+//! coordinator, and the examples, with JSON round-trip (via
+//! [`crate::jsonio`]) so experiment setups can be archived.
+
+use crate::core::MachinePark;
+use crate::jsonio::{arr, num, obj, s, Json};
+use crate::quant::Precision;
+use crate::workload::{BurstType, WorkloadSpec};
+
+/// Which scheduling engine drives the run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineKind {
+    /// Golden software SOS engine.
+    Native,
+    /// Cycle-accurate Stannic simulator.
+    StannicSim,
+    /// Cycle-accurate Hercules simulator.
+    HerculesSim,
+    /// XLA/PJRT-offloaded cost engine (requires artifacts).
+    Xla,
+}
+
+impl EngineKind {
+    pub fn parse(name: &str) -> Result<Self, String> {
+        match name {
+            "native" => Ok(EngineKind::Native),
+            "stannic" => Ok(EngineKind::StannicSim),
+            "hercules" => Ok(EngineKind::HerculesSim),
+            "xla" => Ok(EngineKind::Xla),
+            other => Err(format!(
+                "unknown engine '{other}' (native|stannic|hercules|xla)"
+            )),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            EngineKind::Native => "native",
+            EngineKind::StannicSim => "stannic",
+            EngineKind::HerculesSim => "hercules",
+            EngineKind::Xla => "xla",
+        }
+    }
+}
+
+/// Full experiment configuration.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub machines: usize,
+    pub depth: usize,
+    pub alpha: f32,
+    pub precision: Precision,
+    pub engine: EngineKind,
+    pub jobs: usize,
+    pub seed: u64,
+    pub workload: WorkloadSpec,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            machines: 5,
+            depth: 10,
+            alpha: 0.5,
+            precision: Precision::Int8,
+            engine: EngineKind::Native,
+            jobs: 1000,
+            seed: 42,
+            workload: WorkloadSpec::default(),
+        }
+    }
+}
+
+impl RunConfig {
+    pub fn park(&self) -> MachinePark {
+        if self.machines == 5 {
+            MachinePark::paper_m1_m5()
+        } else {
+            MachinePark::cycled(self.machines)
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("machines", num(self.machines as f64)),
+            ("depth", num(self.depth as f64)),
+            ("alpha", num(self.alpha as f64)),
+            ("precision", s(self.precision.name())),
+            ("engine", s(self.engine.name())),
+            ("jobs", num(self.jobs as f64)),
+            ("seed", num(self.seed as f64)),
+            (
+                "workload",
+                obj(vec![
+                    ("frac_compute", num(self.workload.frac_compute)),
+                    ("frac_memory", num(self.workload.frac_memory)),
+                    ("frac_mixed", num(self.workload.frac_mixed)),
+                    ("burst_factor", num(self.workload.burst_factor as f64)),
+                    (
+                        "burst_type",
+                        s(match self.workload.burst_type {
+                            BurstType::Random => "random",
+                            BurstType::Uniform => "uniform",
+                        }),
+                    ),
+                    ("idle_time", num(self.workload.idle_time as f64)),
+                    ("idle_interval", num(self.workload.idle_interval as f64)),
+                    (
+                        "weight_range",
+                        arr(vec![
+                            num(self.workload.weight_range.0 as f64),
+                            num(self.workload.weight_range.1 as f64),
+                        ]),
+                    ),
+                    (
+                        "ept_range",
+                        arr(vec![
+                            num(self.workload.ept_range.0 as f64),
+                            num(self.workload.ept_range.1 as f64),
+                        ]),
+                    ),
+                    ("runtime_noise", num(self.workload.runtime_noise as f64)),
+                ]),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<RunConfig, String> {
+        let mut c = RunConfig::default();
+        let get_num = |j: &Json, k: &str| -> Option<f64> { j.get(k).and_then(Json::as_f64) };
+        if let Some(v) = get_num(j, "machines") {
+            c.machines = v as usize;
+        }
+        if let Some(v) = get_num(j, "depth") {
+            c.depth = v as usize;
+        }
+        if let Some(v) = get_num(j, "alpha") {
+            c.alpha = v as f32;
+        }
+        if let Some(v) = j.get("precision").and_then(Json::as_str) {
+            c.precision = match v {
+                "FP32" => Precision::Fp32,
+                "FP16" => Precision::Fp16,
+                "INT8" => Precision::Int8,
+                "INT4" => Precision::Int4,
+                "Mixed" => Precision::Mixed,
+                other => return Err(format!("bad precision {other}")),
+            };
+        }
+        if let Some(v) = j.get("engine").and_then(Json::as_str) {
+            c.engine = EngineKind::parse(v)?;
+        }
+        if let Some(v) = get_num(j, "jobs") {
+            c.jobs = v as usize;
+        }
+        if let Some(v) = get_num(j, "seed") {
+            c.seed = v as u64;
+        }
+        if let Some(w) = j.get("workload") {
+            if let Some(v) = get_num(w, "frac_compute") {
+                c.workload.frac_compute = v;
+            }
+            if let Some(v) = get_num(w, "frac_memory") {
+                c.workload.frac_memory = v;
+            }
+            if let Some(v) = get_num(w, "frac_mixed") {
+                c.workload.frac_mixed = v;
+            }
+            if let Some(v) = get_num(w, "burst_factor") {
+                c.workload.burst_factor = v as usize;
+            }
+            if let Some(v) = w.get("burst_type").and_then(Json::as_str) {
+                c.workload.burst_type = match v {
+                    "random" => BurstType::Random,
+                    "uniform" => BurstType::Uniform,
+                    other => return Err(format!("bad burst_type {other}")),
+                };
+            }
+            if let Some(v) = get_num(w, "idle_time") {
+                c.workload.idle_time = v as u64;
+            }
+            if let Some(v) = get_num(w, "idle_interval") {
+                c.workload.idle_interval = v as usize;
+            }
+            if let Some(v) = get_num(w, "runtime_noise") {
+                c.workload.runtime_noise = v as f32;
+            }
+        }
+        c.workload.validate()?;
+        Ok(c)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_round_trip() {
+        let mut c = RunConfig::default();
+        c.machines = 20;
+        c.precision = Precision::Fp16;
+        c.engine = EngineKind::StannicSim;
+        c.workload = WorkloadSpec::memory_skewed();
+        let j = c.to_json();
+        let back = RunConfig::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(back.machines, 20);
+        assert_eq!(back.precision, Precision::Fp16);
+        assert_eq!(back.engine, EngineKind::StannicSim);
+        assert!((back.workload.frac_memory - 0.70).abs() < 1e-9);
+    }
+
+    #[test]
+    fn engine_parse() {
+        assert_eq!(EngineKind::parse("xla").unwrap(), EngineKind::Xla);
+        assert!(EngineKind::parse("gpu").is_err());
+    }
+
+    #[test]
+    fn park_uses_paper_machines_at_5() {
+        let c = RunConfig::default();
+        assert_eq!(c.park().len(), 5);
+        let mut c2 = RunConfig::default();
+        c2.machines = 17;
+        assert_eq!(c2.park().len(), 17);
+    }
+}

@@ -1,0 +1,11 @@
+//! The L3 online coordinator: pluggable scheduling engines behind a
+//! common adapter, a threaded serving loop with per-machine workers,
+//! and the PCIe transport model for accelerator round-trips.
+
+mod adapter;
+pub mod pcie;
+mod server;
+
+pub use adapter::{build_engine, EngineAdapter};
+pub use pcie::{PcieModel, PcieStats};
+pub use server::{serve, CompletionRecord, ServeOpts, ServeReport};

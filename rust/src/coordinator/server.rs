@@ -1,0 +1,313 @@
+//! The online serving loop: a scheduler thread drives the engine over
+//! the arrival trace, charging PCIe transport per accelerator
+//! round-trip; released jobs stream over bounded channels to one worker
+//! thread per machine, which simulates execution in virtual time and
+//! reports completion records back. (tokio is unavailable offline; this
+//! is the std::thread + mpsc equivalent of the async runtime.)
+
+use std::hash::{BuildHasherDefault, Hasher};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::thread;
+use std::time::Instant;
+
+/// Pass-through hasher for JobId keys (perf: job ids are already
+/// well-distributed u64s; SipHash costs ~40 ns per op on the hot path —
+/// see EXPERIMENTS.md §Perf).
+#[derive(Default)]
+pub struct IdHasher(u64);
+
+impl Hasher for IdHasher {
+    fn finish(&self) -> u64 {
+        self.0
+    }
+    fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 = self.0.rotate_left(8) ^ b as u64;
+        }
+    }
+    fn write_u64(&mut self, v: u64) {
+        // multiplicative mix: sequential ids stay collision-free while
+        // spreading across buckets
+        self.0 = v.wrapping_mul(0x9e37_79b9_7f4a_7c15);
+    }
+}
+
+type JobMap = std::collections::HashMap<u64, Job, BuildHasherDefault<IdHasher>>;
+
+use anyhow::Result;
+
+use crate::core::{Job, MachineId};
+use crate::metrics::{Histogram, MetricSet, ScheduleMetrics};
+use crate::workload::Trace;
+
+use super::adapter::EngineAdapter;
+use super::pcie::{PcieModel, PcieStats};
+
+/// One completed job as reported by a machine worker.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CompletionRecord {
+    pub job: Job,
+    pub machine: MachineId,
+    /// Tick at which the job was released to the machine queue.
+    pub released: u64,
+    /// Tick at which execution started (>= released).
+    pub started: u64,
+    /// Tick at which execution finished.
+    pub finished: u64,
+}
+
+/// A released job message to a worker.
+struct WorkItem {
+    job: Job,
+    released: u64,
+}
+
+/// Serving-run report.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub engine: &'static str,
+    pub metrics: ScheduleMetrics,
+    /// Queue-latency distribution (creation -> execution start).
+    pub latency_hist: Histogram,
+    pub completions: Vec<CompletionRecord>,
+    pub pcie: PcieStats,
+    /// Scheduler ticks consumed.
+    pub ticks: u64,
+    /// Simulated accelerator cycles (0 for pure-software engines).
+    pub accel_cycles: u64,
+    /// Host wall-clock for the scheduling loop.
+    pub wall: std::time::Duration,
+    /// Stalled iterations (arrival waited, every V_i full).
+    pub stalls: u64,
+}
+
+/// Coordinator options.
+#[derive(Debug, Clone)]
+pub struct ServeOpts {
+    pub pcie: PcieModel,
+    /// Bounded channel depth per machine worker (backpressure).
+    pub queue_depth: usize,
+    pub max_ticks: u64,
+    /// Metric interval for load-balance CV.
+    pub metric_interval: u64,
+}
+
+impl Default for ServeOpts {
+    fn default() -> Self {
+        ServeOpts {
+            pcie: PcieModel::default(),
+            queue_depth: 256,
+            max_ticks: 5_000_000,
+            metric_interval: 64,
+        }
+    }
+}
+
+/// Machine worker: virtual-time FIFO executor. Receives released jobs,
+/// executes each for its actual (stochastic) runtime, reports
+/// completions.
+fn worker(
+    machine: MachineId,
+    rx: Receiver<WorkItem>,
+    tx: SyncSender<CompletionRecord>,
+) {
+    let mut busy_until: u64 = 0;
+    while let Ok(item) = rx.recv() {
+        let started = busy_until.max(item.released);
+        let finished = started + item.job.actual_time(machine);
+        busy_until = finished;
+        let rec = CompletionRecord {
+            machine,
+            released: item.released,
+            started,
+            finished,
+            job: item.job,
+        };
+        if tx.send(rec).is_err() {
+            return; // coordinator gone
+        }
+    }
+}
+
+/// Drive `engine` over `trace` with machine workers on threads.
+pub fn serve(
+    mut engine: Box<dyn EngineAdapter>,
+    trace: &Trace,
+    opts: &ServeOpts,
+) -> Result<ServeReport> {
+    let machines = trace.machines();
+    let total_jobs = trace.n_jobs();
+    let started = Instant::now();
+
+    // spawn workers
+    let mut work_txs: Vec<SyncSender<WorkItem>> = Vec::with_capacity(machines);
+    let (done_tx, done_rx) = sync_channel::<CompletionRecord>(total_jobs.max(16));
+    let mut handles = Vec::with_capacity(machines);
+    for m in 0..machines {
+        let (tx, rx) = sync_channel::<WorkItem>(opts.queue_depth);
+        let done = done_tx.clone();
+        handles.push(
+            thread::Builder::new()
+                .name(format!("machine-{m}"))
+                .spawn(move || worker(m, rx, done))
+                .expect("spawn worker"),
+        );
+        work_txs.push(tx);
+    }
+    drop(done_tx);
+
+    // job registry: released ids -> Job payloads (the engine tracks only
+    // metadata, like the FPGA; the host keeps the payloads)
+    let mut payloads: JobMap =
+        JobMap::with_capacity_and_hasher(total_jobs, Default::default());
+
+    let mut pcie = PcieStats::default();
+    let mut metrics = MetricSet::new(machines, opts.metric_interval);
+    let mut stalls = 0u64;
+    let mut released_count = 0usize;
+    let mut events = trace.events().iter().peekable();
+    let mut tick = 0u64;
+
+    while tick < opts.max_ticks {
+        tick += 1;
+        // arrivals for this tick (burst serialization happens inside the
+        // engine's FIFO, matching the hardware's host interface)
+        while events.peek().is_some_and(|e| e.tick <= tick) {
+            let e = events.next().expect("peeked");
+            if let Some(job) = &e.job {
+                payloads.insert(job.id, job.clone());
+                engine.submit(job.clone());
+            }
+        }
+
+        let out = engine.tick()?;
+        if out.stalled {
+            stalls += 1;
+        }
+        // transport accounting: one round-trip per scheduling iteration
+        // that talks to the accelerator (assignment and/or releases)
+        if out.assigned.is_some() || !out.released.is_empty() {
+            opts.pcie
+                .charge(&mut pcie, machines, out.released.len());
+        }
+        if let Some(a) = &out.assigned {
+            metrics.record_assignment(a.machine, tick);
+        }
+        for (id, m) in &out.released {
+            let job = payloads
+                .remove(id)
+                .expect("released job must have a payload");
+            released_count += 1;
+            work_txs[*m]
+                .send(WorkItem {
+                    job,
+                    released: tick,
+                })
+                .expect("worker alive");
+        }
+
+        if released_count == total_jobs && engine.is_idle() && events.peek().is_none() {
+            break;
+        }
+    }
+
+    // close work channels; collect completions
+    drop(work_txs);
+    let mut completions: Vec<CompletionRecord> = done_rx.iter().collect();
+    for h in handles {
+        let _ = h.join();
+    }
+    completions.sort_by_key(|c| (c.finished, c.job.id));
+    let mut latency_hist = Histogram::new();
+    for c in &completions {
+        metrics.record_latency(c.machine, c.job.arrival, c.started);
+        latency_hist.record(c.started - c.job.arrival);
+    }
+
+    Ok(ServeReport {
+        engine: engine.label(),
+        metrics: metrics.finish(),
+        latency_hist,
+        completions,
+        pcie,
+        ticks: tick,
+        accel_cycles: engine.cycles(),
+        wall: started.elapsed(),
+        stalls,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::EngineKind;
+    use crate::coordinator::adapter::build_engine;
+    use crate::core::MachinePark;
+    use crate::quant::Precision;
+    use crate::workload::{generate_trace, WorkloadSpec};
+
+    fn run(kind: EngineKind, jobs: usize, seed: u64) -> ServeReport {
+        let park = MachinePark::paper_m1_m5();
+        let trace = generate_trace(&WorkloadSpec::default(), &park, jobs, seed);
+        let engine = build_engine(kind, 5, 10, 0.5, Precision::Int8).unwrap();
+        serve(engine, &trace, &ServeOpts::default()).unwrap()
+    }
+
+    #[test]
+    fn serves_full_trace_with_native_engine() {
+        let r = run(EngineKind::Native, 200, 9);
+        assert_eq!(r.completions.len(), 200);
+        assert_eq!(r.metrics.total_scheduled, 200);
+        assert!(r.pcie.transactions > 0);
+        assert!(r.metrics.avg_latency >= 0.0);
+        // every machine got work under the even workload
+        assert!(!r.metrics.starvation);
+    }
+
+    #[test]
+    fn sim_engine_reports_cycles() {
+        let r = run(EngineKind::StannicSim, 100, 3);
+        assert_eq!(r.completions.len(), 100);
+        assert!(r.accel_cycles > 0);
+        let h = run(EngineKind::HerculesSim, 100, 3);
+        assert!(
+            h.accel_cycles > r.accel_cycles,
+            "hercules {} vs stannic {}",
+            h.accel_cycles,
+            r.accel_cycles
+        );
+    }
+
+    #[test]
+    fn identical_schedules_across_engines() {
+        let a = run(EngineKind::Native, 150, 21);
+        let b = run(EngineKind::StannicSim, 150, 21);
+        let c = run(EngineKind::HerculesSim, 150, 21);
+        assert_eq!(a.metrics.jobs_per_machine, b.metrics.jobs_per_machine);
+        assert_eq!(a.metrics.jobs_per_machine, c.metrics.jobs_per_machine);
+        assert_eq!(a.metrics.avg_latency, b.metrics.avg_latency);
+    }
+
+    #[test]
+    fn worker_virtual_time_is_fifo() {
+        // one machine, two jobs released same tick: second starts when
+        // the first finishes
+        use crate::core::JobNature;
+        let park = MachinePark::homogeneous_cpu(1);
+        let mut events = Vec::new();
+        for id in 1..=2u64 {
+            events.push(crate::workload::TraceEvent {
+                tick: 1,
+                job: Some(Job::new(id, 200.0, vec![10.0], JobNature::Mixed).with_arrival(1)),
+            });
+        }
+        let trace = Trace::new(events, 1);
+        let engine = build_engine(EngineKind::Native, 1, 10, 0.5, Precision::Int8).unwrap();
+        let r = serve(engine, &trace, &ServeOpts::default()).unwrap();
+        assert_eq!(r.completions.len(), 2);
+        let c0 = &r.completions[0];
+        let c1 = &r.completions[1];
+        assert!(c1.started >= c0.finished);
+        let _ = park;
+    }
+}

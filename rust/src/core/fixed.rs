@@ -1,0 +1,192 @@
+//! Reduced-precision numeric substrates for the quantization study
+//! (Section 4.2): IEEE-754 half-precision rounding and generic unsigned
+//! fixed-point rounding, both implemented from scratch (no half/fixed
+//! crates in this environment).
+
+/// Round an `f32` through IEEE-754 binary16 (round-to-nearest-even) and
+/// back. Overflow saturates to ±65504 (f16 max finite) rather than inf,
+/// matching hardware saturating converters.
+pub fn f16_round(x: f32) -> f32 {
+    if x.is_nan() {
+        return f32::NAN;
+    }
+    let bits = x.to_bits();
+    let sign = (bits >> 16) & 0x8000;
+    let mut exp = ((bits >> 23) & 0xff) as i32;
+    let mut frac = bits & 0x007f_ffff;
+
+    const F16_MAX: f32 = 65504.0;
+    if exp == 0xff {
+        // inf stays inf in magnitude; saturate to max finite instead
+        return if sign != 0 { -F16_MAX } else { F16_MAX };
+    }
+    exp -= 127; // unbias
+    if exp > 15 {
+        return if sign != 0 { -F16_MAX } else { F16_MAX };
+    }
+    if exp < -25 {
+        // below half of the smallest subnormal: underflow to signed zero
+        return if sign != 0 { -0.0 } else { 0.0 };
+    }
+    let half: u16;
+    if exp < -14 {
+        // subnormal half: shift frac (with implicit leading 1) right
+        let shift = (-14 - exp) as u32; // 1..=11
+        frac |= 0x0080_0000; // implicit bit
+        let rshift = 13 + shift;
+        let kept = frac >> rshift;
+        let round_bit = (frac >> (rshift - 1)) & 1;
+        let sticky = frac & ((1 << (rshift - 1)) - 1) != 0;
+        let mut h = kept;
+        if round_bit == 1 && (sticky || (kept & 1) == 1) {
+            h += 1;
+        }
+        half = (sign | h as u32) as u16;
+    } else {
+        // normal half
+        let kept = frac >> 13;
+        let round_bit = (frac >> 12) & 1;
+        let sticky = frac & 0x0fff != 0;
+        let mut h = (((exp + 15) as u32) << 10) | kept;
+        if round_bit == 1 && (sticky || (h & 1) == 1) {
+            h += 1; // may carry into exponent — that is correct rounding
+        }
+        if h >= 0x7c00 {
+            return if sign != 0 { -F16_MAX } else { F16_MAX };
+        }
+        half = (sign | h) as u16;
+    }
+    // decode back to f32
+    let s = ((half as u32) & 0x8000) << 16;
+    let e = ((half as u32) >> 10) & 0x1f;
+    let f = (half as u32) & 0x3ff;
+    let out = if e == 0 {
+        if f == 0 {
+            f32::from_bits(s)
+        } else {
+            // subnormal: f * 2^-24
+            let v = f as f32 * (-24f32).exp2();
+            if s != 0 {
+                -v
+            } else {
+                v
+            }
+        }
+    } else {
+        let v = f32::from_bits(s | ((e + 127 - 15) << 23) | (f << 13));
+        v
+    };
+    out
+}
+
+/// Unsigned fixed-point format `UQ(int_bits).(frac_bits)`, saturating.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Fixed {
+    pub int_bits: u32,
+    pub frac_bits: u32,
+}
+
+impl Fixed {
+    pub const fn new(int_bits: u32, frac_bits: u32) -> Self {
+        Fixed { int_bits, frac_bits }
+    }
+
+    /// Total storage width in bits.
+    pub fn width(&self) -> u32 {
+        self.int_bits + self.frac_bits
+    }
+
+    /// Largest representable value.
+    pub fn max_value(&self) -> f32 {
+        let steps = (1u64 << self.width()) - 1;
+        steps as f32 / (1u64 << self.frac_bits) as f32
+    }
+
+    /// Resolution (value of one LSB).
+    pub fn resolution(&self) -> f32 {
+        1.0 / (1u64 << self.frac_bits) as f32
+    }
+
+    /// Round `x` to the nearest representable value, saturating at
+    /// `[0, max_value]`.
+    pub fn round(&self, x: f32) -> f32 {
+        fixed_round(x, self.int_bits, self.frac_bits)
+    }
+}
+
+/// Free-function form of [`Fixed::round`].
+pub fn fixed_round(x: f32, int_bits: u32, frac_bits: u32) -> f32 {
+    let scale = (1u64 << frac_bits) as f32;
+    let max_steps = ((1u64 << (int_bits + frac_bits)) - 1) as f32;
+    let steps = (x * scale).round().clamp(0.0, max_steps);
+    steps / scale
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f16_exact_small_integers() {
+        for v in [0.0f32, 1.0, 2.0, 3.0, 100.0, 1024.0, -5.0] {
+            assert_eq!(f16_round(v), v, "exact half-representable {v}");
+        }
+    }
+
+    #[test]
+    fn f16_rounds_to_nearest_even() {
+        // 1 + 2^-11 is exactly between 1.0 and 1+2^-10 -> ties to even (1.0)
+        let x = 1.0 + (-11f32).exp2();
+        assert_eq!(f16_round(x), 1.0);
+        // 1 + 3*2^-11 ties between 1+2^-10 and 1+2^-9 -> to even (1+2^-9)
+        let y = 1.0 + 3.0 * (-11f32).exp2();
+        assert_eq!(f16_round(y), 1.0 + (-9f32).exp2());
+    }
+
+    #[test]
+    fn f16_saturates() {
+        assert_eq!(f16_round(1e9), 65504.0);
+        assert_eq!(f16_round(-1e9), -65504.0);
+        assert_eq!(f16_round(f32::INFINITY), 65504.0);
+    }
+
+    #[test]
+    fn f16_subnormals() {
+        let tiny = (-24f32).exp2(); // smallest positive half subnormal
+        assert_eq!(f16_round(tiny), tiny);
+        assert_eq!(f16_round(tiny * 0.4), 0.0);
+        assert_eq!(f16_round(tiny * 0.6), tiny);
+    }
+
+    #[test]
+    fn f16_error_bounded() {
+        // relative error of normal-range rounding <= 2^-11
+        let mut x = 0.001f32;
+        while x < 60000.0 {
+            let r = f16_round(x);
+            let rel = ((r - x) / x).abs();
+            assert!(rel <= (-10f32).exp2(), "x={x} r={r} rel={rel}");
+            x *= 1.37;
+        }
+    }
+
+    #[test]
+    fn fixed_q44() {
+        let q = Fixed::new(4, 4);
+        assert_eq!(q.width(), 8);
+        assert_eq!(q.max_value(), 15.9375);
+        assert_eq!(q.resolution(), 0.0625);
+        assert_eq!(q.round(1.03), 1.0); // 1.03*16 = 16.48 rounds to 16
+        assert_eq!(q.round(1.04), 1.0625); // 16.64 rounds to 17
+        assert_eq!(q.round(100.0), 15.9375); // saturates
+        assert_eq!(q.round(-3.0), 0.0);
+    }
+
+    #[test]
+    fn fixed_q80_is_integer_rounding() {
+        let q = Fixed::new(8, 0);
+        assert_eq!(q.round(3.4), 3.0);
+        assert_eq!(q.round(3.5), 4.0);
+        assert_eq!(q.round(300.0), 255.0);
+    }
+}

@@ -1,0 +1,127 @@
+//! Job abstraction (Definition 2): `J = <W, eps, P, ID>` — weight, per-
+//! machine expected processing times (EPT), program nature, unique id.
+
+use std::fmt;
+
+/// Unique job identifier (`ID in Z+` of Definition 2).
+pub type JobId = u64;
+
+/// Nature/bounding `P` of the underlying program (Definition 2 and the
+/// "Conventions" paragraph): compute-bound, memory-bound, or mixed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum JobNature {
+    Compute,
+    Memory,
+    Mixed,
+}
+
+impl fmt::Display for JobNature {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            JobNature::Compute => write!(f, "compute"),
+            JobNature::Memory => write!(f, "memory"),
+            JobNature::Mixed => write!(f, "mixed"),
+        }
+    }
+}
+
+/// A program with uncertain execution time, ready for scheduling.
+///
+/// `ept[i]` is the *expected* processing time of the job on machine `i`
+/// — a best guess synthesized from prior execution history (Phase I of
+/// the algorithm), not a guarantee. `weight` is the global prioritization
+/// metric (e.g. downstream-dependency count or source priority).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Job {
+    pub id: JobId,
+    pub weight: f32,
+    pub ept: Vec<f32>,
+    pub nature: JobNature,
+    /// Clock tick at which the job was created (used by latency metrics).
+    pub arrival: u64,
+    /// The job's *actual* processing time factor: actual runtime on
+    /// machine `i` is `ept[i] * actual_factor` (stochastic deviation from
+    /// the estimate — the "variance from data loading, shared memory
+    /// usage, etc." of Section 2).
+    pub actual_factor: f32,
+}
+
+impl Job {
+    pub fn new(id: JobId, weight: f32, ept: Vec<f32>, nature: JobNature) -> Self {
+        assert!(weight >= 1.0, "minimum job weight is 1 (Section 4.2)");
+        assert!(
+            ept.iter().all(|&e| e >= 1.0),
+            "EPTs must be positive"
+        );
+        Job {
+            id,
+            weight,
+            ept,
+            nature,
+            arrival: 0,
+            actual_factor: 1.0,
+        }
+    }
+
+    pub fn with_arrival(mut self, tick: u64) -> Self {
+        self.arrival = tick;
+        self
+    }
+
+    pub fn with_actual_factor(mut self, f: f32) -> Self {
+        self.actual_factor = f;
+        self
+    }
+
+    /// WSPT priority of this job on machine `i` (Definition 2).
+    #[inline]
+    pub fn wspt(&self, machine: usize) -> f32 {
+        super::wspt(self.weight, self.ept[machine])
+    }
+
+    /// Actual runtime of the job on machine `i`, in ticks (>= 1).
+    pub fn actual_time(&self, machine: usize) -> u64 {
+        ((self.ept[machine] * self.actual_factor).round() as u64).max(1)
+    }
+
+    /// Number of machines this job carries EPT estimates for.
+    pub fn fanout(&self) -> usize {
+        self.ept.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn job() -> Job {
+        Job::new(7, 4.0, vec![10.0, 20.0, 40.0], JobNature::Compute)
+    }
+
+    #[test]
+    fn wspt_is_weight_over_ept() {
+        let j = job();
+        assert_eq!(j.wspt(0), 0.4);
+        assert_eq!(j.wspt(1), 0.2);
+        assert_eq!(j.wspt(2), 0.1);
+    }
+
+    #[test]
+    fn actual_time_scales_with_factor() {
+        let j = job().with_actual_factor(1.5);
+        assert_eq!(j.actual_time(0), 15);
+        assert_eq!(j.actual_time(1), 30);
+    }
+
+    #[test]
+    fn actual_time_never_zero() {
+        let j = Job::new(1, 1.0, vec![1.0], JobNature::Memory).with_actual_factor(0.01);
+        assert_eq!(j.actual_time(0), 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_weight_rejected() {
+        Job::new(1, 0.0, vec![10.0], JobNature::Mixed);
+    }
+}

@@ -1,0 +1,229 @@
+//! Machine abstraction (Definition 1): `M = <T, Q>` with
+//! `T in {CPU, GPU, Mixed}` and `Q in {Best, Worst}`.
+
+use std::fmt;
+
+/// Index of a machine within a [`MachinePark`].
+pub type MachineId = usize;
+
+/// Machine type `T` of Definition 1.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MachineKind {
+    Cpu,
+    Gpu,
+    /// A machine equally suited to compute- and memory-bound programs
+    /// (e.g. an APU or a balanced node).
+    Mixed,
+}
+
+impl fmt::Display for MachineKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            MachineKind::Cpu => write!(f, "CPU"),
+            MachineKind::Gpu => write!(f, "GPU"),
+            MachineKind::Mixed => write!(f, "Mixed"),
+        }
+    }
+}
+
+/// Machine quality `Q` of Definition 1: `Time(P)_Best << Time(P)_Worst`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Quality {
+    Best,
+    Worst,
+}
+
+impl fmt::Display for Quality {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Quality::Best => write!(f, "Best"),
+            Quality::Worst => write!(f, "Worst"),
+        }
+    }
+}
+
+/// A compute unit of the target heterogeneous system.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Machine {
+    pub id: MachineId,
+    pub kind: MachineKind,
+    pub quality: Quality,
+}
+
+impl Machine {
+    pub fn new(id: MachineId, kind: MachineKind, quality: Quality) -> Self {
+        Machine { id, kind, quality }
+    }
+
+    /// Quality multiplier applied to a program's base processing time.
+    /// `Best` machines run programs much faster than `Worst` ones
+    /// (Definition 1's `Time(P)_Best << Time(P)_Worst`).
+    pub fn quality_factor(&self) -> f32 {
+        match self.quality {
+            Quality::Best => 1.0,
+            Quality::Worst => 3.0,
+        }
+    }
+
+    pub fn label(&self) -> String {
+        format!("<{},{}>", self.kind, self.quality)
+    }
+}
+
+/// An ordered set of machines — the target system configuration.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MachinePark {
+    machines: Vec<Machine>,
+}
+
+impl MachinePark {
+    pub fn new(machines: Vec<Machine>) -> Self {
+        for (i, m) in machines.iter().enumerate() {
+            assert_eq!(m.id, i, "machine ids must be dense and ordered");
+        }
+        MachinePark { machines }
+    }
+
+    /// The paper's five-machine evaluation configuration (Section 7.1):
+    /// M1:<CPU,Best>  M2:<CPU,Worst>  M3:<Mixed,Best>
+    /// M4:<GPU,Best>  M5:<GPU,Worst>
+    pub fn paper_m1_m5() -> Self {
+        MachinePark::new(vec![
+            Machine::new(0, MachineKind::Cpu, Quality::Best),
+            Machine::new(1, MachineKind::Cpu, Quality::Worst),
+            Machine::new(2, MachineKind::Mixed, Quality::Best),
+            Machine::new(3, MachineKind::Gpu, Quality::Best),
+            Machine::new(4, MachineKind::Gpu, Quality::Worst),
+        ])
+    }
+
+    /// A homogeneous CPU park with alternating quality — the paper's
+    /// experiment (5) "Performance on homogeneous machines".
+    pub fn homogeneous_cpu(n: usize) -> Self {
+        MachinePark::new(
+            (0..n)
+                .map(|i| {
+                    Machine::new(
+                        i,
+                        MachineKind::Cpu,
+                        if i % 2 == 0 { Quality::Best } else { Quality::Worst },
+                    )
+                })
+                .collect(),
+        )
+    }
+
+    /// A park of `n` machines cycling through the M1–M5 pattern — used by
+    /// the scaling studies (Fig. 17/18) that need 5..=140 machines.
+    pub fn cycled(n: usize) -> Self {
+        let proto = MachinePark::paper_m1_m5();
+        MachinePark::new(
+            (0..n)
+                .map(|i| {
+                    let p = proto.machines[i % 5];
+                    Machine::new(i, p.kind, p.quality)
+                })
+                .collect(),
+        )
+    }
+
+    /// Build from an explicit (cpu, gpu, mixed) Machine Composition, the
+    /// workload generator's MC parameter. Quality alternates Best/Worst
+    /// within each kind group.
+    pub fn from_composition(cpu: usize, gpu: usize, mixed: usize) -> Self {
+        let mut machines = Vec::with_capacity(cpu + gpu + mixed);
+        let mut id = 0;
+        for (kind, count) in [
+            (MachineKind::Cpu, cpu),
+            (MachineKind::Gpu, gpu),
+            (MachineKind::Mixed, mixed),
+        ] {
+            for j in 0..count {
+                machines.push(Machine::new(
+                    id,
+                    kind,
+                    if j % 2 == 0 { Quality::Best } else { Quality::Worst },
+                ));
+                id += 1;
+            }
+        }
+        MachinePark::new(machines)
+    }
+
+    pub fn len(&self) -> usize {
+        self.machines.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.machines.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &Machine> {
+        self.machines.iter()
+    }
+
+    pub fn get(&self, id: MachineId) -> &Machine {
+        &self.machines[id]
+    }
+
+    pub fn labels(&self) -> Vec<String> {
+        self.machines.iter().map(|m| m.label()).collect()
+    }
+}
+
+impl std::ops::Index<MachineId> for MachinePark {
+    type Output = Machine;
+    fn index(&self, id: MachineId) -> &Machine {
+        &self.machines[id]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_park_matches_section_7_1() {
+        let p = MachinePark::paper_m1_m5();
+        assert_eq!(p.len(), 5);
+        assert_eq!(p[0].label(), "<CPU,Best>");
+        assert_eq!(p[1].label(), "<CPU,Worst>");
+        assert_eq!(p[2].label(), "<Mixed,Best>");
+        assert_eq!(p[3].label(), "<GPU,Best>");
+        assert_eq!(p[4].label(), "<GPU,Worst>");
+    }
+
+    #[test]
+    fn cycled_repeats_pattern() {
+        let p = MachinePark::cycled(12);
+        assert_eq!(p.len(), 12);
+        assert_eq!(p[5].kind, p[0].kind);
+        assert_eq!(p[11].kind, p[1].kind);
+        assert_eq!(p[7].id, 7);
+    }
+
+    #[test]
+    fn composition_counts() {
+        let p = MachinePark::from_composition(2, 3, 1);
+        assert_eq!(p.len(), 6);
+        assert_eq!(p.iter().filter(|m| m.kind == MachineKind::Cpu).count(), 2);
+        assert_eq!(p.iter().filter(|m| m.kind == MachineKind::Gpu).count(), 3);
+        assert_eq!(p.iter().filter(|m| m.kind == MachineKind::Mixed).count(), 1);
+        // quality alternates within a kind group
+        assert_eq!(p[0].quality, Quality::Best);
+        assert_eq!(p[1].quality, Quality::Worst);
+    }
+
+    #[test]
+    fn quality_factor_orders_best_below_worst() {
+        let best = Machine::new(0, MachineKind::Cpu, Quality::Best);
+        let worst = Machine::new(1, MachineKind::Cpu, Quality::Worst);
+        assert!(best.quality_factor() < worst.quality_factor());
+    }
+
+    #[test]
+    #[should_panic]
+    fn non_dense_ids_rejected() {
+        MachinePark::new(vec![Machine::new(3, MachineKind::Cpu, Quality::Best)]);
+    }
+}

@@ -1,0 +1,26 @@
+//! Core domain types: machines, jobs, and the paper's conventions
+//! (Definitions 1–3 of Section 2).
+
+mod fixed;
+mod job;
+mod machine;
+
+pub use fixed::{f16_round, fixed_round, Fixed};
+pub use job::{Job, JobId, JobNature};
+pub use machine::{Machine, MachineId, MachineKind, MachinePark, Quality};
+
+/// Weighted Shortest Processing Time ratio `T_i^J = J.W / eps_i`
+/// (Definition 2). The single priority key of the SOS algorithm.
+#[inline]
+pub fn wspt(weight: f32, ept: f32) -> f32 {
+    debug_assert!(ept > 0.0, "EPT must be positive");
+    weight / ept
+}
+
+/// Discrete alpha release threshold: the head job is released once it has
+/// accrued `ceil(alpha * eps)` cycles of virtual work (Phase III,
+/// discretized per Section 3.2).
+#[inline]
+pub fn alpha_point(alpha: f32, ept: f32) -> u32 {
+    (alpha * ept).ceil() as u32
+}

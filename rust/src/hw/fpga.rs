@@ -1,0 +1,44 @@
+//! Target-device envelope: the AMD Alveo U55C card used by the paper
+//! (Section 7.1) and the synthesized design's operating point.
+
+/// Alveo U55C fabric resources (XCU55C, from the product brief).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Fabric {
+    pub luts: u64,
+    pub ffs: u64,
+    /// Abstract routing capacity in congestion units (see
+    /// [`super::routing`]); calibrated so the paper's max-routable
+    /// boundaries (10 machines Hercules / 140 Stannic) are reproduced.
+    pub routing_capacity: f64,
+}
+
+/// The U55C as modeled here.
+pub const U55C: Fabric = Fabric {
+    luts: 1_303_680,
+    ffs: 2_607_360,
+    routing_capacity: 100_000.0,
+};
+
+/// Synthesized clock of both designs (Section 7.1): 371.47 MHz.
+pub const CLOCK_HZ: f64 = 371_470_000.0;
+
+/// Idle power draw of the card with a bitstream loaded (Section 8.3.3:
+/// the scheduler "barely brings the Alveo U55C above its idle power").
+pub const IDLE_WATTS: f64 = 20.4;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clock_period_ns() {
+        let period_ns = 1e9 / CLOCK_HZ;
+        assert!((period_ns - 2.692).abs() < 0.01);
+    }
+
+    #[test]
+    fn fabric_sizes_sane() {
+        assert!(U55C.luts > 1_000_000);
+        assert_eq!(U55C.ffs, 2 * U55C.luts);
+    }
+}

@@ -1,0 +1,13 @@
+//! FPGA substrate models: the Alveo U55C envelope, analytical LUT/FF
+//! resource estimation, routing-congestion feasibility, and power —
+//! the pieces of the paper's evaluation we must simulate in lieu of
+//! Vivado synthesis + xbtop on real hardware (see DESIGN.md §1).
+
+pub mod fpga;
+pub mod power;
+pub mod resources;
+pub mod routing;
+
+pub use fpga::{Fabric, CLOCK_HZ, IDLE_WATTS, U55C};
+pub use resources::Resources;
+pub use routing::Routability;

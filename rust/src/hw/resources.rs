@@ -1,0 +1,146 @@
+//! Analytical LUT/FF resource model (Fig. 18b/18c).
+//!
+//! Per-component cost functions of (M machines, d depth) derived from
+//! the datapath widths of Sections 4/6 (8-bit attributes, 24+x-bit JMM
+//! registers, N-1 adders per tree, CAM of size N, one PE per V_i slot)
+//! with per-component unit costs calibrated so the C1–C4 averages land
+//! on the paper's synthesis results:
+//!
+//! * Hercules: 218,762 LUTs / 118,086 FFs (avg over C1–C4)
+//! * Stannic:   97,607 LUTs /  56,284 FFs
+//!
+//! The model preserves the *scaling shape*: both designs grow with M·d
+//! (per-job tracking hardware), Hercules with a much larger coefficient
+//! (IJCC duplication + tree adders + three-way coherency logic) and a
+//! heavier per-machine fixed block (MMU + CAM + batch-interface port).
+
+/// Resource estimate for one design point.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Resources {
+    pub luts: u64,
+    pub ffs: u64,
+}
+
+/// HERCULES per-unit costs (LUTs, FFs).
+mod hercules_costs {
+    /// IJCC: two 8-bit mul-ish datapaths + comparator + masks (Fig. 6b).
+    pub const IJCC: (u64, u64) = (640, 260);
+    /// Per tree-adder node (two per CC, N-1 nodes each).
+    pub const TREE_NODE: (u64, u64) = (90, 40);
+    /// JMM register + write-port decode per slot (24+x bits, Fig. 5).
+    pub const JMM_SLOT: (u64, u64) = (120, 230);
+    /// VSM register + 4-way data selector per slot (Fig. 6d).
+    pub const VSM_SLOT: (u64, u64) = (110, 60);
+    /// AC CAM way (tag compare + countdown) per slot.
+    pub const CAM_WAY: (u64, u64) = (150, 70);
+    /// Per-machine fixed: MMU (LUT table + FIFO), batch-interface port,
+    /// cost-comparator stage, control FSMs.
+    pub const MACHINE_FIXED: (u64, u64) = (8000, 4000);
+    /// Global fixed: host interface, batch table control, CR core.
+    pub const GLOBAL: (u64, u64) = (24000, 9300);
+}
+
+/// STANNIC per-unit costs (LUTs, FFs).
+mod stannic_costs {
+    /// One PE: MEM (id, T, n, alpha, two memoized sums) + local ALU + CU.
+    pub const PE: (u64, u64) = (440, 260);
+    /// Per-machine fixed: SMMU cost calculator, broadcast/cost bus
+    /// drivers, head-PE alpha check.
+    pub const MACHINE_FIXED: (u64, u64) = (2600, 1200);
+    /// Global fixed: host interface + shared cost comparator.
+    pub const GLOBAL: (u64, u64) = (28600, 18000);
+}
+
+/// HERCULES resource estimate.
+pub fn hercules(machines: usize, depth: usize) -> Resources {
+    use hercules_costs::*;
+    let m = machines as u64;
+    let d = depth as u64;
+    let per_slot =
+        IJCC.0 + TREE_NODE.0 * 2 + JMM_SLOT.0 + VSM_SLOT.0 + CAM_WAY.0;
+    let per_slot_ff =
+        IJCC.1 + TREE_NODE.1 * 2 + JMM_SLOT.1 + VSM_SLOT.1 + CAM_WAY.1;
+    Resources {
+        luts: GLOBAL.0 + m * MACHINE_FIXED.0 + m * d * per_slot,
+        ffs: GLOBAL.1 + m * MACHINE_FIXED.1 + m * d * per_slot_ff,
+    }
+}
+
+/// STANNIC resource estimate.
+pub fn stannic(machines: usize, depth: usize) -> Resources {
+    use stannic_costs::*;
+    let m = machines as u64;
+    let d = depth as u64;
+    Resources {
+        luts: GLOBAL.0 + m * MACHINE_FIXED.0 + m * d * PE.0,
+        ffs: GLOBAL.1 + m * MACHINE_FIXED.1 + m * d * PE.1,
+    }
+}
+
+/// The paper's four comparison configurations (Section 7.2.1).
+pub const PAPER_CONFIGS: [(usize, usize); 4] = [(5, 10), (5, 20), (10, 10), (10, 20)];
+
+/// Average resources over the paper configs.
+pub fn average<F: Fn(usize, usize) -> Resources>(f: F) -> Resources {
+    let mut luts = 0;
+    let mut ffs = 0;
+    for &(m, d) in &PAPER_CONFIGS {
+        let r = f(m, d);
+        luts += r.luts;
+        ffs += r.ffs;
+    }
+    Resources {
+        luts: luts / 4,
+        ffs: ffs / 4,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hercules_average_calibrated() {
+        let avg = average(hercules);
+        let lut_err = (avg.luts as f64 - 218_762.0).abs() / 218_762.0;
+        let ff_err = (avg.ffs as f64 - 118_086.0).abs() / 118_086.0;
+        assert!(lut_err < 0.03, "LUT avg {} err {lut_err}", avg.luts);
+        assert!(ff_err < 0.03, "FF avg {} err {ff_err}", avg.ffs);
+    }
+
+    #[test]
+    fn stannic_average_calibrated() {
+        let avg = average(stannic);
+        let lut_err = (avg.luts as f64 - 97_607.0).abs() / 97_607.0;
+        let ff_err = (avg.ffs as f64 - 56_284.0).abs() / 56_284.0;
+        assert!(lut_err < 0.03, "LUT avg {} err {lut_err}", avg.luts);
+        assert!(ff_err < 0.03, "FF avg {} err {ff_err}", avg.ffs);
+    }
+
+    #[test]
+    fn stannic_uses_less_than_half_of_hercules() {
+        // Section 8.3.2: 2.24x fewer LUTs, 2.1x fewer FFs.
+        let h = average(hercules);
+        let s = average(stannic);
+        let lut_ratio = h.luts as f64 / s.luts as f64;
+        let ff_ratio = h.ffs as f64 / s.ffs as f64;
+        assert!((2.0..2.5).contains(&lut_ratio), "LUT ratio {lut_ratio}");
+        assert!((1.9..2.3).contains(&ff_ratio), "FF ratio {ff_ratio}");
+    }
+
+    #[test]
+    fn luts_exceed_ffs_everywhere() {
+        // Section 8.3.2: "Across all configurations in both designs, the
+        // LUT usage was higher than the FF usage".
+        for &(m, d) in &PAPER_CONFIGS {
+            assert!(hercules(m, d).luts > hercules(m, d).ffs);
+            assert!(stannic(m, d).luts > stannic(m, d).ffs);
+        }
+    }
+
+    #[test]
+    fn monotone_in_configuration() {
+        assert!(hercules(10, 20).luts > hercules(5, 10).luts);
+        assert!(stannic(10, 20).luts > stannic(5, 10).luts);
+    }
+}

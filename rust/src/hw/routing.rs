@@ -1,0 +1,135 @@
+//! Routing-congestion feasibility model (Fig. 18d).
+//!
+//! The paper's scalability boundary is a *routing* failure, not a LUT
+//! shortage: Hercules's decentralized JMM/VSM/MMU triplet requires every
+//! component to communicate with every other about arbitrarily ordered
+//! data, plus an any-machine-to-any-entry batch interface table — wiring
+//! demand that grows ~quadratically with machine count. Stannic's PEs
+//! talk only to their immediate neighbours and two shared buses, so its
+//! demand grows linearly and the boundary moves out 14x.
+//!
+//! The model scores interconnect demand in abstract congestion units and
+//! declares a design routable while demand <= the fabric's capacity
+//! (and its LUTs fit). Coefficients are calibrated to the paper's
+//! boundaries: Hercules routes at 10 machines and fails at 20 (the
+//! paper's 10-machine step resolution), Stannic routes at 140 and fails
+//! at 150.
+
+use super::fpga::Fabric;
+#[cfg(test)]
+use super::fpga::U55C;
+use super::resources;
+
+/// Interconnect demand of a HERCULES instance.
+///
+/// * `M^2` term: the iterative cost comparator and batch-interface table
+///   give every machine a path to every other machine's result lanes,
+///   and the MMU/VSM/JMM coherency web multiplies per-machine wiring.
+/// * `M·d` term: each tracked job's metadata fans out from JMM to CC to
+///   VSM across component boundaries.
+pub fn hercules_congestion(machines: usize, depth: usize) -> f64 {
+    let m = machines as f64;
+    let d = depth as f64;
+    760.0 * m * m + 18.0 * m * d
+}
+
+/// Interconnect demand of a STANNIC instance: per-machine bus drops plus
+/// per-PE neighbour links (local, cheap) and the shared comparator fan-in.
+pub fn stannic_congestion(machines: usize, depth: usize) -> f64 {
+    let m = machines as f64;
+    let d = depth as f64;
+    680.0 * m + 6.0 * m * d / 10.0
+}
+
+/// Routability verdict for a design point.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Routability {
+    Routable,
+    /// Interconnect demand exceeds fabric routing capacity.
+    CongestionFailure,
+    /// Insufficient LUTs/FFs.
+    ResourceFailure,
+}
+
+pub fn route_hercules(machines: usize, depth: usize, fabric: &Fabric) -> Routability {
+    let r = resources::hercules(machines, depth);
+    if r.luts > fabric.luts || r.ffs > fabric.ffs {
+        return Routability::ResourceFailure;
+    }
+    if hercules_congestion(machines, depth) > fabric.routing_capacity {
+        return Routability::CongestionFailure;
+    }
+    Routability::Routable
+}
+
+pub fn route_stannic(machines: usize, depth: usize, fabric: &Fabric) -> Routability {
+    let r = resources::stannic(machines, depth);
+    if r.luts > fabric.luts || r.ffs > fabric.ffs {
+        return Routability::ResourceFailure;
+    }
+    if stannic_congestion(machines, depth) > fabric.routing_capacity {
+        return Routability::CongestionFailure;
+    }
+    Routability::Routable
+}
+
+/// The paper's measurement protocol (Section 7.2.1): grow the machine
+/// count in steps of 10 until synthesis fails; report the last success.
+pub fn max_routable<F: Fn(usize, usize, &Fabric) -> Routability>(
+    route: F,
+    depth: usize,
+    fabric: &Fabric,
+) -> usize {
+    let mut best = 0;
+    let mut m = 10;
+    while m <= 1000 {
+        if route(m, depth, fabric) == Routability::Routable {
+            best = m;
+            m += 10;
+        } else {
+            break;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_boundaries_reproduced() {
+        // Fig. 18d: Hercules max 10, Stannic max 140 (10-step protocol).
+        assert_eq!(max_routable(route_hercules, 10, &U55C), 10);
+        assert_eq!(max_routable(route_stannic, 10, &U55C), 140);
+    }
+
+    #[test]
+    fn paper_comparison_configs_all_route() {
+        for &(m, d) in &resources::PAPER_CONFIGS {
+            assert_eq!(route_hercules(m, d, &U55C), Routability::Routable);
+            assert_eq!(route_stannic(m, d, &U55C), Routability::Routable);
+        }
+    }
+
+    #[test]
+    fn hercules_fails_by_congestion_not_luts() {
+        // Section 5: the decentralized memory management is "the crucial
+        // bottleneck on system scalability", i.e. wiring, not area.
+        assert_eq!(
+            route_hercules(20, 10, &U55C),
+            Routability::CongestionFailure
+        );
+        let r = resources::hercules(20, 10);
+        assert!(r.luts < U55C.luts, "LUTs would still fit");
+    }
+
+    #[test]
+    fn congestion_shapes() {
+        // Hercules quadratic vs Stannic linear in machine count.
+        let h_ratio = hercules_congestion(20, 10) / hercules_congestion(10, 10);
+        let s_ratio = stannic_congestion(20, 10) / stannic_congestion(10, 10);
+        assert!(h_ratio > 3.5, "hercules ~quadratic, got {h_ratio}");
+        assert!((1.9..2.1).contains(&s_ratio), "stannic ~linear, got {s_ratio}");
+    }
+}

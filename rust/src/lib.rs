@@ -1,0 +1,82 @@
+//! # stannic — full-system reproduction of STANNIC / HERCULES
+//!
+//! *STANNIC: Systolic STochAstic ONliNe Scheduling AcCelerator*
+//! (Ross, Palaniappan, Pal — ICCAD 2025).
+//!
+//! This crate implements, from scratch, every system the paper describes
+//! or depends on:
+//!
+//! * [`scheduler`] — the golden discrete-time Stochastic Online Scheduling
+//!   (SOS) engine (Jäger's algorithm with the paper's hardware-oriented
+//!   discretization, Eq. 3–5), plus the continuous-time reference (Eq. 1–2).
+//! * [`sim`] — cycle-accurate component-level simulators of both
+//!   microarchitectures: **Hercules** (task-centric pipeline, Section 4)
+//!   and **Stannic** (schedule-centric systolic array, Section 6).
+//! * [`hw`] — the FPGA substrate models: LUT/FF resource estimation,
+//!   routing-congestion feasibility, and the Alveo U55C power envelope.
+//! * [`quant`] — the numerical-precision study of Section 4.2
+//!   (FP32/FP16/INT8/INT4/Mixed).
+//! * [`workload`] — the in-house workload generator of Section 7.1
+//!   (JC/MC/BF/BT/IT/II parameters) with Monte-Carlo sampling.
+//! * [`baselines`] — RR, Greedy, WSRR, WSG, the single-threaded software
+//!   SOS (the paper's C baseline) and the AVX-style lane-vectorised SOS.
+//! * [`cluster`] — the heterogeneous-cluster execution simulator that
+//!   turns schedules into measured fairness/latency/throughput.
+//! * [`runtime`] — the PJRT/XLA accelerator path: loads the AOT-compiled
+//!   HLO artifacts produced by `python/compile/aot.py` and executes the
+//!   cost datapath from Rust (Python is never on the request path).
+//! * [`coordinator`] — the online serving loop (threads + channels):
+//!   job sources, burst serialization, the PCIe transport model, and
+//!   pluggable scheduling engines.
+//! * [`report`] — renders every table and figure of the paper's
+//!   evaluation section from freshly-run experiments.
+//!
+//! Offline-environment substrates (clap/criterion/serde/proptest are not
+//! available here): [`cli`], [`bench`], [`jsonio`], [`testing`].
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use stannic::prelude::*;
+//!
+//! // Five machines (the paper's M1–M5), alpha = 0.5, depth-10 schedules.
+//! let machines = MachinePark::paper_m1_m5();
+//! let mut engine = SosEngine::new(machines.len(), 10, 0.5, Precision::Fp32);
+//! let spec = WorkloadSpec::default();
+//! let trace = generate_trace(&spec, &machines, 1000, 42);
+//! for event in trace.events() {
+//!     let _ = engine.tick(event.job.as_ref());
+//! }
+//! ```
+
+pub mod baselines;
+pub mod bench;
+pub mod cli;
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod core;
+pub mod hw;
+pub mod jsonio;
+pub mod metrics;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod scheduler;
+pub mod sim;
+pub mod testing;
+pub mod workload;
+
+/// Convenience re-exports for examples and downstream users.
+pub mod prelude {
+    pub use crate::baselines::{GreedyScheduler, RoundRobin, SoscEngine, WsGreedy, WsRoundRobin};
+    pub use crate::cluster::{Cluster, ClusterConfig, RunSummary};
+    pub use crate::core::{
+        Job, JobId, JobNature, Machine, MachineId, MachineKind, MachinePark, Quality,
+    };
+    pub use crate::metrics::{MetricSet, ScheduleMetrics};
+    pub use crate::quant::Precision;
+    pub use crate::scheduler::{SosEngine, TickOutcome};
+    pub use crate::sim::{hercules::HerculesSim, stannic::StannicSim, ArchSim, IterationKind};
+    pub use crate::workload::{generate_trace, Trace, WorkloadSpec};
+}

@@ -1,0 +1,353 @@
+//! `stannic` — the launcher: schedule workloads with any engine,
+//! regenerate every figure of the paper, verify cross-implementation
+//! parity, and inspect hardware-model estimates.
+
+use anyhow::{anyhow, bail, Result};
+
+use stannic::cli::{usage, Args, FlagSpec};
+use stannic::config::{EngineKind, RunConfig};
+use stannic::coordinator::{build_engine, serve, ServeOpts};
+use stannic::core::MachinePark;
+use stannic::quant::Precision;
+use stannic::report::{self, Effort};
+use stannic::scheduler::SosEngine;
+use stannic::sim::{hercules::HerculesSim, stannic::StannicSim, lockstep_verify};
+use stannic::workload::{generate_trace, Trace, WorkloadSpec};
+
+fn flag_specs() -> Vec<FlagSpec> {
+    vec![
+        FlagSpec { name: "machines", help: "machine count (default 5 = paper M1-M5)", takes_value: true },
+        FlagSpec { name: "depth", help: "virtual-schedule depth (default 10)", takes_value: true },
+        FlagSpec { name: "alpha", help: "alpha release factor in (0,1] (default 0.5)", takes_value: true },
+        FlagSpec { name: "jobs", help: "number of jobs (default 1000)", takes_value: true },
+        FlagSpec { name: "seed", help: "workload seed (default 42)", takes_value: true },
+        FlagSpec { name: "engine", help: "native|stannic|hercules|xla (default native)", takes_value: true },
+        FlagSpec { name: "precision", help: "FP32|FP16|INT8|INT4|Mixed (default INT8)", takes_value: true },
+        FlagSpec { name: "workload", help: "even|memory|compute|homogeneous (default even)", takes_value: true },
+        FlagSpec { name: "trace", help: "replay a trace file instead of generating", takes_value: true },
+        FlagSpec { name: "save-trace", help: "write the generated trace to a file", takes_value: true },
+        FlagSpec { name: "quick", help: "reduced-effort runs for smoke testing", takes_value: false },
+        FlagSpec { name: "json", help: "emit machine-readable JSON where supported", takes_value: false },
+    ]
+}
+
+fn commands() -> Vec<(&'static str, &'static str)> {
+    vec![
+        ("serve", "run the online coordinator over a workload"),
+        ("report", "regenerate a paper figure: fig7|fig15|fig16a|fig16b|fig17|fig18|fig19|all"),
+        ("verify", "lockstep-verify both microarchitecture sims against the golden engine"),
+        ("hw", "print resource/routing/power estimates for a configuration"),
+        ("gen", "generate and print (or save) a workload trace"),
+        ("stats", "summarize a workload trace (composition, bursts, EPT spread)"),
+    ]
+}
+
+fn parse_precision(name: &str) -> Result<Precision> {
+    Ok(match name.to_ascii_uppercase().as_str() {
+        "FP32" => Precision::Fp32,
+        "FP16" => Precision::Fp16,
+        "INT8" => Precision::Int8,
+        "INT4" => Precision::Int4,
+        "MIXED" => Precision::Mixed,
+        other => bail!("unknown precision {other}"),
+    })
+}
+
+fn parse_workload(name: &str) -> Result<WorkloadSpec> {
+    Ok(match name {
+        "even" => WorkloadSpec::even(),
+        "memory" => WorkloadSpec::memory_skewed(),
+        "compute" => WorkloadSpec::compute_skewed(),
+        "homogeneous" => WorkloadSpec::homogeneous_memory(),
+        other => bail!("unknown workload {other}"),
+    })
+}
+
+fn config_from(args: &Args) -> Result<RunConfig> {
+    let mut cfg = RunConfig::default();
+    cfg.machines = args.usize_flag("machines", cfg.machines).map_err(|e| anyhow!(e))?;
+    cfg.depth = args.usize_flag("depth", cfg.depth).map_err(|e| anyhow!(e))?;
+    cfg.alpha = args.f32_flag("alpha", cfg.alpha).map_err(|e| anyhow!(e))?;
+    cfg.jobs = args.usize_flag("jobs", cfg.jobs).map_err(|e| anyhow!(e))?;
+    cfg.seed = args.u64_flag("seed", cfg.seed).map_err(|e| anyhow!(e))?;
+    cfg.engine = EngineKind::parse(args.str_flag("engine", "native")).map_err(|e| anyhow!(e))?;
+    cfg.precision = parse_precision(args.str_flag("precision", "INT8"))?;
+    cfg.workload = parse_workload(args.str_flag("workload", "even"))?;
+    Ok(cfg)
+}
+
+fn load_or_generate(args: &Args, cfg: &RunConfig) -> Result<Trace> {
+    if let Some(path) = args.flag("trace") {
+        let text = std::fs::read_to_string(path)?;
+        return Trace::from_text(&text).map_err(|e| anyhow!("parsing {path}: {e}"));
+    }
+    let trace = generate_trace(&cfg.workload, &cfg.park(), cfg.jobs, cfg.seed);
+    if let Some(path) = args.flag("save-trace") {
+        std::fs::write(path, trace.to_text())?;
+        eprintln!("trace written to {path}");
+    }
+    Ok(trace)
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = config_from(args)?;
+    let trace = load_or_generate(args, &cfg)?;
+    let engine = build_engine(cfg.engine, cfg.machines, cfg.depth, cfg.alpha, cfg.precision)?;
+    let report = serve(engine, &trace, &ServeOpts::default())?;
+    let m = &report.metrics;
+    println!("engine            : {}", report.engine);
+    println!("jobs completed    : {}", report.completions.len());
+    println!("scheduler ticks   : {}", report.ticks);
+    println!("stalled iterations: {}", report.stalls);
+    println!("jobs per machine  : {:?}", m.jobs_per_machine);
+    println!("avg latency       : {:.2} ticks", m.avg_latency);
+    println!(
+        "latency p50/95/99 : {} / {} / {} ticks (max {})",
+        report.latency_hist.p50(),
+        report.latency_hist.p95(),
+        report.latency_hist.p99(),
+        report.latency_hist.max()
+    );
+    println!("fairness (Jain)   : {:.3}", m.fairness);
+    println!("load balance CV   : {:.3}", m.load_balance_cv);
+    println!("throughput        : {:.3} jobs/tick", m.throughput);
+    println!(
+        "PCIe              : {} txns, {} bytes, {:.1} us",
+        report.pcie.transactions,
+        report.pcie.bytes,
+        report.pcie.total_ns / 1000.0
+    );
+    if report.accel_cycles > 0 {
+        println!(
+            "accelerator       : {} cycles = {:.3} ms at 371.47 MHz",
+            report.accel_cycles,
+            report.accel_cycles as f64 / stannic::hw::CLOCK_HZ * 1e3
+        );
+    }
+    println!("host wall         : {:.2?}", report.wall);
+    if args.has("json") {
+        use stannic::jsonio::{arr, num, obj, s};
+        let j = obj(vec![
+            ("engine", s(report.engine)),
+            ("completed", num(report.completions.len() as f64)),
+            ("ticks", num(report.ticks as f64)),
+            ("avg_latency", num(m.avg_latency)),
+            ("fairness", num(m.fairness)),
+            ("load_cv", num(m.load_balance_cv)),
+            ("throughput", num(m.throughput)),
+            (
+                "jobs_per_machine",
+                arr(m.jobs_per_machine.iter().map(|&c| num(c as f64)).collect()),
+            ),
+            ("pcie_us", num(report.pcie.total_ns / 1000.0)),
+            ("accel_cycles", num(report.accel_cycles as f64)),
+        ]);
+        println!("{}", j.to_string());
+    }
+    Ok(())
+}
+
+fn cmd_report(args: &Args) -> Result<()> {
+    let effort = if args.has("quick") { Effort::Quick } else { Effort::Paper };
+    let seed = args.u64_flag("seed", 42).map_err(|e| anyhow!(e))?;
+    let which = args
+        .positionals
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("all");
+    let run_one = |name: &str| -> Result<()> {
+        match name {
+            "fig7" => print!("{}", report::fig7::render(&report::fig7::run(effort, seed))),
+            "fig15" => print!("{}", report::fig15::render(&report::fig15::run(effort, seed))),
+            "fig16a" => print!("{}", report::fig16::render_16a(&report::fig16::run_16a(effort, seed))),
+            "fig16b" => print!("{}", report::fig16::render_16b(&report::fig16::run_16b(effort, seed))),
+            "fig17" => print!("{}", report::fig17::render(&report::fig17::run(effort, seed))),
+            "fig18" => print!("{}", report::fig18::render(&report::fig18::run())),
+            "fig19" => print!("{}", report::fig19::render(&report::fig19::run(effort, seed))),
+            "ablations" => print!(
+                "{}",
+                report::ablations::render(
+                    &report::ablations::alpha_sweep(effort, seed),
+                    &report::ablations::depth_sweep(effort, seed),
+                    &report::ablations::adder_ablation(),
+                    &report::ablations::batch_interface_sweep(effort, seed),
+                )
+            ),
+            other => bail!("unknown figure {other}"),
+        }
+        Ok(())
+    };
+    if which == "all" {
+        for name in [
+            "fig7", "fig15", "fig16a", "fig16b", "fig17", "fig18", "fig19", "ablations",
+        ] {
+            println!("==================== {name} ====================");
+            run_one(name)?;
+            println!();
+        }
+    } else {
+        run_one(which)?;
+    }
+    Ok(())
+}
+
+fn cmd_verify(args: &Args) -> Result<()> {
+    let cfg = config_from(args)?;
+    let trace = load_or_generate(args, &cfg)?;
+    let max_ticks = 50_000_000;
+
+    let mut golden = SosEngine::new(cfg.machines, cfg.depth, cfg.alpha, cfg.precision);
+    let mut sim = StannicSim::new(cfg.machines, cfg.depth, cfg.alpha, cfg.precision);
+    let ticks = lockstep_verify(&mut sim, &mut golden, &trace, max_ticks)
+        .map_err(|e| anyhow!("STANNIC sim diverged: {e}"))?;
+    println!(
+        "STANNIC sim : identical schedule over {} jobs ({} ticks, {} cycles, decision latency {} cyc)",
+        trace.n_jobs(),
+        ticks,
+        stannic::sim::ArchSim::stats(&sim).total_cycles(),
+        stannic::sim::ArchSim::stats(&sim).decision_latency,
+    );
+
+    let mut golden = SosEngine::new(cfg.machines, cfg.depth, cfg.alpha, cfg.precision);
+    let mut sim = HerculesSim::new(cfg.machines, cfg.depth, cfg.alpha, cfg.precision);
+    let ticks = lockstep_verify(&mut sim, &mut golden, &trace, max_ticks)
+        .map_err(|e| anyhow!("HERCULES sim diverged: {e}"))?;
+    println!(
+        "HERCULES sim: identical schedule over {} jobs ({} ticks, {} cycles, decision latency {} cyc)",
+        trace.n_jobs(),
+        ticks,
+        stannic::sim::ArchSim::stats(&sim).total_cycles(),
+        stannic::sim::ArchSim::stats(&sim).decision_latency,
+    );
+    println!("parity OK");
+    Ok(())
+}
+
+fn cmd_hw(args: &Args) -> Result<()> {
+    use stannic::hw::{power, resources, routing, U55C};
+    let m = args.usize_flag("machines", 10).map_err(|e| anyhow!(e))?;
+    let d = args.usize_flag("depth", 10).map_err(|e| anyhow!(e))?;
+    let h = resources::hercules(m, d);
+    let s = resources::stannic(m, d);
+    println!("configuration {m}x{d} on Alveo U55C @ 371.47 MHz");
+    println!(
+        "HERCULES: {} LUT / {} FF, routing: {:?}, est {:.2} W, decision latency {} cyc",
+        h.luts,
+        h.ffs,
+        routing::route_hercules(m, d, &U55C),
+        power::watts(h, m, d, 1),
+        stannic::sim::hercules::timing::decision_latency(m, d),
+    );
+    println!(
+        "STANNIC : {} LUT / {} FF, routing: {:?}, est {:.2} W, decision latency {} cyc",
+        s.luts,
+        s.ffs,
+        routing::route_stannic(m, d, &U55C),
+        power::watts(s, m, d, 2),
+        stannic::sim::stannic::timing::decision_latency(m, d),
+    );
+    Ok(())
+}
+
+fn cmd_gen(args: &Args) -> Result<()> {
+    let cfg = config_from(args)?;
+    let trace = generate_trace(&cfg.workload, &cfg.park(), cfg.jobs, cfg.seed);
+    match args.flag("save-trace") {
+        Some(path) => {
+            std::fs::write(path, trace.to_text())?;
+            println!(
+                "wrote {} jobs over {} ticks to {path}",
+                trace.n_jobs(),
+                trace.horizon()
+            );
+        }
+        None => print!("{}", trace.to_text()),
+    }
+    Ok(())
+}
+
+fn cmd_stats(args: &Args) -> Result<()> {
+    use stannic::core::JobNature;
+    let cfg = config_from(args)?;
+    let trace = load_or_generate(args, &cfg)?;
+    let n = trace.n_jobs();
+    let horizon = trace.horizon();
+    let mut by_nature = [0usize; 3];
+    let mut w_min = f32::MAX;
+    let mut w_max = f32::MIN;
+    let mut e_min = f32::MAX;
+    let mut e_max = f32::MIN;
+    let mut per_tick = std::collections::BTreeMap::<u64, usize>::new();
+    for j in trace.jobs() {
+        by_nature[match j.nature {
+            JobNature::Compute => 0,
+            JobNature::Memory => 1,
+            JobNature::Mixed => 2,
+        }] += 1;
+        w_min = w_min.min(j.weight);
+        w_max = w_max.max(j.weight);
+        for &e in &j.ept {
+            e_min = e_min.min(e);
+            e_max = e_max.max(e);
+        }
+        *per_tick.entry(j.arrival).or_default() += 1;
+    }
+    let max_burst = per_tick.values().copied().max().unwrap_or(0);
+    let active_ticks = per_tick.len();
+    println!("jobs            : {n}");
+    println!("horizon         : {horizon} ticks ({active_ticks} arrival ticks)");
+    println!(
+        "composition     : {:.1}% compute / {:.1}% memory / {:.1}% mixed",
+        100.0 * by_nature[0] as f64 / n as f64,
+        100.0 * by_nature[1] as f64 / n as f64,
+        100.0 * by_nature[2] as f64 / n as f64
+    );
+    println!("max burst       : {max_burst} jobs/tick");
+    println!("weight range    : [{w_min}, {w_max}]");
+    println!("EPT range       : [{e_min}, {e_max}]");
+    let gaps: Vec<u64> = per_tick
+        .keys()
+        .copied()
+        .collect::<Vec<_>>()
+        .windows(2)
+        .map(|w| w[1] - w[0])
+        .collect();
+    if let Some(max_gap) = gaps.iter().max() {
+        println!("max idle gap    : {max_gap} ticks");
+    }
+    Ok(())
+}
+
+fn main() {
+    let specs = flag_specs();
+    let args = match Args::parse(std::env::args().skip(1), &specs) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n");
+            eprint!("{}", usage("stannic", &commands(), &specs));
+            std::process::exit(2);
+        }
+    };
+    let result = match args.command.as_deref() {
+        Some("serve") => cmd_serve(&args),
+        Some("report") => cmd_report(&args),
+        Some("verify") => cmd_verify(&args),
+        Some("hw") => cmd_hw(&args),
+        Some("gen") => cmd_gen(&args),
+        Some("stats") => cmd_stats(&args),
+        Some(other) => {
+            eprintln!("unknown command: {other}\n");
+            eprint!("{}", usage("stannic", &commands(), &specs));
+            std::process::exit(2);
+        }
+        None => {
+            eprint!("{}", usage("stannic", &commands(), &specs));
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+    let _ = MachinePark::paper_m1_m5(); // keep prelude types exercised in docs builds
+}

@@ -1,0 +1,154 @@
+//! Log-bucketed latency histogram — percentile reporting for the
+//! serving-style metrics (p50/p95/p99 queue latency), cheap enough for
+//! the coordinator hot path (one increment per completion).
+
+/// Histogram over u64 tick values with power-of-two-ish buckets:
+/// sub-bucket resolution of 1/8 within each octave (HdrHistogram-lite).
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    buckets: Vec<u64>,
+    count: u64,
+    sum: u128,
+    max: u64,
+}
+
+const SUB: usize = 8;
+
+fn bucket_of(v: u64) -> usize {
+    if v < SUB as u64 {
+        return v as usize;
+    }
+    let octave = 63 - v.leading_zeros() as usize; // >= 3
+    let sub = ((v >> (octave - 3)) & 7) as usize; // top 3 bits below msb
+    SUB + (octave - 3) * SUB + sub
+}
+
+fn bucket_lower_bound(i: usize) -> u64 {
+    if i < SUB {
+        return i as u64;
+    }
+    let octave = (i - SUB) / SUB + 3;
+    let sub = (i - SUB) % SUB;
+    (1u64 << octave) + ((sub as u64) << (octave - 3))
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram {
+            buckets: vec![0; SUB + 61 * SUB],
+            count: 0,
+            sum: 0,
+            max: 0,
+        }
+    }
+
+    pub fn record(&mut self, v: u64) {
+        self.buckets[bucket_of(v)] += 1;
+        self.count += 1;
+        self.sum += v as u128;
+        self.max = self.max.max(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// Approximate quantile (bucket lower bound; <= 12.5% relative
+    /// error by construction).
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = ((q.clamp(0.0, 1.0)) * self.count as f64).ceil() as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target.max(1) {
+                return bucket_lower_bound(i).min(self.max);
+            }
+        }
+        self.max
+    }
+
+    pub fn p50(&self) -> u64 {
+        self.quantile(0.50)
+    }
+
+    pub fn p95(&self) -> u64 {
+        self.quantile(0.95)
+    }
+
+    pub fn p99(&self) -> u64 {
+        self.quantile(0.99)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_for_small_values() {
+        let mut h = Histogram::new();
+        for v in [0u64, 1, 2, 3, 4, 5, 6, 7] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 8);
+        assert_eq!(h.quantile(0.125), 0);
+        assert_eq!(h.p50(), 3);
+        assert_eq!(h.max(), 7);
+        assert!((h.mean() - 3.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bucket_bounds_monotone_and_consistent() {
+        let mut last = 0;
+        for i in 0..200 {
+            let lb = bucket_lower_bound(i);
+            assert!(lb >= last, "bucket {i}");
+            last = lb;
+            // the lower bound maps back into its own bucket
+            assert_eq!(bucket_of(lb), i, "bucket {i} lb {lb}");
+        }
+    }
+
+    #[test]
+    fn quantile_error_bounded() {
+        let mut h = Histogram::new();
+        for v in 1..=10_000u64 {
+            h.record(v);
+        }
+        for (q, want) in [(0.5, 5000.0), (0.95, 9500.0), (0.99, 9900.0)] {
+            let got = h.quantile(q) as f64;
+            assert!(
+                (got - want).abs() / want < 0.13,
+                "q{q}: got {got} want {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn empty_histogram_is_zero() {
+        let h = Histogram::new();
+        assert_eq!(h.p99(), 0);
+        assert_eq!(h.mean(), 0.0);
+    }
+}

@@ -1,0 +1,231 @@
+//! Schedule-quality metrics (Section 7.1): fairness, load balancing
+//! (coefficient of variation), latency, and throughput — plus serving-
+//! style latency percentiles via [`Histogram`].
+
+mod histogram;
+
+pub use histogram::Histogram;
+
+/// Per-run metric accumulator: feed it assignment/latency observations,
+/// read the paper's four comparison metrics at the end.
+#[derive(Debug, Clone)]
+pub struct MetricSet {
+    machines: usize,
+    /// Jobs assigned per machine.
+    pub jobs_per_machine: Vec<usize>,
+    /// Sum of per-job queue latency (creation -> execution start), per machine.
+    latency_sum: Vec<f64>,
+    latency_count: Vec<usize>,
+    /// Jobs-assigned counts per observation interval (for CV load balance).
+    interval_counts: Vec<Vec<usize>>,
+    current_interval: Vec<usize>,
+    interval_len: u64,
+    last_interval_start: u64,
+    /// Total jobs scheduled and the tick span, for throughput.
+    scheduled: usize,
+    first_tick: Option<u64>,
+    last_tick: u64,
+}
+
+impl MetricSet {
+    pub fn new(machines: usize, interval_len: u64) -> Self {
+        MetricSet {
+            machines,
+            jobs_per_machine: vec![0; machines],
+            latency_sum: vec![0.0; machines],
+            latency_count: vec![0; machines],
+            interval_counts: Vec::new(),
+            current_interval: vec![0; machines],
+            interval_len: interval_len.max(1),
+            last_interval_start: 0,
+            scheduled: 0,
+            first_tick: None,
+            last_tick: 0,
+        }
+    }
+
+    /// Record a job assignment to `machine` at `tick`.
+    pub fn record_assignment(&mut self, machine: usize, tick: u64) {
+        self.roll_intervals(tick);
+        self.jobs_per_machine[machine] += 1;
+        self.current_interval[machine] += 1;
+        self.scheduled += 1;
+        self.first_tick.get_or_insert(tick);
+        self.last_tick = self.last_tick.max(tick);
+    }
+
+    /// Record a job's queue latency: creation tick -> execution start tick.
+    pub fn record_latency(&mut self, machine: usize, created: u64, started: u64) {
+        debug_assert!(started >= created);
+        self.latency_sum[machine] += (started - created) as f64;
+        self.latency_count[machine] += 1;
+    }
+
+    fn roll_intervals(&mut self, tick: u64) {
+        while tick >= self.last_interval_start + self.interval_len {
+            self.interval_counts
+                .push(std::mem::replace(&mut self.current_interval, vec![0; self.machines]));
+            self.last_interval_start += self.interval_len;
+        }
+    }
+
+    /// Finalize and compute the summary metrics.
+    pub fn finish(mut self) -> ScheduleMetrics {
+        if self.current_interval.iter().any(|&c| c > 0) {
+            self.interval_counts.push(self.current_interval.clone());
+        }
+        let avg_latency: Vec<f64> = (0..self.machines)
+            .map(|m| {
+                if self.latency_count[m] == 0 {
+                    0.0
+                } else {
+                    self.latency_sum[m] / self.latency_count[m] as f64
+                }
+            })
+            .collect();
+        let overall_latency = {
+            let n: usize = self.latency_count.iter().sum();
+            if n == 0 {
+                0.0
+            } else {
+                self.latency_sum.iter().sum::<f64>() / n as f64
+            }
+        };
+        let span = self
+            .first_tick
+            .map_or(1, |f| (self.last_tick - f + 1).max(1));
+        ScheduleMetrics {
+            jobs_per_machine: self.jobs_per_machine.clone(),
+            avg_latency_per_machine: avg_latency,
+            avg_latency: overall_latency,
+            load_balance_cv: load_balance_cv(&self.interval_counts),
+            fairness: jains_index(&self.jobs_per_machine),
+            starvation: self.jobs_per_machine.iter().any(|&c| c == 0)
+                && self.scheduled >= self.machines,
+            throughput: self.scheduled as f64 / span as f64,
+            total_scheduled: self.scheduled,
+        }
+    }
+}
+
+/// Load balancing as the paper defines it: the Coefficient of Variation
+/// of per-machine job counts across scheduling intervals (lower = better).
+pub fn load_balance_cv(interval_counts: &[Vec<usize>]) -> f64 {
+    // Pool all (interval, machine) observations.
+    let obs: Vec<f64> = interval_counts
+        .iter()
+        .flat_map(|v| v.iter().map(|&c| c as f64))
+        .collect();
+    coefficient_of_variation(&obs)
+}
+
+/// CV = sigma / mu (0 when mean is 0).
+pub fn coefficient_of_variation(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mu = xs.iter().sum::<f64>() / xs.len() as f64;
+    if mu == 0.0 {
+        return 0.0;
+    }
+    let var = xs.iter().map(|x| (x - mu) * (x - mu)).sum::<f64>() / xs.len() as f64;
+    var.sqrt() / mu
+}
+
+/// Jain's fairness index over per-machine job counts: 1 = perfectly
+/// fair, 1/n = one machine hogs everything. Used as the quantitative
+/// form of the paper's "low-performing machines are not starved".
+pub fn jains_index(counts: &[usize]) -> f64 {
+    if counts.is_empty() {
+        return 1.0;
+    }
+    let s: f64 = counts.iter().map(|&c| c as f64).sum();
+    if s == 0.0 {
+        return 1.0;
+    }
+    let sq: f64 = counts.iter().map(|&c| (c as f64) * (c as f64)).sum();
+    s * s / (counts.len() as f64 * sq)
+}
+
+/// Final metric bundle for one scheduler run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScheduleMetrics {
+    pub jobs_per_machine: Vec<usize>,
+    pub avg_latency_per_machine: Vec<f64>,
+    /// Mean queue latency across all jobs (ticks).
+    pub avg_latency: f64,
+    /// Coefficient of variation of per-interval machine loads.
+    pub load_balance_cv: f64,
+    /// Jain's index of the final job distribution.
+    pub fairness: f64,
+    /// True if some machine received zero jobs despite enough work.
+    pub starvation: bool,
+    /// Jobs scheduled per tick over the active span.
+    pub throughput: f64,
+    pub total_scheduled: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn jains_index_extremes() {
+        assert!((jains_index(&[10, 10, 10]) - 1.0).abs() < 1e-12);
+        let skew = jains_index(&[30, 0, 0]);
+        assert!((skew - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cv_zero_for_constant() {
+        assert_eq!(coefficient_of_variation(&[5.0, 5.0, 5.0]), 0.0);
+        assert!(coefficient_of_variation(&[1.0, 9.0]) > 0.5);
+    }
+
+    #[test]
+    fn metricset_counts_and_latency() {
+        let mut m = MetricSet::new(2, 10);
+        m.record_assignment(0, 1);
+        m.record_assignment(0, 2);
+        m.record_assignment(1, 3);
+        m.record_latency(0, 1, 5);
+        m.record_latency(0, 2, 4);
+        m.record_latency(1, 3, 13);
+        let s = m.finish();
+        assert_eq!(s.jobs_per_machine, vec![2, 1]);
+        assert_eq!(s.avg_latency_per_machine, vec![3.0, 10.0]);
+        assert!((s.avg_latency - 16.0 / 3.0).abs() < 1e-12);
+        assert_eq!(s.total_scheduled, 3);
+        assert!(!s.starvation);
+    }
+
+    #[test]
+    fn starvation_detected() {
+        let mut m = MetricSet::new(3, 10);
+        for t in 0..9 {
+            m.record_assignment(t % 2, t as u64);
+        }
+        assert!(m.finish().starvation);
+    }
+
+    #[test]
+    fn intervals_roll_over() {
+        let mut m = MetricSet::new(1, 5);
+        m.record_assignment(0, 1);
+        m.record_assignment(0, 7); // second interval
+        m.record_assignment(0, 12); // third interval
+        let s = m.finish();
+        assert_eq!(s.total_scheduled, 3);
+        // three intervals of one job each -> CV 0
+        assert_eq!(s.load_balance_cv, 0.0);
+    }
+
+    #[test]
+    fn throughput_span() {
+        let mut m = MetricSet::new(1, 100);
+        m.record_assignment(0, 10);
+        m.record_assignment(0, 19);
+        let s = m.finish();
+        assert!((s.throughput - 2.0 / 10.0).abs() < 1e-12);
+    }
+}

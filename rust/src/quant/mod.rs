@@ -1,0 +1,181 @@
+//! Numerical-precision schemes for the quantization study (Section 4.2,
+//! Fig. 7). The scheduler datapath stores three derived quantities per
+//! job — weight `W`, per-machine EPT `eps`, and the WSPT ratio `T = W/eps`
+//! — plus the alpha release point `ceil(alpha*eps)`. Each scheme fixes a
+//! representation for every attribute; `INT8` is the paper's choice.
+
+mod error;
+
+pub use error::{alpha_error_pct, wspt_error_pct, distribution_divergence, QuantErrorReport};
+
+use crate::core::{f16_round, fixed_round};
+
+/// A numerical precision scheme for the scheduler datapath.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Precision {
+    /// Full FP32 — the accuracy baseline of Fig. 7.
+    Fp32,
+    /// IEEE binary16 for every attribute.
+    Fp16,
+    /// The paper's selected scheme: 8-bit integer weight & EPT, WSPT in
+    /// UQ4.4 fixed point (max 255/10 = 25.5 needs saturation; UQ4.4 tops
+    /// at 15.94 — saturation is part of the modeled behaviour).
+    Int8,
+    /// 4-bit integers: weight & EPT stored in 4 bits (EPT pre-scaled by
+    /// 1/16), WSPT in UQ2.2.
+    Int4,
+    /// Mixed: INT8 weight, INT4 EPT (x16 scale), WSPT in UQ4.4 — the
+    /// "Mixed" row of Fig. 7a. EPT coarseness gives it INT4-like alpha
+    /// error while the 8-bit weight keeps cost magnitudes accurate,
+    /// matching the paper's observation that Mixed (like INT4) releases
+    /// jobs earlier than intended.
+    Mixed,
+}
+
+impl Precision {
+    pub const ALL: [Precision; 5] = [
+        Precision::Fp32,
+        Precision::Fp16,
+        Precision::Int8,
+        Precision::Int4,
+        Precision::Mixed,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Precision::Fp32 => "FP32",
+            Precision::Fp16 => "FP16",
+            Precision::Int8 => "INT8",
+            Precision::Int4 => "INT4",
+            Precision::Mixed => "Mixed",
+        }
+    }
+
+    /// Storage bits per job attribute (W, eps, T) — Fig. 7a's scheme table.
+    pub fn attribute_bits(&self) -> (u32, u32, u32) {
+        match self {
+            Precision::Fp32 => (32, 32, 32),
+            Precision::Fp16 => (16, 16, 16),
+            Precision::Int8 => (8, 8, 8),
+            Precision::Int4 => (4, 4, 4),
+            Precision::Mixed => (8, 4, 8),
+        }
+    }
+
+    /// Quantize a job weight. Minimum weight is 1 (Section 4.2).
+    pub fn q_weight(&self, w: f32) -> f32 {
+        match self {
+            Precision::Fp32 => w,
+            Precision::Fp16 => f16_round(w),
+            Precision::Int8 => fixed_round(w, 8, 0).max(1.0),
+            Precision::Int4 => fixed_round(w, 4, 0).max(1.0),
+            Precision::Mixed => fixed_round(w, 8, 0).max(1.0),
+        }
+    }
+
+    /// Quantize an expected processing time. Minimum EPT is 10
+    /// (Section 4.2), except in sub-8-bit schemes where the scale factor
+    /// absorbs it.
+    pub fn q_ept(&self, e: f32) -> f32 {
+        match self {
+            Precision::Fp32 => e,
+            Precision::Fp16 => f16_round(e),
+            Precision::Int8 => fixed_round(e, 8, 0).max(1.0),
+            // INT4 EPT is stored as a 4-bit mantissa at x16 scale:
+            // representable values are {16, 32, ..., 240}.
+            Precision::Int4 => (fixed_round(e / 16.0, 4, 0) * 16.0).max(16.0),
+            Precision::Mixed => (fixed_round(e / 16.0, 4, 0) * 16.0).max(16.0),
+        }
+    }
+
+    /// Quantize a WSPT ratio (computed from already-quantized W and eps —
+    /// the scheduler stores T to avoid repeated division, Section 3.3).
+    pub fn q_wspt(&self, t: f32) -> f32 {
+        match self {
+            Precision::Fp32 => t,
+            Precision::Fp16 => f16_round(t),
+            Precision::Int8 => fixed_round(t, 4, 4),
+            Precision::Int4 => fixed_round(t, 2, 2),
+            Precision::Mixed => fixed_round(t, 4, 4),
+        }
+    }
+
+    /// Full attribute pipeline: quantize (W, eps) then derive and
+    /// quantize T = W/eps. Returns (w_q, eps_q, t_q).
+    pub fn q_job(&self, w: f32, eps: f32) -> (f32, f32, f32) {
+        let wq = self.q_weight(w);
+        let eq = self.q_ept(eps);
+        let tq = self.q_wspt(wq / eq);
+        (wq, eq, tq)
+    }
+
+    /// Alpha release point under this precision: `ceil(alpha * eps_q)`.
+    pub fn alpha_point(&self, alpha: f32, eps: f32) -> u32 {
+        (alpha * self.q_ept(eps)).ceil() as u32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fp32_is_identity() {
+        let p = Precision::Fp32;
+        assert_eq!(p.q_job(3.7, 42.3), (3.7, 42.3, 3.7 / 42.3));
+    }
+
+    #[test]
+    fn int8_rounds_to_integers() {
+        let p = Precision::Int8;
+        let (w, e, t) = p.q_job(3.7, 42.3);
+        assert_eq!(w, 4.0);
+        assert_eq!(e, 42.0);
+        // T = 4/42 = 0.0952 -> UQ4.4 nearest = 0.0625 or 0.125
+        assert!((t - 0.0625).abs() < 1e-6 || (t - 0.125).abs() < 1e-6);
+    }
+
+    #[test]
+    fn int8_saturates_at_255() {
+        let p = Precision::Int8;
+        assert_eq!(p.q_weight(300.0), 255.0);
+        assert_eq!(p.q_ept(300.0), 255.0);
+    }
+
+    #[test]
+    fn int4_ept_scale() {
+        let p = Precision::Int4;
+        assert_eq!(p.q_ept(100.0), 96.0); // 100/16=6.25 -> 6 -> 96
+        assert_eq!(p.q_ept(250.0), 240.0); // saturate at 15*16
+        assert_eq!(p.q_ept(5.0), 16.0); // floor of the scheme
+    }
+
+    #[test]
+    fn mixed_is_int8_weight_int4_ept() {
+        let p = Precision::Mixed;
+        assert_eq!(p.q_weight(200.0), 200.0);
+        assert_eq!(p.q_ept(200.0), 208.0); // 200/16=12.5 -> rounds to 13 -> 208
+        assert_eq!(p.attribute_bits(), (8, 4, 8));
+    }
+
+    #[test]
+    fn weight_floor_is_one() {
+        for p in Precision::ALL {
+            assert!(p.q_weight(1.0) >= 1.0, "{}", p.name());
+        }
+    }
+
+    #[test]
+    fn alpha_point_matches_ceil() {
+        let p = Precision::Fp32;
+        assert_eq!(p.alpha_point(0.5, 21.0), 11);
+        assert_eq!(p.alpha_point(1.0, 21.0), 21);
+        assert_eq!(p.alpha_point(0.1, 21.0), 3);
+    }
+
+    #[test]
+    fn attribute_bits_table() {
+        assert_eq!(Precision::Int8.attribute_bits(), (8, 8, 8));
+        assert_eq!(Precision::Mixed.attribute_bits(), (8, 4, 8));
+    }
+}

@@ -1,0 +1,198 @@
+//! Fig. 16 — (a) jobs and average latency per machine; (b) the headline
+//! speedup table: software execution time (ST) vs hardware execution
+//! time (HT), speedup (SU), and power (FPC) for the four comparison
+//! configurations, for both architectures (Section 8.2).
+
+use std::time::Instant;
+
+use crate::bench::Table;
+use crate::cluster::{Cluster, ClusterConfig, SosCluster};
+use crate::core::MachinePark;
+use crate::hw::{self, CLOCK_HZ};
+use crate::quant::Precision;
+use crate::sim::{hercules::HerculesSim, stannic::StannicSim, ArchSim};
+use crate::workload::{generate_trace, WorkloadSpec};
+
+use super::Effort;
+
+/// Fig. 16a data: per-machine jobs + average latency from a cluster run.
+#[derive(Debug, Clone)]
+pub struct Fig16a {
+    pub jobs_per_machine: Vec<usize>,
+    pub avg_latency_per_machine: Vec<f64>,
+}
+
+pub fn run_16a(effort: Effort, seed: u64) -> Fig16a {
+    let park = MachinePark::paper_m1_m5();
+    let n_jobs = effort.scale(300, 2500);
+    let trace = generate_trace(&WorkloadSpec::default(), &park, n_jobs, seed);
+    let mut sched = SosCluster::new(5, 10, 0.5, Precision::Int8);
+    let sum = Cluster::new(park, ClusterConfig::default()).run(&mut sched, &trace);
+    Fig16a {
+        jobs_per_machine: sum.metrics.jobs_per_machine,
+        avg_latency_per_machine: sum.metrics.avg_latency_per_machine,
+    }
+}
+
+/// One row of Fig. 16b.
+#[derive(Debug, Clone)]
+pub struct SpeedupRow {
+    pub config: (usize, usize),
+    /// Software (naive SOSC) wall-clock seconds for the job batch.
+    pub st_secs: f64,
+    /// Hercules hardware seconds (cycles / 371.47 MHz) + power.
+    pub hercules_ht: f64,
+    pub hercules_su: f64,
+    pub hercules_w: f64,
+    /// Stannic hardware seconds + power.
+    pub stannic_ht: f64,
+    pub stannic_su: f64,
+    pub stannic_w: f64,
+    pub jobs: usize,
+}
+
+/// Drive an ArchSim over a trace; return simulated seconds at the FPGA
+/// clock.
+fn hw_seconds<S: ArchSim>(mut sim: S, trace: &crate::workload::Trace) -> f64 {
+    let mut events = trace.events().iter().peekable();
+    let mut t = 0u64;
+    loop {
+        t += 1;
+        while events.peek().is_some_and(|e| e.tick <= t) {
+            sim.submit(events.next().expect("peeked").job.clone().expect("job"));
+        }
+        sim.tick(None);
+        if sim.is_idle() && events.peek().is_none() {
+            break;
+        }
+        if t > 100_000_000 {
+            panic!("sim did not drain");
+        }
+    }
+    sim.stats().seconds_at(CLOCK_HZ)
+}
+
+/// Software baseline: the naive SOSC engine, measured wall-clock.
+fn sw_seconds(machines: usize, depth: usize, trace: &crate::workload::Trace) -> f64 {
+    let mut engine =
+        crate::baselines::SoscEngine::new(machines, depth, 0.5, Precision::Int8);
+    let mut events = trace.events().iter().peekable();
+    let started = Instant::now();
+    let mut t = 0u64;
+    loop {
+        t += 1;
+        while events.peek().is_some_and(|e| e.tick <= t) {
+            engine.submit(events.next().expect("peeked").job.clone().expect("job"));
+        }
+        engine.tick(None);
+        if engine.is_idle() && events.peek().is_none() {
+            break;
+        }
+        if t > 100_000_000 {
+            panic!("sosc did not drain");
+        }
+    }
+    started.elapsed().as_secs_f64()
+}
+
+pub fn run_16b(effort: Effort, seed: u64) -> Vec<SpeedupRow> {
+    let n_jobs = effort.scale(500, 10_000);
+    hw::resources::PAPER_CONFIGS
+        .iter()
+        .map(|&(m, d)| {
+            let park = MachinePark::cycled(m);
+            let trace = generate_trace(&WorkloadSpec::default(), &park, n_jobs, seed);
+            let st = sw_seconds(m, d, &trace);
+            let h_ht = hw_seconds(HerculesSim::new(m, d, 0.5, Precision::Int8), &trace);
+            let s_ht = hw_seconds(StannicSim::new(m, d, 0.5, Precision::Int8), &trace);
+            SpeedupRow {
+                config: (m, d),
+                st_secs: st,
+                hercules_ht: h_ht,
+                hercules_su: st / h_ht,
+                hercules_w: hw::power::watts(hw::resources::hercules(m, d), m, d, 1),
+                stannic_ht: s_ht,
+                stannic_su: st / s_ht,
+                stannic_w: hw::power::watts(hw::resources::stannic(m, d), m, d, 2),
+                jobs: n_jobs,
+            }
+        })
+        .collect()
+}
+
+pub fn render_16a(f: &Fig16a) -> String {
+    let mut out = String::new();
+    out.push_str("Fig 16a — jobs and average latency per machine (SOS)\n");
+    let mut t = Table::new(&["machine", "jobs", "avg latency (ticks)"]);
+    for m in 0..f.jobs_per_machine.len() {
+        t.row(vec![
+            format!("M{}", m + 1),
+            f.jobs_per_machine[m].to_string(),
+            format!("{:.1}", f.avg_latency_per_machine[m]),
+        ]);
+    }
+    out.push_str(&t.render());
+    out
+}
+
+pub fn render_16b(rows: &[SpeedupRow]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "Fig 16b — SOSA vs software implementation ({} jobs; HT = sim cycles / 371.47 MHz)\n",
+        rows.first().map_or(0, |r| r.jobs)
+    ));
+    let mut t = Table::new(&[
+        "C", "cfg", "ST(s)", "H-HT(s)", "H-SU", "H-W", "S-HT(s)", "S-SU", "S-W",
+    ]);
+    for (i, r) in rows.iter().enumerate() {
+        t.row(vec![
+            format!("C{}", i + 1),
+            format!("{}x{}", r.config.0, r.config.1),
+            format!("{:.3}", r.st_secs),
+            format!("{:.4}", r.hercules_ht),
+            format!("{:.0}x", r.hercules_su),
+            format!("{:.2}", r.hercules_w),
+            format!("{:.4}", r.stannic_ht),
+            format!("{:.0}x", r.stannic_su),
+            format!("{:.2}", r.stannic_w),
+        ]);
+    }
+    out.push_str(&t.render());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig16a_latency_favors_best_machines() {
+        let f = run_16a(Effort::Quick, 5);
+        assert_eq!(f.jobs_per_machine.iter().sum::<usize>(), 300);
+        // Best machines (M1/M3/M4 = idx 0/2/3) should see low latency
+        // relative to the Worst ones on average.
+        let best = (f.avg_latency_per_machine[0]
+            + f.avg_latency_per_machine[2]
+            + f.avg_latency_per_machine[3])
+            / 3.0;
+        let worst = (f.avg_latency_per_machine[1] + f.avg_latency_per_machine[4]) / 2.0;
+        assert!(best <= worst * 1.5, "best {best} vs worst {worst}");
+    }
+
+    #[test]
+    fn fig16b_shape_holds() {
+        let rows = run_16b(Effort::Quick, 5);
+        assert_eq!(rows.len(), 4);
+        for r in &rows {
+            // the paper's core claims, shape-wise: hardware decisively
+            // beats software (absolute magnitude depends on the software
+            // baseline's host/CPU — see EXPERIMENTS.md), Stannic's
+            // speedup clearly exceeds Hercules's, both within ~21 W.
+            // Quick-effort debug builds still clear 2x comfortably.
+            assert!(r.hercules_su > 2.0, "H speedup {}", r.hercules_su);
+            assert!(r.stannic_su > r.hercules_su * 1.5);
+            assert!((20.0..22.0).contains(&r.hercules_w));
+            assert!((20.0..22.0).contains(&r.stannic_w));
+        }
+    }
+}

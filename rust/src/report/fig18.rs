@@ -1,0 +1,179 @@
+//! Fig. 18 — the quantitative architecture comparison (Section 8.3):
+//! (a) iteration latency, (b) FF utilization, (c) LUT utilization for
+//! C1–C4 plus averages, and (d) the averages table with maximum routable
+//! configuration size.
+
+use crate::bench::Table;
+use crate::hw::resources::{hercules, stannic, Resources, PAPER_CONFIGS};
+use crate::hw::routing::{max_routable, route_hercules, route_stannic};
+use crate::hw::U55C;
+use crate::sim::{hercules::timing as h_timing, stannic::timing as s_timing};
+
+#[derive(Debug, Clone)]
+pub struct Fig18Row {
+    pub config: (usize, usize),
+    pub hercules_latency: u64,
+    pub stannic_latency: u64,
+    pub hercules_res: Resources,
+    pub stannic_res: Resources,
+}
+
+#[derive(Debug, Clone)]
+pub struct Fig18 {
+    pub rows: Vec<Fig18Row>,
+    pub avg_hercules_latency: f64,
+    pub avg_stannic_latency: f64,
+    pub avg_hercules_res: Resources,
+    pub avg_stannic_res: Resources,
+    pub max_routable_hercules: usize,
+    pub max_routable_stannic: usize,
+}
+
+pub fn run() -> Fig18 {
+    let rows: Vec<Fig18Row> = PAPER_CONFIGS
+        .iter()
+        .map(|&(m, d)| Fig18Row {
+            config: (m, d),
+            hercules_latency: h_timing::decision_latency(m, d),
+            stannic_latency: s_timing::decision_latency(m, d),
+            hercules_res: hercules(m, d),
+            stannic_res: stannic(m, d),
+        })
+        .collect();
+    let n = rows.len() as f64;
+    let avg = |f: &dyn Fn(&Fig18Row) -> f64| rows.iter().map(|r| f(r)).sum::<f64>() / n;
+    Fig18 {
+        avg_hercules_latency: avg(&|r| r.hercules_latency as f64),
+        avg_stannic_latency: avg(&|r| r.stannic_latency as f64),
+        avg_hercules_res: Resources {
+            luts: avg(&|r| r.hercules_res.luts as f64) as u64,
+            ffs: avg(&|r| r.hercules_res.ffs as f64) as u64,
+        },
+        avg_stannic_res: Resources {
+            luts: avg(&|r| r.stannic_res.luts as f64) as u64,
+            ffs: avg(&|r| r.stannic_res.ffs as f64) as u64,
+        },
+        max_routable_hercules: max_routable(route_hercules, 10, &U55C),
+        max_routable_stannic: max_routable(route_stannic, 10, &U55C),
+        rows,
+    }
+}
+
+pub fn render(f: &Fig18) -> String {
+    let mut out = String::new();
+    out.push_str("Fig 18a — iteration latency (cycles)\n");
+    let mut t = Table::new(&["config", "HERCULES", "STANNIC", "ratio"]);
+    for (i, r) in f.rows.iter().enumerate() {
+        t.row(vec![
+            format!("C{} ({}x{})", i + 1, r.config.0, r.config.1),
+            r.hercules_latency.to_string(),
+            r.stannic_latency.to_string(),
+            format!("{:.1}x", r.hercules_latency as f64 / r.stannic_latency as f64),
+        ]);
+    }
+    t.row(vec![
+        "average".into(),
+        format!("{:.0}", f.avg_hercules_latency),
+        format!("{:.1}", f.avg_stannic_latency),
+        format!("{:.1}x", f.avg_hercules_latency / f.avg_stannic_latency),
+    ]);
+    out.push_str(&t.render());
+
+    out.push_str("\nFig 18b — flip-flop utilization\n");
+    let mut t = Table::new(&["config", "HERCULES FF", "STANNIC FF"]);
+    for (i, r) in f.rows.iter().enumerate() {
+        t.row(vec![
+            format!("C{}", i + 1),
+            r.hercules_res.ffs.to_string(),
+            r.stannic_res.ffs.to_string(),
+        ]);
+    }
+    t.row(vec![
+        "average".into(),
+        f.avg_hercules_res.ffs.to_string(),
+        f.avg_stannic_res.ffs.to_string(),
+    ]);
+    out.push_str(&t.render());
+
+    out.push_str("\nFig 18c — LUT utilization\n");
+    let mut t = Table::new(&["config", "HERCULES LUT", "STANNIC LUT"]);
+    for (i, r) in f.rows.iter().enumerate() {
+        t.row(vec![
+            format!("C{}", i + 1),
+            r.hercules_res.luts.to_string(),
+            r.stannic_res.luts.to_string(),
+        ]);
+    }
+    t.row(vec![
+        "average".into(),
+        f.avg_hercules_res.luts.to_string(),
+        f.avg_stannic_res.luts.to_string(),
+    ]);
+    out.push_str(&t.render());
+
+    out.push_str("\nFig 18d — averages & maximum routable configuration\n");
+    let mut t = Table::new(&["metric", "HERCULES", "STANNIC", "improvement"]);
+    t.row(vec![
+        "avg iteration latency".into(),
+        format!("{:.0}", f.avg_hercules_latency),
+        format!("{:.1}", f.avg_stannic_latency),
+        format!("{:.1}x", f.avg_hercules_latency / f.avg_stannic_latency),
+    ]);
+    t.row(vec![
+        "avg LUTs".into(),
+        f.avg_hercules_res.luts.to_string(),
+        f.avg_stannic_res.luts.to_string(),
+        format!(
+            "{:.2}x",
+            f.avg_hercules_res.luts as f64 / f.avg_stannic_res.luts as f64
+        ),
+    ]);
+    t.row(vec![
+        "avg FFs".into(),
+        f.avg_hercules_res.ffs.to_string(),
+        f.avg_stannic_res.ffs.to_string(),
+        format!(
+            "{:.2}x",
+            f.avg_hercules_res.ffs as f64 / f.avg_stannic_res.ffs as f64
+        ),
+    ]);
+    t.row(vec![
+        "max routable machines".into(),
+        f.max_routable_hercules.to_string(),
+        f.max_routable_stannic.to_string(),
+        format!(
+            "{:.0}x",
+            f.max_routable_stannic as f64 / f.max_routable_hercules as f64
+        ),
+    ]);
+    out.push_str(&t.render());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn headline_numbers_match_paper() {
+        let f = run();
+        // 466 vs 62 cycles (7.5x), 2.24x LUT, 2.1x FF, 10 vs 140 machines
+        assert!((f.avg_hercules_latency - 466.0).abs() / 466.0 < 0.02);
+        assert!((f.avg_stannic_latency - 62.0).abs() / 62.0 < 0.02);
+        let ratio = f.avg_hercules_latency / f.avg_stannic_latency;
+        assert!((7.0..8.0).contains(&ratio), "latency ratio {ratio}");
+        assert_eq!(f.max_routable_hercules, 10);
+        assert_eq!(f.max_routable_stannic, 140);
+        let lut_ratio = f.avg_hercules_res.luts as f64 / f.avg_stannic_res.luts as f64;
+        assert!((2.0..2.5).contains(&lut_ratio));
+    }
+
+    #[test]
+    fn render_contains_all_panels() {
+        let text = render(&run());
+        for panel in ["Fig 18a", "Fig 18b", "Fig 18c", "Fig 18d"] {
+            assert!(text.contains(panel));
+        }
+        assert!(text.contains("140"));
+    }
+}

@@ -1,0 +1,162 @@
+//! Fig. 7 — the quantization study (Section 4.2): per-scheme bit table,
+//! schedule-distribution divergence vs FP32, % error in alpha release
+//! points, % error in WSPT ratios.
+
+use crate::bench::Table;
+use crate::core::MachinePark;
+use crate::quant::{
+    alpha_error_pct, distribution_divergence, wspt_error_pct, Precision, QuantErrorReport,
+};
+use crate::scheduler::SosEngine;
+use crate::workload::{generate_trace, Trace, WorkloadSpec};
+
+use super::Effort;
+
+/// Run the SOS engine at `precision` over a trace; return jobs/machine.
+fn schedule_distribution(trace: &Trace, precision: Precision, depth: usize) -> Vec<usize> {
+    let m = trace.machines();
+    let mut engine = SosEngine::new(m, depth, 0.5, precision);
+    let mut counts = vec![0usize; m];
+    let mut events = trace.events().iter().peekable();
+    let mut t = 0u64;
+    loop {
+        t += 1;
+        while events.peek().is_some_and(|e| e.tick <= t) {
+            engine.submit(events.next().expect("peeked").job.clone().expect("job"));
+        }
+        let out = engine.tick(None);
+        if let Some(a) = out.assigned {
+            counts[a.machine] += 1;
+        }
+        if engine.is_idle() && events.peek().is_none() {
+            break;
+        }
+        if t > 50_000_000 {
+            panic!("fig7 run did not drain");
+        }
+    }
+    counts
+}
+
+/// The full Fig. 7 study.
+pub fn run(effort: Effort, seed: u64) -> Vec<QuantErrorReport> {
+    let park = MachinePark::paper_m1_m5();
+    let n_jobs = effort.scale(400, 4000);
+    let trace = generate_trace(&WorkloadSpec::default(), &park, n_jobs, seed);
+
+    // (weight, ept) sample population for the attribute-error metrics
+    let samples: Vec<(f32, f32)> = trace
+        .jobs()
+        .flat_map(|j| j.ept.iter().map(|&e| (j.weight, e)))
+        .collect();
+
+    let fp32_dist = schedule_distribution(&trace, Precision::Fp32, 10);
+    Precision::ALL
+        .iter()
+        .map(|&p| {
+            let dist = if p == Precision::Fp32 {
+                fp32_dist.clone()
+            } else {
+                schedule_distribution(&trace, p, 10)
+            };
+            QuantErrorReport {
+                precision: p,
+                wspt_err_pct: wspt_error_pct(p, &samples),
+                alpha_err_pct: alpha_error_pct(p, 0.5, &samples),
+                distribution_div: distribution_divergence(&dist, &fp32_dist),
+                jobs_per_machine: dist,
+            }
+        })
+        .collect()
+}
+
+/// Render the paper's Fig. 7 panels as tables.
+pub fn render(reports: &[QuantErrorReport]) -> String {
+    let mut out = String::new();
+    out.push_str("Fig 7a — quantization schemes (bits per attribute W/eps/T)\n");
+    let mut t = Table::new(&["scheme", "W", "eps", "T", "note"]);
+    for r in reports {
+        let (w, e, tt) = r.precision.attribute_bits();
+        let note = match r.precision {
+            Precision::Int8 => "selected (green in paper)",
+            Precision::Fp32 => "accuracy baseline",
+            _ => "",
+        };
+        t.row(vec![
+            r.precision.name().into(),
+            w.to_string(),
+            e.to_string(),
+            tt.to_string(),
+            note.into(),
+        ]);
+    }
+    out.push_str(&t.render());
+
+    out.push_str("\nFig 7b — scheduled job distribution per machine (vs FP32)\n");
+    let mut t = Table::new(&["scheme", "M1", "M2", "M3", "M4", "M5", "L1 divergence"]);
+    for r in reports {
+        let mut row: Vec<String> = vec![r.precision.name().into()];
+        row.extend(r.jobs_per_machine.iter().map(|c| c.to_string()));
+        row.push(format!("{:.4}", r.distribution_div));
+        t.row(row);
+    }
+    out.push_str(&t.render());
+
+    out.push_str("\nFig 7c — % error in alpha_J release point\n");
+    let mut t = Table::new(&["scheme", "% err"]);
+    for r in reports {
+        t.row(vec![r.precision.name().into(), format!("{:.3}", r.alpha_err_pct)]);
+    }
+    out.push_str(&t.render());
+
+    out.push_str("\nFig 7d — % error in WSPT ratio\n");
+    let mut t = Table::new(&["scheme", "% err"]);
+    for r in reports {
+        t.row(vec![r.precision.name().into(), format!("{:.3}", r.wspt_err_pct)]);
+    }
+    out.push_str(&t.render());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fp32_reference_has_zero_divergence() {
+        let reports = run(Effort::Quick, 7);
+        assert_eq!(reports.len(), 5);
+        let fp32 = &reports[0];
+        assert_eq!(fp32.precision, Precision::Fp32);
+        assert_eq!(fp32.distribution_div, 0.0);
+        assert_eq!(fp32.wspt_err_pct, 0.0);
+    }
+
+    #[test]
+    fn int8_tracks_fp32_distribution_closely() {
+        // Section 4.2: "INT8 quantization closely replicates the FP32
+        // job distribution" and has lower alpha error than INT4/Mixed.
+        let reports = run(Effort::Quick, 7);
+        let by = |p: Precision| reports.iter().find(|r| r.precision == p).unwrap();
+        let int8 = by(Precision::Int8);
+        let int4 = by(Precision::Int4);
+        let mixed = by(Precision::Mixed);
+        assert!(int8.distribution_div < 0.15, "{}", int8.distribution_div);
+        // Section 4.2: "INT8 demonstrates lower alpha_J error than INT4
+        // and Mixed quantization. Consequently, the latter schemes
+        // release jobs for execution earlier than intended."
+        assert!(int8.alpha_err_pct < int4.alpha_err_pct);
+        assert!(int8.alpha_err_pct < mixed.alpha_err_pct);
+        assert!(int8.distribution_div <= int4.distribution_div);
+    }
+
+    #[test]
+    fn render_contains_all_schemes() {
+        let reports = run(Effort::Quick, 3);
+        let text = render(&reports);
+        for p in Precision::ALL {
+            assert!(text.contains(p.name()));
+        }
+        assert!(text.contains("Fig 7d"));
+    }
+}

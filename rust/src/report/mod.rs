@@ -1,0 +1,30 @@
+//! Figure/table regeneration — one module per paper artifact (see
+//! DESIGN.md §5 for the experiment index). Each module exposes a
+//! `run(...) -> <data struct>` used by both the CLI (`stannic report
+//! figN`) and the benches, plus a `render` that prints the same rows or
+//! series the paper reports.
+
+pub mod ablations;
+pub mod fig15;
+pub mod fig16;
+pub mod fig17;
+pub mod fig18;
+pub mod fig19;
+pub mod fig7;
+
+/// Effort knob shared by the report runners: paper-scale runs are the
+/// default; `quick` keeps CI and smoke runs fast.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Effort {
+    Quick,
+    Paper,
+}
+
+impl Effort {
+    pub fn scale(&self, quick: usize, paper: usize) -> usize {
+        match self {
+            Effort::Quick => quick,
+            Effort::Paper => paper,
+        }
+    }
+}

@@ -1,0 +1,140 @@
+//! Artifact registry: locates and loads the AOT-compiled HLO text
+//! modules emitted by `python/compile/aot.py` (see `artifacts/
+//! manifest.json`). HLO *text* is the interchange format — the crate's
+//! XLA (xla_extension 0.5.1) rejects jax>=0.5 serialized protos with
+//! 64-bit instruction ids; the text parser reassigns ids.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::jsonio::Json;
+
+/// Which compiled datapath an artifact implements.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ArtifactKind {
+    /// Systolic cost+argmin+pos (the Pallas stannic kernel, row-per-step).
+    StannicCost,
+    /// Fused all-rows systolic variant (single VMEM block).
+    StannicFusedCost,
+    /// Dense cost+argmin+pos (the Pallas hercules kernel).
+    HerculesCost,
+    /// Virtual-work update + pop flags.
+    Tick,
+}
+
+impl ArtifactKind {
+    fn file_name(&self, m: usize, d: usize) -> String {
+        match self {
+            ArtifactKind::StannicCost => format!("stannic_cost_{m}x{d}.hlo.txt"),
+            ArtifactKind::StannicFusedCost => {
+                format!("stannic_fused_cost_{m}x{d}.hlo.txt")
+            }
+            ArtifactKind::HerculesCost => format!("hercules_cost_{m}x{d}.hlo.txt"),
+            ArtifactKind::Tick => format!("tick_{m}x{d}.hlo.txt"),
+        }
+    }
+}
+
+/// The artifact directory + its manifest.
+#[derive(Debug, Clone)]
+pub struct ArtifactRegistry {
+    dir: PathBuf,
+    configs: Vec<(usize, usize)>,
+}
+
+impl ArtifactRegistry {
+    /// Open a registry; reads `manifest.json`.
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).with_context(|| {
+            format!(
+                "reading {} — run `make artifacts` first",
+                manifest_path.display()
+            )
+        })?;
+        let json = Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("parsing manifest: {e}"))?;
+        let configs = json
+            .get("configs")
+            .map(|c| {
+                c.items()
+                    .iter()
+                    .filter_map(|e| {
+                        Some((
+                            e.get("machines")?.as_usize()?,
+                            e.get("depth")?.as_usize()?,
+                        ))
+                    })
+                    .collect::<Vec<_>>()
+            })
+            .unwrap_or_default();
+        if configs.is_empty() {
+            bail!("manifest at {} lists no configs", manifest_path.display());
+        }
+        Ok(ArtifactRegistry { dir, configs })
+    }
+
+    /// Default location relative to the repo root / current directory.
+    pub fn open_default() -> Result<Self> {
+        for cand in ["artifacts", "../artifacts", "../../artifacts"] {
+            if Path::new(cand).join("manifest.json").exists() {
+                return Self::open(cand);
+            }
+        }
+        Self::open("artifacts")
+    }
+
+    pub fn configs(&self) -> &[(usize, usize)] {
+        &self.configs
+    }
+
+    pub fn has_config(&self, m: usize, d: usize) -> bool {
+        self.configs.contains(&(m, d))
+    }
+
+    /// Path of a specific artifact.
+    pub fn path(&self, kind: ArtifactKind, m: usize, d: usize) -> PathBuf {
+        self.dir.join(kind.file_name(m, d))
+    }
+
+    /// Load the HLO text of an artifact (existence-checked).
+    pub fn load_text(&self, kind: ArtifactKind, m: usize, d: usize) -> Result<String> {
+        let p = self.path(kind, m, d);
+        std::fs::read_to_string(&p)
+            .with_context(|| format!("artifact {} missing — run `make artifacts`", p.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_file_names() {
+        assert_eq!(
+            ArtifactKind::StannicCost.file_name(5, 10),
+            "stannic_cost_5x10.hlo.txt"
+        );
+        assert_eq!(ArtifactKind::Tick.file_name(20, 10), "tick_20x10.hlo.txt");
+    }
+
+    #[test]
+    fn open_reads_manifest_when_present() {
+        // Only run the content checks when artifacts exist (CI may build
+        // rust before python).
+        if let Ok(reg) = ArtifactRegistry::open_default() {
+            assert!(reg.has_config(5, 10));
+            let text = reg
+                .load_text(ArtifactKind::StannicCost, 5, 10)
+                .expect("artifact listed in manifest");
+            assert!(text.starts_with("HloModule"));
+        }
+    }
+
+    #[test]
+    fn open_missing_dir_errors() {
+        assert!(ArtifactRegistry::open("/nonexistent/dir").is_err());
+    }
+}

@@ -1,0 +1,163 @@
+//! Batched what-if cost analysis — amortizes PJRT dispatch over B
+//! candidate jobs evaluated against a *fixed* schedule state. Used by
+//! burst triage ("which of these 16 queued arrivals is cheapest to place
+//! right now?") and capacity planning; the single-job engine remains the
+//! decision path because the SOS algorithm assigns sequentially.
+//!
+//! The artifact (`batched_cost_{M}x{D}x{B}.hlo.txt`) evaluates the exact
+//! ratio `T_j = W/eps` per probe (what-if analyses probe unquantized
+//! candidates); for datapath-exact costs use [`super::XlaCostEngine`].
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::artifacts::ArtifactRegistry;
+use super::state::XlaScheduleState;
+
+/// Compiled batched cost evaluator for one (M, D, B) configuration.
+pub struct BatchedCostEngine {
+    #[allow(dead_code)] // owns the PJRT runtime backing `exe`
+    client: xla::PjRtClient,
+    exe: xla::PjRtLoadedExecutable,
+    machines: usize,
+    depth: usize,
+    batch: usize,
+}
+
+impl BatchedCostEngine {
+    pub fn compile(registry: &ArtifactRegistry, m: usize, d: usize, b: usize) -> Result<Self> {
+        if !registry.has_config(m, d) {
+            bail!("no artifacts for {m}x{d}");
+        }
+        let path = registry
+            .path(super::artifacts::ArtifactKind::StannicCost, m, d)
+            .with_file_name(format!("batched_cost_{m}x{d}x{b}.hlo.txt"));
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).context("compiling batched module")?;
+        Ok(BatchedCostEngine {
+            client,
+            exe,
+            machines: m,
+            depth: d,
+            batch: b,
+        })
+    }
+
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Evaluate `batch` probes: weights [B], EPT matrix [B, M] (row
+    /// major). Returns (cost [B][M], pos [B][M]).
+    pub fn what_if(
+        &self,
+        state: &XlaScheduleState,
+        weights: &[f32],
+        epts: &[f32],
+    ) -> Result<(Vec<Vec<f32>>, Vec<Vec<i32>>)> {
+        let (b, m, d) = (self.batch, self.machines, self.depth);
+        if weights.len() != b || epts.len() != b * m {
+            bail!(
+                "expected {b} weights and {}x{m} EPTs, got {} / {}",
+                b,
+                weights.len(),
+                epts.len()
+            );
+        }
+        let mk = |v: &[f32]| -> Result<xla::Literal> {
+            Ok(xla::Literal::vec1(v).reshape(&[m as i64, d as i64])?)
+        };
+        let t = mk(state.t())?;
+        let rem_hi = mk(state.rem_hi())?;
+        let rem_lo = mk(state.rem_lo())?;
+        let valid = mk(state.valid())?;
+        let w = xla::Literal::vec1(weights);
+        let e = xla::Literal::vec1(epts).reshape(&[b as i64, m as i64])?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&[t, rem_hi, rem_lo, valid, w, e])?[0][0]
+            .to_literal_sync()?;
+        let (cost_l, pos_l) = result.to_tuple2()?;
+        let flat_c = cost_l.to_vec::<f32>()?;
+        let flat_p = pos_l.to_vec::<i32>()?;
+        let cost = flat_c.chunks(m).map(|c| c.to_vec()).collect();
+        let pos = flat_p.chunks(m).map(|c| c.to_vec()).collect();
+        Ok((cost, pos))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::{cost_of, Slot, VirtualSchedule};
+
+    #[test]
+    fn batched_what_if_matches_scalar_reference() {
+        let Ok(reg) = ArtifactRegistry::open_default() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let (m, d, b) = (5usize, 10usize, 16usize);
+        let eng = BatchedCostEngine::compile(&reg, m, d, b).unwrap();
+
+        // build matching states: XLA arrays + native schedules
+        let mut state = XlaScheduleState::new(m, d);
+        let mut native: Vec<VirtualSchedule> =
+            (0..m).map(|_| VirtualSchedule::new(d)).collect();
+        let jobs = [
+            (0usize, 40.0f32, 20.0f32),
+            (0, 10.0, 20.0),
+            (2, 12.0, 30.0),
+            (4, 99.0, 11.0),
+        ];
+        for (i, &(mach, w, eps)) in jobs.iter().enumerate() {
+            let t = w / eps;
+            let pos = native[mach].position_for(t);
+            native[mach].insert(Slot {
+                id: (i + 1) as u64,
+                weight: w,
+                ept: eps,
+                wspt: t,
+                alpha_pt: 5,
+                n: 0,
+            });
+            state.insert(mach, pos, (i + 1) as u64, w, eps, t, 5);
+        }
+
+        let weights: Vec<f32> = (0..b).map(|i| 1.0 + 3.0 * i as f32).collect();
+        let epts: Vec<f32> = (0..b * m).map(|i| 10.0 + (i % 37) as f32).collect();
+        let (cost, pos) = eng.what_if(&state, &weights, &epts).unwrap();
+        assert_eq!(cost.len(), b);
+
+        for k in 0..b {
+            for mach in 0..m {
+                let w = weights[k];
+                let e = epts[k * m + mach];
+                let c = cost_of(&native[mach], w, e, w / e).expect("not full");
+                assert!(
+                    (cost[k][mach] - c.total()).abs() <= 1e-2 * c.total().max(1.0),
+                    "probe {k} machine {mach}: {} vs {}",
+                    cost[k][mach],
+                    c.total()
+                );
+                assert_eq!(pos[k][mach] as usize, c.position, "probe {k} m {mach}");
+            }
+        }
+    }
+
+    #[test]
+    fn shape_validation() {
+        let Ok(reg) = ArtifactRegistry::open_default() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let eng = BatchedCostEngine::compile(&reg, 5, 10, 16).unwrap();
+        let state = XlaScheduleState::new(5, 10);
+        assert!(eng.what_if(&state, &[1.0; 3], &[10.0; 15]).is_err());
+        assert!(BatchedCostEngine::compile(&reg, 5, 10, 99).is_err());
+    }
+}

@@ -1,0 +1,314 @@
+//! The XLA/PJRT-offloaded scheduling engine — this repo's stand-in for
+//! the FPGA accelerator: the Phase II cost datapath (lowered from the
+//! Pallas systolic kernel) runs inside a compiled XLA executable; the
+//! Rust host holds the schedule state and performs the state
+//! transformations the hardware would do in its PE writeback stage.
+//! Python is never on this path — the executables were AOT-compiled by
+//! `make artifacts`.
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::core::Job;
+use crate::quant::Precision;
+use crate::scheduler::{Assignment, TickOutcome, FULL_COST};
+
+use super::artifacts::{ArtifactKind, ArtifactRegistry};
+use super::state::XlaScheduleState;
+
+/// Which compiled cost datapath to dispatch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CostImpl {
+    /// Per-row systolic kernel (one SMMU per grid step).
+    Stannic,
+    /// Fused all-rows systolic kernel (whole state in one VMEM block).
+    StannicFused,
+    /// Dense tree-adder analog (Hercules datapath).
+    Hercules,
+}
+
+/// A compiled cost executable for one (M, D) configuration.
+pub struct XlaCostEngine {
+    client: xla::PjRtClient,
+    cost_exe: xla::PjRtLoadedExecutable,
+    machines: usize,
+    depth: usize,
+    /// Dispatch counter (for PCIe/dispatch overhead accounting).
+    pub dispatches: u64,
+    /// Preallocated input literals, refreshed in place per query
+    /// (perf: avoids 7 allocations + an extra copy per dispatch — see
+    /// EXPERIMENTS.md §Perf).
+    inputs: Vec<xla::Literal>,
+}
+
+impl XlaCostEngine {
+    /// Compile the cost artifact for (m, d) on the local CPU PJRT client.
+    pub fn compile(
+        registry: &ArtifactRegistry,
+        imp: CostImpl,
+        m: usize,
+        d: usize,
+    ) -> Result<Self> {
+        if !registry.has_config(m, d) {
+            bail!(
+                "no artifact for {m}x{d}; available: {:?}",
+                registry.configs()
+            );
+        }
+        let kind = match imp {
+            CostImpl::Stannic => ArtifactKind::StannicCost,
+            CostImpl::StannicFused => ArtifactKind::StannicFusedCost,
+            CostImpl::Hercules => ArtifactKind::HerculesCost,
+        };
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let path = registry.path(kind, m, d);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let cost_exe = client.compile(&comp).context("compiling cost module")?;
+        let f32t = xla::PrimitiveType::F32;
+        let mat = || xla::Literal::create_from_shape(f32t, &[m, d]);
+        let inputs = vec![
+            mat(),                                           // t
+            mat(),                                           // rem_hi
+            mat(),                                           // rem_lo
+            mat(),                                           // valid
+            xla::Literal::create_from_shape(f32t, &[]),      // j_w
+            xla::Literal::create_from_shape(f32t, &[m]),     // j_eps
+            xla::Literal::create_from_shape(f32t, &[m]),     // j_t
+        ];
+        Ok(XlaCostEngine {
+            client,
+            cost_exe,
+            machines: m,
+            depth: d,
+            dispatches: 0,
+            inputs,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn config(&self) -> (usize, usize) {
+        (self.machines, self.depth)
+    }
+
+    /// Dispatch one cost query: returns (cost [M], best machine, pos [M]).
+    /// `j_t` is the per-machine stored (quantized) WSPT of the probe job —
+    /// the hardware computes it once at job creation (Section 3.3 opt. 1).
+    pub fn cost_select(
+        &mut self,
+        state: &XlaScheduleState,
+        j_w: f32,
+        j_eps: &[f32],
+        j_t: &[f32],
+    ) -> Result<(Vec<f32>, usize, Vec<i32>)> {
+        debug_assert_eq!(j_eps.len(), self.machines);
+        debug_assert_eq!(j_t.len(), self.machines);
+        self.dispatches += 1;
+        // refresh the preallocated input literals in place
+        self.inputs[0].copy_raw_from(state.t())?;
+        self.inputs[1].copy_raw_from(state.rem_hi())?;
+        self.inputs[2].copy_raw_from(state.rem_lo())?;
+        self.inputs[3].copy_raw_from(state.valid())?;
+        self.inputs[4].copy_raw_from(&[j_w])?;
+        self.inputs[5].copy_raw_from(j_eps)?;
+        self.inputs[6].copy_raw_from(j_t)?;
+
+        let result = self
+            .cost_exe
+            .execute::<xla::Literal>(&self.inputs)?[0][0]
+            .to_literal_sync()?;
+        let (cost_l, best_l, pos_l) = result.to_tuple3()?;
+        let cost = cost_l.to_vec::<f32>()?;
+        let best = best_l.get_first_element::<i32>()? as usize;
+        let pos = pos_l.to_vec::<i32>()?;
+        Ok((cost, best, pos))
+    }
+}
+
+/// A full SOS engine whose Phase II cost query is offloaded to the XLA
+/// executable. Produces schedules identical to the golden engine
+/// (integration-tested) — the host-side state transformations implement
+/// the same pop/insert/accrue semantics.
+pub struct XlaSosEngine {
+    cost: XlaCostEngine,
+    state: XlaScheduleState,
+    alpha: f32,
+    precision: Precision,
+    pending: std::collections::VecDeque<Job>,
+    tick_no: u64,
+}
+
+impl XlaSosEngine {
+    pub fn new(
+        registry: &ArtifactRegistry,
+        imp: CostImpl,
+        machines: usize,
+        depth: usize,
+        alpha: f32,
+        precision: Precision,
+    ) -> Result<Self> {
+        Ok(XlaSosEngine {
+            cost: XlaCostEngine::compile(registry, imp, machines, depth)?,
+            state: XlaScheduleState::new(machines, depth),
+            alpha,
+            precision,
+            pending: Default::default(),
+            tick_no: 0,
+        })
+    }
+
+    pub fn dispatches(&self) -> u64 {
+        self.cost.dispatches
+    }
+
+    pub fn machines(&self) -> usize {
+        self.cost.machines
+    }
+
+    pub fn submit(&mut self, job: Job) {
+        self.pending.push_back(job);
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.pending.is_empty() && self.state.total_jobs() == 0
+    }
+
+    /// One scheduler tick with golden semantics: pop, cost+insert
+    /// (offloaded), accrue.
+    pub fn tick(&mut self, arrival: Option<&Job>) -> Result<TickOutcome> {
+        self.tick_no += 1;
+        if let Some(j) = arrival {
+            self.pending.push_back(j.clone());
+        }
+        let mut out = TickOutcome::default();
+
+        // pop alpha-ready heads (host-side state transformation)
+        for m in 0..self.cost.machines {
+            if let Some(id) = self.state.pop_if_ready(m) {
+                out.released.push((id, m));
+            }
+        }
+
+        // offloaded Phase II
+        if !self.pending.is_empty() {
+            if self.state.any_free() {
+                let job = self.pending.pop_front().expect("non-empty");
+                // quantize per machine: probe EPT and stored-WSPT vectors
+                let mut j_eps = vec![0.0f32; self.cost.machines];
+                let mut j_t = vec![0.0f32; self.cost.machines];
+                for m in 0..self.cost.machines {
+                    let (_, eq, tq) = self.precision.q_job(job.weight, job.ept[m]);
+                    j_eps[m] = eq;
+                    j_t[m] = tq;
+                }
+                let j_w = self.precision.q_weight(job.weight);
+                let (cost_vec, best, pos) =
+                    self.cost.cost_select(&self.state, j_w, &j_eps, &j_t)?;
+                if cost_vec[best] >= FULL_COST {
+                    bail!("accelerator selected a full machine");
+                }
+                let (wq, eq, tq) = self.precision.q_job(job.weight, job.ept[best]);
+                self.state.insert(
+                    best,
+                    pos[best] as usize,
+                    job.id,
+                    wq,
+                    eq,
+                    tq,
+                    (self.alpha * eq).ceil() as u32,
+                );
+                out.assigned = Some(Assignment {
+                    job: job.id,
+                    machine: best,
+                    position: pos[best] as usize,
+                    cost: cost_vec[best],
+                    cost_vector: cost_vec,
+                });
+            } else {
+                out.stalled = true;
+            }
+        }
+
+        // accrue virtual work on heads
+        self.state.accrue_heads();
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::MachinePark;
+    use crate::scheduler::SosEngine;
+    use crate::workload::{generate_trace, WorkloadSpec};
+
+    fn registry() -> Option<ArtifactRegistry> {
+        ArtifactRegistry::open_default().ok()
+    }
+
+    /// Full schedule parity golden vs XLA-offloaded engine. Skipped when
+    /// artifacts have not been built (e.g. pure-rust CI stage).
+    #[test]
+    fn xla_engine_schedule_parity() {
+        let Some(reg) = registry() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let park = MachinePark::paper_m1_m5();
+        let trace = generate_trace(&WorkloadSpec::default(), &park, 60, 5);
+        let mut golden = SosEngine::new(5, 10, 0.5, Precision::Int8);
+        let mut xla_eng =
+            XlaSosEngine::new(&reg, CostImpl::Stannic, 5, 10, 0.5, Precision::Int8).unwrap();
+
+        let mut events = trace.events().iter().peekable();
+        for t in 1..=100_000u64 {
+            while events.peek().is_some_and(|e| e.tick <= t) {
+                let j = events.next().unwrap().job.clone().unwrap();
+                golden.submit(j.clone());
+                xla_eng.submit(j);
+            }
+            let g = golden.tick(None);
+            let x = xla_eng.tick(None).unwrap();
+            assert_eq!(g.released, x.released, "tick {t}");
+            assert_eq!(
+                g.assigned.as_ref().map(|a| (a.job, a.machine, a.position)),
+                x.assigned.as_ref().map(|a| (a.job, a.machine, a.position)),
+                "tick {t}"
+            );
+            if golden.is_idle() && xla_eng.is_idle() && events.peek().is_none() {
+                break;
+            }
+        }
+        assert!(golden.is_idle() && xla_eng.is_idle());
+        assert!(xla_eng.dispatches() >= 60);
+    }
+
+    #[test]
+    fn hercules_artifact_matches_stannic_artifact() {
+        let Some(reg) = registry() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let mut a = XlaCostEngine::compile(&reg, CostImpl::Stannic, 5, 10).unwrap();
+        let mut b = XlaCostEngine::compile(&reg, CostImpl::Hercules, 5, 10).unwrap();
+        let mut state = XlaScheduleState::new(5, 10);
+        // seed some jobs
+        state.insert(0, 0, 1, 40.0, 20.0, 2.0, 10);
+        state.insert(0, 1, 2, 10.0, 20.0, 0.5, 10);
+        state.insert(3, 0, 3, 9.0, 30.0, 0.3, 15);
+        let j_eps = [15.0f32, 20.0, 25.0, 30.0, 35.0];
+        let j_t: Vec<f32> = j_eps.iter().map(|e| 12.0 / e).collect();
+        let (ca, ba, pa) = a.cost_select(&state, 12.0, &j_eps, &j_t).unwrap();
+        let (cb, bb, pb) = b.cost_select(&state, 12.0, &j_eps, &j_t).unwrap();
+        assert_eq!(ba, bb);
+        assert_eq!(pa, pb);
+        for (x, y) in ca.iter().zip(&cb) {
+            assert!((x - y).abs() < 1e-3, "{x} vs {y}");
+        }
+    }
+}

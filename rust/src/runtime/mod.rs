@@ -1,0 +1,19 @@
+//! PJRT/XLA runtime — the accelerator-offload path.
+//!
+//! Loads the HLO-text artifacts AOT-compiled by `python/compile/aot.py`
+//! (`make artifacts`), compiles them on the PJRT CPU client via the
+//! `xla` crate, and executes the Phase II cost datapath from the Rust
+//! host. This is the reproduction's analog of the paper's host->FPGA
+//! offload: Python never runs at request time.
+
+mod artifacts;
+mod batched;
+mod engine;
+mod state;
+mod tick;
+
+pub use artifacts::{ArtifactKind, ArtifactRegistry};
+pub use batched::BatchedCostEngine;
+pub use engine::{CostImpl, XlaCostEngine, XlaSosEngine};
+pub use state::XlaScheduleState;
+pub use tick::TickEngine;

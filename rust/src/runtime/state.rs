@@ -1,0 +1,220 @@
+//! Host-side mirror of the schedule state fed to the XLA cost
+//! executable: the padded [M, D] arrays (t, rem_hi, rem_lo, valid) in
+//! row-major layout matching `python/compile/model.py`, plus the
+//! metadata (ids, alpha points, VW counters) the host needs for pops and
+//! inserts. Rows maintain Definition 4 proper ordering.
+
+use crate::core::JobId;
+
+#[derive(Debug, Clone)]
+pub struct XlaScheduleState {
+    machines: usize,
+    depth: usize,
+    t: Vec<f32>,
+    rem_hi: Vec<f32>,
+    rem_lo: Vec<f32>,
+    valid: Vec<f32>,
+    // host-side metadata (not shipped to the accelerator)
+    ids: Vec<JobId>,
+    eps: Vec<f32>,
+    w: Vec<f32>,
+    n: Vec<u32>,
+    alpha_pt: Vec<u32>,
+    lens: Vec<usize>,
+}
+
+impl XlaScheduleState {
+    pub fn new(machines: usize, depth: usize) -> Self {
+        let md = machines * depth;
+        XlaScheduleState {
+            machines,
+            depth,
+            t: vec![0.0; md],
+            rem_hi: vec![0.0; md],
+            rem_lo: vec![0.0; md],
+            valid: vec![0.0; md],
+            ids: vec![0; md],
+            eps: vec![0.0; md],
+            w: vec![0.0; md],
+            n: vec![0; md],
+            alpha_pt: vec![0; md],
+            lens: vec![0; machines],
+        }
+    }
+
+    #[inline]
+    fn at(&self, m: usize, k: usize) -> usize {
+        m * self.depth + k
+    }
+
+    pub fn t(&self) -> &[f32] {
+        &self.t
+    }
+
+    pub fn rem_hi(&self) -> &[f32] {
+        &self.rem_hi
+    }
+
+    pub fn rem_lo(&self) -> &[f32] {
+        &self.rem_lo
+    }
+
+    pub fn valid(&self) -> &[f32] {
+        &self.valid
+    }
+
+    pub fn len(&self, m: usize) -> usize {
+        self.lens[m]
+    }
+
+    pub fn total_jobs(&self) -> usize {
+        self.lens.iter().sum()
+    }
+
+    pub fn any_free(&self) -> bool {
+        self.lens.iter().any(|&l| l < self.depth)
+    }
+
+    /// Refresh the accelerator-visible rem arrays for slot (m, k) from
+    /// the metadata.
+    fn sync_rem(&mut self, m: usize, k: usize) {
+        let i = self.at(m, k);
+        let nf = self.n[i] as f32;
+        self.rem_hi[i] = self.eps[i] - nf;
+        self.rem_lo[i] = self.w[i] - nf * self.t[i];
+    }
+
+    /// Insert a job at row-`m`, position `pos` (shifting the tail right).
+    pub fn insert(
+        &mut self,
+        m: usize,
+        pos: usize,
+        id: JobId,
+        w: f32,
+        eps: f32,
+        t: f32,
+        alpha_pt: u32,
+    ) {
+        assert!(self.lens[m] < self.depth, "insert into full row");
+        assert!(pos <= self.lens[m]);
+        // shift right
+        for k in (pos..self.lens[m]).rev() {
+            let src = self.at(m, k);
+            let dst = self.at(m, k + 1);
+            self.t[dst] = self.t[src];
+            self.rem_hi[dst] = self.rem_hi[src];
+            self.rem_lo[dst] = self.rem_lo[src];
+            self.valid[dst] = self.valid[src];
+            self.ids[dst] = self.ids[src];
+            self.eps[dst] = self.eps[src];
+            self.w[dst] = self.w[src];
+            self.n[dst] = self.n[src];
+            self.alpha_pt[dst] = self.alpha_pt[src];
+        }
+        let i = self.at(m, pos);
+        self.t[i] = t;
+        self.valid[i] = 1.0;
+        self.ids[i] = id;
+        self.eps[i] = eps;
+        self.w[i] = w;
+        self.n[i] = 0;
+        self.alpha_pt[i] = alpha_pt;
+        self.lens[m] += 1;
+        self.sync_rem(m, pos);
+        debug_assert!(self.row_ordered(m));
+    }
+
+    /// Pop the head of row `m` if it has reached its alpha point.
+    pub fn pop_if_ready(&mut self, m: usize) -> Option<JobId> {
+        if self.lens[m] == 0 {
+            return None;
+        }
+        let h = self.at(m, 0);
+        if self.n[h] < self.alpha_pt[h] {
+            return None;
+        }
+        let id = self.ids[h];
+        // shift left
+        for k in 1..self.lens[m] {
+            let src = self.at(m, k);
+            let dst = self.at(m, k - 1);
+            self.t[dst] = self.t[src];
+            self.rem_hi[dst] = self.rem_hi[src];
+            self.rem_lo[dst] = self.rem_lo[src];
+            self.valid[dst] = self.valid[src];
+            self.ids[dst] = self.ids[src];
+            self.eps[dst] = self.eps[src];
+            self.w[dst] = self.w[src];
+            self.n[dst] = self.n[src];
+            self.alpha_pt[dst] = self.alpha_pt[src];
+        }
+        let last = self.at(m, self.lens[m] - 1);
+        self.t[last] = 0.0;
+        self.rem_hi[last] = 0.0;
+        self.rem_lo[last] = 0.0;
+        self.valid[last] = 0.0;
+        self.ids[last] = 0;
+        self.lens[m] -= 1;
+        Some(id)
+    }
+
+    /// Virtual-work accrual: the head of every non-empty row gains one
+    /// cycle; the accelerator-visible rem arrays are refreshed.
+    pub fn accrue_heads(&mut self) {
+        for m in 0..self.machines {
+            if self.lens[m] > 0 {
+                let h = self.at(m, 0);
+                self.n[h] += 1;
+                self.sync_rem(m, 0);
+            }
+        }
+    }
+
+    fn row_ordered(&self, m: usize) -> bool {
+        (1..self.lens[m]).all(|k| self.t[self.at(m, k - 1)] >= self.t[self.at(m, k)])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_pop_accrue_cycle() {
+        let mut s = XlaScheduleState::new(2, 4);
+        s.insert(0, 0, 1, 20.0, 10.0, 2.0, 5);
+        s.insert(0, 1, 2, 5.0, 10.0, 0.5, 5);
+        assert_eq!(s.len(0), 2);
+        assert_eq!(s.total_jobs(), 2);
+        // accrue 5 cycles -> head ready
+        for _ in 0..5 {
+            assert!(s.pop_if_ready(0).is_none());
+            s.accrue_heads();
+        }
+        assert_eq!(s.rem_hi()[0], 5.0); // eps 10 - n 5
+        assert_eq!(s.rem_lo()[0], 10.0); // w 20 - 5*2
+        assert_eq!(s.pop_if_ready(0), Some(1));
+        assert_eq!(s.len(0), 1);
+        assert_eq!(s.t()[0], 0.5, "tail shifted to head");
+        assert_eq!(s.valid()[1], 0.0, "freed slot invalid");
+    }
+
+    #[test]
+    fn rows_are_independent() {
+        let mut s = XlaScheduleState::new(3, 2);
+        s.insert(1, 0, 9, 10.0, 10.0, 1.0, 1);
+        assert_eq!(s.len(0), 0);
+        assert_eq!(s.len(1), 1);
+        assert_eq!(s.valid()[2], 1.0); // row 1 starts at flat index 2
+        s.accrue_heads();
+        assert_eq!(s.pop_if_ready(1), Some(9));
+    }
+
+    #[test]
+    #[should_panic]
+    fn full_row_rejects_insert() {
+        let mut s = XlaScheduleState::new(1, 1);
+        s.insert(0, 0, 1, 1.0, 10.0, 0.1, 1);
+        s.insert(0, 0, 2, 1.0, 10.0, 0.1, 1);
+    }
+}

@@ -1,0 +1,105 @@
+//! Tick-update engine: executes the `tick_{M}x{D}.hlo.txt` artifact —
+//! the Phase III virtual-work accrual + alpha-release check, vectorized
+//! over machines. The single-job [`super::XlaSosEngine`] performs these
+//! transformations host-side (they are O(M) scalar updates); this engine
+//! exists to validate the artifact end-to-end and to serve deployments
+//! that keep the entire schedule state accelerator-resident.
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::artifacts::{ArtifactKind, ArtifactRegistry};
+
+/// Compiled Phase III step for one (M, D) configuration.
+pub struct TickEngine {
+    #[allow(dead_code)] // owns the PJRT runtime backing `exe`
+    client: xla::PjRtClient,
+    exe: xla::PjRtLoadedExecutable,
+    machines: usize,
+}
+
+impl TickEngine {
+    pub fn compile(registry: &ArtifactRegistry, m: usize, d: usize) -> Result<Self> {
+        if !registry.has_config(m, d) {
+            bail!("no artifacts for {m}x{d}");
+        }
+        let path = registry.path(ArtifactKind::Tick, m, d);
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).context("compiling tick module")?;
+        Ok(TickEngine {
+            client,
+            exe,
+            machines: m,
+        })
+    }
+
+    /// One Phase III step over the head slots of every machine:
+    /// `eps0`/`n0`/`valid0` are the heads' EPTs, virtual-work counts and
+    /// occupancy; returns (n_next, pop flags), where pop means the head
+    /// reaches `ceil(alpha * eps)` after this tick's accrual.
+    pub fn step(
+        &self,
+        eps0: &[f32],
+        n0: &[f32],
+        valid0: &[f32],
+        alpha: f32,
+    ) -> Result<(Vec<f32>, Vec<i32>)> {
+        if eps0.len() != self.machines || n0.len() != self.machines || valid0.len() != self.machines
+        {
+            bail!("expected {} machines", self.machines);
+        }
+        let result = self.exe.execute::<xla::Literal>(&[
+            xla::Literal::vec1(eps0),
+            xla::Literal::vec1(n0),
+            xla::Literal::vec1(valid0),
+            xla::Literal::scalar(alpha),
+        ])?[0][0]
+            .to_literal_sync()?;
+        let (n_next, pop) = result.to_tuple2()?;
+        Ok((n_next.to_vec::<f32>()?, pop.to_vec::<i32>()?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tick_artifact_matches_host_semantics() {
+        let Ok(reg) = ArtifactRegistry::open_default() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let eng = TickEngine::compile(&reg, 5, 10).unwrap();
+        let eps0 = [20.0f32, 21.0, 10.0, 255.0, 40.0];
+        let valid0 = [1.0f32, 1.0, 1.0, 0.0, 1.0];
+        let alpha = 0.5f32;
+        // host-side golden rule: n+valid; pop iff n_next >= ceil(alpha*eps)
+        let mut n = [9.0f32, 9.0, 4.0, 0.0, 3.0];
+        for _ in 0..4 {
+            let (n_next, pop) = eng.step(&eps0, &n, &valid0, alpha).unwrap();
+            for m in 0..5 {
+                let want_n = n[m] + valid0[m];
+                assert_eq!(n_next[m], want_n, "machine {m}");
+                let want_pop = valid0[m] > 0.0
+                    && want_n >= (alpha * eps0[m]).ceil();
+                assert_eq!(pop[m] == 1, want_pop, "machine {m} n={want_n}");
+            }
+            n = [n_next[0], n_next[1], n_next[2], n_next[3], n_next[4]];
+        }
+    }
+
+    #[test]
+    fn tick_engine_validates_shapes() {
+        let Ok(reg) = ArtifactRegistry::open_default() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let eng = TickEngine::compile(&reg, 5, 10).unwrap();
+        assert!(eng.step(&[1.0; 3], &[0.0; 5], &[1.0; 5], 0.5).is_err());
+    }
+}

@@ -1,0 +1,213 @@
+//! Continuous-time SOS reference — Equations (1) and (2) of Section 3.1.
+//!
+//! The discretization of Section 3.2 replaces the virtual-work integral
+//! `Omega = ∫ F_K(s) ds` with the cycle count `n_K`. This module keeps
+//! real-valued time and evaluates the integral exactly (virtual work
+//! accrues at unit rate while a job holds the head), so the discrete
+//! engine can be validated against it: when every event falls on integer
+//! times, the two produce identical costs and schedules.
+
+use crate::core::JobId;
+
+/// A tracked job in continuous time.
+#[derive(Debug, Clone, Copy)]
+struct CJob {
+    id: JobId,
+    weight: f64,
+    ept: f64,
+    wspt: f64,
+    /// Exact accumulated virtual work `Omega` (time spent at head).
+    omega: f64,
+}
+
+/// Continuous-time virtual schedule for one machine.
+#[derive(Debug, Clone, Default)]
+pub struct ContinuousSos {
+    jobs: Vec<CJob>, // sorted by wspt desc
+    alpha: f64,
+    now: f64,
+}
+
+/// A release event returned by [`ContinuousSos::advance`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct Release {
+    pub id: JobId,
+    pub at: f64,
+}
+
+impl ContinuousSos {
+    pub fn new(alpha: f64) -> Self {
+        assert!(alpha > 0.0 && alpha <= 1.0);
+        ContinuousSos {
+            jobs: Vec::new(),
+            alpha,
+            now: 0.0,
+        }
+    }
+
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    pub fn len(&self) -> usize {
+        self.jobs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.jobs.is_empty()
+    }
+
+    /// Remaining fraction of virtual work `iota_K(t)` per Eq. (1).
+    fn iota(j: &CJob) -> f64 {
+        1.0 - j.omega / j.ept
+    }
+
+    /// Continuous-time cost of assigning (w, eps) at the current time,
+    /// per Eq. (2). Returns (cost, insertion position).
+    pub fn cost(&self, w: f64, eps: f64) -> (f64, usize) {
+        let t_j = w / eps;
+        let mut sum_hi = 0.0; // sum of iota_K * eps_K over sigma^H
+        let mut sum_lo = 0.0; // sum of W_K * iota_K over sigma^L
+        let mut pos = 0;
+        for j in &self.jobs {
+            if j.wspt >= t_j {
+                sum_hi += Self::iota(j) * j.ept;
+                pos += 1;
+            } else {
+                sum_lo += j.weight * Self::iota(j);
+            }
+        }
+        (w * (eps + sum_hi) + eps * sum_lo, pos)
+    }
+
+    /// Assign a job at the current time.
+    pub fn assign(&mut self, id: JobId, w: f64, eps: f64) -> usize {
+        let t_j = w / eps;
+        let pos = self.jobs.iter().take_while(|j| j.wspt >= t_j).count();
+        self.jobs.insert(
+            pos,
+            CJob {
+                id,
+                weight: w,
+                ept: eps,
+                wspt: t_j,
+                omega: 0.0,
+            },
+        );
+        pos
+    }
+
+    /// Advance time by `dt`, accruing virtual work on the head and
+    /// emitting releases whenever the head's omega crosses its
+    /// `alpha * eps` release point (the continuous Phase III rule).
+    pub fn advance(&mut self, dt: f64) -> Vec<Release> {
+        assert!(dt >= 0.0);
+        let mut releases = Vec::new();
+        let mut remaining = dt;
+        while remaining > 1e-12 {
+            let Some(head) = self.jobs.first_mut() else {
+                self.now += remaining;
+                break;
+            };
+            let release_at = self.alpha * head.ept;
+            let need = release_at - head.omega;
+            if need > remaining {
+                head.omega += remaining;
+                self.now += remaining;
+                remaining = 0.0;
+            } else {
+                head.omega = release_at;
+                self.now += need.max(0.0);
+                remaining -= need.max(0.0);
+                let done = self.jobs.remove(0);
+                releases.push(Release {
+                    id: done.id,
+                    at: self.now,
+                });
+            }
+        }
+        releases
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cost_matches_equation_2_by_hand() {
+        let mut c = ContinuousSos::new(0.5);
+        c.assign(1, 40.0, 20.0); // T=2
+        c.assign(2, 10.0, 20.0); // T=0.5
+        // half the head's virtual work done: omega = 5 => iota = 0.75
+        c.advance(5.0);
+        // probe J: w=15, eps=15, T=1 -> sigma^H={1}: iota*eps = 15
+        //                              sigma^L={2}: W*iota = 10*1 = 10
+        let (cost, pos) = c.cost(15.0, 15.0);
+        assert!((cost - (15.0 * (15.0 + 15.0) + 15.0 * 10.0)).abs() < 1e-9);
+        assert_eq!(pos, 1);
+    }
+
+    #[test]
+    fn head_releases_exactly_at_alpha_eps() {
+        let mut c = ContinuousSos::new(0.5);
+        c.assign(1, 10.0, 20.0); // release after 10 time units at head
+        let r = c.advance(9.99);
+        assert!(r.is_empty());
+        let r = c.advance(0.02);
+        assert_eq!(r.len(), 1);
+        assert!((r[0].at - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn consecutive_releases_within_one_advance() {
+        let mut c = ContinuousSos::new(1.0);
+        c.assign(1, 40.0, 4.0); // T=10, releases after 4
+        c.assign(2, 30.0, 4.0); // T=7.5, releases 4 after job 1
+        let r = c.advance(100.0);
+        assert_eq!(r.len(), 2);
+        assert!((r[0].at - 4.0).abs() < 1e-9);
+        assert!((r[1].at - 8.0).abs() < 1e-9);
+        assert!(c.is_empty());
+        assert!((c.now() - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn discrete_engine_agrees_on_integer_grid() {
+        // Drive the continuous model on unit steps and compare costs with
+        // the discrete formula cost^H/cost^L at every step.
+        use crate::quant::Precision;
+        use crate::scheduler::{cost_of, SosEngine};
+        use crate::core::{Job, JobNature};
+
+        let mut cont = ContinuousSos::new(0.5);
+        let mut disc = SosEngine::new(1, 8, 0.5, Precision::Fp32);
+
+        let arrivals: Vec<(u64, f32, f32)> =
+            vec![(1, 8.0, 16.0), (3, 24.0, 12.0), (5, 4.0, 20.0)];
+        let mut next = 0usize;
+        for t in 1..=30u64 {
+            let arr = (next < arrivals.len() && arrivals[next].0 == t).then(|| {
+                let (_, w, e) = arrivals[next];
+                next += 1;
+                Job::new(t, w, vec![e], JobNature::Mixed)
+            });
+            // continuous: probe cost before assignment, then assign+advance
+            if let Some(j) = &arr {
+                let (cc, cp) = cont.cost(j.weight as f64, j.ept[0] as f64);
+                let dc = cost_of(disc.schedule(0), j.weight, j.ept[0], j.wspt(0));
+                if let Some(d) = dc {
+                    assert!(
+                        (cc - d.total() as f64).abs() < 1e-3,
+                        "tick {t}: continuous {cc} vs discrete {}",
+                        d.total()
+                    );
+                    assert_eq!(cp, d.position, "tick {t} position");
+                }
+                cont.assign(j.id, j.weight as f64, j.ept[0] as f64);
+            }
+            disc.tick(arr.as_ref());
+            cont.advance(1.0);
+        }
+    }
+}

@@ -1,0 +1,136 @@
+//! Discrete-time assignment cost — Equations (4) and (5) of Section 3.2.
+
+use super::vschedule::VirtualSchedule;
+
+/// Sentinel cost for full virtual schedules; must match
+/// `python/compile/kernels/ref.py::FULL_COST`.
+pub const FULL_COST: f32 = 3.0e38;
+
+/// The two cost components of Eq. (2)/(4)/(5).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CostBreakdown {
+    /// `cost^H = J.W * (J.eps_i + sum^H)` — delay imposed *on* J by
+    /// higher-or-equal-priority incumbents.
+    pub hi: f32,
+    /// `cost^L = J.eps_i * sum^L` — delay imposed *by* J on lower-priority
+    /// incumbents.
+    pub lo: f32,
+    /// Insertion index of J in the schedule (|sigma^H|).
+    pub position: usize,
+}
+
+impl CostBreakdown {
+    #[inline]
+    pub fn total(&self) -> f32 {
+        self.hi + self.lo
+    }
+}
+
+/// Cost of scheduling a job with (quantized) weight `j_w`, EPT `j_eps`
+/// and WSPT `j_t` onto the machine owning `vs`. Returns `None` when the
+/// schedule is full (the machine cannot be selected).
+pub fn cost_of(vs: &VirtualSchedule, j_w: f32, j_eps: f32, j_t: f32) -> Option<CostBreakdown> {
+    if vs.is_full() {
+        return None;
+    }
+    // Single fused pass over the schedule (perf: previously three
+    // separate traversals for sum_hi / sum_lo / position — see
+    // EXPERIMENTS.md §Perf). The ordering invariant additionally makes
+    // the HI set a prefix, so the branch is perfectly predictable.
+    let mut sum_hi = 0.0f32;
+    let mut sum_lo = 0.0f32;
+    let mut position = 0usize;
+    for s in vs.slots() {
+        if s.wspt >= j_t {
+            sum_hi += s.rem_hi();
+            position += 1;
+        } else {
+            sum_lo += s.rem_lo();
+        }
+    }
+    Some(CostBreakdown {
+        hi: j_w * (j_eps + sum_hi),
+        lo: j_eps * sum_lo,
+        position,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::vschedule::Slot;
+
+    fn slot(id: u64, w: f32, e: f32) -> Slot {
+        Slot {
+            id,
+            weight: w,
+            ept: e,
+            wspt: w / e,
+            alpha_pt: (0.5 * e).ceil() as u32,
+            n: 0,
+        }
+    }
+
+    #[test]
+    fn empty_schedule_cost_is_w_times_eps() {
+        let vs = VirtualSchedule::new(4);
+        let c = cost_of(&vs, 3.0, 50.0, 3.0 / 50.0).unwrap();
+        assert_eq!(c.hi, 150.0);
+        assert_eq!(c.lo, 0.0);
+        assert_eq!(c.position, 0);
+    }
+
+    #[test]
+    fn matches_hand_computed_example() {
+        // V_i: K1 (W=40,e=20,T=2), K2 (W=20,e=20,T=1), K3 (W=10,e=20,T=0.5)
+        let mut vs = VirtualSchedule::new(8);
+        vs.insert(slot(1, 40.0, 20.0));
+        vs.insert(slot(2, 20.0, 20.0));
+        vs.insert(slot(3, 10.0, 20.0));
+        // J: W=15, eps=15, T=1.0 -> sigma^H={K1,K2} (ties count), sigma^L={K3}
+        let c = cost_of(&vs, 15.0, 15.0, 1.0).unwrap();
+        // cost^H = 15*(15 + (20+20)) = 825 ; cost^L = 15*10 = 150
+        assert_eq!(c.hi, 825.0);
+        assert_eq!(c.lo, 150.0);
+        assert_eq!(c.total(), 975.0);
+        assert_eq!(c.position, 2);
+    }
+
+    #[test]
+    fn virtual_work_discounts_cost() {
+        let mut vs = VirtualSchedule::new(4);
+        vs.insert(slot(1, 40.0, 20.0)); // head, T=2
+        for _ in 0..5 {
+            vs.accrue(); // n_head = 5
+        }
+        // J with T=1: sum^H = (20-5) = 15
+        let c = cost_of(&vs, 10.0, 10.0, 1.0).unwrap();
+        assert_eq!(c.hi, 10.0 * (10.0 + 15.0));
+        // J with T=3 (outranks head): sum^L = 40 - 5*2 = 30
+        let c2 = cost_of(&vs, 30.0, 10.0, 3.0).unwrap();
+        assert_eq!(c2.lo, 10.0 * 30.0);
+        assert_eq!(c2.position, 0);
+    }
+
+    #[test]
+    fn full_schedule_returns_none() {
+        let mut vs = VirtualSchedule::new(1);
+        vs.insert(slot(1, 10.0, 10.0));
+        assert!(cost_of(&vs, 1.0, 10.0, 0.1).is_none());
+    }
+
+    #[test]
+    fn remark_no_negative_contribution_under_alpha_policy() {
+        // Section 3.2 Remark: with alpha in (0,1], a job releases at or
+        // before n == eps, so rem_hi and rem_lo never go negative.
+        let mut vs = VirtualSchedule::new(2);
+        vs.insert(slot(1, 16.0, 8.0)); // alpha_pt = 4 (alpha 0.5)
+        for _ in 0..4 {
+            vs.accrue();
+        }
+        let head = *vs.head().unwrap();
+        assert!(head.ready());
+        assert!(head.rem_hi() >= 0.0);
+        assert!(head.rem_lo() >= 0.0);
+    }
+}

@@ -1,0 +1,323 @@
+//! The golden discrete-time SOS engine.
+//!
+//! One [`SosEngine::tick`] = one pass around the cyclical algorithmic
+//! flow of Fig. 2b / Fig. 9, executing (in order):
+//!
+//! 1. **POP** (`B`) — release every machine head that reached its alpha
+//!    point during a previous tick.
+//! 2. **Cost + Insert** (`C`/`D`/`E`) — if a job is waiting at the
+//!    arrival FIFO, compute `cost(J -> M_i)` for all machines over the
+//!    post-pop state, pick the argmin (ties to the lowest machine index,
+//!    matching both hardware Cost Comparators), insert at WSPT position.
+//! 3. **Virtual work** (`F`) — the head of every non-empty schedule
+//!    accrues one cycle of virtual work.
+//!
+//! Burst arrivals are serialized through the engine's internal FIFO: the
+//! SOS algorithm assumes sequential job arrival (Phase I), so at most one
+//! job is assigned per tick; the rest wait, exactly as the hardware's
+//! host interface feeds one job per scheduling iteration.
+
+use std::collections::VecDeque;
+
+use crate::core::{Job, JobId, MachineId};
+use crate::quant::Precision;
+
+use super::cost::{cost_of, FULL_COST};
+use super::vschedule::{Slot, VirtualSchedule};
+
+/// Result of assigning one job (Phase II).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Assignment {
+    pub job: JobId,
+    pub machine: MachineId,
+    /// Insertion index within the winning machine's virtual schedule.
+    pub position: usize,
+    /// Winning (minimum) cost.
+    pub cost: f32,
+    /// Full per-machine cost vector (FULL_COST where the V_i was full).
+    pub cost_vector: Vec<f32>,
+}
+
+/// Everything that happened in one scheduler tick.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TickOutcome {
+    /// Jobs released to machine work queues this tick (Phase III pops).
+    pub released: Vec<(JobId, MachineId)>,
+    /// The job assigned this tick, if an arrival was processed.
+    pub assigned: Option<Assignment>,
+    /// True when an arrival was waiting but *every* machine was full.
+    pub stalled: bool,
+}
+
+/// Golden software model of the discretized SOS algorithm.
+#[derive(Debug, Clone)]
+pub struct SosEngine {
+    schedules: Vec<VirtualSchedule>,
+    alpha: f32,
+    precision: Precision,
+    /// Arrival FIFO (burst serialization).
+    pending: VecDeque<Job>,
+    tick_no: u64,
+    /// Scratch cost vector, reused across ticks to keep the hot loop
+    /// allocation-free.
+    cost_scratch: Vec<f32>,
+}
+
+impl SosEngine {
+    pub fn new(machines: usize, depth: usize, alpha: f32, precision: Precision) -> Self {
+        assert!(machines >= 1);
+        assert!(alpha > 0.0 && alpha <= 1.0, "alpha in (0, 1] (Phase III)");
+        SosEngine {
+            schedules: (0..machines).map(|_| VirtualSchedule::new(depth)).collect(),
+            alpha,
+            precision,
+            pending: VecDeque::new(),
+            tick_no: 0,
+            cost_scratch: vec![0.0; machines],
+        }
+    }
+
+    pub fn machines(&self) -> usize {
+        self.schedules.len()
+    }
+
+    pub fn depth(&self) -> usize {
+        self.schedules[0].depth()
+    }
+
+    pub fn alpha(&self) -> f32 {
+        self.alpha
+    }
+
+    pub fn precision(&self) -> Precision {
+        self.precision
+    }
+
+    pub fn tick_no(&self) -> u64 {
+        self.tick_no
+    }
+
+    pub fn schedule(&self, m: MachineId) -> &VirtualSchedule {
+        &self.schedules[m]
+    }
+
+    pub fn schedules(&self) -> &[VirtualSchedule] {
+        &self.schedules
+    }
+
+    /// Jobs waiting in the arrival FIFO (not yet assigned).
+    pub fn backlog(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Total jobs currently tracked across all virtual schedules.
+    pub fn in_flight(&self) -> usize {
+        self.schedules.iter().map(|v| v.len()).sum()
+    }
+
+    /// Enqueue an arrival without running a tick (used by burst sources).
+    pub fn submit(&mut self, job: Job) {
+        self.pending.push_back(job);
+    }
+
+    /// Run one scheduler tick; `arrival` is this tick's new job, if any.
+    pub fn tick(&mut self, arrival: Option<&Job>) -> TickOutcome {
+        self.tick_no += 1;
+        if let Some(j) = arrival {
+            self.pending.push_back(j.clone());
+        }
+
+        let mut out = TickOutcome::default();
+
+        // (1) POP iteration part: alpha-ready heads release to machines.
+        for (m, vs) in self.schedules.iter_mut().enumerate() {
+            if vs.head().is_some_and(|h| h.ready()) {
+                let slot = vs.pop_head().expect("head checked above");
+                out.released.push((slot.id, m));
+            }
+        }
+
+        // (2) Insert iteration part: assign the oldest pending arrival.
+        if !self.pending.is_empty() {
+            let any_free = self.schedules.iter().any(|v| !v.is_full());
+            if any_free {
+                let job = self.pending.pop_front().expect("front checked");
+                out.assigned = Some(self.assign(&job));
+            } else {
+                out.stalled = true;
+            }
+        }
+
+        // (3) Standard iteration part: heads accrue virtual work.
+        for vs in &mut self.schedules {
+            vs.accrue();
+        }
+
+        out
+    }
+
+    /// Phase II machine assignment: cost all machines, argmin, insert.
+    fn assign(&mut self, job: &Job) -> Assignment {
+        debug_assert_eq!(job.fanout(), self.schedules.len());
+        let mut best: Option<(usize, f32, usize)> = None; // (machine, cost, pos)
+        for (m, vs) in self.schedules.iter().enumerate() {
+            let (j_w, j_eps, j_t) = self.precision.q_job(job.weight, job.ept[m]);
+            match cost_of(vs, j_w, j_eps, j_t) {
+                Some(c) => {
+                    let total = c.total();
+                    self.cost_scratch[m] = total;
+                    // strict < keeps the first (lowest-index) minimum
+                    if best.map_or(true, |(_, bc, _)| total < bc) {
+                        best = Some((m, total, c.position));
+                    }
+                }
+                None => {
+                    self.cost_scratch[m] = FULL_COST;
+                }
+            }
+        }
+        let (machine, cost, position) =
+            best.expect("assign() requires at least one non-full machine");
+        let (j_w, j_eps, j_t) = self.precision.q_job(job.weight, job.ept[machine]);
+        let slot = Slot {
+            id: job.id,
+            weight: j_w,
+            ept: j_eps,
+            wspt: j_t,
+            alpha_pt: (self.alpha * j_eps).ceil() as u32,
+            n: 0,
+        };
+        let inserted_at = self.schedules[machine].insert(slot);
+        debug_assert_eq!(inserted_at, position, "cost position == insert position");
+        debug_assert!(self.schedules[machine].is_properly_ordered());
+        Assignment {
+            job: job.id,
+            machine,
+            position,
+            cost,
+            cost_vector: self.cost_scratch.clone(),
+        }
+    }
+
+    /// Drain-mode tick: no arrivals, just pops + virtual work. Used to
+    /// flush schedules at end of trace.
+    pub fn drain_tick(&mut self) -> TickOutcome {
+        self.tick(None)
+    }
+
+    /// True when no work remains anywhere in the scheduler.
+    pub fn is_idle(&self) -> bool {
+        self.pending.is_empty() && self.schedules.iter().all(|v| v.is_empty())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::JobNature;
+
+    fn job(id: u64, w: f32, ept: Vec<f32>) -> Job {
+        Job::new(id, w, ept, JobNature::Mixed)
+    }
+
+    #[test]
+    fn single_job_lands_on_cheapest_machine() {
+        let mut e = SosEngine::new(3, 4, 0.5, Precision::Fp32);
+        let j = job(1, 2.0, vec![50.0, 10.0, 30.0]);
+        let out = e.tick(Some(&j));
+        let a = out.assigned.unwrap();
+        assert_eq!(a.machine, 1); // cost = W*eps = 100/20/60
+        assert_eq!(a.cost, 20.0);
+        assert_eq!(a.position, 0);
+        assert_eq!(a.cost_vector, vec![100.0, 20.0, 60.0]);
+    }
+
+    #[test]
+    fn tie_goes_to_lowest_machine_index() {
+        let mut e = SosEngine::new(3, 4, 0.5, Precision::Fp32);
+        let j = job(1, 2.0, vec![10.0, 10.0, 10.0]);
+        assert_eq!(e.tick(Some(&j)).assigned.unwrap().machine, 0);
+    }
+
+    #[test]
+    fn head_releases_at_alpha_point() {
+        let mut e = SosEngine::new(1, 4, 0.5, Precision::Fp32);
+        let j = job(1, 2.0, vec![10.0]); // alpha_pt = 5
+        e.tick(Some(&j));
+        let mut released_at = None;
+        for t in 2..=10 {
+            let out = e.tick(None);
+            if !out.released.is_empty() {
+                released_at = Some(t);
+                assert_eq!(out.released[0], (1, 0));
+                break;
+            }
+        }
+        // assigned at tick 1 (accrues at 1..=5), pops at tick 6
+        assert_eq!(released_at, Some(6));
+        assert!(e.is_idle());
+    }
+
+    #[test]
+    fn burst_is_serialized_one_assignment_per_tick() {
+        let mut e = SosEngine::new(2, 8, 0.5, Precision::Fp32);
+        for i in 0..4 {
+            e.submit(job(i, 2.0, vec![20.0, 20.0]));
+        }
+        let mut assigned = 0;
+        for _ in 0..4 {
+            let out = e.tick(None);
+            assert!(out.assigned.is_some());
+            assigned += 1;
+        }
+        assert_eq!(assigned, 4);
+        assert_eq!(e.backlog(), 0);
+    }
+
+    #[test]
+    fn stall_when_all_machines_full() {
+        let mut e = SosEngine::new(1, 1, 1.0, Precision::Fp32);
+        e.tick(Some(&job(1, 2.0, vec![100.0])));
+        let out = e.tick(Some(&job(2, 2.0, vec![100.0])));
+        assert!(out.stalled);
+        assert!(out.assigned.is_none());
+        assert_eq!(e.backlog(), 1);
+    }
+
+    #[test]
+    fn higher_priority_newcomer_takes_head() {
+        let mut e = SosEngine::new(1, 4, 1.0, Precision::Fp32);
+        e.tick(Some(&job(1, 1.0, vec![100.0]))); // T = 0.01
+        let out = e.tick(Some(&job(2, 50.0, vec![10.0]))); // T = 5
+        let a = out.assigned.unwrap();
+        assert_eq!(a.position, 0, "newcomer outranks incumbent head");
+        assert_eq!(e.schedule(0).head().unwrap().id, 2);
+        // The displaced job retains its accrued virtual work (n=1 from
+        // the first tick) but stops accruing while off-head.
+        assert_eq!(e.schedule(0).slots()[1].id, 1);
+        assert_eq!(e.schedule(0).slots()[1].n, 1);
+    }
+
+    #[test]
+    fn cost_accounts_for_queued_work() {
+        // Machine 0 cheap but loaded; machine 1 pricier but empty.
+        let mut e = SosEngine::new(2, 8, 1.0, Precision::Fp32);
+        for i in 0..3 {
+            e.tick(Some(&job(i, 10.0, vec![20.0, 100.0])));
+        }
+        // Job with ept 20 vs 26: naive picks m0; SOS sees m0's queue.
+        let out = e.tick(Some(&job(9, 10.0, vec![20.0, 26.0])));
+        let a = out.assigned.unwrap();
+        assert_eq!(a.machine, 1, "queue-aware cost avoids the pile-up");
+    }
+
+    #[test]
+    fn quantized_engine_uses_quantized_attributes() {
+        let mut e = SosEngine::new(1, 4, 0.5, Precision::Int8);
+        e.tick(Some(&job(1, 3.7, vec![42.3])));
+        let s = e.schedule(0).head().unwrap();
+        assert_eq!(s.weight, 4.0);
+        assert_eq!(s.ept, 42.0);
+        assert_eq!(s.alpha_pt, 21);
+    }
+}

@@ -1,0 +1,17 @@
+//! The Stochastic Online Scheduling algorithm (Jäger 2023, as discretized
+//! by the paper, Section 3) — golden software model.
+//!
+//! Every other implementation in this repo — the Hercules and Stannic
+//! cycle-accurate simulators, the XLA-offloaded cost engine, the SOSC and
+//! SIMD software baselines — is required to produce *bit-identical
+//! schedules* to [`SosEngine`]; integration tests enforce this parity.
+
+mod continuous;
+mod cost;
+mod engine;
+mod vschedule;
+
+pub use continuous::ContinuousSos;
+pub use cost::{cost_of, CostBreakdown, FULL_COST};
+pub use engine::{Assignment, SosEngine, TickOutcome};
+pub use vschedule::{Slot, VirtualSchedule};

@@ -1,0 +1,256 @@
+//! Virtual Schedule (Definition 3): the per-machine interim ordering of
+//! assigned-but-not-yet-released jobs, kept sorted by WSPT priority.
+
+use crate::core::JobId;
+
+/// One tracked job inside a virtual schedule — the attribute set the
+/// hardware retains per job (Section 4.1): weight, EPT on *this* machine,
+/// the stored WSPT ratio (division done once, Section 3.3 opt. 1), the
+/// alpha release point, and the virtual-work cycle count `n_K`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Slot {
+    pub id: JobId,
+    pub weight: f32,
+    pub ept: f32,
+    pub wspt: f32,
+    pub alpha_pt: u32,
+    pub n: u32,
+}
+
+impl Slot {
+    /// Remaining contribution to `sum^H` (Eq. 4): `eps - n`.
+    #[inline]
+    pub fn rem_hi(&self) -> f32 {
+        self.ept - self.n as f32
+    }
+
+    /// Remaining contribution to `sum^L` (Eq. 5): `W - n * T`.
+    #[inline]
+    pub fn rem_lo(&self) -> f32 {
+        self.weight - self.n as f32 * self.wspt
+    }
+
+    /// Has the job reached its alpha release point?
+    #[inline]
+    pub fn ready(&self) -> bool {
+        self.n >= self.alpha_pt
+    }
+}
+
+/// A WSPT-ordered virtual schedule of bounded depth (the paper's `V_i`
+/// with capacity `N`). Ordering invariant: non-increasing `wspt` from
+/// head (index 0) to tail — Definition 4's "properly ordered" property,
+/// minus the systolic bubbles (a `Vec` has none by construction).
+#[derive(Debug, Clone, PartialEq)]
+pub struct VirtualSchedule {
+    slots: Vec<Slot>,
+    depth: usize,
+}
+
+impl VirtualSchedule {
+    pub fn new(depth: usize) -> Self {
+        assert!(depth >= 1);
+        VirtualSchedule {
+            slots: Vec::with_capacity(depth),
+            depth,
+        }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    #[inline]
+    pub fn is_full(&self) -> bool {
+        self.slots.len() == self.depth
+    }
+
+    #[inline]
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    #[inline]
+    pub fn head(&self) -> Option<&Slot> {
+        self.slots.first()
+    }
+
+    #[inline]
+    pub fn head_mut(&mut self) -> Option<&mut Slot> {
+        self.slots.first_mut()
+    }
+
+    pub fn slots(&self) -> &[Slot] {
+        &self.slots
+    }
+
+    /// Insertion index for a job with WSPT `t`: after every job with
+    /// `wspt >= t` (Eq. 2 places ties in the sigma^H set, so an equal-
+    /// priority incumbent stays ahead of the newcomer).
+    pub fn position_for(&self, t: f32) -> usize {
+        self.slots.iter().take_while(|s| s.wspt >= t).count()
+    }
+
+    /// Insert a job at its WSPT position. Panics if full (the scheduler
+    /// must never select a full machine — Section 6.2.2 "full V_i s can
+    /// not be assigned new jobs").
+    pub fn insert(&mut self, slot: Slot) -> usize {
+        assert!(!self.is_full(), "insert into full virtual schedule");
+        let pos = self.position_for(slot.wspt);
+        self.slots.insert(pos, slot);
+        pos
+    }
+
+    /// Remove and return the head job (a POP iteration's release).
+    pub fn pop_head(&mut self) -> Option<Slot> {
+        if self.slots.is_empty() {
+            None
+        } else {
+            Some(self.slots.remove(0))
+        }
+    }
+
+    /// One cycle of virtual work on the head (Phase III discrete form).
+    pub fn accrue(&mut self) {
+        if let Some(h) = self.slots.first_mut() {
+            h.n += 1;
+        }
+    }
+
+    /// `sum^H` of Eq. (4): remaining-EPT mass of jobs with priority >= t.
+    pub fn sum_hi(&self, t: f32) -> f32 {
+        self.slots
+            .iter()
+            .filter(|s| s.wspt >= t)
+            .map(|s| s.rem_hi())
+            .sum()
+    }
+
+    /// `sum^L` of Eq. (5): remaining-weight mass of jobs with priority < t.
+    pub fn sum_lo(&self, t: f32) -> f32 {
+        self.slots
+            .iter()
+            .filter(|s| s.wspt < t)
+            .map(|s| s.rem_lo())
+            .sum()
+    }
+
+    /// Check the ordering invariant (used by tests and debug assertions).
+    pub fn is_properly_ordered(&self) -> bool {
+        self.slots.windows(2).all(|w| w[0].wspt >= w[1].wspt)
+    }
+
+    /// True when no non-head job carries virtual work. NOTE: this is not
+    /// a global invariant — a job displaced from the head by a higher-
+    /// priority newcomer retains its accrued `n_K` (the paper tracks
+    /// `n_K(t)` per job); it merely stops accruing until it regains the
+    /// head. The property holds only while no displacement has occurred.
+    pub fn vw_only_at_head(&self) -> bool {
+        self.slots.iter().skip(1).all(|s| s.n == 0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn slot(id: JobId, w: f32, e: f32) -> Slot {
+        Slot {
+            id,
+            weight: w,
+            ept: e,
+            wspt: w / e,
+            alpha_pt: (0.5 * e).ceil() as u32,
+            n: 0,
+        }
+    }
+
+    #[test]
+    fn insert_keeps_wspt_descending() {
+        let mut v = VirtualSchedule::new(8);
+        v.insert(slot(1, 10.0, 20.0)); // T=0.5
+        v.insert(slot(2, 30.0, 20.0)); // T=1.5
+        v.insert(slot(3, 20.0, 20.0)); // T=1.0
+        assert!(v.is_properly_ordered());
+        let ids: Vec<_> = v.slots().iter().map(|s| s.id).collect();
+        assert_eq!(ids, vec![2, 3, 1]);
+    }
+
+    #[test]
+    fn equal_wspt_inserts_after_incumbent() {
+        let mut v = VirtualSchedule::new(4);
+        v.insert(slot(1, 10.0, 20.0)); // T=0.5
+        let pos = v.insert(slot(2, 5.0, 10.0)); // T=0.5 too
+        assert_eq!(pos, 1, "tie goes behind the incumbent (sigma^H is >=)");
+    }
+
+    #[test]
+    fn sums_split_on_threshold() {
+        let mut v = VirtualSchedule::new(8);
+        v.insert(slot(1, 40.0, 20.0)); // T=2.0, rem_hi=20, rem_lo=40
+        v.insert(slot(2, 20.0, 20.0)); // T=1.0, rem_hi=20, rem_lo=20
+        v.insert(slot(3, 10.0, 20.0)); // T=0.5, rem_hi=20, rem_lo=10
+        // probe T_j = 1.0: sigma^H = {T>=1} = jobs 1,2; sigma^L = {T<1} = job 3
+        assert_eq!(v.sum_hi(1.0), 40.0);
+        assert_eq!(v.sum_lo(1.0), 10.0);
+        // probe above everything
+        assert_eq!(v.sum_hi(9.0), 0.0);
+        assert_eq!(v.sum_lo(9.0), 70.0);
+    }
+
+    #[test]
+    fn accrue_touches_only_head() {
+        let mut v = VirtualSchedule::new(4);
+        v.insert(slot(1, 20.0, 10.0));
+        v.insert(slot(2, 10.0, 10.0));
+        v.accrue();
+        v.accrue();
+        assert_eq!(v.slots()[0].n, 2);
+        assert_eq!(v.slots()[1].n, 0);
+        assert!(v.vw_only_at_head());
+    }
+
+    #[test]
+    fn rem_terms_shrink_with_vw() {
+        let mut s = slot(1, 20.0, 10.0); // T=2
+        assert_eq!(s.rem_hi(), 10.0);
+        assert_eq!(s.rem_lo(), 20.0);
+        s.n = 3;
+        assert_eq!(s.rem_hi(), 7.0);
+        assert_eq!(s.rem_lo(), 14.0);
+    }
+
+    #[test]
+    fn ready_at_alpha_point() {
+        let mut s = slot(1, 10.0, 21.0); // alpha_pt = ceil(10.5) = 11
+        assert_eq!(s.alpha_pt, 11);
+        s.n = 10;
+        assert!(!s.ready());
+        s.n = 11;
+        assert!(s.ready());
+    }
+
+    #[test]
+    #[should_panic]
+    fn insert_into_full_panics() {
+        let mut v = VirtualSchedule::new(1);
+        v.insert(slot(1, 10.0, 10.0));
+        v.insert(slot(2, 10.0, 10.0));
+    }
+
+    #[test]
+    fn pop_head_fifo_of_priority() {
+        let mut v = VirtualSchedule::new(4);
+        v.insert(slot(1, 10.0, 20.0));
+        v.insert(slot(2, 30.0, 20.0));
+        assert_eq!(v.pop_head().unwrap().id, 2);
+        assert_eq!(v.pop_head().unwrap().id, 1);
+        assert!(v.pop_head().is_none());
+    }
+}

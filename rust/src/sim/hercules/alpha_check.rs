@@ -1,0 +1,111 @@
+//! Alpha-check module (Section 4.1.6): a Content Addressable Memory of
+//! size N keyed by Job ID, holding each job's remaining head-time
+//! countdown `t = ceil(alpha * eps)`. The countdown of the job currently
+//! at `Head.V_i` decrements every clock cycle; at zero the job pops.
+
+use crate::core::JobId;
+
+/// CAM entry: (tag, content).
+#[derive(Debug, Clone, Copy)]
+struct CamEntry {
+    tag: JobId,
+    countdown: u32,
+}
+
+/// Per-machine alpha-check CAM.
+#[derive(Debug, Clone)]
+pub struct AlphaCheck {
+    cam: Vec<Option<CamEntry>>,
+}
+
+impl AlphaCheck {
+    pub fn new(depth: usize) -> Self {
+        AlphaCheck {
+            cam: vec![None; depth],
+        }
+    }
+
+    /// Associative write into any free way.
+    pub fn track(&mut self, id: JobId, countdown: u32) {
+        let way = self
+            .cam
+            .iter()
+            .position(|e| e.is_none())
+            .expect("CAM has a way per VSM slot");
+        self.cam[way] = Some(CamEntry {
+            tag: id,
+            countdown,
+        });
+    }
+
+    /// Content match on the head job's tag; decrement its countdown.
+    pub fn decrement(&mut self, head: JobId) {
+        for e in self.cam.iter_mut().flatten() {
+            if e.tag == head {
+                e.countdown = e.countdown.saturating_sub(1);
+                return;
+            }
+        }
+        debug_assert!(false, "head {head} not tracked in CAM");
+    }
+
+    /// Is the head job's countdown exhausted (ready to pop)?
+    pub fn ready(&self, head: JobId) -> bool {
+        self.cam
+            .iter()
+            .flatten()
+            .any(|e| e.tag == head && e.countdown == 0)
+    }
+
+    /// Invalidate the entry on release.
+    pub fn evict(&mut self, id: JobId) {
+        for e in self.cam.iter_mut() {
+            if e.is_some_and(|x| x.tag == id) {
+                *e = None;
+                return;
+            }
+        }
+        debug_assert!(false, "evict of untracked id {id}");
+    }
+
+    pub fn occupancy(&self) -> usize {
+        self.cam.iter().flatten().count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn countdown_to_release() {
+        let mut ac = AlphaCheck::new(2);
+        ac.track(5, 3);
+        assert!(!ac.ready(5));
+        ac.decrement(5);
+        ac.decrement(5);
+        assert!(!ac.ready(5));
+        ac.decrement(5);
+        assert!(ac.ready(5));
+        ac.evict(5);
+        assert_eq!(ac.occupancy(), 0);
+    }
+
+    #[test]
+    fn non_head_entries_freeze() {
+        let mut ac = AlphaCheck::new(2);
+        ac.track(1, 2);
+        ac.track(2, 2);
+        ac.decrement(1);
+        ac.decrement(1);
+        assert!(ac.ready(1));
+        assert!(!ac.ready(2), "only the head decrements");
+    }
+
+    #[test]
+    fn zero_countdown_is_immediately_ready() {
+        let mut ac = AlphaCheck::new(1);
+        ac.track(3, 0);
+        assert!(ac.ready(3));
+    }
+}

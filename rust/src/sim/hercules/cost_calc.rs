@@ -1,0 +1,141 @@
+//! Cost Calculator (Section 4.1.2/4.1.3): N Individual Job Cost
+//! Calculators feeding two tree adders (TAH / TAL) plus the popcount
+//! Job Index Calculator. Every IJCC computes *both* candidate cost
+//! contributions and masks the irrelevant one — the redundant circuitry
+//! the paper calls out as a Hercules bottleneck.
+
+use super::jmm::JmmEntry;
+
+/// Output of one IJCC (Fig. 6b).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct IjccOut {
+    /// Masked `sum^H` contribution (0 unless valid and `T_K >= T_J`).
+    pub hi: f32,
+    /// Masked `sum^L` contribution (0 unless valid and `T_K < T_J`).
+    pub lo: f32,
+    /// WSPT comparator output (1 when `T_K >= T_J`), fed to the Job
+    /// Index Calculator.
+    pub cmp: bool,
+}
+
+/// One IJCC evaluation.
+pub fn ijcc(entry: &JmmEntry, j_t: f32, j_valid: bool) -> IjccOut {
+    if !entry.valid || !j_valid {
+        return IjccOut::default();
+    }
+    let cmp = entry.t >= j_t;
+    IjccOut {
+        hi: if cmp { entry.rem_hi } else { 0.0 },
+        lo: if cmp { 0.0 } else { entry.rem_lo },
+        cmp,
+    }
+}
+
+/// Single-cycle tree adder: N-1 adders in ceil(log2 N) stages. We model
+/// the staged reduction explicitly (and test it equals a linear sum) —
+/// the stage count feeds the timing model.
+pub fn tree_add(values: &[f32]) -> f32 {
+    if values.is_empty() {
+        return 0.0;
+    }
+    let mut layer: Vec<f32> = values.to_vec();
+    while layer.len() > 1 {
+        let mut next = Vec::with_capacity(layer.len().div_ceil(2));
+        for pair in layer.chunks(2) {
+            next.push(if pair.len() == 2 {
+                pair[0] + pair[1]
+            } else {
+                pair[0]
+            });
+        }
+        layer = next;
+    }
+    layer[0]
+}
+
+/// Number of adder stages for a depth-N tree (timing model input).
+pub fn tree_stages(n: usize) -> u32 {
+    (usize::BITS - n.saturating_sub(1).leading_zeros()).max(1)
+}
+
+/// Full CC evaluation for one machine: cost of the probe job plus its
+/// VSM insertion index.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CcOut {
+    pub cost: f32,
+    pub index: usize,
+}
+
+pub fn cost_calculator(bank: &[JmmEntry], j_w: f32, j_eps: f32, j_t: f32) -> CcOut {
+    let outs: Vec<IjccOut> = bank.iter().map(|e| ijcc(e, j_t, true)).collect();
+    let sum_hi = tree_add(&outs.iter().map(|o| o.hi).collect::<Vec<_>>());
+    let sum_lo = tree_add(&outs.iter().map(|o| o.lo).collect::<Vec<_>>());
+    // popcount of comparator bits = index in the WSPT-ordered VSM
+    let index = outs.iter().filter(|o| o.cmp).count();
+    CcOut {
+        cost: j_w * (j_eps + sum_hi) + j_eps * sum_lo,
+        index,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(id: u64, rem_hi: f32, rem_lo: f32, t: f32) -> JmmEntry {
+        JmmEntry {
+            valid: true,
+            id,
+            rem_hi,
+            rem_lo,
+            t,
+        }
+    }
+
+    #[test]
+    fn ijcc_masks_by_comparison() {
+        let e = entry(1, 20.0, 40.0, 2.0);
+        let hi_side = ijcc(&e, 1.0, true);
+        assert_eq!((hi_side.hi, hi_side.lo, hi_side.cmp), (20.0, 0.0, true));
+        let lo_side = ijcc(&e, 3.0, true);
+        assert_eq!((lo_side.hi, lo_side.lo, lo_side.cmp), (0.0, 40.0, false));
+        let invalid = ijcc(&JmmEntry::INVALID, 1.0, true);
+        assert_eq!((invalid.hi, invalid.lo, invalid.cmp), (0.0, 0.0, false));
+        let no_job = ijcc(&e, 1.0, false);
+        assert_eq!((no_job.hi, no_job.lo), (0.0, 0.0));
+    }
+
+    #[test]
+    fn tree_add_equals_linear_sum() {
+        for n in 1..20 {
+            let v: Vec<f32> = (0..n).map(|i| (i * 3 + 1) as f32).collect();
+            let linear: f32 = v.iter().sum();
+            assert_eq!(tree_add(&v), linear, "n={n}");
+        }
+        assert_eq!(tree_add(&[]), 0.0);
+    }
+
+    #[test]
+    fn tree_stage_count() {
+        assert_eq!(tree_stages(1), 1);
+        assert_eq!(tree_stages(2), 1);
+        assert_eq!(tree_stages(8), 3);
+        assert_eq!(tree_stages(10), 4);
+        assert_eq!(tree_stages(20), 5);
+    }
+
+    #[test]
+    fn cc_matches_hand_example() {
+        // Same example as scheduler::cost tests: K1(T2, hi20, lo40),
+        // K2(T1, hi20, lo20), K3(T0.5, hi20, lo10); J(W15, eps15, T1).
+        let bank = vec![
+            entry(3, 20.0, 10.0, 0.5), // arbitrary address order
+            JmmEntry::INVALID,
+            entry(1, 20.0, 40.0, 2.0),
+            entry(2, 20.0, 20.0, 1.0),
+        ];
+        let out = cost_calculator(&bank, 15.0, 15.0, 1.0);
+        assert_eq!(out.cost, 975.0);
+        assert_eq!(out.index, 2);
+    }
+}

@@ -1,0 +1,99 @@
+//! Job Metadata Memory (Section 4.1.1): a fully register-based M×N array
+//! holding each tracked job's attributes. Entries live at *arbitrary*
+//! addresses handed out by the MMU's free list — WSPT ordering exists
+//! only in the VSM, which is precisely the decentralization the paper
+//! identifies as Hercules's bottleneck.
+
+use crate::core::JobId;
+
+/// One JMM register (Fig. 5): Job ID tag plus the per-job running cost
+/// state of Section 3.3 — `sum^H`-contribution (`eps - n`),
+/// `sum^L`-contribution (`W - n·T`), and the stored WSPT ratio.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct JmmEntry {
+    pub valid: bool,
+    pub id: JobId,
+    /// Remaining HI contribution, initialized to `eps`, decremented by 1
+    /// per cycle of virtual work.
+    pub rem_hi: f32,
+    /// Remaining LO contribution, initialized to `W`, decremented by `T`
+    /// per cycle of virtual work.
+    pub rem_lo: f32,
+    /// Stored WSPT ratio `T_i^K` (division done once at job creation).
+    pub t: f32,
+}
+
+impl JmmEntry {
+    pub const INVALID: JmmEntry = JmmEntry {
+        valid: false,
+        id: 0,
+        rem_hi: 0.0,
+        rem_lo: 0.0,
+        t: 0.0,
+    };
+}
+
+/// One machine's bank of N registers.
+#[derive(Debug, Clone)]
+pub struct Jmm {
+    regs: Vec<JmmEntry>,
+}
+
+impl Jmm {
+    pub fn new(depth: usize) -> Self {
+        Jmm {
+            regs: vec![JmmEntry::INVALID; depth],
+        }
+    }
+
+    pub fn read(&self, addr: usize) -> &JmmEntry {
+        &self.regs[addr]
+    }
+
+    pub fn read_mut(&mut self, addr: usize) -> &mut JmmEntry {
+        &mut self.regs[addr]
+    }
+
+    pub fn write(&mut self, addr: usize, e: JmmEntry) {
+        self.regs[addr] = e;
+    }
+
+    pub fn invalidate(&mut self, addr: usize) {
+        self.regs[addr] = JmmEntry::INVALID;
+    }
+
+    /// All registers (the CC reads the full bank every query).
+    pub fn bank(&self) -> &[JmmEntry] {
+        &self.regs
+    }
+
+    pub fn occupancy(&self) -> usize {
+        self.regs.iter().filter(|e| e.valid).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn write_read_invalidate() {
+        let mut j = Jmm::new(4);
+        assert_eq!(j.occupancy(), 0);
+        j.write(
+            2,
+            JmmEntry {
+                valid: true,
+                id: 7,
+                rem_hi: 20.0,
+                rem_lo: 40.0,
+                t: 2.0,
+            },
+        );
+        assert_eq!(j.read(2).id, 7);
+        assert_eq!(j.occupancy(), 1);
+        j.invalidate(2);
+        assert!(!j.read(2).valid);
+        assert_eq!(j.occupancy(), 0);
+    }
+}

@@ -1,0 +1,68 @@
+//! Memory Management Unit (Section 4.1.4): the gatekeeper between the
+//! decentralized JMM / VSM / AC components. Maintains (1) a lookup table
+//! mapping Job ID -> JMM address and (2) a FIFO of free addresses.
+
+use std::collections::{HashMap, VecDeque};
+
+use crate::core::JobId;
+
+#[derive(Debug, Clone)]
+pub struct Mmu {
+    lut: HashMap<JobId, usize>,
+    free: VecDeque<usize>,
+}
+
+impl Mmu {
+    pub fn new(depth: usize) -> Self {
+        Mmu {
+            lut: HashMap::with_capacity(depth),
+            free: (0..depth).collect(),
+        }
+    }
+
+    /// Allocate an address for a new job (the CC's metadata-write request).
+    pub fn alloc(&mut self, id: JobId) -> Option<usize> {
+        let addr = self.free.pop_front()?;
+        let prev = self.lut.insert(id, addr);
+        debug_assert!(prev.is_none(), "duplicate job id {id}");
+        Some(addr)
+    }
+
+    /// Resolve a job's metadata address.
+    pub fn lookup(&self, id: JobId) -> Option<usize> {
+        self.lut.get(&id).copied()
+    }
+
+    /// Invalidate on the alpha-check's release signal; the address is
+    /// queued for reuse.
+    pub fn invalidate(&mut self, id: JobId) -> Option<usize> {
+        let addr = self.lut.remove(&id)?;
+        self.free.push_back(addr);
+        Some(addr)
+    }
+
+    pub fn free_count(&self) -> usize {
+        self.free.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_lookup_invalidate_cycle() {
+        let mut m = Mmu::new(2);
+        let a = m.alloc(10).unwrap();
+        let b = m.alloc(11).unwrap();
+        assert_ne!(a, b);
+        assert!(m.alloc(12).is_none(), "bank full");
+        assert_eq!(m.lookup(10), Some(a));
+        assert_eq!(m.invalidate(10), Some(a));
+        assert_eq!(m.lookup(10), None);
+        // freed address is reused (FIFO)
+        assert_eq!(m.alloc(13), Some(a));
+        assert_eq!(m.free_count(), 0);
+        let _ = b;
+    }
+}

@@ -1,0 +1,275 @@
+//! HERCULES — the task-centric pipelined microarchitecture (Section 4).
+//!
+//! Per machine: a register-based [`jmm::Jmm`] bank, a [`mmu::Mmu`]
+//! bridging it to the [`vsm::Vsm`] shift register and the
+//! [`alpha_check::AlphaCheck`] CAM, plus a [`cost_calc`] datapath of
+//! IJCCs and tree adders. A single iterative Cost Comparator performs
+//! the Phase II argmin. The decentralized coherency between JMM/VSM/MMU
+//! is exactly what the Section 5 bottleneck analysis blames for the
+//! architecture's latency and routing limits — and what the timing model
+//! charges for.
+
+pub mod alpha_check;
+pub mod cost_calc;
+pub mod jmm;
+pub mod mmu;
+pub mod timing;
+pub mod vsm;
+
+use std::collections::VecDeque;
+
+use crate::core::Job;
+use crate::quant::Precision;
+use crate::scheduler::{Assignment, TickOutcome, FULL_COST};
+use crate::sim::{ArchSim, IterationKind, IterationStats};
+
+use alpha_check::AlphaCheck;
+use cost_calc::cost_calculator;
+use jmm::{Jmm, JmmEntry};
+use mmu::Mmu;
+use vsm::Vsm;
+
+/// Per-machine scheduler slice (Fig. 4's per-machine components).
+#[derive(Debug, Clone)]
+struct MachineSlice {
+    jmm: Jmm,
+    mmu: Mmu,
+    vsm: Vsm,
+    ac: AlphaCheck,
+}
+
+impl MachineSlice {
+    fn new(depth: usize) -> Self {
+        MachineSlice {
+            jmm: Jmm::new(depth),
+            mmu: Mmu::new(depth),
+            vsm: Vsm::new(depth),
+            ac: AlphaCheck::new(depth),
+        }
+    }
+}
+
+/// Cycle-accurate HERCULES simulator.
+pub struct HerculesSim {
+    slices: Vec<MachineSlice>,
+    depth: usize,
+    alpha: f32,
+    precision: Precision,
+    pending: VecDeque<Job>,
+    stats: IterationStats,
+    tick_no: u64,
+}
+
+impl HerculesSim {
+    pub fn new(machines: usize, depth: usize, alpha: f32, precision: Precision) -> Self {
+        let mut stats = IterationStats::default();
+        stats.decision_latency = timing::decision_latency(machines, depth);
+        HerculesSim {
+            slices: (0..machines).map(|_| MachineSlice::new(depth)).collect(),
+            depth,
+            alpha,
+            precision,
+            pending: VecDeque::new(),
+            stats,
+            tick_no: 0,
+        }
+    }
+
+    fn assign(&mut self, job: &Job) -> Assignment {
+        // Phase II: each machine's CC computes concurrently; the CR scans
+        // costs iteratively (lowest index wins ties).
+        let m_count = self.slices.len();
+        let mut cost_vec = vec![FULL_COST; m_count];
+        let mut best: Option<(usize, f32, usize)> = None;
+        for m in 0..m_count {
+            if self.slices[m].vsm.is_full() {
+                continue; // full V_i cannot be selected
+            }
+            let (j_w, j_eps, j_t) = self.precision.q_job(job.weight, job.ept[m]);
+            let out = cost_calculator(self.slices[m].jmm.bank(), j_w, j_eps, j_t);
+            cost_vec[m] = out.cost;
+            if best.map_or(true, |(_, bc, _)| out.cost < bc) {
+                best = Some((m, out.cost, out.index));
+            }
+        }
+        let (machine, cost, index) = best.expect("caller ensured a free machine");
+        let (j_w, j_eps, j_t) = self.precision.q_job(job.weight, job.ept[machine]);
+        let slice = &mut self.slices[machine];
+        // CR informs CC -> CC requests a free address from the MMU ->
+        // JMM stores the metadata; VSM partial-left-shift insert; AC
+        // starts tracking the alpha countdown.
+        let addr = slice.mmu.alloc(job.id).expect("VSM not full => JMM free");
+        slice.jmm.write(
+            addr,
+            JmmEntry {
+                valid: true,
+                id: job.id,
+                rem_hi: j_eps,
+                rem_lo: j_w,
+                t: j_t,
+            },
+        );
+        slice.vsm.insert(index, job.id);
+        slice.ac.track(job.id, (self.alpha * j_eps).ceil() as u32);
+        Assignment {
+            job: job.id,
+            machine,
+            position: index,
+            cost,
+            cost_vector: cost_vec,
+        }
+    }
+}
+
+impl ArchSim for HerculesSim {
+    fn name(&self) -> &'static str {
+        "hercules"
+    }
+
+    fn config(&self) -> (usize, usize) {
+        (self.slices.len(), self.depth)
+    }
+
+    fn submit(&mut self, job: Job) {
+        self.pending.push_back(job);
+    }
+
+    fn tick(&mut self, arrival: Option<&Job>) -> TickOutcome {
+        self.tick_no += 1;
+        if let Some(j) = arrival {
+            self.pending.push_back(j.clone());
+        }
+        let mut out = TickOutcome::default();
+
+        // (1) AC pop: head countdown exhausted -> release; MMU
+        // invalidates the metadata, VSM right-shifts, CAM evicts.
+        for (m, slice) in self.slices.iter_mut().enumerate() {
+            if let Some(head) = slice.vsm.head() {
+                if slice.ac.ready(head) {
+                    let released = slice.vsm.release().expect("head exists");
+                    debug_assert_eq!(released, head);
+                    let addr = slice.mmu.invalidate(head).expect("tracked");
+                    slice.jmm.invalidate(addr);
+                    slice.ac.evict(head);
+                    out.released.push((head, m));
+                }
+            }
+        }
+
+        // (2) Phase II for the oldest pending arrival.
+        if !self.pending.is_empty() {
+            if self.slices.iter().any(|s| !s.vsm.is_full()) {
+                let job = self.pending.pop_front().expect("non-empty");
+                out.assigned = Some(self.assign(&job));
+            } else {
+                out.stalled = true;
+            }
+        }
+
+        // (3) VW update: head's JMM entry decrements (rem_hi by 1,
+        // rem_lo by T) and its AC countdown steps.
+        for slice in &mut self.slices {
+            if let Some(head) = slice.vsm.head() {
+                let addr = slice.mmu.lookup(head).expect("head tracked");
+                let e = slice.jmm.read_mut(addr);
+                e.rem_hi -= 1.0;
+                e.rem_lo -= e.t;
+                slice.ac.decrement(head);
+            }
+        }
+
+        // cycle accounting
+        let (m, d) = self.config();
+        let kind = IterationKind::classify(!out.released.is_empty(), out.assigned.is_some());
+        let cycles = match kind {
+            IterationKind::Standard => timing::standard_latency(m, d),
+            IterationKind::Pop => timing::pop_latency(m, d),
+            IterationKind::Insert => timing::insert_latency(m, d),
+            IterationKind::PopInsert => timing::pop_insert_latency(m, d),
+        };
+        self.stats.record(kind, cycles);
+        out
+    }
+
+    fn stats(&self) -> &IterationStats {
+        &self.stats
+    }
+
+    fn is_idle(&self) -> bool {
+        self.pending.is_empty() && self.slices.iter().all(|s| s.vsm.is_empty())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::MachinePark;
+    use crate::scheduler::SosEngine;
+    use crate::sim::lockstep_verify;
+    use crate::workload::{generate_trace, WorkloadSpec};
+
+    #[test]
+    fn lockstep_parity_with_golden() {
+        let park = MachinePark::paper_m1_m5();
+        let trace = generate_trace(&WorkloadSpec::default(), &park, 500, 31);
+        let mut golden = SosEngine::new(5, 10, 0.5, Precision::Int8);
+        let mut sim = HerculesSim::new(5, 10, 0.5, Precision::Int8);
+        lockstep_verify(&mut sim, &mut golden, &trace, 500_000).unwrap();
+    }
+
+    #[test]
+    fn lockstep_parity_deep_schedules() {
+        let park = MachinePark::paper_m1_m5();
+        let trace = generate_trace(
+            &WorkloadSpec::default().with_burst(5, crate::workload::BurstType::Uniform),
+            &park,
+            400,
+            13,
+        );
+        let mut golden = SosEngine::new(5, 20, 0.5, Precision::Int8);
+        let mut sim = HerculesSim::new(5, 20, 0.5, Precision::Int8);
+        lockstep_verify(&mut sim, &mut golden, &trace, 500_000).unwrap();
+    }
+
+    #[test]
+    fn hercules_and_stannic_produce_identical_schedules() {
+        // Section 8: "Due to the two architectures implementing the same
+        // scheduling algorithm, the resulting schedules from both
+        // Hercules and Stannic are identical."
+        use crate::sim::stannic::StannicSim;
+        let park = MachinePark::paper_m1_m5();
+        let trace = generate_trace(&WorkloadSpec::memory_skewed(), &park, 300, 47);
+        let mut h = HerculesSim::new(5, 10, 0.5, Precision::Int8);
+        let mut s = StannicSim::new(5, 10, 0.5, Precision::Int8);
+        let mut events = trace.events().iter().peekable();
+        for t in 1..=500_000u64 {
+            while events.peek().is_some_and(|e| e.tick <= t) {
+                let j = events.next().unwrap().job.clone().unwrap();
+                h.submit(j.clone());
+                s.submit(j);
+            }
+            let ho = h.tick(None);
+            let so = s.tick(None);
+            assert_eq!(ho.released, so.released, "tick {t}");
+            assert_eq!(
+                ho.assigned.as_ref().map(|a| (a.job, a.machine, a.position)),
+                so.assigned.as_ref().map(|a| (a.job, a.machine, a.position)),
+                "tick {t}"
+            );
+            if h.is_idle() && s.is_idle() && events.peek().is_none() {
+                break;
+            }
+        }
+        assert!(h.is_idle() && s.is_idle());
+        // ... while Stannic does it in ~7.5x fewer cycles on the
+        // decision path (Fig. 18a).
+        let ratio = h.stats().decision_latency as f64 / s.stats().decision_latency as f64;
+        assert!(ratio > 5.0, "decision-latency ratio {ratio}");
+    }
+
+    #[test]
+    fn decision_latency_reported() {
+        let sim = HerculesSim::new(10, 20, 0.5, Precision::Int8);
+        assert_eq!(sim.stats().decision_latency, timing::decision_latency(10, 20));
+    }
+}

@@ -1,0 +1,144 @@
+//! Virtual Schedule Manager (Section 4.1.7): a configurable shift-
+//! register structure storing Job IDs in WSPT order. Supports the three
+//! register movements of Fig. 6d — full/partial left shift on insert,
+//! right shift on release — via each register's four-input Data Selector
+//! (left neighbour, right neighbour, new job, hold).
+
+use crate::core::JobId;
+
+/// The per-register Data Selector control (Fig. 6d).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum DsCtl {
+    Hold,
+    FromLeft,  // take value of index k-1 (used on insert right-of-p shifts)
+    FromRight, // take value of index k+1 (used on release)
+    LoadNew,
+}
+
+/// Shift-register VSM for one machine.
+#[derive(Debug, Clone)]
+pub struct Vsm {
+    regs: Vec<Option<JobId>>,
+}
+
+impl Vsm {
+    pub fn new(depth: usize) -> Self {
+        Vsm {
+            regs: vec![None; depth],
+        }
+    }
+
+    pub fn head(&self) -> Option<JobId> {
+        self.regs[0]
+    }
+
+    pub fn len(&self) -> usize {
+        self.regs.iter().take_while(|r| r.is_some()).count()
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.regs.last().is_some_and(|r| r.is_some())
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.regs[0].is_none()
+    }
+
+    pub fn ids(&self) -> impl Iterator<Item = JobId> + '_ {
+        self.regs.iter().filter_map(|r| *r)
+    }
+
+    /// Apply one cycle of data-selector controls to every register —
+    /// the hardware's synchronous update. (Controls are computed first,
+    /// then applied at the clock edge, so "FromLeft"/"FromRight" read the
+    /// *pre-update* neighbour values.)
+    fn apply(&mut self, ctl: &[DsCtl], new_id: JobId) {
+        let old = self.regs.clone();
+        let d = old.len();
+        for k in 0..d {
+            self.regs[k] = match ctl[k] {
+                DsCtl::Hold => old[k],
+                DsCtl::FromLeft => {
+                    if k == 0 {
+                        None
+                    } else {
+                        old[k - 1]
+                    }
+                }
+                DsCtl::FromRight => {
+                    if k + 1 == d {
+                        None
+                    } else {
+                        old[k + 1]
+                    }
+                }
+                DsCtl::LoadNew => Some(new_id),
+            };
+        }
+    }
+
+    /// Release the head (pop from AC): every register takes its right
+    /// neighbour (`J_{k-1} <- J_k` in the paper's indexing).
+    pub fn release(&mut self) -> Option<JobId> {
+        let head = self.regs[0]?;
+        let ctl = vec![DsCtl::FromRight; self.regs.len()];
+        self.apply(&ctl, 0);
+        Some(head)
+    }
+
+    /// Insert a new job at index `p` (from the CC's Job Index
+    /// Calculator): registers `< p` hold, register `p` loads the new job,
+    /// registers `> p` take their left neighbour (partial left shift).
+    pub fn insert(&mut self, p: usize, id: JobId) {
+        debug_assert!(!self.is_full(), "insert into full VSM");
+        debug_assert!(p <= self.len());
+        let d = self.regs.len();
+        let mut ctl = vec![DsCtl::Hold; d];
+        for k in ctl.iter_mut().take(d).skip(p + 1) {
+            *k = DsCtl::FromLeft;
+        }
+        ctl[p] = DsCtl::LoadNew;
+        self.apply(&ctl, id);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_and_release_preserve_order() {
+        let mut v = Vsm::new(4);
+        v.insert(0, 10);
+        v.insert(0, 20); // 20 outranks -> head
+        v.insert(1, 15);
+        assert_eq!(v.ids().collect::<Vec<_>>(), vec![20, 15, 10]);
+        assert_eq!(v.release(), Some(20));
+        assert_eq!(v.ids().collect::<Vec<_>>(), vec![15, 10]);
+        assert_eq!(v.len(), 2);
+    }
+
+    #[test]
+    fn insert_at_tail() {
+        let mut v = Vsm::new(3);
+        v.insert(0, 1);
+        v.insert(1, 2);
+        v.insert(2, 3);
+        assert!(v.is_full());
+        assert_eq!(v.ids().collect::<Vec<_>>(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn release_empty_is_none() {
+        let mut v = Vsm::new(2);
+        assert_eq!(v.release(), None);
+    }
+
+    #[test]
+    #[should_panic]
+    fn insert_full_panics_in_debug() {
+        let mut v = Vsm::new(1);
+        v.insert(0, 1);
+        v.insert(0, 2);
+    }
+}

@@ -1,0 +1,70 @@
+//! Cycle-accurate microarchitecture simulators for the two SOSA designs.
+//!
+//! Both simulators execute the *actual dataflow* of their architecture —
+//! register files, CAMs, shift registers, systolic PEs with memoized
+//! partial sums — and are required to produce schedules identical to the
+//! golden [`crate::scheduler::SosEngine`]. On top of the functional
+//! model, each accounts cycles per scheduling iteration using the timing
+//! model of its `timing` module (constants derived from the component
+//! structure of Sections 4/6 and calibrated against Fig. 18a).
+
+pub mod hercules;
+pub mod stannic;
+mod stats;
+
+pub use stats::{IterationKind, IterationStats};
+
+use crate::core::Job;
+use crate::scheduler::TickOutcome;
+
+/// Common interface of the two architecture simulators.
+pub trait ArchSim {
+    fn name(&self) -> &'static str;
+    /// (machines, virtual-schedule depth).
+    fn config(&self) -> (usize, usize);
+    /// Run one scheduling iteration (one tick of the golden semantics).
+    fn tick(&mut self, arrival: Option<&Job>) -> TickOutcome;
+    /// Enqueue an arrival without advancing the clock.
+    fn submit(&mut self, job: Job);
+    /// Cycle/iteration accounting so far.
+    fn stats(&self) -> &IterationStats;
+    fn is_idle(&self) -> bool;
+}
+
+/// Convenience: drive a simulator and the golden engine in lockstep over
+/// a trace, asserting identical outcomes. Returns the number of ticks.
+/// Used by integration tests and the `verify` CLI command.
+pub fn lockstep_verify<S: ArchSim>(
+    sim: &mut S,
+    golden: &mut crate::scheduler::SosEngine,
+    trace: &crate::workload::Trace,
+    max_ticks: u64,
+) -> Result<u64, String> {
+    let mut events = trace.events().iter().peekable();
+    for t in 1..=max_ticks {
+        while events.peek().is_some_and(|e| e.tick <= t) {
+            let j = events.next().expect("peeked").job.clone().expect("job");
+            golden.submit(j.clone());
+            sim.submit(j);
+        }
+        let g = golden.tick(None);
+        let s = sim.tick(None);
+        if g.released != s.released {
+            return Err(format!(
+                "tick {t}: release divergence golden={:?} sim={:?}",
+                g.released, s.released
+            ));
+        }
+        let ga = g.assigned.as_ref().map(|a| (a.job, a.machine, a.position));
+        let sa = s.assigned.as_ref().map(|a| (a.job, a.machine, a.position));
+        if ga != sa {
+            return Err(format!(
+                "tick {t}: assignment divergence golden={ga:?} sim={sa:?}"
+            ));
+        }
+        if golden.is_idle() && sim.is_idle() && events.peek().is_none() {
+            return Ok(t);
+        }
+    }
+    Err(format!("did not drain within {max_ticks} ticks"))
+}

@@ -1,0 +1,240 @@
+//! STANNIC — the schedule-centric systolic microarchitecture (Section 6).
+//!
+//! One [`Smmu`] (Systolic Memory Management Unit) per machine, each
+//! owning a [`pe::PeArray`]; a single shared iterative Cost Comparator
+//! performs the inter-machine Phase II argmin, exactly like the hardware.
+
+pub mod pe;
+pub mod timing;
+
+use std::collections::VecDeque;
+
+use crate::core::{Job, MachineId};
+use crate::quant::Precision;
+use crate::scheduler::{Assignment, TickOutcome, FULL_COST};
+use crate::sim::{ArchSim, IterationKind, IterationStats};
+
+use pe::{PeArray, ThresholdRead};
+
+/// One machine's SMMU: systolic PE array + local cost calculator state.
+#[derive(Debug, Clone)]
+pub struct Smmu {
+    pub array: PeArray,
+}
+
+impl Smmu {
+    fn new(depth: usize) -> Self {
+        Smmu {
+            array: PeArray::new(depth),
+        }
+    }
+
+    /// The SMMU-local Cost Calculator: threshold lookup + two MACs.
+    fn cost(&self, j_w: f32, j_eps: f32, j_t: f32) -> (f32, ThresholdRead) {
+        let read = self.array.threshold_read(j_t);
+        let cost = if read.full {
+            FULL_COST
+        } else {
+            j_w * (j_eps + read.sum_hi) + j_eps * read.sum_lo
+        };
+        (cost, read)
+    }
+}
+
+/// Cycle-accurate STANNIC simulator.
+pub struct StannicSim {
+    smmus: Vec<Smmu>,
+    depth: usize,
+    alpha: f32,
+    precision: Precision,
+    pending: VecDeque<Job>,
+    stats: IterationStats,
+    tick_no: u64,
+    /// Debug-mode invariant checking of Definition 4 after every tick.
+    check_invariants: bool,
+}
+
+impl StannicSim {
+    pub fn new(machines: usize, depth: usize, alpha: f32, precision: Precision) -> Self {
+        let mut stats = IterationStats::default();
+        stats.decision_latency = timing::decision_latency(machines, depth);
+        StannicSim {
+            smmus: (0..machines).map(|_| Smmu::new(depth)).collect(),
+            depth,
+            alpha,
+            precision,
+            pending: VecDeque::new(),
+            stats,
+            tick_no: 0,
+            check_invariants: cfg!(debug_assertions),
+        }
+    }
+
+    pub fn with_invariant_checks(mut self, on: bool) -> Self {
+        self.check_invariants = on;
+        self
+    }
+
+    pub fn smmu(&self, m: MachineId) -> &Smmu {
+        &self.smmus[m]
+    }
+
+    fn assign(&mut self, job: &Job) -> Assignment {
+        // Phase II: every SMMU computes its cost concurrently; the shared
+        // iterative comparator scans machines in index order (ties keep
+        // the earlier machine, matching the golden engine).
+        let m_count = self.smmus.len();
+        let mut cost_vec = vec![FULL_COST; m_count];
+        let mut best: Option<(usize, f32, ThresholdRead)> = None;
+        for m in 0..m_count {
+            let (j_w, j_eps, j_t) = self.precision.q_job(job.weight, job.ept[m]);
+            let (c, read) = self.smmus[m].cost(j_w, j_eps, j_t);
+            cost_vec[m] = c;
+            if c < FULL_COST && best.as_ref().map_or(true, |&(_, bc, _)| c < bc) {
+                best = Some((m, c, read));
+            }
+        }
+        let (machine, cost, read) = best.expect("caller ensured a free machine");
+        let (j_w, j_eps, j_t) = self.precision.q_job(job.weight, job.ept[machine]);
+        let alpha_pt = (self.alpha * j_eps).ceil() as u32;
+        self.smmus[machine]
+            .array
+            .insert(read, job.id, j_w, j_eps, j_t, alpha_pt);
+        Assignment {
+            job: job.id,
+            machine,
+            position: read.pos,
+            cost,
+            cost_vector: cost_vec,
+        }
+    }
+}
+
+impl ArchSim for StannicSim {
+    fn name(&self) -> &'static str {
+        "stannic"
+    }
+
+    fn config(&self) -> (usize, usize) {
+        (self.smmus.len(), self.depth)
+    }
+
+    fn submit(&mut self, job: Job) {
+        self.pending.push_back(job);
+    }
+
+    fn tick(&mut self, arrival: Option<&Job>) -> TickOutcome {
+        self.tick_no += 1;
+        if let Some(j) = arrival {
+            self.pending.push_back(j.clone());
+        }
+        let mut out = TickOutcome::default();
+
+        // alpha check (Head PEs only): pop ready heads.
+        for (m, s) in self.smmus.iter_mut().enumerate() {
+            if s.array.head().is_some_and(|h| h.n >= h.alpha_pt) {
+                let id = s.array.pop();
+                out.released.push((id, m));
+            }
+        }
+
+        // cost + insert for the oldest pending arrival.
+        if !self.pending.is_empty() {
+            if self.smmus.iter().any(|s| !s.array.is_full()) {
+                let job = self.pending.pop_front().expect("non-empty");
+                out.assigned = Some(self.assign(&job));
+            } else {
+                out.stalled = true;
+            }
+        }
+
+        // standard alpha updates everywhere (heads accrue VW).
+        for s in &mut self.smmus {
+            s.array.standard_update();
+        }
+
+        if self.check_invariants {
+            for (m, s) in self.smmus.iter().enumerate() {
+                debug_assert!(
+                    s.array.properly_ordered(),
+                    "machine {m} lost proper ordering at tick {}",
+                    self.tick_no
+                );
+            }
+        }
+
+        // cycle accounting
+        let (m, d) = self.config();
+        let kind = IterationKind::classify(!out.released.is_empty(), out.assigned.is_some());
+        let cycles = match kind {
+            IterationKind::Standard => timing::standard_latency(m, d),
+            IterationKind::Pop => timing::pop_latency(m, d),
+            IterationKind::Insert => timing::insert_latency(m, d),
+            IterationKind::PopInsert => timing::pop_insert_latency(m, d),
+        };
+        self.stats.record(kind, cycles);
+        out
+    }
+
+    fn stats(&self) -> &IterationStats {
+        &self.stats
+    }
+
+    fn is_idle(&self) -> bool {
+        self.pending.is_empty() && self.smmus.iter().all(|s| s.array.is_empty())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::MachinePark;
+    use crate::scheduler::SosEngine;
+    use crate::sim::lockstep_verify;
+    use crate::workload::{generate_trace, WorkloadSpec};
+
+    #[test]
+    fn lockstep_parity_with_golden() {
+        let park = MachinePark::paper_m1_m5();
+        let trace = generate_trace(&WorkloadSpec::default(), &park, 500, 31);
+        let mut golden = SosEngine::new(5, 10, 0.5, Precision::Int8);
+        let mut sim = StannicSim::new(5, 10, 0.5, Precision::Int8);
+        lockstep_verify(&mut sim, &mut golden, &trace, 500_000).unwrap();
+        assert!(sim.stats().iterations() > 0);
+    }
+
+    #[test]
+    fn lockstep_parity_large_config() {
+        let park = MachinePark::cycled(20);
+        let trace = generate_trace(&WorkloadSpec::default(), &park, 300, 77);
+        let mut golden = SosEngine::new(20, 10, 0.5, Precision::Int8);
+        let mut sim = StannicSim::new(20, 10, 0.5, Precision::Int8);
+        lockstep_verify(&mut sim, &mut golden, &trace, 500_000).unwrap();
+    }
+
+    #[test]
+    fn decision_latency_reported() {
+        let sim = StannicSim::new(10, 20, 0.5, Precision::Int8);
+        assert_eq!(sim.stats().decision_latency, 75);
+    }
+
+    #[test]
+    fn iteration_kinds_counted() {
+        let park = MachinePark::paper_m1_m5();
+        let trace = generate_trace(&WorkloadSpec::default(), &park, 100, 3);
+        let mut golden = SosEngine::new(5, 10, 0.5, Precision::Int8);
+        let mut sim = StannicSim::new(5, 10, 0.5, Precision::Int8);
+        lockstep_verify(&mut sim, &mut golden, &trace, 500_000).unwrap();
+        let s = sim.stats();
+        assert_eq!(
+            s.count(IterationKind::Insert) + s.count(IterationKind::PopInsert),
+            100,
+            "one assignment iteration per job"
+        );
+        // pops can coalesce (several machines release in one iteration),
+        // so the pop-iteration count is bounded by, not equal to, 100.
+        let pop_iters = s.count(IterationKind::Pop) + s.count(IterationKind::PopInsert);
+        assert!(pop_iters > 0 && pop_iters <= 100);
+        assert!(s.count(IterationKind::Standard) > 0);
+    }
+}

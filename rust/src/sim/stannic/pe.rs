@@ -1,0 +1,496 @@
+//! The systolic PE array of one SMMU (Section 6.1.2/6.2) — a
+//! one-dimensional array where each PE tracks one job of the machine's
+//! virtual schedule together with *memoized* threshold sums:
+//!
+//! * `sum_hi` — the value `sum^HI` would take if this PE's job were the
+//!   last element of the higher-priority set: the prefix sum
+//!   `Σ_{j<=k} (eps_j - n_j)` over valid PEs from the head;
+//! * `sum_lo` — the value `sum^LO` would take if this PE's job were the
+//!   first element of the lower-priority set: the suffix sum
+//!   `Σ_{j>=k} (W_j - n_j·T_j)` to the tail.
+//!
+//! PEs do **not** store weight or EPT — exactly like the hardware, every
+//! update is expressed in terms of locally-held values and broadcast
+//! quantities (Tables 2 and 3), which is what makes the O(1)-lookup cost
+//! calculation possible. An invariant checker recomputes the prefix/
+//! suffix sums from a shadow copy of (w, eps) kept *outside* the PE state
+//! (test-only) to prove the local update rules maintain them.
+
+use crate::core::JobId;
+
+/// One processing element. `valid == false` models the "invalid job /
+/// bubble" state.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Pe {
+    pub valid: bool,
+    pub id: JobId,
+    /// Stored WSPT ratio T_i^K.
+    pub t: f32,
+    /// Virtual-work cycle counter n_K.
+    pub n: u32,
+    /// Alpha release point (cycles of VW before release).
+    pub alpha_pt: u32,
+    /// Memoized prefix sum (see module docs).
+    pub sum_hi: f32,
+    /// Memoized suffix sum (see module docs).
+    pub sum_lo: f32,
+}
+
+impl Pe {
+    pub const INVALID: Pe = Pe {
+        valid: false,
+        id: 0,
+        t: 0.0,
+        n: 0,
+        alpha_pt: 0,
+        sum_hi: 0.0,
+        sum_lo: 0.0,
+    };
+}
+
+/// The systolic array of one machine's SMMU.
+#[derive(Debug, Clone)]
+pub struct PeArray {
+    pes: Vec<Pe>,
+}
+
+/// Result of a cost query against the array (the volunteered values of
+/// the two threshold PEs plus the popcount insertion index).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ThresholdRead {
+    pub sum_hi: f32,
+    pub sum_lo: f32,
+    pub pos: usize,
+    pub full: bool,
+}
+
+impl PeArray {
+    pub fn new(depth: usize) -> Self {
+        assert!(depth >= 1);
+        PeArray {
+            pes: vec![Pe::INVALID; depth],
+        }
+    }
+
+    pub fn depth(&self) -> usize {
+        self.pes.len()
+    }
+
+    pub fn pes(&self) -> &[Pe] {
+        &self.pes
+    }
+
+    pub fn len(&self) -> usize {
+        self.pes.iter().take_while(|p| p.valid).count()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        !self.pes[0].valid
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.pes.last().is_some_and(|p| p.valid)
+    }
+
+    pub fn head(&self) -> Option<&Pe> {
+        self.pes[0].valid.then(|| &self.pes[0])
+    }
+
+    /// Broadcast the incoming job's WSPT on the broadcast bus; every PE
+    /// does its local comparison C (Eq. 6) and the two threshold PEs
+    /// volunteer their memoized sums — the single-cycle lookup replacing
+    /// the depth-wide summation (Section 6.2.1).
+    pub fn threshold_read(&self, j_t: f32) -> ThresholdRead {
+        // C = 0 (HI) iff T_k >= T_j for a valid PE; invalid PEs read C=1.
+        // Proper ordering makes the C string 0...01...1, so:
+        let pos = self
+            .pes
+            .iter()
+            .take_while(|p| p.valid && p.t >= j_t)
+            .count();
+        let sum_hi = if pos > 0 { self.pes[pos - 1].sum_hi } else { 0.0 };
+        let sum_lo = if pos < self.pes.len() && self.pes[pos].valid {
+            self.pes[pos].sum_lo
+        } else {
+            0.0
+        };
+        ThresholdRead {
+            sum_hi,
+            sum_lo,
+            pos,
+            full: self.is_full(),
+        }
+    }
+
+    /// Standard-iteration cost update (Fig. 11): the head accrues one
+    /// cycle of virtual work. Head PE decrements both memoized values
+    /// (`sum_hi -= 1`, `sum_lo -= T`); every other valid PE decrements
+    /// only `sum_hi` (its prefix includes the head).
+    pub fn standard_update(&mut self) {
+        if !self.pes[0].valid {
+            return;
+        }
+        self.pes[0].n += 1;
+        self.pes[0].sum_hi -= 1.0;
+        self.pes[0].sum_lo -= self.pes[0].t;
+        for pe in self.pes.iter_mut().skip(1) {
+            if !pe.valid {
+                break; // proper ordering: valid PEs form a prefix
+            }
+            pe.sum_hi -= 1.0;
+        }
+    }
+
+    /// POP iteration (Fig. 12): release the head, broadcast
+    /// `Δα = sum_hi(head)` (its remaining contribution), subtract it from
+    /// every remaining PE's prefix sum, synchronous left shift with an
+    /// invalid job entering at the tail. Returns the released job id.
+    pub fn pop(&mut self) -> JobId {
+        debug_assert!(self.pes[0].valid, "pop on empty array");
+        let released = self.pes[0].id;
+        let delta_alpha = self.pes[0].sum_hi;
+        let d = self.pes.len();
+        for i in 0..d - 1 {
+            let mut next = self.pes[i + 1];
+            if next.valid {
+                next.sum_hi -= delta_alpha;
+            }
+            self.pes[i] = next;
+        }
+        self.pes[d - 1] = Pe::INVALID;
+        released
+    }
+
+    /// Insert iteration (Fig. 13 / Table 2): the HI set (C=0) stays
+    /// stationary and adds `J.W` to its suffix sums; the LO set (C=1)
+    /// right-shifts and adds `J.eps` to its prefix sums; the threshold PE
+    /// stores the new job with initial sums computed by the Cost
+    /// Calculator from the volunteered threshold values.
+    ///
+    /// `read` must be the `threshold_read(j_t)` of this same iteration
+    /// (the hardware reuses the comparison values C from the cost
+    /// calculation earlier in the cycle).
+    pub fn insert(&mut self, read: ThresholdRead, id: JobId, j_w: f32, j_eps: f32, j_t: f32, alpha_pt: u32) {
+        debug_assert!(!self.is_full(), "insert into full array");
+        let p = read.pos;
+        let d = self.pes.len();
+        // LO set right-shift (from tail toward threshold)
+        for i in (p..d - 1).rev() {
+            if self.pes[i].valid {
+                let mut moved = self.pes[i];
+                moved.sum_hi += j_eps; // new job enters their prefix
+                self.pes[i + 1] = moved;
+            }
+        }
+        // HI set cost updates (stationary)
+        for pe in self.pes[..p].iter_mut() {
+            debug_assert!(pe.valid);
+            pe.sum_lo += j_w; // new job enters their suffix
+        }
+        // Threshold PE loads the new job from the broadcast bus; initial
+        // sums from the cost calculator (Section 6.2.2 (3a)).
+        self.pes[p] = Pe {
+            valid: true,
+            id,
+            t: j_t,
+            n: 0,
+            alpha_pt,
+            sum_hi: read.sum_hi + j_eps,
+            sum_lo: read.sum_lo + j_w,
+        };
+    }
+
+    /// Fused POP + Insert iteration (Fig. 14 / Table 3): the two
+    /// reorderings compose into "HI set shifts left, LO set stationary,
+    /// new job lands at the C=0 side of the threshold", with cost updates
+    /// accounting for both the departing head (`Δα`) and the incoming job.
+    /// Returns the released job id.
+    ///
+    /// `read` must be a `threshold_read(j_t)` taken *after* the pop's
+    /// effect is known — the hardware evaluates the cost query on the
+    /// post-pop state within the same iteration (the Head PE sets C=0 on
+    /// pop so the insertion point self-identifies, Section 6.2.2 (4c)).
+    /// For simulation simplicity we express the fused form directly in
+    /// terms of the pre-pop state and the paper's Table 3 update rules.
+    pub fn pop_insert(&mut self, id: JobId, j_w: f32, j_eps: f32, j_t: f32, alpha_pt: u32) -> JobId {
+        debug_assert!(self.pes[0].valid, "pop_insert on empty array");
+        let released = self.pes[0].id;
+        let delta_alpha = self.pes[0].sum_hi;
+        let d = self.pes.len();
+
+        // Post-pop threshold position: count valid PEs *after* the head
+        // with T >= j_t (the head is leaving).
+        let p = self.pes[1..]
+            .iter()
+            .take_while(|pe| pe.valid && pe.t >= j_t)
+            .count();
+
+        // Volunteered values on the post-pop state:
+        // sum_hi threshold = prefix through PE p (pre-pop index) minus Δα
+        let v_sum_hi = if p > 0 {
+            self.pes[p].sum_hi - delta_alpha
+        } else {
+            0.0
+        };
+        let v_sum_lo = if p + 1 < d && self.pes[p + 1].valid {
+            self.pes[p + 1].sum_lo
+        } else {
+            0.0
+        };
+
+        // HI set (pre-pop indices 1..=p): net left shift, updates
+        // sum_hi -= Δα (head leaves prefix), sum_lo += J.W (J enters suffix).
+        for i in 1..=p {
+            let mut moved = self.pes[i];
+            moved.sum_hi -= delta_alpha;
+            moved.sum_lo += j_w;
+            self.pes[i - 1] = moved;
+        }
+        // New job lands at post-pop index p.
+        self.pes[p] = Pe {
+            valid: true,
+            id,
+            t: j_t,
+            n: 0,
+            alpha_pt,
+            sum_hi: v_sum_hi + j_eps,
+            sum_lo: v_sum_lo + j_w,
+        };
+        // LO set (pre-pop indices p+1..): stationary in place (pop's left
+        // shift cancels insert's right shift), updates
+        // sum_hi += (J.eps - Δα).
+        for i in p + 1..d {
+            if self.pes[i].valid {
+                self.pes[i].sum_hi += j_eps - delta_alpha;
+            }
+        }
+        released
+    }
+
+    /// Definition 4 "Properly Ordered Systolic Virtual Schedule".
+    pub fn properly_ordered(&self) -> bool {
+        // valid jobs form a prefix (no bubbles)
+        let len = self.len();
+        if self.pes[len..].iter().any(|p| p.valid) {
+            return false;
+        }
+        // non-increasing T
+        self.pes[..len].windows(2).all(|w| w[0].t >= w[1].t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Shadow model: recompute what the memoized sums *should* be from
+    /// full (w, eps) knowledge, to verify the local update rules.
+    struct Shadow {
+        jobs: Vec<(JobId, f32, f32, f32, u32)>, // id, w, eps, t, n
+    }
+
+    impl Shadow {
+        fn expected_sums(&self) -> Vec<(f32, f32)> {
+            let k = self.jobs.len();
+            let mut out = vec![(0.0f32, 0.0f32); k];
+            let mut prefix = 0.0f32;
+            for i in 0..k {
+                let (_, _, eps, _, n) = self.jobs[i];
+                prefix += eps - n as f32;
+                out[i].0 = prefix;
+            }
+            let mut suffix = 0.0f32;
+            for i in (0..k).rev() {
+                let (_, w, _, t, n) = self.jobs[i];
+                suffix += w - n as f32 * t;
+                out[i].1 = suffix;
+            }
+            out
+        }
+    }
+
+    fn check_invariants(arr: &PeArray, shadow: &Shadow) {
+        assert!(arr.properly_ordered());
+        let want = shadow.expected_sums();
+        assert_eq!(arr.len(), want.len());
+        for (i, pe) in arr.pes()[..want.len()].iter().enumerate() {
+            assert_eq!(pe.id, shadow.jobs[i].0, "slot {i} id");
+            assert!(
+                (pe.sum_hi - want[i].0).abs() < 1e-3,
+                "slot {i}: sum_hi {} want {}",
+                pe.sum_hi,
+                want[i].0
+            );
+            assert!(
+                (pe.sum_lo - want[i].1).abs() < 1e-3,
+                "slot {i}: sum_lo {} want {}",
+                pe.sum_lo,
+                want[i].1
+            );
+        }
+    }
+
+    /// Drive random operations and verify the memoized sums stay exact.
+    #[test]
+    fn memoized_sums_match_shadow_model() {
+        use crate::workload::Rng;
+        let mut rng = Rng::new(99);
+        let depth = 8;
+        let mut arr = PeArray::new(depth);
+        let mut shadow = Shadow { jobs: vec![] };
+        let mut next_id = 1u64;
+
+        for _step in 0..2000 {
+            // maybe pop (alpha-ready head)
+            if let Some(h) = arr.head() {
+                if h.n >= h.alpha_pt {
+                    let id = arr.pop();
+                    assert_eq!(id, shadow.jobs.remove(0).0);
+                }
+            }
+            // maybe insert (WSPT quantized to the UQ4.4 hardware format,
+            // making every update arithmetic exact in f32 — the same
+            // property the INT8 datapath relies on)
+            if !arr.is_full() && rng.chance(0.35) {
+                let w = rng.uniform(1.0, 255.0).round();
+                let eps = rng.uniform(10.0, 255.0).round();
+                let t = crate::core::fixed_round(w / eps, 4, 4);
+                let alpha_pt = (0.5 * eps).ceil() as u32;
+                let read = arr.threshold_read(t);
+                arr.insert(read, next_id, w, eps, t, alpha_pt);
+                shadow.jobs.insert(read.pos, (next_id, w, eps, t, 0));
+                next_id += 1;
+            }
+            // standard update (every iteration)
+            arr.standard_update();
+            if let Some(first) = shadow.jobs.first_mut() {
+                first.4 += 1;
+            }
+            check_invariants(&arr, &shadow);
+        }
+    }
+
+    #[test]
+    fn threshold_read_splits_sets() {
+        let mut arr = PeArray::new(4);
+        // insert three jobs: T = 2.0 (w40 e20), 1.0 (w20 e20), 0.5 (w10 e20)
+        for (id, w, eps) in [(1u64, 40.0, 20.0), (2, 20.0, 20.0), (3, 10.0, 20.0)] {
+            let t = w / eps;
+            let read = arr.threshold_read(t);
+            arr.insert(read, id, w, eps, t, 10);
+        }
+        let r = arr.threshold_read(1.0); // ties are HI
+        assert_eq!(r.pos, 2);
+        assert_eq!(r.sum_hi, 40.0); // (20-0)+(20-0)
+        assert_eq!(r.sum_lo, 10.0); // job 3's W
+        assert!(!r.full);
+
+        let r_top = arr.threshold_read(100.0);
+        assert_eq!(r_top.pos, 0);
+        assert_eq!(r_top.sum_hi, 0.0);
+        assert_eq!(r_top.sum_lo, 70.0);
+
+        let r_bot = arr.threshold_read(0.001);
+        assert_eq!(r_bot.pos, 3);
+        assert_eq!(r_bot.sum_hi, 60.0);
+        assert_eq!(r_bot.sum_lo, 0.0);
+    }
+
+    #[test]
+    fn fused_pop_insert_equals_sequential() {
+        use crate::workload::Rng;
+        let mut rng = Rng::new(7);
+        for trial in 0..200 {
+            // build a random ready-to-pop array
+            let depth = rng.range(2, 8);
+            let mut a = PeArray::new(depth);
+            let k = rng.range(1, depth - 1);
+            let mut ts: Vec<(f32, f32)> = (0..k)
+                .map(|_| {
+                    let w = rng.uniform(1.0, 255.0).round();
+                    let e = rng.uniform(10.0, 255.0).round();
+                    (w, e)
+                })
+                .collect();
+            ts.sort_by(|x, y| (y.0 / y.1).partial_cmp(&(x.0 / x.1)).unwrap());
+            for (i, (w, e)) in ts.iter().enumerate() {
+                let t = w / e;
+                let read = a.threshold_read(t);
+                a.insert(read, (i + 1) as u64, *w, *e, t, 1);
+            }
+            // accrue until head ready
+            while a.head().is_some_and(|h| h.n < h.alpha_pt) {
+                a.standard_update();
+            }
+            let mut b = a.clone();
+
+            let w = rng.uniform(1.0, 255.0).round();
+            let e = rng.uniform(10.0, 255.0).round();
+            let t = w / e;
+            let id = 999u64;
+
+            // sequential: pop then insert
+            let ra = a.pop();
+            let read = a.threshold_read(t);
+            a.insert(read, id, w, e, t, 5);
+
+            // fused Table-3 path
+            let rb = b.pop_insert(id, w, e, t, 5);
+
+            assert_eq!(ra, rb, "trial {trial}");
+            for (i, (pa, pb)) in a.pes().iter().zip(b.pes()).enumerate() {
+                assert_eq!(pa.valid, pb.valid, "trial {trial} slot {i}");
+                if pa.valid {
+                    assert_eq!(pa.id, pb.id, "trial {trial} slot {i}");
+                    assert!((pa.sum_hi - pb.sum_hi).abs() < 1e-3, "trial {trial} slot {i} hi");
+                    assert!((pa.sum_lo - pb.sum_lo).abs() < 1e-3, "trial {trial} slot {i} lo");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pop_inserts_bubble_at_tail() {
+        let mut arr = PeArray::new(3);
+        for (id, w, e) in [(1u64, 30.0, 10.0), (2, 10.0, 10.0)] {
+            let t = w / e;
+            let read = arr.threshold_read(t);
+            arr.insert(read, id, w, e, t, 1);
+        }
+        assert_eq!(arr.pop(), 1);
+        assert_eq!(arr.len(), 1);
+        assert!(!arr.pes()[1].valid && !arr.pes()[2].valid);
+        assert!(arr.properly_ordered());
+    }
+
+    #[test]
+    fn insert_at_head_edge_case() {
+        // Section 6.2.2 (3c): incoming job outranks everything.
+        let mut arr = PeArray::new(3);
+        let read = arr.threshold_read(0.5);
+        arr.insert(read, 1, 5.0, 10.0, 0.5, 5);
+        let read = arr.threshold_read(3.0);
+        assert_eq!(read.pos, 0);
+        arr.insert(read, 2, 30.0, 10.0, 3.0, 5);
+        assert_eq!(arr.head().unwrap().id, 2);
+        assert_eq!(arr.pes()[1].id, 1);
+        assert!(arr.properly_ordered());
+    }
+
+    #[test]
+    fn pop_insert_with_highest_wspt_edge_case() {
+        // Section 6.2.2 (4c): J has the highest WSPT while the head pops.
+        let mut arr = PeArray::new(3);
+        for (id, w, e) in [(1u64, 20.0, 10.0), (2, 5.0, 10.0)] {
+            let t = w / e;
+            let read = arr.threshold_read(t);
+            arr.insert(read, id, w, e, t, 1);
+        }
+        arr.standard_update(); // head ready (alpha_pt 1)
+        let released = arr.pop_insert(9, 100.0, 10.0, 10.0, 5);
+        assert_eq!(released, 1);
+        assert_eq!(arr.head().unwrap().id, 9, "newcomer takes the head");
+        assert_eq!(arr.pes()[1].id, 2);
+        assert!(arr.properly_ordered());
+    }
+}

@@ -1,0 +1,138 @@
+//! Per-iteration cycle accounting shared by both simulators.
+
+/// The four looping paths of the Virtual-Schedule algorithmic flow
+/// (Fig. 9b): Standard `A->C->F`, Pop `A->B->C->F`, Insert
+/// `A->C->D->E->F`, Pop+Insert `A->B->C->D->E->F`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum IterationKind {
+    Standard,
+    Pop,
+    Insert,
+    PopInsert,
+}
+
+impl IterationKind {
+    pub fn classify(popped: bool, inserted: bool) -> Self {
+        match (popped, inserted) {
+            (false, false) => IterationKind::Standard,
+            (true, false) => IterationKind::Pop,
+            (false, true) => IterationKind::Insert,
+            (true, true) => IterationKind::PopInsert,
+        }
+    }
+
+    pub const ALL: [IterationKind; 4] = [
+        IterationKind::Standard,
+        IterationKind::Pop,
+        IterationKind::Insert,
+        IterationKind::PopInsert,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            IterationKind::Standard => "standard",
+            IterationKind::Pop => "pop",
+            IterationKind::Insert => "insert",
+            IterationKind::PopInsert => "pop+insert",
+        }
+    }
+
+    fn index(&self) -> usize {
+        match self {
+            IterationKind::Standard => 0,
+            IterationKind::Pop => 1,
+            IterationKind::Insert => 2,
+            IterationKind::PopInsert => 3,
+        }
+    }
+}
+
+/// Cycle accounting across a run.
+#[derive(Debug, Clone, Default)]
+pub struct IterationStats {
+    counts: [u64; 4],
+    cycles: [u64; 4],
+    /// Latency of the full decision path (the Fig. 18a metric) as
+    /// reported by the timing model; recorded once since it is
+    /// configuration-static per architecture.
+    pub decision_latency: u64,
+    total_cycles: u64,
+}
+
+impl IterationStats {
+    pub fn record(&mut self, kind: IterationKind, cycles: u64) {
+        let i = kind.index();
+        self.counts[i] += 1;
+        self.cycles[i] += cycles;
+        self.total_cycles += cycles;
+    }
+
+    pub fn count(&self, kind: IterationKind) -> u64 {
+        self.counts[kind.index()]
+    }
+
+    pub fn iterations(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    pub fn total_cycles(&self) -> u64 {
+        self.total_cycles
+    }
+
+    pub fn avg_cycles(&self, kind: IterationKind) -> f64 {
+        let i = kind.index();
+        if self.counts[i] == 0 {
+            0.0
+        } else {
+            self.cycles[i] as f64 / self.counts[i] as f64
+        }
+    }
+
+    /// Mean cycles per iteration over the whole run.
+    pub fn avg_cycles_overall(&self) -> f64 {
+        let n = self.iterations();
+        if n == 0 {
+            0.0
+        } else {
+            self.total_cycles as f64 / n as f64
+        }
+    }
+
+    /// Wall-clock seconds at a given FPGA clock frequency.
+    pub fn seconds_at(&self, freq_hz: f64) -> f64 {
+        self.total_cycles as f64 / freq_hz
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classify_matches_fig9_paths() {
+        assert_eq!(
+            IterationKind::classify(false, false),
+            IterationKind::Standard
+        );
+        assert_eq!(IterationKind::classify(true, false), IterationKind::Pop);
+        assert_eq!(IterationKind::classify(false, true), IterationKind::Insert);
+        assert_eq!(
+            IterationKind::classify(true, true),
+            IterationKind::PopInsert
+        );
+    }
+
+    #[test]
+    fn accounting() {
+        let mut s = IterationStats::default();
+        s.record(IterationKind::Standard, 10);
+        s.record(IterationKind::Standard, 10);
+        s.record(IterationKind::Insert, 50);
+        assert_eq!(s.iterations(), 3);
+        assert_eq!(s.total_cycles(), 70);
+        assert_eq!(s.avg_cycles(IterationKind::Standard), 10.0);
+        assert_eq!(s.avg_cycles(IterationKind::Insert), 50.0);
+        assert!((s.avg_cycles_overall() - 70.0 / 3.0).abs() < 1e-12);
+        assert_eq!(s.seconds_at(70.0), 1.0);
+    }
+}

@@ -1,0 +1,94 @@
+//! Property-based testing substrate (proptest is unavailable offline):
+//! seeded random-case generation with failing-seed reporting and a
+//! simple shrink-by-replay knob (re-run a specific case via env var).
+//!
+//! Usage:
+//! ```ignore
+//! property("ordering invariant", 500, |rng| {
+//!     let xs = gen_vec(rng, 0..=32, |r| r.uniform(0.0, 1.0));
+//!     check(is_sorted(&sorted(xs)), "sorted output")
+//! });
+//! ```
+//! On failure the macro panics with the case seed; re-run only that case
+//! with `STANNIC_PROP_SEED=<seed> cargo test <name>`.
+
+use crate::workload::Rng;
+
+/// Outcome of a single property case.
+pub type CaseResult = Result<(), String>;
+
+/// Convenience assertion for property bodies.
+pub fn check(cond: bool, what: &str) -> CaseResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(what.to_string())
+    }
+}
+
+/// Run `cases` random cases of `body`, each with a deterministic
+/// per-case RNG. Panics with the failing case seed on first failure.
+pub fn property<F: FnMut(&mut Rng) -> CaseResult>(name: &str, cases: u64, mut body: F) {
+    // Replay mode: run exactly one pinned case.
+    if let Ok(seed) = std::env::var("STANNIC_PROP_SEED") {
+        let seed: u64 = seed.parse().expect("STANNIC_PROP_SEED must be a u64");
+        let mut rng = Rng::new(seed);
+        if let Err(e) = body(&mut rng) {
+            panic!("property '{name}' failed on replayed seed {seed}: {e}");
+        }
+        return;
+    }
+    let base = 0x57a2_21c5_0c0f_fee0u64;
+    for case in 0..cases {
+        let seed = base.wrapping_add(case.wrapping_mul(0x9e37_79b9_7f4a_7c15));
+        let mut rng = Rng::new(seed);
+        if let Err(e) = body(&mut rng) {
+            panic!(
+                "property '{name}' failed on case {case} (seed {seed}): {e}\n\
+                 replay with: STANNIC_PROP_SEED={seed}"
+            );
+        }
+    }
+}
+
+/// Generate a vector whose length is drawn from `len_range`.
+pub fn gen_vec<T, F: FnMut(&mut Rng) -> T>(
+    rng: &mut Rng,
+    min_len: usize,
+    max_len: usize,
+    mut item: F,
+) -> Vec<T> {
+    let n = rng.range(min_len, max_len);
+    (0..n).map(|_| item(rng)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn property_passes_on_tautology() {
+        property("tautology", 50, |rng| {
+            let x = rng.uniform(0.0, 1.0);
+            check((0.0..1.0).contains(&x), "uniform in range")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'falsum'")]
+    fn property_reports_failing_seed() {
+        property("falsum", 10, |rng| {
+            let x = rng.uniform(0.0, 1.0);
+            check(x < 0.0, "impossible")
+        });
+    }
+
+    #[test]
+    fn gen_vec_respects_bounds() {
+        let mut rng = Rng::new(1);
+        for _ in 0..100 {
+            let v = gen_vec(&mut rng, 2, 5, |r| r.next_u64());
+            assert!((2..=5).contains(&v.len()));
+        }
+    }
+}

@@ -1,0 +1,217 @@
+//! Workload synthesis: turns a [`WorkloadSpec`] + [`MachinePark`] into a
+//! deterministic arrival trace (Phase I of the algorithm — EPT estimates
+//! are attached per machine from the job's nature and the machine's
+//! type/quality affinity).
+
+use crate::core::{Job, JobNature, MachineKind, MachinePark};
+
+use super::rng::Rng;
+use super::spec::{BurstType, WorkloadSpec};
+use super::trace::{Trace, TraceEvent};
+
+/// Affinity multiplier: how well a machine type runs a job nature.
+/// Lower = faster. The matrix encodes the paper's intuition (Section 2's
+/// CNN-layer example: a convolution runs on either, but the GPU is
+/// expected to finish quicker) plus the Mixed machine's jack-of-all-
+/// trades profile.
+pub fn affinity(nature: JobNature, kind: MachineKind) -> f32 {
+    match (nature, kind) {
+        (JobNature::Compute, MachineKind::Gpu) => 0.5,
+        (JobNature::Compute, MachineKind::Cpu) => 1.5,
+        (JobNature::Compute, MachineKind::Mixed) => 1.0,
+        (JobNature::Memory, MachineKind::Gpu) => 1.6,
+        (JobNature::Memory, MachineKind::Cpu) => 0.7,
+        (JobNature::Memory, MachineKind::Mixed) => 1.0,
+        (JobNature::Mixed, MachineKind::Gpu) => 1.1,
+        (JobNature::Mixed, MachineKind::Cpu) => 1.1,
+        (JobNature::Mixed, MachineKind::Mixed) => 0.8,
+    }
+}
+
+/// Synthesize one job: nature from JC, weight uniform, per-machine EPT =
+/// base * affinity * quality (clamped to the spec's representable range).
+pub fn synth_job(
+    id: u64,
+    spec: &WorkloadSpec,
+    park: &MachinePark,
+    rng: &mut Rng,
+) -> Job {
+    let nature = match rng.pick_weighted(&[
+        spec.frac_compute,
+        spec.frac_memory,
+        spec.frac_mixed,
+    ]) {
+        0 => JobNature::Compute,
+        1 => JobNature::Memory,
+        _ => JobNature::Mixed,
+    };
+    let weight = rng.uniform(spec.weight_range.0, spec.weight_range.1).round().max(1.0);
+    let base = rng.uniform(spec.ept_range.0, spec.ept_range.1);
+    let ept = park
+        .iter()
+        .map(|m| {
+            (base * affinity(nature, m.kind) * m.quality_factor())
+                .clamp(spec.ept_range.0, 255.0)
+                .round()
+        })
+        .collect();
+    Job::new(id, weight, ept, nature).with_actual_factor(rng.noise_factor(spec.runtime_noise))
+}
+
+/// Generate a deterministic arrival trace of `n_jobs` jobs.
+///
+/// Arrival pattern per tick follows BT/BF; IT idle ticks are inserted
+/// after every II released jobs (II = 0 disables idling). The trace's
+/// tick axis is the *scheduler clock* — the SOS engines serialize
+/// same-tick bursts internally.
+pub fn generate_trace(
+    spec: &WorkloadSpec,
+    park: &MachinePark,
+    n_jobs: usize,
+    seed: u64,
+) -> Trace {
+    spec.validate().expect("invalid workload spec");
+    let mut rng = Rng::new(seed);
+    let mut events: Vec<TraceEvent> = Vec::with_capacity(n_jobs);
+    let mut tick: u64 = 0;
+    let mut emitted = 0usize;
+    let mut since_idle = 0usize;
+
+    while emitted < n_jobs {
+        tick += 1;
+        // idle-period insertion (IT after II jobs)
+        if spec.idle_interval > 0 && since_idle >= spec.idle_interval {
+            tick += spec.idle_time;
+            since_idle = 0;
+        }
+        let burst = match spec.burst_type {
+            BurstType::Uniform => spec.burst_factor,
+            BurstType::Random => {
+                // random ticks release 0..=BF jobs; bias toward small
+                // bursts so arrivals stay stochastic rather than dense
+                if rng.chance(0.45) {
+                    rng.range(1, spec.burst_factor)
+                } else {
+                    0
+                }
+            }
+        };
+        for _ in 0..burst.min(n_jobs - emitted) {
+            let id = (emitted + 1) as u64;
+            let job = synth_job(id, spec, park, &mut rng).with_arrival(tick);
+            events.push(TraceEvent {
+                tick,
+                job: Some(job),
+            });
+            emitted += 1;
+            since_idle += 1;
+        }
+    }
+    Trace::new(events, park.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::Quality;
+
+    #[test]
+    fn trace_is_deterministic() {
+        let park = MachinePark::paper_m1_m5();
+        let spec = WorkloadSpec::default();
+        let a = generate_trace(&spec, &park, 100, 42);
+        let b = generate_trace(&spec, &park, 100, 42);
+        assert_eq!(a.n_jobs(), 100);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn seeds_change_traces() {
+        let park = MachinePark::paper_m1_m5();
+        let spec = WorkloadSpec::default();
+        assert_ne!(
+            generate_trace(&spec, &park, 50, 1),
+            generate_trace(&spec, &park, 50, 2)
+        );
+    }
+
+    #[test]
+    fn job_composition_respected() {
+        let park = MachinePark::paper_m1_m5();
+        let spec = WorkloadSpec::memory_skewed();
+        let t = generate_trace(&spec, &park, 2000, 7);
+        let mem = t
+            .jobs()
+            .filter(|j| j.nature == JobNature::Memory)
+            .count() as f64
+            / 2000.0;
+        assert!((mem - 0.70).abs() < 0.05, "memory fraction {mem}");
+    }
+
+    #[test]
+    fn gpu_best_is_fastest_for_compute() {
+        let park = MachinePark::paper_m1_m5();
+        let spec = WorkloadSpec::homogeneous_compute();
+        let t = generate_trace(&spec, &park, 200, 3);
+        for j in t.jobs() {
+            // M4 = <GPU,Best> (index 3) must beat M1 = <CPU,Best> (0)
+            assert!(j.ept[3] <= j.ept[0], "GPU best {} CPU {}", j.ept[3], j.ept[0]);
+        }
+    }
+
+    #[test]
+    fn quality_slows_machines() {
+        let park = MachinePark::paper_m1_m5();
+        assert_eq!(park[3].quality, Quality::Best);
+        assert_eq!(park[4].quality, Quality::Worst);
+        let spec = WorkloadSpec::default();
+        let t = generate_trace(&spec, &park, 300, 11);
+        let mut faster = 0;
+        for j in t.jobs() {
+            if j.ept[3] <= j.ept[4] {
+                faster += 1;
+            }
+        }
+        assert!(faster >= 290, "best GPU should rarely lose to worst GPU");
+    }
+
+    #[test]
+    fn uniform_burst_releases_bf_per_tick() {
+        let park = MachinePark::paper_m1_m5();
+        let spec = WorkloadSpec::default()
+            .with_burst(4, BurstType::Uniform)
+            .with_idle(0, 0);
+        let t = generate_trace(&spec, &park, 40, 5);
+        // 40 jobs / 4 per tick = ticks 1..=10, 4 each
+        let mut per_tick = std::collections::HashMap::new();
+        for e in t.events() {
+            *per_tick.entry(e.tick).or_insert(0usize) += 1;
+        }
+        assert!(per_tick.values().all(|&c| c == 4));
+        assert_eq!(per_tick.len(), 10);
+    }
+
+    #[test]
+    fn idle_periods_create_gaps() {
+        let park = MachinePark::paper_m1_m5();
+        let spec = WorkloadSpec::default()
+            .with_burst(1, BurstType::Uniform)
+            .with_idle(10, 5);
+        let t = generate_trace(&spec, &park, 20, 5);
+        let ticks: Vec<u64> = t.events().iter().map(|e| e.tick).collect();
+        let max_gap = ticks.windows(2).map(|w| w[1] - w[0]).max().unwrap();
+        assert!(max_gap >= 10, "idle gap missing: {ticks:?}");
+    }
+
+    #[test]
+    fn ept_within_representable_range() {
+        let park = MachinePark::paper_m1_m5();
+        let t = generate_trace(&WorkloadSpec::default(), &park, 500, 13);
+        for j in t.jobs() {
+            for &e in &j.ept {
+                assert!((10.0..=255.0).contains(&e));
+            }
+            assert!(j.weight >= 1.0 && j.weight <= 255.0);
+        }
+    }
+}

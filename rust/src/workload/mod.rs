@@ -1,0 +1,18 @@
+//! The in-house workload generator of Section 7.1: emulates job dispatch
+//! in heterogeneous systems with configurable Job Composition, Burst
+//! Factor/Type and Idle Time/Interval, plus Monte-Carlo sampling over the
+//! parameter space (Section 8.1's 50-workload sweeps).
+
+pub mod dag;
+mod generator;
+mod montecarlo;
+pub mod rng;
+mod spec;
+mod trace;
+
+pub use dag::{generate_dag, DagSpec, TaskGraph};
+pub use generator::{affinity, generate_trace, synth_job};
+pub use montecarlo::sample_specs;
+pub use rng::Rng;
+pub use spec::{BurstType, WorkloadSpec};
+pub use trace::{Trace, TraceEvent};

@@ -1,0 +1,74 @@
+//! Monte-Carlo workload sampling — Section 8.1 generates "50 different
+//! workloads by varying the workload parameters"; this module draws
+//! random-but-reproducible [`WorkloadSpec`]s from the generator's
+//! parameter space.
+
+use super::rng::Rng;
+use super::spec::{BurstType, WorkloadSpec};
+
+/// Sample `count` workload specifications from the WG parameter space.
+pub fn sample_specs(count: usize, seed: u64) -> Vec<WorkloadSpec> {
+    let mut rng = Rng::new(seed ^ 0x5eed_5eed_5eed_5eed);
+    (0..count).map(|_| sample_one(&mut rng)).collect()
+}
+
+fn sample_one(rng: &mut Rng) -> WorkloadSpec {
+    // Random job composition on the simplex (rounded to 2 decimals, then
+    // renormalized onto frac_mixed so validate() passes exactly).
+    let a = rng.next_f64();
+    let b = rng.next_f64();
+    let (lo, hi) = if a < b { (a, b) } else { (b, a) };
+    let mut fc = (lo * 100.0).round() / 100.0;
+    let mut fm = (((hi - lo) * 100.0).round()) / 100.0;
+    fc = fc.clamp(0.0, 1.0);
+    fm = fm.clamp(0.0, 1.0 - fc);
+    let fx = 1.0 - fc - fm;
+
+    WorkloadSpec {
+        frac_compute: fc,
+        frac_memory: fm,
+        frac_mixed: fx,
+        burst_factor: rng.range(1, 6),
+        burst_type: if rng.chance(0.5) {
+            BurstType::Random
+        } else {
+            BurstType::Uniform
+        },
+        idle_time: rng.range(0, 20) as u64,
+        idle_interval: rng.range(10, 80),
+        weight_range: (1.0, rng.uniform(32.0, 255.0).round()),
+        ept_range: (10.0, rng.uniform(64.0, 200.0).round()),
+        runtime_noise: rng.uniform(0.05, 0.3),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn samples_are_valid_specs() {
+        for (i, s) in sample_specs(50, 42).iter().enumerate() {
+            s.validate().unwrap_or_else(|e| panic!("spec {i}: {e}"));
+        }
+    }
+
+    #[test]
+    fn sampling_is_deterministic() {
+        assert_eq!(sample_specs(10, 7), sample_specs(10, 7));
+        assert_ne!(sample_specs(10, 7), sample_specs(10, 8));
+    }
+
+    #[test]
+    fn parameter_diversity() {
+        let specs = sample_specs(50, 3);
+        let bursts: std::collections::HashSet<_> =
+            specs.iter().map(|s| s.burst_factor).collect();
+        assert!(bursts.len() >= 3, "burst factors should vary: {bursts:?}");
+        let uniform = specs
+            .iter()
+            .filter(|s| s.burst_type == BurstType::Uniform)
+            .count();
+        assert!((10..=40).contains(&uniform));
+    }
+}

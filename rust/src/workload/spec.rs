@@ -1,0 +1,175 @@
+//! Workload generator parameters — Section 7.1's WG knobs: Job
+//! Composition (JC), Machine Composition (MC, carried by `MachinePark`),
+//! Burst Factor (BF), Burst Type (BT), Idle Time (IT), Idle Interval (II).
+
+/// Job arrival pattern (BT).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BurstType {
+    /// Jobs are released at randomly selected ticks (0..=BF per tick).
+    Random,
+    /// Exactly BF jobs are released every tick.
+    Uniform,
+}
+
+/// Full workload specification.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkloadSpec {
+    /// JC: fraction of compute-intensive jobs (must sum to 1 with the
+    /// other two).
+    pub frac_compute: f64,
+    /// JC: fraction of memory-intensive jobs.
+    pub frac_memory: f64,
+    /// JC: fraction of mixed jobs.
+    pub frac_mixed: f64,
+    /// BF: maximum number of jobs released in a single clock tick.
+    pub burst_factor: usize,
+    /// BT: arrival pattern.
+    pub burst_type: BurstType,
+    /// IT: number of idle ticks inserted after `idle_interval` jobs.
+    pub idle_time: u64,
+    /// II: maximum number of jobs released before an idle period (0
+    /// disables idling).
+    pub idle_interval: usize,
+    /// Job weight range [w_min, w_max] (paper: minimum weight 1).
+    pub weight_range: (f32, f32),
+    /// Base EPT range [e_min, e_max] before affinity/quality scaling
+    /// (paper: minimum EPT 10).
+    pub ept_range: (f32, f32),
+    /// Relative spread of actual runtime around the EPT estimate.
+    pub runtime_noise: f32,
+}
+
+impl Default for WorkloadSpec {
+    /// The "evenly distributed" workload of Section 8.4 experiment (1):
+    /// 35% memory, 35% compute, 30% mixed.
+    fn default() -> Self {
+        WorkloadSpec {
+            frac_compute: 0.35,
+            frac_memory: 0.35,
+            frac_mixed: 0.30,
+            burst_factor: 3,
+            burst_type: BurstType::Random,
+            idle_time: 8,
+            idle_interval: 40,
+            weight_range: (1.0, 255.0),
+            ept_range: (10.0, 200.0),
+            runtime_noise: 0.15,
+        }
+    }
+}
+
+impl WorkloadSpec {
+    /// Experiment (1): evenly distributed workload.
+    pub fn even() -> Self {
+        Self::default()
+    }
+
+    /// Experiment (2): memory-skewed — 70% memory, 10% compute, 20% mixed.
+    pub fn memory_skewed() -> Self {
+        WorkloadSpec {
+            frac_compute: 0.10,
+            frac_memory: 0.70,
+            frac_mixed: 0.20,
+            ..Self::default()
+        }
+    }
+
+    /// Experiment (3): compute-skewed — 70% compute, 10% memory, 20%
+    /// mixed. (The paper's text says "30% mixed", which does not sum to
+    /// 1 with 70+10; we normalize to 20% and note the discrepancy in
+    /// EXPERIMENTS.md.)
+    pub fn compute_skewed() -> Self {
+        WorkloadSpec {
+            frac_compute: 0.70,
+            frac_memory: 0.10,
+            frac_mixed: 0.20,
+            ..Self::default()
+        }
+    }
+
+    /// Experiment (4): fully homogeneous memory-intensive workload.
+    pub fn homogeneous_memory() -> Self {
+        WorkloadSpec {
+            frac_compute: 0.0,
+            frac_memory: 1.0,
+            frac_mixed: 0.0,
+            ..Self::default()
+        }
+    }
+
+    /// Experiment (5): compute-intensive workload (paired with a
+    /// homogeneous CPU machine park).
+    pub fn homogeneous_compute() -> Self {
+        WorkloadSpec {
+            frac_compute: 1.0,
+            frac_memory: 0.0,
+            frac_mixed: 0.0,
+            ..Self::default()
+        }
+    }
+
+    pub fn with_burst(mut self, bf: usize, bt: BurstType) -> Self {
+        self.burst_factor = bf;
+        self.burst_type = bt;
+        self
+    }
+
+    pub fn with_idle(mut self, it: u64, ii: usize) -> Self {
+        self.idle_time = it;
+        self.idle_interval = ii;
+        self
+    }
+
+    /// Validate that JC sums to 1 (within rounding).
+    pub fn validate(&self) -> Result<(), String> {
+        let s = self.frac_compute + self.frac_memory + self.frac_mixed;
+        if (s - 1.0).abs() > 1e-6 {
+            return Err(format!("job composition sums to {s}, expected 1.0"));
+        }
+        if self.burst_factor == 0 {
+            return Err("burst_factor must be >= 1".into());
+        }
+        if self.weight_range.0 < 1.0 {
+            return Err("minimum job weight is 1 (Section 4.2)".into());
+        }
+        if self.ept_range.0 < 10.0 {
+            return Err("minimum EPT is 10 (Section 4.2)".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_are_valid() {
+        for s in [
+            WorkloadSpec::even(),
+            WorkloadSpec::memory_skewed(),
+            WorkloadSpec::compute_skewed(),
+            WorkloadSpec::homogeneous_memory(),
+            WorkloadSpec::homogeneous_compute(),
+        ] {
+            s.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn invalid_composition_rejected() {
+        let mut s = WorkloadSpec::default();
+        s.frac_compute = 0.9;
+        assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn invalid_floors_rejected() {
+        let mut s = WorkloadSpec::default();
+        s.weight_range = (0.5, 10.0);
+        assert!(s.validate().is_err());
+        let mut s = WorkloadSpec::default();
+        s.ept_range = (1.0, 10.0);
+        assert!(s.validate().is_err());
+    }
+}

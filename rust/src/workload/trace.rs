@@ -1,0 +1,167 @@
+//! Arrival traces: the serialized form of a generated workload, plus a
+//! text round-trip format so experiments can be archived and replayed.
+
+use crate::core::{Job, JobNature};
+
+/// One arrival event on the scheduler clock.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    pub tick: u64,
+    /// `None` events are idle ticks explicitly recorded (normally elided:
+    /// consumers iterate the clock themselves).
+    pub job: Option<Job>,
+}
+
+/// A complete arrival trace for a fixed machine count.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Trace {
+    events: Vec<TraceEvent>,
+    machines: usize,
+}
+
+impl Trace {
+    pub fn new(events: Vec<TraceEvent>, machines: usize) -> Self {
+        debug_assert!(events.windows(2).all(|w| w[0].tick <= w[1].tick));
+        Trace { events, machines }
+    }
+
+    pub fn events(&self) -> &[TraceEvent] {
+        &self.events
+    }
+
+    pub fn machines(&self) -> usize {
+        self.machines
+    }
+
+    pub fn n_jobs(&self) -> usize {
+        self.events.iter().filter(|e| e.job.is_some()).count()
+    }
+
+    pub fn jobs(&self) -> impl Iterator<Item = &Job> {
+        self.events.iter().filter_map(|e| e.job.as_ref())
+    }
+
+    /// Last arrival tick (0 for an empty trace).
+    pub fn horizon(&self) -> u64 {
+        self.events.last().map_or(0, |e| e.tick)
+    }
+
+    /// Serialize to a line-oriented text format:
+    /// `tick id weight nature actual_factor ept0 ept1 ...`
+    pub fn to_text(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!("# stannic-trace v1 machines={}\n", self.machines));
+        for e in &self.events {
+            if let Some(j) = &e.job {
+                s.push_str(&format!(
+                    "{} {} {} {} {}",
+                    e.tick,
+                    j.id,
+                    j.weight,
+                    match j.nature {
+                        JobNature::Compute => "C",
+                        JobNature::Memory => "M",
+                        JobNature::Mixed => "X",
+                    },
+                    j.actual_factor,
+                ));
+                for v in &j.ept {
+                    s.push_str(&format!(" {v}"));
+                }
+                s.push('\n');
+            }
+        }
+        s
+    }
+
+    /// Parse the text format produced by [`Trace::to_text`].
+    pub fn from_text(text: &str) -> Result<Trace, String> {
+        let mut lines = text.lines();
+        let header = lines.next().ok_or("empty trace")?;
+        let machines: usize = header
+            .split("machines=")
+            .nth(1)
+            .ok_or("missing machines= in header")?
+            .trim()
+            .parse()
+            .map_err(|e| format!("bad machine count: {e}"))?;
+        let mut events = Vec::new();
+        for (ln, line) in lines.enumerate() {
+            if line.trim().is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut it = line.split_whitespace();
+            let mut next = |what: &str| {
+                it.next()
+                    .ok_or_else(|| format!("line {}: missing {what}", ln + 2))
+            };
+            let tick: u64 = next("tick")?.parse().map_err(|e| format!("tick: {e}"))?;
+            let id: u64 = next("id")?.parse().map_err(|e| format!("id: {e}"))?;
+            let weight: f32 = next("weight")?.parse().map_err(|e| format!("weight: {e}"))?;
+            let nature = match next("nature")? {
+                "C" => JobNature::Compute,
+                "M" => JobNature::Memory,
+                "X" => JobNature::Mixed,
+                other => return Err(format!("line {}: bad nature {other}", ln + 2)),
+            };
+            let af: f32 = next("factor")?.parse().map_err(|e| format!("factor: {e}"))?;
+            let ept: Vec<f32> = it
+                .map(|v| v.parse().map_err(|e| format!("ept: {e}")))
+                .collect::<Result<_, _>>()?;
+            if ept.len() != machines {
+                return Err(format!(
+                    "line {}: {} EPTs for {} machines",
+                    ln + 2,
+                    ept.len(),
+                    machines
+                ));
+            }
+            events.push(TraceEvent {
+                tick,
+                job: Some(
+                    Job::new(id, weight, ept, nature)
+                        .with_arrival(tick)
+                        .with_actual_factor(af),
+                ),
+            });
+        }
+        Ok(Trace::new(events, machines))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::MachinePark;
+    use crate::workload::{generate_trace, WorkloadSpec};
+
+    #[test]
+    fn text_round_trip() {
+        let park = MachinePark::paper_m1_m5();
+        let t = generate_trace(&WorkloadSpec::default(), &park, 50, 99);
+        let text = t.to_text();
+        let back = Trace::from_text(&text).unwrap();
+        assert_eq!(back.n_jobs(), 50);
+        assert_eq!(back.machines(), 5);
+        for (a, b) in t.jobs().zip(back.jobs()) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.weight, b.weight);
+            assert_eq!(a.nature, b.nature);
+            assert_eq!(a.ept, b.ept);
+        }
+    }
+
+    #[test]
+    fn from_text_rejects_malformed() {
+        assert!(Trace::from_text("").is_err());
+        assert!(Trace::from_text("# stannic-trace v1 machines=2\n1 1 5 C 1.0 10\n").is_err());
+        assert!(Trace::from_text("# stannic-trace v1 machines=1\n1 1 5 Q 1.0 10\n").is_err());
+    }
+
+    #[test]
+    fn horizon_is_last_tick() {
+        let park = MachinePark::paper_m1_m5();
+        let t = generate_trace(&WorkloadSpec::default(), &park, 20, 4);
+        assert_eq!(t.horizon(), t.events().last().unwrap().tick);
+    }
+}

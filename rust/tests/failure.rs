@@ -1,0 +1,171 @@
+//! Failure injection & edge-case integration tests: saturation/stall
+//! recovery, malformed inputs, missing artifacts, pathological workloads.
+
+use stannic::baselines::{WsGreedy, WsRoundRobin};
+use stannic::cluster::{Cluster, ClusterConfig, SosCluster};
+use stannic::config::{EngineKind, RunConfig};
+use stannic::coordinator::{build_engine, serve, ServeOpts};
+use stannic::core::{Job, JobNature, MachinePark};
+use stannic::jsonio::Json;
+use stannic::quant::Precision;
+use stannic::runtime::ArtifactRegistry;
+use stannic::scheduler::SosEngine;
+use stannic::workload::{generate_trace, BurstType, Trace, TraceEvent, WorkloadSpec};
+
+#[test]
+fn stall_and_recover_under_saturation() {
+    // Capacity 1x1: the second job must stall, then assign after the
+    // first releases; nothing is lost.
+    let mut e = SosEngine::new(1, 1, 1.0, Precision::Int8);
+    e.submit(Job::new(1, 10.0, vec![10.0], JobNature::Mixed));
+    e.submit(Job::new(2, 10.0, vec![10.0], JobNature::Mixed));
+    let mut stalls = 0;
+    let mut assigned = vec![];
+    let mut released = vec![];
+    for _ in 0..100 {
+        let out = e.tick(None);
+        stalls += out.stalled as usize;
+        if let Some(a) = out.assigned {
+            assigned.push(a.job);
+        }
+        released.extend(out.released.iter().map(|r| r.0));
+        if e.is_idle() {
+            break;
+        }
+    }
+    assert!(stalls > 0, "saturation must stall");
+    assert_eq!(assigned, vec![1, 2]);
+    assert_eq!(released, vec![1, 2]);
+    assert!(e.is_idle());
+}
+
+#[test]
+fn coordinator_survives_saturating_burst() {
+    let park = MachinePark::paper_m1_m5();
+    // 100 jobs all at tick 1 with capacity 5x3=15 — heavy stalling.
+    let mut events = Vec::new();
+    for id in 1..=100u64 {
+        events.push(TraceEvent {
+            tick: 1,
+            job: Some(
+                Job::new(id, 5.0, vec![20.0, 30.0, 25.0, 15.0, 40.0], JobNature::Mixed)
+                    .with_arrival(1),
+            ),
+        });
+    }
+    let trace = Trace::new(events, 5);
+    let engine = build_engine(EngineKind::Native, 5, 3, 0.5, Precision::Int8).unwrap();
+    let r = serve(engine, &trace, &ServeOpts::default()).unwrap();
+    assert_eq!(r.completions.len(), 100);
+    assert!(r.stalls > 0);
+    let _ = park;
+}
+
+#[test]
+fn trace_parser_rejects_corruption() {
+    let park = MachinePark::paper_m1_m5();
+    let good = generate_trace(&WorkloadSpec::default(), &park, 10, 1).to_text();
+    // truncate mid-line
+    let bad = &good[..good.len() - 5];
+    // last line now has too few EPTs
+    assert!(Trace::from_text(bad).is_err() || Trace::from_text(bad).unwrap().n_jobs() < 10);
+    // header corruption
+    assert!(Trace::from_text(&good.replace("machines=5", "machines=abc")).is_err());
+    // negative/garbage fields
+    assert!(Trace::from_text("# stannic-trace v1 machines=1\nx 1 5 C 1.0 10\n").is_err());
+}
+
+#[test]
+fn artifact_registry_missing_and_corrupt() {
+    assert!(ArtifactRegistry::open("/definitely/not/here").is_err());
+    let dir = std::env::temp_dir().join("stannic_corrupt_artifacts");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.json"), "{ not json").unwrap();
+    assert!(ArtifactRegistry::open(&dir).is_err());
+    std::fs::write(dir.join("manifest.json"), r#"{"configs": []}"#).unwrap();
+    assert!(ArtifactRegistry::open(&dir).is_err(), "empty config list");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn xla_engine_rejects_unknown_config() {
+    let Ok(reg) = ArtifactRegistry::open_default() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    use stannic::runtime::{CostImpl, XlaCostEngine};
+    // 7x13 is not an emitted configuration
+    assert!(XlaCostEngine::compile(&reg, CostImpl::Stannic, 7, 13).is_err());
+}
+
+#[test]
+fn config_round_trip_rejects_bad_values() {
+    let j = Json::parse(r#"{"precision": "INT7"}"#).unwrap();
+    assert!(RunConfig::from_json(&j).is_err());
+    let j = Json::parse(r#"{"engine": "quantum"}"#).unwrap();
+    assert!(RunConfig::from_json(&j).is_err());
+    let j = Json::parse(r#"{"workload": {"frac_compute": 0.9}}"#).unwrap();
+    assert!(RunConfig::from_json(&j).is_err(), "composition must sum to 1");
+}
+
+#[test]
+fn work_stealing_handles_empty_and_single_queues() {
+    // Degenerate park: one machine — stealing must be a no-op, jobs flow.
+    let park = MachinePark::homogeneous_cpu(1);
+    let trace = generate_trace(
+        &WorkloadSpec {
+            frac_compute: 1.0,
+            frac_memory: 0.0,
+            frac_mixed: 0.0,
+            ..WorkloadSpec::default()
+        },
+        &park,
+        30,
+        3,
+    );
+    for summary in [
+        Cluster::new(park.clone(), ClusterConfig::default())
+            .run(&mut WsRoundRobin::new(), &trace),
+        Cluster::new(park.clone(), ClusterConfig::default()).run(&mut WsGreedy::new(), &trace),
+        Cluster::new(park.clone(), ClusterConfig::default())
+            .run(&mut SosCluster::new(1, 10, 0.5, Precision::Int8), &trace),
+    ] {
+        assert_eq!(summary.completed, 30, "{}", summary.scheduler);
+    }
+}
+
+#[test]
+fn extreme_workloads_drain() {
+    let park = MachinePark::paper_m1_m5();
+    // max-burst uniform, no idle
+    let spec = WorkloadSpec::default()
+        .with_burst(6, BurstType::Uniform)
+        .with_idle(0, 0);
+    let trace = generate_trace(&spec, &park, 500, 77);
+    let engine = build_engine(EngineKind::Native, 5, 10, 0.5, Precision::Int8).unwrap();
+    let r = serve(engine, &trace, &ServeOpts::default()).unwrap();
+    assert_eq!(r.completions.len(), 500);
+
+    // pathological weights/EPTs at the representable extremes
+    let mut e = SosEngine::new(2, 4, 0.5, Precision::Int8);
+    e.submit(Job::new(1, 255.0, vec![10.0, 255.0], JobNature::Compute));
+    e.submit(Job::new(2, 1.0, vec![255.0, 10.0], JobNature::Memory));
+    for _ in 0..2000 {
+        e.tick(None);
+        if e.is_idle() {
+            break;
+        }
+    }
+    assert!(e.is_idle());
+}
+
+#[test]
+fn alpha_one_and_tiny_alpha_both_terminate() {
+    let park = MachinePark::paper_m1_m5();
+    let trace = generate_trace(&WorkloadSpec::default(), &park, 100, 13);
+    for alpha in [1.0f32, 0.01] {
+        let engine = build_engine(EngineKind::Native, 5, 10, alpha, Precision::Int8).unwrap();
+        let r = serve(engine, &trace, &ServeOpts::default()).unwrap();
+        assert_eq!(r.completions.len(), 100, "alpha={alpha}");
+    }
+}

@@ -1,0 +1,144 @@
+//! Cross-implementation schedule parity: every SOS implementation in the
+//! repo — golden engine, naive SOSC, lane-vectorised SIMD, cycle-accurate
+//! Hercules and Stannic simulators, and the XLA-offloaded engine — must
+//! produce identical schedules (Section 8: "the resulting schedules from
+//! both Hercules and Stannic are identical"; we extend the requirement to
+//! the software and accelerator paths).
+
+use stannic::baselines::{SimdSos, SoscEngine};
+use stannic::core::MachinePark;
+use stannic::quant::Precision;
+use stannic::runtime::{ArtifactRegistry, CostImpl, XlaSosEngine};
+use stannic::scheduler::{SosEngine, TickOutcome};
+use stannic::sim::{hercules::HerculesSim, stannic::StannicSim, ArchSim};
+use stannic::workload::{generate_trace, Trace, WorkloadSpec};
+
+/// Uniform driver: submit arrivals, tick, compare outcomes.
+fn key(out: &TickOutcome) -> (Vec<(u64, usize)>, Option<(u64, usize, usize)>) {
+    (
+        out.released.clone(),
+        out.assigned.as_ref().map(|a| (a.job, a.machine, a.position)),
+    )
+}
+
+fn drive_all(trace: &Trace, m: usize, d: usize, alpha: f32) {
+    let p = Precision::Int8;
+    let mut golden = SosEngine::new(m, d, alpha, p);
+    let mut sosc = SoscEngine::new(m, d, alpha, p);
+    let mut simd = SimdSos::new(m, d, alpha, p);
+    let mut stannic = StannicSim::new(m, d, alpha, p);
+    let mut hercules = HerculesSim::new(m, d, alpha, p);
+
+    let mut events = trace.events().iter().peekable();
+    for t in 1..=5_000_000u64 {
+        while events.peek().is_some_and(|e| e.tick <= t) {
+            let j = events.next().unwrap().job.clone().unwrap();
+            golden.submit(j.clone());
+            sosc.submit(j.clone());
+            simd.submit(j.clone());
+            ArchSim::submit(&mut stannic, j.clone());
+            ArchSim::submit(&mut hercules, j);
+        }
+        let g = key(&golden.tick(None));
+        assert_eq!(g, key(&sosc.tick(None)), "sosc tick {t}");
+        assert_eq!(g, key(&simd.tick(None)), "simd tick {t}");
+        assert_eq!(g, key(&ArchSim::tick(&mut stannic, None)), "stannic tick {t}");
+        assert_eq!(g, key(&ArchSim::tick(&mut hercules, None)), "hercules tick {t}");
+        if golden.is_idle() && events.peek().is_none() {
+            return;
+        }
+    }
+    panic!("did not drain");
+}
+
+#[test]
+fn five_way_parity_paper_config() {
+    let park = MachinePark::paper_m1_m5();
+    for seed in [1u64, 7, 99] {
+        let trace = generate_trace(&WorkloadSpec::default(), &park, 250, seed);
+        drive_all(&trace, 5, 10, 0.5);
+    }
+}
+
+#[test]
+fn five_way_parity_deep_and_wide() {
+    let park = MachinePark::cycled(12);
+    let trace = generate_trace(&WorkloadSpec::memory_skewed(), &park, 300, 4);
+    drive_all(&trace, 12, 20, 0.5);
+}
+
+#[test]
+fn five_way_parity_alpha_extremes() {
+    let park = MachinePark::paper_m1_m5();
+    let trace = generate_trace(&WorkloadSpec::compute_skewed(), &park, 200, 11);
+    drive_all(&trace, 5, 10, 1.0); // alpha = 1: release only at full VW
+    let trace = generate_trace(&WorkloadSpec::default(), &park, 200, 12);
+    drive_all(&trace, 5, 10, 0.1); // near-immediate release
+}
+
+#[test]
+fn xla_parity_when_artifacts_present() {
+    let Ok(reg) = ArtifactRegistry::open_default() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let park = MachinePark::paper_m1_m5();
+    let trace = generate_trace(&WorkloadSpec::default(), &park, 80, 33);
+    let mut golden = SosEngine::new(5, 10, 0.5, Precision::Int8);
+    let mut xla =
+        XlaSosEngine::new(&reg, CostImpl::Stannic, 5, 10, 0.5, Precision::Int8).unwrap();
+    let mut events = trace.events().iter().peekable();
+    for t in 1..=1_000_000u64 {
+        while events.peek().is_some_and(|e| e.tick <= t) {
+            let j = events.next().unwrap().job.clone().unwrap();
+            golden.submit(j.clone());
+            xla.submit(j);
+        }
+        let g = key(&golden.tick(None));
+        let x = key(&xla.tick(None).unwrap());
+        assert_eq!(g, x, "xla tick {t}");
+        if golden.is_idle() && xla.is_idle() && events.peek().is_none() {
+            return;
+        }
+    }
+    panic!("did not drain");
+}
+
+#[test]
+fn all_artifact_variants_agree() {
+    // The dense (Hercules-analog) and fused (all-rows) kernel artifacts
+    // must agree with the per-row systolic one end-to-end.
+    let Ok(reg) = ArtifactRegistry::open_default() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let park = MachinePark::paper_m1_m5();
+    let trace = generate_trace(&WorkloadSpec::default(), &park, 60, 55);
+    let mut engines: Vec<XlaSosEngine> = [
+        CostImpl::Stannic,
+        CostImpl::StannicFused,
+        CostImpl::Hercules,
+    ]
+    .iter()
+    .map(|&imp| XlaSosEngine::new(&reg, imp, 5, 10, 0.5, Precision::Int8).unwrap())
+    .collect();
+    let mut events = trace.events().iter().peekable();
+    for t in 1..=1_000_000u64 {
+        while events.peek().is_some_and(|e| e.tick <= t) {
+            let j = events.next().unwrap().job.clone().unwrap();
+            for e in engines.iter_mut() {
+                e.submit(j.clone());
+            }
+        }
+        let outs: Vec<_> = engines
+            .iter_mut()
+            .map(|e| key(&e.tick(None).unwrap()))
+            .collect();
+        assert_eq!(outs[0], outs[1], "fused divergence at tick {t}");
+        assert_eq!(outs[0], outs[2], "hercules divergence at tick {t}");
+        if engines.iter().all(|e| e.is_idle()) && events.peek().is_none() {
+            return;
+        }
+    }
+    panic!("did not drain");
+}

@@ -1,0 +1,196 @@
+//! Property-based invariants (via the in-house `testing` substrate; see
+//! `STANNIC_PROP_SEED` for failure replay):
+//!
+//! * Definition 4 proper ordering survives arbitrary operation sequences
+//! * conservation: every submitted job is assigned exactly once and
+//!   released exactly once
+//! * cost positivity/monotonicity properties of Eq. (4)/(5)
+//! * stannic memoized sums == recomputed sums under random drive
+//! * workload generator determinism & composition bounds
+
+use stannic::core::{Job, JobNature, MachinePark};
+use stannic::quant::Precision;
+use stannic::scheduler::{cost_of, SosEngine};
+use stannic::sim::{stannic::StannicSim, ArchSim};
+use stannic::testing::{check, property};
+use stannic::workload::{generate_trace, Rng, WorkloadSpec};
+
+fn random_job(rng: &mut Rng, id: u64, machines: usize) -> Job {
+    let w = rng.uniform(1.0, 255.0).round();
+    let ept = (0..machines)
+        .map(|_| rng.uniform(10.0, 255.0).round())
+        .collect();
+    Job::new(id, w, ept, JobNature::Mixed)
+}
+
+#[test]
+fn prop_ordering_invariant_under_random_drive() {
+    property("proper ordering", 120, |rng| {
+        let m = rng.range(1, 6);
+        let d = rng.range(2, 12);
+        let alpha = rng.uniform(0.1, 1.0);
+        let mut engine = SosEngine::new(m, d, alpha, Precision::Int8);
+        let mut next_id = 1u64;
+        for _ in 0..rng.range(20, 120) {
+            let arrival = rng.chance(0.4).then(|| {
+                let j = random_job(rng, next_id, m);
+                next_id += 1;
+                j
+            });
+            engine.tick(arrival.as_ref());
+            for vs in engine.schedules() {
+                check(vs.is_properly_ordered(), "WSPT non-increasing")?;
+                check(vs.len() <= d, "depth bound")?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_conservation_every_job_assigned_and_released_once() {
+    property("conservation", 60, |rng| {
+        let m = rng.range(1, 5);
+        let d = rng.range(2, 8);
+        let mut engine = SosEngine::new(m, d, 0.5, Precision::Int8);
+        let n_jobs = rng.range(5, 60);
+        for id in 1..=n_jobs as u64 {
+            engine.submit(random_job(rng, id, m));
+        }
+        let mut assigned = Vec::new();
+        let mut released = Vec::new();
+        for _ in 0..2_000_000u64 {
+            let out = engine.tick(None);
+            if let Some(a) = out.assigned {
+                assigned.push(a.job);
+            }
+            released.extend(out.released.iter().map(|(id, _)| *id));
+            if engine.is_idle() {
+                break;
+            }
+        }
+        check(engine.is_idle(), "engine drained")?;
+        assigned.sort_unstable();
+        released.sort_unstable();
+        let want: Vec<u64> = (1..=n_jobs as u64).collect();
+        check(assigned == want, "each job assigned exactly once")?;
+        check(released == want, "each job released exactly once")
+    });
+}
+
+#[test]
+fn prop_cost_is_positive_and_scales_with_load() {
+    property("cost positivity/monotonicity", 100, |rng| {
+        let d = rng.range(3, 12);
+        let mut engine = SosEngine::new(1, d, 1.0, Precision::Fp32);
+        // fill the schedule progressively; the cost of a fixed probe job
+        // must be strictly non-decreasing as incumbents accumulate
+        let probe_w = rng.uniform(1.0, 255.0).round();
+        let probe_e = rng.uniform(10.0, 255.0).round();
+        let probe_t = probe_w / probe_e;
+        let mut last_cost = 0.0f32;
+        for id in 1..d as u64 {
+            let c = cost_of(engine.schedule(0), probe_w, probe_e, probe_t)
+                .expect("not full");
+            check(c.total() > 0.0, "positive cost")?;
+            check(
+                c.total() >= last_cost,
+                "cost non-decreasing with queued work",
+            )?;
+            last_cost = c.total();
+            engine.submit(random_job(rng, id, 1));
+            engine.tick(None);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_stannic_memoized_sums_exact() {
+    // Random drive of the systolic simulator, cross-checking its
+    // memoized threshold sums against the golden engine's rescans.
+    property("memoized sums", 60, |rng| {
+        let m = rng.range(1, 4);
+        let d = rng.range(2, 10);
+        let mut golden = SosEngine::new(m, d, 0.5, Precision::Int8);
+        let mut sim = StannicSim::new(m, d, 0.5, Precision::Int8);
+        let mut next_id = 1u64;
+        for _ in 0..rng.range(30, 150) {
+            let arrival = rng.chance(0.4).then(|| {
+                let j = random_job(rng, next_id, m);
+                next_id += 1;
+                j
+            });
+            if let Some(j) = &arrival {
+                golden.submit(j.clone());
+                ArchSim::submit(&mut sim, j.clone());
+            }
+            golden.tick(None);
+            ArchSim::tick(&mut sim, None);
+            for mac in 0..m {
+                let vs = golden.schedule(mac);
+                let arr = &sim.smmu(mac).array;
+                check(arr.len() == vs.len(), "occupancy parity")?;
+                check(arr.properly_ordered(), "Definition 4")?;
+                // verify memoized prefix/suffix at every fill level
+                let slots = vs.slots();
+                let mut prefix = 0.0f32;
+                for (k, slot) in slots.iter().enumerate() {
+                    prefix += slot.rem_hi();
+                    let pe = &arr.pes()[k];
+                    check(
+                        (pe.sum_hi - prefix).abs() < 1e-2,
+                        "sum_hi memoization exact",
+                    )?;
+                }
+                let mut suffix = 0.0f32;
+                for (k, slot) in slots.iter().enumerate().rev() {
+                    suffix += slot.rem_lo();
+                    let pe = &arr.pes()[k];
+                    check(
+                        (pe.sum_lo - suffix).abs() < 1e-2,
+                        "sum_lo memoization exact",
+                    )?;
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_workload_generator_bounds() {
+    property("workload bounds", 40, |rng| {
+        let park = MachinePark::cycled(rng.range(1, 20));
+        let spec = WorkloadSpec::default();
+        let n = rng.range(1, 120);
+        let seed = rng.next_u64();
+        let a = generate_trace(&spec, &park, n, seed);
+        let b = generate_trace(&spec, &park, n, seed);
+        check(a == b, "deterministic per seed")?;
+        check(a.n_jobs() == n, "exact job count")?;
+        for j in a.jobs() {
+            check(j.fanout() == park.len(), "EPT fanout")?;
+            check(j.weight >= 1.0, "weight floor")?;
+            check(j.ept.iter().all(|&e| (10.0..=255.0).contains(&e)), "EPT range")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_quantization_idempotent() {
+    property("quantization idempotence", 80, |rng| {
+        use stannic::quant::Precision;
+        let w = rng.uniform(1.0, 300.0);
+        let e = rng.uniform(10.0, 300.0);
+        for p in Precision::ALL {
+            let (wq, eq, tq) = p.q_job(w, e);
+            // quantizing a quantized value is a fixed point
+            check(p.q_weight(wq) == wq, "weight idempotent")?;
+            check(p.q_ept(eq) == eq, "ept idempotent")?;
+            check(p.q_wspt(tq) == tq, "wspt idempotent")?;
+        }
+        Ok(())
+    });
+}
