@@ -1,0 +1,30 @@
+#!/usr/bin/env bash
+# Repo CI: tier-1 verify plus the runnable smoke paths.
+#   tier-1 : cargo build --release && cargo test -q
+#   smoke  : quickstart example + a reduced parallel scenario sweep
+set -euo pipefail
+cd "$(dirname "$0")"
+
+echo "== tier-1: build (release) =="
+cargo build --release
+
+echo "== tier-1: test =="
+cargo test -q
+
+echo "== smoke: quickstart example =="
+cargo run --release --example quickstart
+
+echo "== cross-impl: golden schedule vs independent Python emulation =="
+if python3 -c "import numpy" 2>/dev/null; then
+  python3 tools/gen_golden.py
+else
+  echo "(skipped: python3/numpy unavailable)"
+fi
+
+echo "== smoke: parallel scenario sweep (reduced grid, determinism cross-check) =="
+cargo run --release -- sweep --quick --threads 1 > /tmp/stannic_sweep_1.txt
+cargo run --release -- sweep --quick --threads 8 > /tmp/stannic_sweep_8.txt
+diff /tmp/stannic_sweep_1.txt /tmp/stannic_sweep_8.txt
+echo "sweep output identical for 1 and 8 worker threads"
+
+echo "CI OK"

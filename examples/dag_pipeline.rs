@@ -7,11 +7,12 @@
 //!
 //! Run: `make artifacts && cargo run --release --example dag_pipeline`
 
+use stannic::error::Result;
 use stannic::prelude::*;
 use stannic::runtime::{ArtifactRegistry, BatchedCostEngine, XlaScheduleState};
 use stannic::workload::{generate_dag, DagSpec};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let park = MachinePark::paper_m1_m5();
 
     // 1. a layered task graph: ~25 layers x 6 nodes

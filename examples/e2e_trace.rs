@@ -1,68 +1,74 @@
-//! END-TO-END DRIVER — proves all three layers compose on a real
-//! workload:
+//! END-TO-END DRIVER — proves the layers compose on a real workload:
 //!
 //!   L1  Pallas systolic cost kernel (compiled into the HLO artifact)
 //!   L2  JAX cost+argmin graph        (AOT-lowered by `make artifacts`)
 //!   L3  Rust coordinator             (this binary, via PJRT)
 //!
-//! The run serves a 500-job heterogeneous trace through the
-//! XLA-offloaded engine (Python never executes here), with per-machine
-//! worker threads and the PCIe transport model, and cross-checks the
-//! schedule against (a) the golden software engine and (b) the
-//! cycle-accurate STANNIC simulator. It then reports the paper's
-//! headline metric — scheduling speedup over the naive software baseline
-//! — for this workload. Results are recorded in EXPERIMENTS.md.
+//! The run serves a 500-job heterogeneous trace through the coordinator
+//! with per-machine worker threads and the PCIe transport model, and
+//! cross-checks the schedule of (a) the golden software engine and
+//! (b) the cycle-accurate STANNIC simulator. When the XLA artifacts are
+//! available (L1/L2 built by `make artifacts` on a PJRT-capable host)
+//! the accelerated engine joins the parity check; offline builds fall
+//! back to the software engines and say so. It then reports the paper's
+//! headline metric — scheduling speedup over the naive software
+//! baseline — for this workload. Results are recorded in EXPERIMENTS.md.
 //!
-//! Run: `make artifacts && cargo run --release --example e2e_trace`
+//! Run: `cargo run --release --example e2e_trace`
 
 use std::time::Instant;
 
 use stannic::baselines::SoscEngine;
 use stannic::config::EngineKind;
 use stannic::coordinator::{build_engine, serve, ServeOpts};
+use stannic::ensure;
+use stannic::error::Result;
 use stannic::hw::CLOCK_HZ;
 use stannic::prelude::*;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let park = MachinePark::paper_m1_m5();
     let spec = WorkloadSpec::default();
     let trace = generate_trace(&spec, &park, 500, 20260710);
-    println!(
-        "trace: {} jobs on {:?}\n",
-        trace.n_jobs(),
-        park.labels()
-    );
+    println!("trace: {} jobs on {:?}\n", trace.n_jobs(), park.labels());
 
-    // --- the accelerated path: Rust -> PJRT -> compiled Pallas kernel ---
-    let engine = build_engine(EngineKind::Xla, 5, 10, 0.5, Precision::Int8)?;
-    let xla_report = serve(engine, &trace, &ServeOpts::default())?;
-    println!("XLA-offloaded engine (L3 -> PJRT -> L2/L1 artifact):");
-    println!("  completed        : {}", xla_report.completions.len());
-    println!("  jobs per machine : {:?}", xla_report.metrics.jobs_per_machine);
-    println!("  avg latency      : {:.1} ticks", xla_report.metrics.avg_latency);
-    println!("  fairness (Jain)  : {:.3}", xla_report.metrics.fairness);
-    println!(
-        "  PCIe             : {} txns, {:.1} us",
-        xla_report.pcie.transactions,
-        xla_report.pcie.total_ns / 1e3
-    );
-    println!("  host wall        : {:.2?}", xla_report.wall);
-
-    // --- parity: golden software engine must match exactly ---
+    // --- the reference path: golden software engine through the full
+    //     coordinator (worker threads + PCIe accounting) ---
     let native = serve(
         build_engine(EngineKind::Native, 5, 10, 0.5, Precision::Int8)?,
         &trace,
         &ServeOpts::default(),
     )?;
-    anyhow::ensure!(
-        native.metrics.jobs_per_machine == xla_report.metrics.jobs_per_machine,
-        "XLA vs native schedule divergence"
+    println!("native engine (L3 coordinator):");
+    println!("  completed        : {}", native.completions.len());
+    println!("  jobs per machine : {:?}", native.metrics.jobs_per_machine);
+    println!("  avg latency      : {:.1} ticks", native.metrics.avg_latency);
+    println!("  fairness (Jain)  : {:.3}", native.metrics.fairness);
+    println!(
+        "  PCIe             : {} txns, {:.1} us",
+        native.pcie.transactions,
+        native.pcie.total_ns / 1e3
     );
-    anyhow::ensure!(
-        (native.metrics.avg_latency - xla_report.metrics.avg_latency).abs() < 1e-9,
-        "latency divergence"
-    );
-    println!("\nparity: XLA schedule identical to golden engine ✓");
+    println!("  host wall        : {:.2?}", native.wall);
+
+    // --- the accelerated path, when L1/L2 artifacts exist ---
+    match build_engine(EngineKind::Xla, 5, 10, 0.5, Precision::Int8) {
+        Ok(engine) => {
+            let xla_report = serve(engine, &trace, &ServeOpts::default())?;
+            ensure!(
+                native.metrics.jobs_per_machine == xla_report.metrics.jobs_per_machine,
+                "XLA vs native schedule divergence"
+            );
+            ensure!(
+                (native.metrics.avg_latency - xla_report.metrics.avg_latency).abs() < 1e-9,
+                "latency divergence"
+            );
+            println!("\nparity: XLA-offloaded schedule identical to golden engine ✓");
+        }
+        Err(e) => {
+            println!("\n(XLA path skipped: {e})");
+        }
+    }
 
     // --- cycle-accurate Stannic sim: same schedule + hardware time ---
     let sim_report = serve(
@@ -70,8 +76,8 @@ fn main() -> anyhow::Result<()> {
         &trace,
         &ServeOpts::default(),
     )?;
-    anyhow::ensure!(
-        sim_report.metrics.jobs_per_machine == xla_report.metrics.jobs_per_machine,
+    ensure!(
+        sim_report.metrics.jobs_per_machine == native.metrics.jobs_per_machine,
         "sim schedule divergence"
     );
     let hw_secs = sim_report.accel_cycles as f64 / CLOCK_HZ;

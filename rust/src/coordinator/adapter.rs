@@ -2,9 +2,8 @@
 //! implementation in the repo, so the coordinator (and the CLI) can swap
 //! engines with a flag.
 
-use anyhow::Result;
-
 use crate::baselines::{SimdSos, SoscEngine};
+use crate::error::Result;
 use crate::config::EngineKind;
 use crate::core::Job;
 use crate::quant::Precision;

@@ -34,9 +34,8 @@ impl Hasher for IdHasher {
 
 type JobMap = std::collections::HashMap<u64, Job, BuildHasherDefault<IdHasher>>;
 
-use anyhow::Result;
-
 use crate::core::{Job, MachineId};
+use crate::error::Result;
 use crate::metrics::{Histogram, MetricSet, ScheduleMetrics};
 use crate::workload::Trace;
 

@@ -1,0 +1,241 @@
+//! In-house error substrate (anyhow is unavailable offline): a
+//! context-chaining [`Error`] type, a crate-wide [`Result`] alias, the
+//! [`err!`](crate::err)/[`bail!`](crate::bail)/[`ensure!`](crate::ensure)
+//! macros, and the [`Ctx`] extension trait that adds `.ctx()` /
+//! `.with_ctx()` context chaining to `Result` and `Option`.
+//!
+//! Display semantics mirror what the rest of the crate relied on:
+//! `{e}` prints the outermost (most recently attached) message, `{e:#}`
+//! prints the whole chain outermost-first separated by `": "`, and
+//! `{e:?}` prints an indented `Caused by:` listing.
+
+use std::fmt;
+
+/// A message chain: `chain[0]` is the root cause; each later entry is a
+/// context attached while the error propagated upward.
+#[derive(Clone, PartialEq, Eq)]
+pub struct Error {
+    chain: Vec<String>,
+}
+
+/// Crate-wide result alias (the `E = Error` default keeps signatures
+/// using custom error types, e.g. `Result<T, String>`, valid).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// A fresh error with a single root-cause message.
+    pub fn msg(message: impl Into<String>) -> Self {
+        Error {
+            chain: vec![message.into()],
+        }
+    }
+
+    /// Attach a higher-level context message.
+    pub fn context(mut self, message: impl Into<String>) -> Self {
+        self.chain.push(message.into());
+        self
+    }
+
+    /// The innermost (first-created) message.
+    pub fn root_cause(&self) -> &str {
+        &self.chain[0]
+    }
+
+    /// The outermost (most recently attached) message.
+    pub fn outer(&self) -> &str {
+        self.chain.last().expect("chain is never empty")
+    }
+
+    /// Messages outermost-first, anyhow-`chain()` style.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().rev().map(String::as_str)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            for (i, m) in self.chain().enumerate() {
+                if i > 0 {
+                    f.write_str(": ")?;
+                }
+                f.write_str(m)?;
+            }
+            Ok(())
+        } else {
+            f.write_str(self.outer())
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.outer())?;
+        if self.chain.len() > 1 {
+            f.write_str("\n\nCaused by:")?;
+            for (i, m) in self.chain().skip(1).enumerate() {
+                write!(f, "\n    {i}: {m}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<String> for Error {
+    fn from(s: String) -> Self {
+        Error::msg(s)
+    }
+}
+
+impl From<&str> for Error {
+    fn from(s: &str) -> Self {
+        Error::msg(s)
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::msg(e.to_string())
+    }
+}
+
+impl From<std::fmt::Error> for Error {
+    fn from(e: std::fmt::Error) -> Self {
+        Error::msg(e.to_string())
+    }
+}
+
+/// Build an [`Error`] from a format string — the `anyhow!` analog.
+#[macro_export]
+macro_rules! err {
+    ($($arg:tt)*) => {
+        $crate::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::err!($($arg)*).into())
+    };
+}
+
+/// Return early with a formatted [`Error`] unless `$cond` holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+/// Context chaining for `Result` and `Option` — the `Context` analog.
+/// `.ctx("msg")` attaches an eager message; `.with_ctx(|| ...)` defers
+/// the formatting to the error path.
+pub trait Ctx<T> {
+    fn ctx<S: Into<String>>(self, message: S) -> Result<T>;
+    fn with_ctx<S: Into<String>, F: FnOnce() -> S>(self, message: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Ctx<T> for std::result::Result<T, E> {
+    fn ctx<S: Into<String>>(self, message: S) -> Result<T> {
+        self.map_err(|e| e.into().context(message))
+    }
+
+    fn with_ctx<S: Into<String>, F: FnOnce() -> S>(self, message: F) -> Result<T> {
+        self.map_err(|e| e.into().context(message()))
+    }
+}
+
+impl<T> Ctx<T> for Option<T> {
+    fn ctx<S: Into<String>>(self, message: S) -> Result<T> {
+        self.ok_or_else(|| Error::msg(message))
+    }
+
+    fn with_ctx<S: Into<String>, F: FnOnce() -> S>(self, message: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(message()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_missing() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "no such artifact")
+    }
+
+    #[test]
+    fn context_chaining_orders_outermost_first() {
+        let e = Error::msg("root").context("middle").context("outer");
+        assert_eq!(e.root_cause(), "root");
+        assert_eq!(e.outer(), "outer");
+        assert_eq!(e.chain().collect::<Vec<_>>(), vec!["outer", "middle", "root"]);
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: middle: root");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("Caused by:"), "{dbg}");
+        assert!(dbg.contains("0: middle"), "{dbg}");
+        assert!(dbg.contains("1: root"), "{dbg}");
+    }
+
+    #[test]
+    fn bail_formats_arguments() {
+        fn run(v: usize) -> Result<()> {
+            ensure!(v < 10, "value {v} out of range (max {})", 9);
+            if v == 7 {
+                bail!("seven is right out");
+            }
+            Ok(())
+        }
+        assert!(run(3).is_ok());
+        let e = run(12).unwrap_err();
+        assert_eq!(format!("{e}"), "value 12 out of range (max 9)");
+        let e = run(7).unwrap_err();
+        assert_eq!(format!("{e}"), "seven is right out");
+    }
+
+    #[test]
+    fn err_macro_builds_without_returning() {
+        let e = err!("cell {} failed on machine {}", 4, 2);
+        assert_eq!(e.root_cause(), "cell 4 failed on machine 2");
+    }
+
+    #[test]
+    fn from_io_error_preserves_message() {
+        fn read() -> Result<String> {
+            Err::<String, std::io::Error>(io_missing())?;
+            unreachable!()
+        }
+        let e = read().unwrap_err();
+        assert!(format!("{e}").contains("no such artifact"));
+    }
+
+    #[test]
+    fn ctx_on_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_missing());
+        let e = r.ctx("reading manifest").unwrap_err();
+        assert_eq!(format!("{e}"), "reading manifest");
+        assert_eq!(format!("{e:#}"), "reading manifest: no such artifact");
+
+        let o: Option<u32> = None;
+        let e = o.with_ctx(|| format!("slot {} empty", 3)).unwrap_err();
+        assert_eq!(format!("{e}"), "slot 3 empty");
+
+        let some: Option<u32> = Some(5);
+        assert_eq!(some.ctx("unused").unwrap(), 5);
+    }
+
+    #[test]
+    fn string_errors_convert() {
+        fn parse() -> Result<()> {
+            Err::<(), String>("bad flag".to_string())?;
+            Ok(())
+        }
+        assert_eq!(format!("{}", parse().unwrap_err()), "bad flag");
+    }
+}

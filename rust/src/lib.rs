@@ -31,8 +31,15 @@
 //! * [`report`] — renders every table and figure of the paper's
 //!   evaluation section from freshly-run experiments.
 //!
-//! Offline-environment substrates (clap/criterion/serde/proptest are not
-//! available here): [`cli`], [`bench`], [`jsonio`], [`testing`].
+//! * [`sweep`] — the parallel scenario-sweep subsystem: a shared-queue
+//!   multi-threaded runner that fans a grid of workload × machine-count
+//!   × alpha × precision cells across every software/simulator engine
+//!   and aggregates per-cell latency/utilization metrics
+//!   deterministically (results are independent of thread count).
+//!
+//! Offline-environment substrates (clap/criterion/serde/proptest/anyhow
+//! are not available here): [`cli`], [`bench`], [`error`], [`jsonio`],
+//! [`testing`].
 //!
 //! ## Quickstart
 //!
@@ -56,6 +63,7 @@ pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod core;
+pub mod error;
 pub mod hw;
 pub mod jsonio;
 pub mod metrics;
@@ -64,6 +72,7 @@ pub mod report;
 pub mod runtime;
 pub mod scheduler;
 pub mod sim;
+pub mod sweep;
 pub mod testing;
 pub mod workload;
 

@@ -2,17 +2,18 @@
 //! regenerate every figure of the paper, verify cross-implementation
 //! parity, and inspect hardware-model estimates.
 
-use anyhow::{anyhow, bail, Result};
-
 use stannic::cli::{usage, Args, FlagSpec};
 use stannic::config::{EngineKind, RunConfig};
 use stannic::coordinator::{build_engine, serve, ServeOpts};
 use stannic::core::MachinePark;
+use stannic::error::{Error, Result};
 use stannic::quant::Precision;
 use stannic::report::{self, Effort};
 use stannic::scheduler::SosEngine;
 use stannic::sim::{hercules::HerculesSim, stannic::StannicSim, lockstep_verify};
+use stannic::sweep::{run_sweep, SweepConfig, SweepEngine};
 use stannic::workload::{generate_trace, Trace, WorkloadSpec};
+use stannic::{bail, err};
 
 fn flag_specs() -> Vec<FlagSpec> {
     vec![
@@ -26,6 +27,8 @@ fn flag_specs() -> Vec<FlagSpec> {
         FlagSpec { name: "workload", help: "even|memory|compute|homogeneous (default even)", takes_value: true },
         FlagSpec { name: "trace", help: "replay a trace file instead of generating", takes_value: true },
         FlagSpec { name: "save-trace", help: "write the generated trace to a file", takes_value: true },
+        FlagSpec { name: "threads", help: "sweep worker threads (default: one per core)", takes_value: true },
+        FlagSpec { name: "engines", help: "sweep engine list, comma-separated or 'all'", takes_value: true },
         FlagSpec { name: "quick", help: "reduced-effort runs for smoke testing", takes_value: false },
         FlagSpec { name: "json", help: "emit machine-readable JSON where supported", takes_value: false },
     ]
@@ -39,6 +42,7 @@ fn commands() -> Vec<(&'static str, &'static str)> {
         ("hw", "print resource/routing/power estimates for a configuration"),
         ("gen", "generate and print (or save) a workload trace"),
         ("stats", "summarize a workload trace (composition, bursts, EPT spread)"),
+        ("sweep", "run the parallel multi-engine scenario sweep"),
     ]
 }
 
@@ -65,12 +69,12 @@ fn parse_workload(name: &str) -> Result<WorkloadSpec> {
 
 fn config_from(args: &Args) -> Result<RunConfig> {
     let mut cfg = RunConfig::default();
-    cfg.machines = args.usize_flag("machines", cfg.machines).map_err(|e| anyhow!(e))?;
-    cfg.depth = args.usize_flag("depth", cfg.depth).map_err(|e| anyhow!(e))?;
-    cfg.alpha = args.f32_flag("alpha", cfg.alpha).map_err(|e| anyhow!(e))?;
-    cfg.jobs = args.usize_flag("jobs", cfg.jobs).map_err(|e| anyhow!(e))?;
-    cfg.seed = args.u64_flag("seed", cfg.seed).map_err(|e| anyhow!(e))?;
-    cfg.engine = EngineKind::parse(args.str_flag("engine", "native")).map_err(|e| anyhow!(e))?;
+    cfg.machines = args.usize_flag("machines", cfg.machines).map_err(Error::from)?;
+    cfg.depth = args.usize_flag("depth", cfg.depth).map_err(Error::from)?;
+    cfg.alpha = args.f32_flag("alpha", cfg.alpha).map_err(Error::from)?;
+    cfg.jobs = args.usize_flag("jobs", cfg.jobs).map_err(Error::from)?;
+    cfg.seed = args.u64_flag("seed", cfg.seed).map_err(Error::from)?;
+    cfg.engine = EngineKind::parse(args.str_flag("engine", "native")).map_err(Error::from)?;
     cfg.precision = parse_precision(args.str_flag("precision", "INT8"))?;
     cfg.workload = parse_workload(args.str_flag("workload", "even"))?;
     Ok(cfg)
@@ -79,7 +83,7 @@ fn config_from(args: &Args) -> Result<RunConfig> {
 fn load_or_generate(args: &Args, cfg: &RunConfig) -> Result<Trace> {
     if let Some(path) = args.flag("trace") {
         let text = std::fs::read_to_string(path)?;
-        return Trace::from_text(&text).map_err(|e| anyhow!("parsing {path}: {e}"));
+        return Trace::from_text(&text).map_err(|e| err!("parsing {path}: {e}"));
     }
     let trace = generate_trace(&cfg.workload, &cfg.park(), cfg.jobs, cfg.seed);
     if let Some(path) = args.flag("save-trace") {
@@ -149,7 +153,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
 fn cmd_report(args: &Args) -> Result<()> {
     let effort = if args.has("quick") { Effort::Quick } else { Effort::Paper };
-    let seed = args.u64_flag("seed", 42).map_err(|e| anyhow!(e))?;
+    let seed = args.u64_flag("seed", 42).map_err(Error::from)?;
     let which = args
         .positionals
         .first()
@@ -199,7 +203,7 @@ fn cmd_verify(args: &Args) -> Result<()> {
     let mut golden = SosEngine::new(cfg.machines, cfg.depth, cfg.alpha, cfg.precision);
     let mut sim = StannicSim::new(cfg.machines, cfg.depth, cfg.alpha, cfg.precision);
     let ticks = lockstep_verify(&mut sim, &mut golden, &trace, max_ticks)
-        .map_err(|e| anyhow!("STANNIC sim diverged: {e}"))?;
+        .map_err(|e| err!("STANNIC sim diverged: {e}"))?;
     println!(
         "STANNIC sim : identical schedule over {} jobs ({} ticks, {} cycles, decision latency {} cyc)",
         trace.n_jobs(),
@@ -211,7 +215,7 @@ fn cmd_verify(args: &Args) -> Result<()> {
     let mut golden = SosEngine::new(cfg.machines, cfg.depth, cfg.alpha, cfg.precision);
     let mut sim = HerculesSim::new(cfg.machines, cfg.depth, cfg.alpha, cfg.precision);
     let ticks = lockstep_verify(&mut sim, &mut golden, &trace, max_ticks)
-        .map_err(|e| anyhow!("HERCULES sim diverged: {e}"))?;
+        .map_err(|e| err!("HERCULES sim diverged: {e}"))?;
     println!(
         "HERCULES sim: identical schedule over {} jobs ({} ticks, {} cycles, decision latency {} cyc)",
         trace.n_jobs(),
@@ -225,8 +229,8 @@ fn cmd_verify(args: &Args) -> Result<()> {
 
 fn cmd_hw(args: &Args) -> Result<()> {
     use stannic::hw::{power, resources, routing, U55C};
-    let m = args.usize_flag("machines", 10).map_err(|e| anyhow!(e))?;
-    let d = args.usize_flag("depth", 10).map_err(|e| anyhow!(e))?;
+    let m = args.usize_flag("machines", 10).map_err(Error::from)?;
+    let d = args.usize_flag("depth", 10).map_err(Error::from)?;
     let h = resources::hercules(m, d);
     let s = resources::stannic(m, d);
     println!("configuration {m}x{d} on Alveo U55C @ 371.47 MHz");
@@ -318,6 +322,49 @@ fn cmd_stats(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let mut cfg = if args.has("quick") {
+        SweepConfig::quick()
+    } else {
+        SweepConfig::default()
+    };
+    cfg.jobs = args.usize_flag("jobs", cfg.jobs).map_err(Error::from)?;
+    cfg.seed = args.u64_flag("seed", cfg.seed).map_err(Error::from)?;
+    cfg.depth = args.usize_flag("depth", cfg.depth).map_err(Error::from)?;
+    cfg.threads = args.usize_flag("threads", cfg.threads).map_err(Error::from)?;
+    // The shared single-value flags narrow the corresponding grid axis.
+    if args.flag("machines").is_some() {
+        cfg.machine_counts = vec![args.usize_flag("machines", 5).map_err(Error::from)?];
+    }
+    if args.flag("alpha").is_some() {
+        cfg.alphas = vec![args.f32_flag("alpha", 0.5).map_err(Error::from)?];
+    }
+    if let Some(name) = args.flag("precision") {
+        cfg.precisions = vec![parse_precision(name)?];
+    }
+    if let Some(name) = args.flag("workload") {
+        cfg.workloads = vec![(name.to_string(), parse_workload(name)?)];
+    }
+    if let Some(list) = args.flag("engines").or_else(|| args.flag("engine")) {
+        cfg.engines = SweepEngine::parse_list(list).map_err(Error::from)?;
+    }
+    let started = std::time::Instant::now();
+    let results = run_sweep(&cfg);
+    // The rendered report is deterministic (identical for any worker
+    // count); wall-clock and pool info go to stderr only.
+    print!("{}", results.render());
+    match results.check_parity() {
+        Ok(groups) => println!("\ncross-engine schedule parity OK ({groups} comparisons)"),
+        Err(e) => bail!("cross-engine parity violated: {e}"),
+    }
+    eprintln!(
+        "sweep wall time: {:.2?} on {} worker thread(s)",
+        started.elapsed(),
+        results.threads
+    );
+    Ok(())
+}
+
 fn main() {
     let specs = flag_specs();
     let args = match Args::parse(std::env::args().skip(1), &specs) {
@@ -335,6 +382,7 @@ fn main() {
         Some("hw") => cmd_hw(&args),
         Some("gen") => cmd_gen(&args),
         Some("stats") => cmd_stats(&args),
+        Some("sweep") => cmd_sweep(&args),
         Some(other) => {
             eprintln!("unknown command: {other}\n");
             eprint!("{}", usage("stannic", &commands(), &specs));

@@ -6,8 +6,8 @@
 
 use std::path::{Path, PathBuf};
 
-use anyhow::{bail, Context, Result};
-
+use crate::bail;
+use crate::error::{Ctx, Result};
 use crate::jsonio::Json;
 
 /// Which compiled datapath an artifact implements.
@@ -48,14 +48,14 @@ impl ArtifactRegistry {
     pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
         let dir = dir.as_ref().to_path_buf();
         let manifest_path = dir.join("manifest.json");
-        let text = std::fs::read_to_string(&manifest_path).with_context(|| {
+        let text = std::fs::read_to_string(&manifest_path).with_ctx(|| {
             format!(
                 "reading {} — run `make artifacts` first",
                 manifest_path.display()
             )
         })?;
         let json = Json::parse(&text)
-            .map_err(|e| anyhow::anyhow!("parsing manifest: {e}"))?;
+            .map_err(|e| crate::err!("parsing manifest: {e}"))?;
         let configs = json
             .get("configs")
             .map(|c| {
@@ -103,7 +103,7 @@ impl ArtifactRegistry {
     pub fn load_text(&self, kind: ArtifactKind, m: usize, d: usize) -> Result<String> {
         let p = self.path(kind, m, d);
         std::fs::read_to_string(&p)
-            .with_context(|| format!("artifact {} missing — run `make artifacts`", p.display()))
+            .with_ctx(|| format!("artifact {} missing — run `make artifacts`", p.display()))
     }
 }
 

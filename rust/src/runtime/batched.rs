@@ -8,10 +8,12 @@
 //! ratio `T_j = W/eps` per probe (what-if analyses probe unquantized
 //! candidates); for datapath-exact costs use [`super::XlaCostEngine`].
 
-use anyhow::{anyhow, bail, Context, Result};
+use crate::error::{Ctx, Result};
+use crate::{bail, err};
 
 use super::artifacts::ArtifactRegistry;
 use super::state::XlaScheduleState;
+use super::xla;
 
 /// Compiled batched cost evaluator for one (M, D, B) configuration.
 pub struct BatchedCostEngine {
@@ -31,13 +33,13 @@ impl BatchedCostEngine {
         let path = registry
             .path(super::artifacts::ArtifactKind::StannicCost, m, d)
             .with_file_name(format!("batched_cost_{m}x{d}x{b}.hlo.txt"));
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let client = xla::PjRtClient::cpu().ctx("creating PJRT CPU client")?;
         let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            path.to_str().ok_or_else(|| err!("non-utf8 path"))?,
         )
-        .with_context(|| format!("parsing {}", path.display()))?;
+        .with_ctx(|| format!("parsing {}", path.display()))?;
         let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = client.compile(&comp).context("compiling batched module")?;
+        let exe = client.compile(&comp).ctx("compiling batched module")?;
         Ok(BatchedCostEngine {
             client,
             exe,

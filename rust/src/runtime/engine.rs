@@ -6,14 +6,15 @@
 //! Python is never on this path — the executables were AOT-compiled by
 //! `make artifacts`.
 
-use anyhow::{anyhow, bail, Context, Result};
-
 use crate::core::Job;
+use crate::error::{Ctx, Result};
 use crate::quant::Precision;
 use crate::scheduler::{Assignment, TickOutcome, FULL_COST};
+use crate::{bail, err};
 
 use super::artifacts::{ArtifactKind, ArtifactRegistry};
 use super::state::XlaScheduleState;
+use super::xla;
 
 /// Which compiled cost datapath to dispatch.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -59,14 +60,14 @@ impl XlaCostEngine {
             CostImpl::StannicFused => ArtifactKind::StannicFusedCost,
             CostImpl::Hercules => ArtifactKind::HerculesCost,
         };
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let client = xla::PjRtClient::cpu().ctx("creating PJRT CPU client")?;
         let path = registry.path(kind, m, d);
         let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            path.to_str().ok_or_else(|| err!("non-utf8 path"))?,
         )
-        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        .with_ctx(|| format!("parsing HLO text {}", path.display()))?;
         let comp = xla::XlaComputation::from_proto(&proto);
-        let cost_exe = client.compile(&comp).context("compiling cost module")?;
+        let cost_exe = client.compile(&comp).ctx("compiling cost module")?;
         let f32t = xla::PrimitiveType::F32;
         let mat = || xla::Literal::create_from_shape(f32t, &[m, d]);
         let inputs = vec![

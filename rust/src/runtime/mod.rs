@@ -11,6 +11,7 @@ mod batched;
 mod engine;
 mod state;
 mod tick;
+mod xla;
 
 pub use artifacts::{ArtifactKind, ArtifactRegistry};
 pub use batched::BatchedCostEngine;

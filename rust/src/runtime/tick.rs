@@ -5,9 +5,11 @@
 //! exists to validate the artifact end-to-end and to serve deployments
 //! that keep the entire schedule state accelerator-resident.
 
-use anyhow::{anyhow, bail, Context, Result};
+use crate::error::{Ctx, Result};
+use crate::{bail, err};
 
 use super::artifacts::{ArtifactKind, ArtifactRegistry};
+use super::xla;
 
 /// Compiled Phase III step for one (M, D) configuration.
 pub struct TickEngine {
@@ -23,13 +25,13 @@ impl TickEngine {
             bail!("no artifacts for {m}x{d}");
         }
         let path = registry.path(ArtifactKind::Tick, m, d);
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let client = xla::PjRtClient::cpu().ctx("creating PJRT CPU client")?;
         let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            path.to_str().ok_or_else(|| err!("non-utf8 path"))?,
         )
-        .with_context(|| format!("parsing {}", path.display()))?;
+        .with_ctx(|| format!("parsing {}", path.display()))?;
         let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = client.compile(&comp).context("compiling tick module")?;
+        let exe = client.compile(&comp).ctx("compiling tick module")?;
         Ok(TickEngine {
             client,
             exe,

@@ -1,0 +1,172 @@
+//! Offline stub of the `xla` PJRT bindings the runtime layer was written
+//! against. The real crate (xla_extension 0.5.1) is unavailable in this
+//! environment, so every entry point that would reach a PJRT runtime
+//! returns a descriptive error instead; state-free constructors (literal
+//! shapes) succeed so the call sites type-check and unit-test. The
+//! artifact registry fails before any of this is reached in practice
+//! (no `make artifacts` output exists offline), and the integration
+//! tests skip the XLA paths when artifacts are absent.
+
+use crate::error::{Error, Result};
+
+fn unavailable(what: &str) -> Error {
+    Error::msg(format!(
+        "XLA/PJRT backend unavailable in this offline build ({what}); \
+         use a software engine instead (native|stannic|hercules)"
+    ))
+}
+
+/// Element type selector (only F32 is used by the cost datapath).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PrimitiveType {
+    F32,
+}
+
+/// Host-side literal: shape bookkeeping only in the stub.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    elems: usize,
+}
+
+impl Literal {
+    pub fn create_from_shape(_ty: PrimitiveType, dims: &[usize]) -> Literal {
+        Literal {
+            elems: dims.iter().product(),
+        }
+    }
+
+    pub fn vec1(v: &[f32]) -> Literal {
+        Literal { elems: v.len() }
+    }
+
+    pub fn scalar(_v: f32) -> Literal {
+        Literal { elems: 1 }
+    }
+
+    pub fn copy_raw_from(&mut self, src: &[f32]) -> Result<()> {
+        if src.len() == self.elems {
+            Ok(())
+        } else {
+            Err(Error::msg(format!(
+                "literal shape mismatch: {} elements copied into {}",
+                src.len(),
+                self.elems
+            )))
+        }
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let elems: usize = dims.iter().map(|&d| d as usize).product();
+        if elems == self.elems {
+            Ok(Literal { elems })
+        } else {
+            Err(Error::msg(format!(
+                "reshape {:?} does not match {} elements",
+                dims, self.elems
+            )))
+        }
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(unavailable("Literal::to_vec"))
+    }
+
+    pub fn get_first_element<T>(&self) -> Result<T> {
+        Err(unavailable("Literal::get_first_element"))
+    }
+
+    pub fn to_tuple2(&self) -> Result<(Literal, Literal)> {
+        Err(unavailable("Literal::to_tuple2"))
+    }
+
+    pub fn to_tuple3(&self) -> Result<(Literal, Literal, Literal)> {
+        Err(unavailable("Literal::to_tuple3"))
+    }
+}
+
+/// Parsed HLO module handle.
+pub struct HloModuleProto {
+    _priv: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// Computation wrapper around a parsed module.
+pub struct XlaComputation {
+    _priv: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _priv: () }
+    }
+}
+
+/// PJRT client handle.
+pub struct PjRtClient {
+    _priv: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "offline-stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+/// Compiled executable handle.
+pub struct PjRtLoadedExecutable {
+    _priv: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _inputs: &[Literal]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// Device buffer handle.
+pub struct PjRtBuffer {
+    _priv: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_shape_accounting() {
+        let mut l = Literal::create_from_shape(PrimitiveType::F32, &[2, 3]);
+        assert!(l.copy_raw_from(&[0.0; 6]).is_ok());
+        assert!(l.copy_raw_from(&[0.0; 5]).is_err());
+        let s = Literal::create_from_shape(PrimitiveType::F32, &[]);
+        assert_eq!(s.elems, 1, "scalar shape");
+        assert!(Literal::vec1(&[1.0; 6]).reshape(&[2, 3]).is_ok());
+        assert!(Literal::vec1(&[1.0; 6]).reshape(&[4, 2]).is_err());
+    }
+
+    #[test]
+    fn runtime_entry_points_error_gracefully() {
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(format!("{e}").contains("offline"), "{e}");
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+        assert!(Literal::vec1(&[1.0]).to_vec::<f32>().is_err());
+    }
+}

@@ -1,0 +1,508 @@
+//! Parallel scenario-sweep subsystem — the repo's first *scale* layer.
+//!
+//! STOMP-style scheduler evaluation (arXiv:2007.14371) establishes a
+//! scheduler's value by sweeping it across many synthetic workloads;
+//! Agon (arXiv:2109.00665) adds that schedulers must hold up on large
+//! heterogeneous systems. This module turns both into infrastructure:
+//! a grid of `WorkloadSpec × MachinePark size × alpha × Precision`
+//! cells is fanned across every software/simulator engine in the repo
+//! (golden SOS, naive SOSC, lane-vectorised SIMD, and the Stannic and
+//! Hercules cycle-accurate simulators) by a self-scheduling pool of
+//! worker threads that pull cells from a shared `Mutex<VecDeque>` work
+//! queue (fast workers automatically absorb more cells).
+//!
+//! Determinism is a hard requirement (and property-tested): every cell
+//! is seeded, runs its engine single-threaded, and writes its result
+//! into a slot indexed by cell id — so the aggregate output is
+//! byte-identical whether the sweep ran on 1 or 8 workers. The XLA
+//! engine is excluded: it needs compiled artifacts and a PJRT runtime,
+//! neither of which exists offline.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::Mutex;
+
+use crate::baselines::{SimdSos, SoscEngine};
+use crate::bench::Table;
+use crate::coordinator::EngineAdapter;
+use crate::core::{JobId, MachinePark};
+use crate::metrics::{Histogram, MetricSet, ScheduleMetrics};
+use crate::quant::Precision;
+use crate::scheduler::SosEngine;
+use crate::sim::{hercules::HerculesSim, stannic::StannicSim};
+use crate::workload::{generate_trace, WorkloadSpec};
+
+/// Engine selector for sweep cells.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SweepEngine {
+    /// Golden software SOS engine.
+    Sos,
+    /// Naive single-threaded software baseline.
+    Sosc,
+    /// Lane-vectorised software SOS.
+    Simd,
+    /// Cycle-accurate Stannic simulator.
+    StannicSim,
+    /// Cycle-accurate Hercules simulator.
+    HerculesSim,
+}
+
+impl SweepEngine {
+    pub const ALL: [SweepEngine; 5] = [
+        SweepEngine::Sos,
+        SweepEngine::Sosc,
+        SweepEngine::Simd,
+        SweepEngine::StannicSim,
+        SweepEngine::HerculesSim,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SweepEngine::Sos => "sos",
+            SweepEngine::Sosc => "sosc",
+            SweepEngine::Simd => "simd",
+            SweepEngine::StannicSim => "stannic-sim",
+            SweepEngine::HerculesSim => "hercules-sim",
+        }
+    }
+
+    /// Parse a comma-separated engine list; `"all"` selects every engine.
+    pub fn parse_list(text: &str) -> Result<Vec<SweepEngine>, String> {
+        if text == "all" {
+            return Ok(SweepEngine::ALL.to_vec());
+        }
+        text.split(',')
+            .map(|name| match name.trim() {
+                "sos" | "native" => Ok(SweepEngine::Sos),
+                "sosc" => Ok(SweepEngine::Sosc),
+                "simd" => Ok(SweepEngine::Simd),
+                "stannic" | "stannic-sim" => Ok(SweepEngine::StannicSim),
+                "hercules" | "hercules-sim" => Ok(SweepEngine::HerculesSim),
+                other => Err(format!(
+                    "unknown sweep engine '{other}' (sos|sosc|simd|stannic|hercules|all)"
+                )),
+            })
+            .collect()
+    }
+
+    fn build(&self, machines: usize, depth: usize, alpha: f32, p: Precision) -> Box<dyn EngineAdapter> {
+        match self {
+            SweepEngine::Sos => Box::new(SosEngine::new(machines, depth, alpha, p)),
+            SweepEngine::Sosc => Box::new(SoscEngine::new(machines, depth, alpha, p)),
+            SweepEngine::Simd => Box::new(SimdSos::new(machines, depth, alpha, p)),
+            SweepEngine::StannicSim => Box::new(StannicSim::new(machines, depth, alpha, p)),
+            SweepEngine::HerculesSim => Box::new(HerculesSim::new(machines, depth, alpha, p)),
+        }
+    }
+}
+
+/// One cell of the sweep grid: a fully specified scenario + engine.
+#[derive(Debug, Clone)]
+pub struct SweepCell {
+    /// Dense grid index; also the result slot, which is what makes the
+    /// aggregate output independent of worker scheduling.
+    pub id: usize,
+    pub workload: String,
+    pub spec: WorkloadSpec,
+    pub machines: usize,
+    pub depth: usize,
+    pub alpha: f32,
+    pub precision: Precision,
+    pub engine: SweepEngine,
+    pub jobs: usize,
+    pub seed: u64,
+}
+
+/// Measured outcome of one cell.
+#[derive(Debug, Clone)]
+pub struct CellResult {
+    pub cell: SweepCell,
+    pub metrics: ScheduleMetrics,
+    /// Queue-latency (arrival -> release) percentiles in ticks.
+    pub p50: u64,
+    pub p95: u64,
+    pub p99: u64,
+    /// Scheduler ticks consumed until drain.
+    pub ticks: u64,
+    /// Stalled iterations (arrival waited while every V_i was full).
+    pub stalls: u64,
+    /// Simulated accelerator cycles (0 for pure-software engines).
+    pub accel_cycles: u64,
+    /// Mean fraction of machines holding in-flight work per tick.
+    pub utilization: f64,
+}
+
+/// Sweep grid configuration.
+#[derive(Debug, Clone)]
+pub struct SweepConfig {
+    pub engines: Vec<SweepEngine>,
+    pub workloads: Vec<(String, WorkloadSpec)>,
+    pub machine_counts: Vec<usize>,
+    pub alphas: Vec<f32>,
+    pub precisions: Vec<Precision>,
+    pub depth: usize,
+    pub jobs: usize,
+    pub seed: u64,
+    /// Worker threads; 0 = one per available core.
+    pub threads: usize,
+}
+
+impl Default for SweepConfig {
+    /// The default grid: 3 workload mixes × 2 park sizes × 2 alphas ×
+    /// INT8 across all 5 engines = 60 cells.
+    fn default() -> Self {
+        SweepConfig {
+            engines: SweepEngine::ALL.to_vec(),
+            workloads: vec![
+                ("even".to_string(), WorkloadSpec::even()),
+                ("memory".to_string(), WorkloadSpec::memory_skewed()),
+                ("compute".to_string(), WorkloadSpec::compute_skewed()),
+            ],
+            machine_counts: vec![5, 10],
+            alphas: vec![0.25, 0.75],
+            precisions: vec![Precision::Int8],
+            depth: 10,
+            jobs: 200,
+            seed: 42,
+            threads: 0,
+        }
+    }
+}
+
+impl SweepConfig {
+    /// A reduced grid for smoke runs: one park size, fewer jobs
+    /// (3 workloads × 2 alphas × 5 engines = 30 cells).
+    pub fn quick() -> Self {
+        SweepConfig {
+            machine_counts: vec![5],
+            jobs: 60,
+            ..Self::default()
+        }
+    }
+
+    /// Expand the grid into cells, id-ordered.
+    pub fn cells(&self) -> Vec<SweepCell> {
+        let mut out = Vec::new();
+        for (name, spec) in &self.workloads {
+            for &machines in &self.machine_counts {
+                for &alpha in &self.alphas {
+                    for &precision in &self.precisions {
+                        for &engine in &self.engines {
+                            out.push(SweepCell {
+                                id: out.len(),
+                                workload: name.clone(),
+                                spec: spec.clone(),
+                                machines,
+                                depth: self.depth,
+                                alpha,
+                                precision,
+                                engine,
+                                jobs: self.jobs,
+                                seed: self.seed,
+                            });
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Run one cell to completion (single-threaded, fully deterministic).
+pub fn run_cell(cell: &SweepCell) -> CellResult {
+    // cycled(5) is exactly the paper M1-M5 park, so one constructor
+    // covers every grid size.
+    let park = MachinePark::cycled(cell.machines);
+    let trace = generate_trace(&cell.spec, &park, cell.jobs, cell.seed);
+    let mut engine = cell
+        .engine
+        .build(cell.machines, cell.depth, cell.alpha, cell.precision);
+
+    let mut metrics = MetricSet::new(cell.machines, 64);
+    let mut hist = Histogram::new();
+    let mut arrivals: HashMap<JobId, u64> = HashMap::with_capacity(cell.jobs);
+    let mut in_flight = vec![0usize; cell.machines];
+    let mut busy_machine_ticks = 0u64;
+    let mut stalls = 0u64;
+    let mut events = trace.events().iter().peekable();
+    let mut tick = 0u64;
+
+    loop {
+        tick += 1;
+        while events.peek().is_some_and(|e| e.tick <= tick) {
+            let e = events.next().expect("peeked");
+            if let Some(job) = &e.job {
+                arrivals.insert(job.id, job.arrival);
+                engine.submit(job.clone());
+            }
+        }
+        let out = engine
+            .tick()
+            .expect("software/simulator engines cannot fail");
+        if out.stalled {
+            stalls += 1;
+        }
+        if let Some(a) = &out.assigned {
+            metrics.record_assignment(a.machine, tick);
+            in_flight[a.machine] += 1;
+        }
+        for (id, machine) in &out.released {
+            let arrived = arrivals.remove(id).expect("released job has an arrival");
+            metrics.record_latency(*machine, arrived, tick);
+            hist.record(tick - arrived);
+            in_flight[*machine] -= 1;
+        }
+        busy_machine_ticks += in_flight.iter().filter(|&&n| n > 0).count() as u64;
+        if engine.is_idle() && events.peek().is_none() {
+            break;
+        }
+        assert!(tick < 50_000_000, "sweep cell {} did not drain", cell.id);
+    }
+
+    CellResult {
+        cell: cell.clone(),
+        metrics: metrics.finish(),
+        p50: hist.p50(),
+        p95: hist.p95(),
+        p99: hist.p99(),
+        ticks: tick,
+        stalls,
+        accel_cycles: engine.cycles(),
+        utilization: busy_machine_ticks as f64 / (cell.machines as u64 * tick) as f64,
+    }
+}
+
+/// All cell results of one sweep, id-ordered.
+#[derive(Debug, Clone)]
+pub struct SweepResults {
+    pub cells: Vec<CellResult>,
+    /// Worker threads actually used (not part of the rendered output).
+    pub threads: usize,
+}
+
+/// Run the whole grid across a worker pool. Workers steal cells from a
+/// shared deque; each result lands in its cell's slot, so the output is
+/// identical for any thread count.
+pub fn run_sweep(cfg: &SweepConfig) -> SweepResults {
+    let cells = cfg.cells();
+    let n = cells.len();
+    let threads = if cfg.threads == 0 {
+        std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(1)
+    } else {
+        cfg.threads
+    }
+    .clamp(1, n.max(1));
+
+    let queue: Mutex<VecDeque<SweepCell>> = Mutex::new(cells.into_iter().collect());
+    let slots: Mutex<Vec<Option<CellResult>>> = Mutex::new((0..n).map(|_| None).collect());
+
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let next = queue.lock().expect("queue lock").pop_front();
+                let Some(cell) = next else {
+                    break;
+                };
+                let id = cell.id;
+                let result = run_cell(&cell);
+                slots.lock().expect("slot lock")[id] = Some(result);
+            });
+        }
+    });
+
+    let cells: Vec<CellResult> = slots
+        .into_inner()
+        .expect("no worker panicked")
+        .into_iter()
+        .map(|r| r.expect("every cell ran exactly once"))
+        .collect();
+    SweepResults { cells, threads }
+}
+
+impl SweepResults {
+    /// Every engine implements the *same* algorithm, so cells that share
+    /// a scenario must produce identical schedules. Returns the number
+    /// of multi-engine scenario groups checked, or the first divergence.
+    pub fn check_parity(&self) -> Result<usize, String> {
+        let mut groups: HashMap<(String, usize, u32, &'static str), &CellResult> = HashMap::new();
+        let mut checked = 0usize;
+        for r in &self.cells {
+            let key = (
+                r.cell.workload.clone(),
+                r.cell.machines,
+                r.cell.alpha.to_bits(),
+                r.cell.precision.name(),
+            );
+            match groups.get(&key) {
+                None => {
+                    groups.insert(key, r);
+                }
+                Some(first) => {
+                    checked += 1;
+                    if first.metrics.jobs_per_machine != r.metrics.jobs_per_machine {
+                        return Err(format!(
+                            "schedule divergence in scenario {}/{}m/a{}: {} got {:?}, {} got {:?}",
+                            r.cell.workload,
+                            r.cell.machines,
+                            r.cell.alpha,
+                            first.cell.engine.name(),
+                            first.metrics.jobs_per_machine,
+                            r.cell.engine.name(),
+                            r.metrics.jobs_per_machine
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(checked)
+    }
+
+    /// Render the per-cell table plus per-engine aggregates. Contains no
+    /// wall-clock or thread-count data, so the text is reproducible.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "scenario sweep — {} cells ({} jobs per cell)\n",
+            self.cells.len(),
+            self.cells.first().map_or(0, |c| c.cell.jobs),
+        ));
+        let mut t = Table::new(&[
+            "cell", "engine", "workload", "M", "alpha", "prec", "avg lat", "p95", "fair",
+            "loadCV", "util", "thru", "stall", "cycles",
+        ]);
+        for r in &self.cells {
+            t.row(vec![
+                r.cell.id.to_string(),
+                r.cell.engine.name().into(),
+                r.cell.workload.clone(),
+                r.cell.machines.to_string(),
+                format!("{:.2}", r.cell.alpha),
+                r.cell.precision.name().into(),
+                format!("{:.1}", r.metrics.avg_latency),
+                r.p95.to_string(),
+                format!("{:.3}", r.metrics.fairness),
+                format!("{:.3}", r.metrics.load_balance_cv),
+                format!("{:.3}", r.utilization),
+                format!("{:.3}", r.metrics.throughput),
+                r.stalls.to_string(),
+                r.accel_cycles.to_string(),
+            ]);
+        }
+        out.push_str(&t.render());
+
+        out.push_str("\naggregates per engine\n");
+        let mut t = Table::new(&[
+            "engine", "cells", "mean avg lat", "mean util", "mean fair", "total cycles",
+        ]);
+        for engine in SweepEngine::ALL {
+            let rs: Vec<&CellResult> = self
+                .cells
+                .iter()
+                .filter(|r| r.cell.engine == engine)
+                .collect();
+            if rs.is_empty() {
+                continue;
+            }
+            let n = rs.len() as f64;
+            t.row(vec![
+                engine.name().into(),
+                rs.len().to_string(),
+                format!("{:.2}", rs.iter().map(|r| r.metrics.avg_latency).sum::<f64>() / n),
+                format!("{:.4}", rs.iter().map(|r| r.utilization).sum::<f64>() / n),
+                format!("{:.4}", rs.iter().map(|r| r.metrics.fairness).sum::<f64>() / n),
+                rs.iter().map(|r| r.accel_cycles).sum::<u64>().to_string(),
+            ]);
+        }
+        out.push_str(&t.render());
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> SweepConfig {
+        SweepConfig {
+            engines: vec![SweepEngine::Sos, SweepEngine::StannicSim],
+            workloads: vec![("even".to_string(), WorkloadSpec::even())],
+            machine_counts: vec![3],
+            alphas: vec![0.5],
+            precisions: vec![Precision::Int8],
+            depth: 6,
+            jobs: 40,
+            seed: 9,
+            threads: 2,
+        }
+    }
+
+    #[test]
+    fn default_grid_meets_scale_floor() {
+        let cells = SweepConfig::default().cells();
+        assert!(cells.len() >= 24, "grid has {} cells", cells.len());
+        for (i, c) in cells.iter().enumerate() {
+            assert_eq!(c.id, i, "dense ids");
+        }
+        assert!(SweepConfig::quick().cells().len() >= 24);
+    }
+
+    #[test]
+    fn cell_conserves_jobs_and_measures_latency() {
+        let cfg = tiny();
+        let r = run_cell(&cfg.cells()[0]);
+        assert_eq!(r.metrics.total_scheduled, 40);
+        assert_eq!(r.metrics.jobs_per_machine.iter().sum::<usize>(), 40);
+        assert!(r.p50 <= r.p95 && r.p95 <= r.p99);
+        assert!(r.utilization > 0.0 && r.utilization <= 1.0);
+        assert!(r.ticks > 0);
+    }
+
+    #[test]
+    fn simulator_cells_report_cycles() {
+        let cfg = tiny();
+        let results = run_sweep(&cfg);
+        let sos = &results.cells[0];
+        let sim = &results.cells[1];
+        assert_eq!(sos.cell.engine, SweepEngine::Sos);
+        assert_eq!(sim.cell.engine, SweepEngine::StannicSim);
+        assert_eq!(sos.accel_cycles, 0, "software engine has no cycle model");
+        assert!(sim.accel_cycles > 0);
+    }
+
+    #[test]
+    fn parity_holds_across_engines() {
+        let mut cfg = tiny();
+        cfg.engines = SweepEngine::ALL.to_vec();
+        let results = run_sweep(&cfg);
+        assert_eq!(results.check_parity().unwrap(), 4, "4 non-reference engines");
+    }
+
+    #[test]
+    fn results_are_slot_ordered_regardless_of_threads() {
+        let mut cfg = tiny();
+        cfg.engines = SweepEngine::ALL.to_vec();
+        cfg.threads = 1;
+        let a = run_sweep(&cfg);
+        cfg.threads = 8;
+        let b = run_sweep(&cfg);
+        assert_eq!(a.render(), b.render());
+        for (x, y) in a.cells.iter().zip(&b.cells) {
+            assert_eq!(x.cell.id, y.cell.id);
+            assert_eq!(x.metrics.jobs_per_machine, y.metrics.jobs_per_machine);
+            assert_eq!(x.metrics.avg_latency, y.metrics.avg_latency);
+            assert_eq!(x.ticks, y.ticks);
+        }
+    }
+
+    #[test]
+    fn engine_list_parsing() {
+        assert_eq!(SweepEngine::parse_list("all").unwrap().len(), 5);
+        assert_eq!(
+            SweepEngine::parse_list("sos, simd").unwrap(),
+            vec![SweepEngine::Sos, SweepEngine::Simd]
+        );
+        assert!(SweepEngine::parse_list("warp-drive").is_err());
+    }
+}

@@ -1,0 +1,108 @@
+//! Golden-schedule regression: the exact schedule (assignment sequence
+//! + release times) the golden `SosEngine` produces for the paper's
+//! M1–M5 park at seed 42 is pinned in `tests/golden/`, so future
+//! refactors cannot silently change scheduling behavior.
+//!
+//! Re-bless after an *intentional* semantic change with
+//! `STANNIC_BLESS=1 cargo test golden`; `tools/gen_golden.py` is an
+//! independent cross-implementation that regenerates the same file.
+
+use std::fmt::Write as _;
+
+use stannic::core::MachinePark;
+use stannic::quant::Precision;
+use stannic::scheduler::SosEngine;
+use stannic::workload::{generate_trace, WorkloadSpec};
+
+const JOBS: usize = 40;
+const SEED: u64 = 42;
+
+/// Drive the golden engine over the pinned scenario and log one line
+/// per event: `R <tick> <job> <machine>` for releases (pops happen
+/// before the assignment within a tick, so they log first) and
+/// `A <tick> <job> <machine> <position>` for assignments.
+fn schedule_log() -> String {
+    let park = MachinePark::paper_m1_m5();
+    let trace = generate_trace(&WorkloadSpec::default(), &park, JOBS, SEED);
+    let mut engine = SosEngine::new(5, 10, 0.5, Precision::Int8);
+    let mut out = String::new();
+    let mut events = trace.events().iter().peekable();
+    for t in 1..=200_000u64 {
+        while events.peek().is_some_and(|e| e.tick <= t) {
+            engine.submit(events.next().expect("peeked").job.clone().expect("job"));
+        }
+        let o = engine.tick(None);
+        for (id, m) in &o.released {
+            writeln!(out, "R {t} {id} {m}").expect("write to string");
+        }
+        if let Some(a) = &o.assigned {
+            writeln!(out, "A {t} {} {} {}", a.job, a.machine, a.position)
+                .expect("write to string");
+        }
+        if engine.is_idle() && events.peek().is_none() {
+            return out;
+        }
+    }
+    panic!("golden scenario did not drain");
+}
+
+fn golden_path() -> &'static str {
+    concat!(env!("CARGO_MANIFEST_DIR"), "/tests/golden/sos_m1m5_seed42.txt")
+}
+
+#[test]
+fn golden_sos_schedule_m1m5_seed42() {
+    let got = schedule_log();
+    let path = golden_path();
+    let bless = std::env::var("STANNIC_BLESS")
+        .map(|v| !v.is_empty() && v != "0" && !v.eq_ignore_ascii_case("false"))
+        .unwrap_or(false);
+    if bless {
+        std::fs::write(path, &got).expect("bless golden file");
+        eprintln!("golden blessed: {path}");
+        return;
+    }
+    let want = std::fs::read_to_string(path)
+        .expect("golden file missing — bless with STANNIC_BLESS=1 cargo test golden");
+    assert_eq!(
+        got, want,
+        "SosEngine schedule diverged from the pinned golden; if the change \
+         is intentional, re-bless with STANNIC_BLESS=1 cargo test golden"
+    );
+}
+
+#[test]
+fn golden_log_is_structurally_sound() {
+    // Independent of the pinned file: every job appears exactly once as
+    // an assignment and once as a release, and ticks are monotone.
+    let log = schedule_log();
+    let mut assigned = Vec::new();
+    let mut released = Vec::new();
+    let mut last_tick = 0u64;
+    for line in log.lines() {
+        let parts: Vec<&str> = line.split_whitespace().collect();
+        let tick: u64 = parts[1].parse().expect("tick");
+        let job: u64 = parts[2].parse().expect("job id");
+        assert!(tick >= last_tick, "ticks non-decreasing: {line}");
+        last_tick = tick;
+        match parts[0] {
+            "A" => {
+                assert_eq!(parts.len(), 5, "{line}");
+                let machine: usize = parts[3].parse().expect("machine");
+                let position: usize = parts[4].parse().expect("position");
+                assert!(machine < 5 && position < 10, "{line}");
+                assigned.push(job);
+            }
+            "R" => {
+                assert_eq!(parts.len(), 4, "{line}");
+                released.push(job);
+            }
+            other => panic!("unknown event {other}"),
+        }
+    }
+    assigned.sort_unstable();
+    released.sort_unstable();
+    let want: Vec<u64> = (1..=JOBS as u64).collect();
+    assert_eq!(assigned, want);
+    assert_eq!(released, want);
+}

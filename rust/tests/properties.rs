@@ -7,11 +7,13 @@
 //! * cost positivity/monotonicity properties of Eq. (4)/(5)
 //! * stannic memoized sums == recomputed sums under random drive
 //! * workload generator determinism & composition bounds
+//! * sweep results are byte-identical for any worker-thread count
 
 use stannic::core::{Job, JobNature, MachinePark};
 use stannic::quant::Precision;
 use stannic::scheduler::{cost_of, SosEngine};
 use stannic::sim::{stannic::StannicSim, ArchSim};
+use stannic::sweep::{run_sweep, SweepConfig, SweepEngine};
 use stannic::testing::{check, property};
 use stannic::workload::{generate_trace, Rng, WorkloadSpec};
 
@@ -174,6 +176,52 @@ fn prop_workload_generator_bounds() {
             check(j.weight >= 1.0, "weight floor")?;
             check(j.ept.iter().all(|&e| (10.0..=255.0).contains(&e)), "EPT range")?;
         }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sweep_identical_across_worker_counts() {
+    // Parallelism must not leak into results: the same grid swept on 1,
+    // 2, and 8 workers renders byte-identical output and identical
+    // per-cell metrics (work stealing only changes who computes a cell,
+    // never what the cell computes).
+    property("sweep thread determinism", 4, |rng| {
+        let mut cfg = SweepConfig {
+            engines: SweepEngine::ALL.to_vec(),
+            workloads: vec![
+                ("even".to_string(), WorkloadSpec::even()),
+                ("memory".to_string(), WorkloadSpec::memory_skewed()),
+            ],
+            machine_counts: vec![rng.range(2, 4)],
+            alphas: vec![rng.uniform(0.2, 0.9)],
+            precisions: vec![Precision::Int8],
+            depth: rng.range(4, 8),
+            jobs: rng.range(20, 50),
+            seed: rng.next_u64(),
+            threads: 1,
+        };
+        let one = run_sweep(&cfg);
+        cfg.threads = 2;
+        let two = run_sweep(&cfg);
+        cfg.threads = 8;
+        let eight = run_sweep(&cfg);
+        check(one.render() == two.render(), "1-thread output == 2-thread output")?;
+        check(one.render() == eight.render(), "1-thread output == 8-thread output")?;
+        for (a, b) in one.cells.iter().zip(&eight.cells) {
+            check(a.cell.id == b.cell.id, "slot order preserved")?;
+            check(
+                a.metrics.jobs_per_machine == b.metrics.jobs_per_machine,
+                "schedule identity",
+            )?;
+            check(a.metrics.avg_latency == b.metrics.avg_latency, "latency identity")?;
+            check(a.utilization == b.utilization, "utilization identity")?;
+            check(
+                a.p99 == b.p99 && a.ticks == b.ticks && a.stalls == b.stalls,
+                "counter identity",
+            )?;
+        }
+        check(one.check_parity().is_ok(), "cross-engine schedule parity")?;
         Ok(())
     });
 }

@@ -1,0 +1,315 @@
+#!/usr/bin/env python3
+"""Bit-exact emulator of stannic's workload generator + golden SOS engine.
+
+By default this *cross-checks* rust/tests/golden/sos_m1m5_seed42.txt —
+the schedule pinned by the `golden_sos_schedule_m1m5_seed42` test —
+against this independent implementation and exits nonzero on drift.
+Pass `--bless` to (re)write the pinned file instead. The golden is
+normally re-blessed from Rust with STANNIC_BLESS=1; --bless exists for
+environments without a Rust toolchain.
+
+Every floating-point step mirrors the Rust source exactly:
+  * Rng          — rust/src/workload/rng.rs   (xorshift64* + splitmix init)
+  * synth_job    — rust/src/workload/generator.rs
+  * Precision    — rust/src/quant/mod.rs (INT8) + core/fixed.rs
+  * SosEngine    — rust/src/scheduler/{engine,cost,vschedule}.rs
+f32 arithmetic uses numpy.float32 (IEEE-754 binary32, round-to-nearest-
+even — identical to rustc on x86_64); .round() is emulated as
+round-half-away-from-zero, matching f32::round.
+"""
+
+import math
+import os
+import sys
+
+import numpy as np
+
+f32 = np.float32
+MASK = (1 << 64) - 1
+
+
+class Rng:
+    def __init__(self, seed):
+        z = (seed + 0x9E3779B97F4A7C15) & MASK
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK
+        z ^= z >> 31
+        self.state = z if z != 0 else 0xDEADBEEFCAFEF00D
+
+    def next_u64(self):
+        x = self.state
+        x ^= x >> 12
+        x = (x ^ (x << 25)) & MASK
+        x ^= x >> 27
+        self.state = x
+        return (x * 0x2545F4914F6CDD1D) & MASK
+
+    def next_f64(self):
+        return (self.next_u64() >> 11) / float(1 << 53)
+
+    def uniform(self, lo, hi):
+        lo, hi = f32(lo), f32(hi)
+        return f32(lo + f32(f32(hi - lo) * f32(self.next_f64())))
+
+    def below(self, n):
+        while True:
+            x = self.next_u64()
+            m = x * n
+            hi, lo = m >> 64, m & MASK
+            if lo >= n or lo >= ((-n) & MASK) % n:
+                return hi
+
+    def range(self, lo, hi):
+        return lo + self.below(hi - lo + 1)
+
+    def chance(self, p):
+        return self.next_f64() < p
+
+    def pick_weighted(self, weights):
+        total = 0.0
+        for w in weights:
+            total += w
+        x = self.next_f64() * total
+        for i, w in enumerate(weights):
+            if x < w:
+                return i
+            x -= w
+        return len(weights) - 1
+
+    def noise_factor(self, sigma):
+        s_sum = self.next_f64() + self.next_f64() + self.next_f64()
+        s = f32(f32(f32(s_sum) / f32(1.5)) - f32(1.0))
+        r = f32(f32(1.0) + f32(f32(sigma) * s))
+        floor = f32(0.1)
+        return r if r >= floor else floor
+
+
+def round_half_away(x):
+    v = float(x)
+    r = math.floor(v + 0.5) if v >= 0.0 else math.ceil(v - 0.5)
+    return f32(r)
+
+
+def fixed_round(x, int_bits, frac_bits):
+    scale = f32(1 << frac_bits)
+    max_steps = f32((1 << (int_bits + frac_bits)) - 1)
+    steps = round_half_away(f32(f32(x) * scale))
+    if steps < f32(0.0):
+        steps = f32(0.0)
+    if steps > max_steps:
+        steps = max_steps
+    return f32(steps / scale)
+
+
+def q_weight_int8(w):
+    q = fixed_round(w, 8, 0)
+    return q if q >= f32(1.0) else f32(1.0)
+
+
+def q_ept_int8(e):
+    q = fixed_round(e, 8, 0)
+    return q if q >= f32(1.0) else f32(1.0)
+
+
+def q_job_int8(w, e):
+    wq = q_weight_int8(w)
+    eq = q_ept_int8(e)
+    tq = fixed_round(f32(wq / eq), 4, 4)
+    return wq, eq, tq
+
+
+# MachinePark::paper_m1_m5 — (kind, quality_factor)
+PARK = [("cpu", 1.0), ("cpu", 3.0), ("mixed", 1.0), ("gpu", 1.0), ("gpu", 3.0)]
+
+AFFINITY = {
+    ("compute", "gpu"): 0.5,
+    ("compute", "cpu"): 1.5,
+    ("compute", "mixed"): 1.0,
+    ("memory", "gpu"): 1.6,
+    ("memory", "cpu"): 0.7,
+    ("memory", "mixed"): 1.0,
+    ("mixed", "gpu"): 1.1,
+    ("mixed", "cpu"): 1.1,
+    ("mixed", "mixed"): 0.8,
+}
+
+NATURES = ["compute", "memory", "mixed"]
+
+
+class Job:
+    def __init__(self, jid, weight, ept):
+        self.id = jid
+        self.weight = weight
+        self.ept = ept
+
+
+def synth_job(jid, rng):
+    nature = NATURES[rng.pick_weighted([0.35, 0.35, 0.30])]
+    weight = round_half_away(rng.uniform(1.0, 255.0))
+    if weight < f32(1.0):
+        weight = f32(1.0)
+    base = rng.uniform(10.0, 200.0)
+    ept = []
+    for kind, quality in PARK:
+        v = f32(f32(base * f32(AFFINITY[(nature, kind)])) * f32(quality))
+        if v < f32(10.0):
+            v = f32(10.0)
+        if v > f32(255.0):
+            v = f32(255.0)
+        ept.append(round_half_away(v))
+    rng.noise_factor(f32(0.15))  # actual_factor: drawn but unused here
+    return Job(jid, weight, ept)
+
+
+def generate_trace(n_jobs, seed):
+    """WorkloadSpec::default(): BF=3 random, IT=8 after II=40 jobs."""
+    rng = Rng(seed)
+    events = []  # (tick, Job)
+    tick = 0
+    emitted = 0
+    since_idle = 0
+    while emitted < n_jobs:
+        tick += 1
+        if since_idle >= 40:
+            tick += 8
+            since_idle = 0
+        burst = rng.range(1, 3) if rng.chance(0.45) else 0
+        for _ in range(min(burst, n_jobs - emitted)):
+            emitted += 1
+            events.append((tick, synth_job(emitted, rng)))
+            since_idle += 1
+    return events
+
+
+class Slot:
+    def __init__(self, jid, w, e, t, alpha_pt):
+        self.id = jid
+        self.w = w
+        self.e = e
+        self.t = t
+        self.alpha_pt = alpha_pt
+        self.n = 0
+
+
+class SosEngine:
+    """Golden engine at (machines=5, depth=10, alpha=0.5, INT8)."""
+
+    def __init__(self):
+        self.schedules = [[] for _ in range(5)]
+        self.depth = 10
+        self.pending = []
+
+    def submit(self, job):
+        self.pending.append(job)
+
+    def is_idle(self):
+        return not self.pending and all(not vs for vs in self.schedules)
+
+    def cost_of(self, vs, j_w, j_eps, j_t):
+        if len(vs) == self.depth:
+            return None
+        sum_hi = f32(0.0)
+        sum_lo = f32(0.0)
+        pos = 0
+        for s in vs:
+            if s.t >= j_t:
+                sum_hi = f32(sum_hi + f32(s.e - f32(float(s.n))))
+                pos += 1
+            else:
+                sum_lo = f32(sum_lo + f32(s.w - f32(f32(float(s.n)) * s.t)))
+        total = f32(f32(j_w * f32(j_eps + sum_hi)) + f32(j_eps * sum_lo))
+        return total, pos
+
+    def assign(self, job):
+        best = None  # (machine, cost, pos)
+        for m, vs in enumerate(self.schedules):
+            wq, eq, tq = q_job_int8(job.weight, job.ept[m])
+            c = self.cost_of(vs, wq, eq, tq)
+            if c is None:
+                continue
+            total, pos = c
+            if best is None or total < best[1]:
+                best = (m, total, pos)
+        machine, _cost, position = best
+        wq, eq, tq = q_job_int8(job.weight, job.ept[machine])
+        alpha_pt = math.ceil(float(f32(f32(0.5) * eq)))
+        p = 0
+        for s in self.schedules[machine]:
+            if s.t >= tq:
+                p += 1
+            else:
+                break
+        assert p == position, f"cost pos {position} != insert pos {p}"
+        self.schedules[machine].insert(p, Slot(job.id, wq, eq, tq, alpha_pt))
+        return job.id, machine, position
+
+    def tick(self):
+        released = []
+        for m, vs in enumerate(self.schedules):
+            if vs and vs[0].n >= vs[0].alpha_pt:
+                released.append((vs.pop(0).id, m))
+        assigned = None
+        if self.pending:
+            if any(len(vs) < self.depth for vs in self.schedules):
+                assigned = self.assign(self.pending.pop(0))
+        for vs in self.schedules:
+            if vs:
+                vs[0].n += 1
+        return released, assigned
+
+
+def emulate(n_jobs, seed):
+    events = generate_trace(n_jobs, seed)
+    engine = SosEngine()
+    lines = []
+    idx = 0
+    n_assigned = n_released = 0
+    for t in range(1, 200_001):
+        while idx < len(events) and events[idx][0] <= t:
+            engine.submit(events[idx][1])
+            idx += 1
+        released, assigned = engine.tick()
+        for jid, m in released:
+            lines.append(f"R {t} {jid} {m}")
+            n_released += 1
+        if assigned is not None:
+            jid, m, pos = assigned
+            lines.append(f"A {t} {jid} {m} {pos}")
+            n_assigned += 1
+        if engine.is_idle() and idx == len(events):
+            break
+    assert n_assigned == n_jobs, f"assigned {n_assigned}"
+    assert n_released == n_jobs, f"released {n_released}"
+    return "\n".join(lines) + "\n", t
+
+
+def main():
+    n_jobs, seed = 40, 42
+    text, drained = emulate(n_jobs, seed)
+    path = os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "rust", "tests", "golden", "sos_m1m5_seed42.txt",
+    )
+    n_lines = text.count("\n")
+    if "--bless" in sys.argv[1:]:
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        with open(path, "w") as fh:
+            fh.write(text)
+        print(f"blessed {n_lines} lines (drained at tick {drained}) to {path}")
+        return
+    # Default: cross-check the pinned golden against this independent
+    # implementation; never touch the file without --bless.
+    with open(path) as fh:
+        pinned = fh.read()
+    if pinned != text:
+        sys.exit(
+            f"DIVERGENCE: {path} does not match the Python emulation "
+            f"(pinned {pinned.count(chr(10))} lines, emulated {n_lines}); "
+            "if the Rust semantics changed intentionally, re-bless with "
+            "STANNIC_BLESS=1 cargo test golden (or --bless here)"
+        )
+    print(f"cross-check OK: {path} matches the Python emulation ({n_lines} lines)")
+
+
+if __name__ == "__main__":
+    main()
