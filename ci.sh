@@ -2,14 +2,29 @@
 # Repo CI: tier-1 verify plus the runnable smoke paths.
 #   tier-1 : cargo build --release && cargo test -q
 #   smoke  : quickstart example + a reduced parallel scenario sweep
+#   perf   : record the quick sweep and diff it against the committed
+#            BENCH_seed.json baseline; fails on >25% per-cell regression
+#            (override with STANNIC_PERF_THRESHOLD, e.g. =0.5) or on any
+#            schedule parity break. If the baseline is absent the run
+#            blesses a fresh one instead of diffing — commit it to pin
+#            the perf record (and re-bless by deleting it after an
+#            intentional perf-semantics change).
 set -euo pipefail
 cd "$(dirname "$0")"
 
-echo "== tier-1: build (release) =="
-cargo build --release
+# STANNIC_CI_SKIP_TIER1=1 skips the build+test stage for callers that
+# already ran it (e.g. the GitHub workflow's smoke job, which depends on
+# the build-test job); the remaining stages rebuild-on-demand via the
+# cargo cache.
+if [ -z "${STANNIC_CI_SKIP_TIER1:-}" ]; then
+  echo "== tier-1: build (release) =="
+  cargo build --release
 
-echo "== tier-1: test =="
-cargo test -q
+  echo "== tier-1: test =="
+  cargo test -q
+else
+  echo "== tier-1: skipped (STANNIC_CI_SKIP_TIER1 set) =="
+fi
 
 echo "== smoke: quickstart example =="
 cargo run --release --example quickstart
@@ -26,5 +41,23 @@ cargo run --release -- sweep --quick --threads 1 > /tmp/stannic_sweep_1.txt
 cargo run --release -- sweep --quick --threads 8 > /tmp/stannic_sweep_8.txt
 diff /tmp/stannic_sweep_1.txt /tmp/stannic_sweep_8.txt
 echo "sweep output identical for 1 and 8 worker threads"
+
+echo "== perf: record quick sweep, diff against committed baseline =="
+# --jobs 200 (vs the quick default 60) keeps per-cell wall times in the
+# milliseconds so the throughput ratios are meaningfully above scheduler
+# jitter; loosen STANNIC_PERF_THRESHOLD on noisy hosts.
+cargo run --release -- sweep --quick --jobs 200 --record /tmp/BENCH_pr.json --label pr
+if [ -f BENCH_seed.json ]; then
+  # threshold: the binary itself reads STANNIC_PERF_THRESHOLD (default 0.25)
+  cargo run --release -- sweep diff BENCH_seed.json /tmp/BENCH_pr.json
+else
+  cp /tmp/BENCH_pr.json BENCH_seed.json
+  echo "WARNING: no committed BENCH_seed.json baseline — the perf gate is"
+  echo "WARNING: INERT this run; blessed a fresh baseline from this sweep."
+  echo "WARNING: Commit BENCH_seed.json to arm regression detection."
+  if [ -n "${GITHUB_ACTIONS:-}" ]; then
+    echo "::warning file=ci.sh::perf gate inert: no committed BENCH_seed.json baseline; commit one to arm regression detection"
+  fi
+fi
 
 echo "CI OK"

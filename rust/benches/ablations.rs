@@ -3,12 +3,12 @@
 //! tree-adder vs accumulator Cost Calculator, and the Section 5 batched
 //! host-interface critique.
 //!
-//! Run: `cargo bench --bench ablations` (`-- --quick` for smoke).
+//! Run: `cargo bench --bench ablations` (`-- --bench-smoke` for smoke).
 
 use stannic::report::{ablations, Effort};
 
 fn main() {
-    let quick = std::env::args().any(|a| a == "--quick");
+    let quick = stannic::bench::smoke_mode();
     let effort = if quick { Effort::Quick } else { Effort::Paper };
 
     let text = ablations::render(

@@ -3,7 +3,7 @@
 //! configuration (d); plus measured per-iteration simulator cost on
 //! this host (the repo's own overhead, not a paper number).
 //!
-//! Run: `cargo bench --bench arch_compare`.
+//! Run: `cargo bench --bench arch_compare` (`-- --bench-smoke` for smoke).
 
 use stannic::bench::{bench, fmt_ns, BenchOpts, Table};
 use stannic::core::MachinePark;
@@ -28,13 +28,19 @@ fn drive<S: ArchSim>(mut sim: S, trace: &stannic::workload::Trace) -> u64 {
 }
 
 fn main() {
+    let smoke = stannic::bench::smoke_mode();
     print!("{}", fig18::render(&fig18::run()));
 
-    println!("\nhost-side simulator cost (cycle-accurate models, 300 jobs)");
+    let all = &stannic::hw::resources::PAPER_CONFIGS;
+    // smoke mode: two configs and a shorter trace keep CI wall time flat
+    let configs = if smoke { &all[..2.min(all.len())] } else { &all[..] };
+    let jobs = if smoke { 100 } else { 300 };
+
+    println!("\nhost-side simulator cost (cycle-accurate models, {jobs} jobs)");
     let mut t = Table::new(&["sim", "config", "host time", "sim cycles"]);
-    for &(m, d) in &stannic::hw::resources::PAPER_CONFIGS {
+    for &(m, d) in configs {
         let park = MachinePark::cycled(m);
-        let trace = generate_trace(&WorkloadSpec::default(), &park, 300, 7);
+        let trace = generate_trace(&WorkloadSpec::default(), &park, jobs, 7);
         let mut cycles = 0;
         let meas = bench(BenchOpts::quick(), || {
             cycles = drive(HerculesSim::new(m, d, 0.5, Precision::Int8), &trace);

@@ -2,12 +2,12 @@
 //! across system configuration sizes (depth 10), with the PCIe
 //! component of Stannic's latency broken out.
 //!
-//! Run: `cargo bench --bench avx_scaling` (`-- --quick` for smoke).
+//! Run: `cargo bench --bench avx_scaling` (`-- --bench-smoke` for smoke).
 
 use stannic::report::{fig17, Effort};
 
 fn main() {
-    let quick = std::env::args().any(|a| a == "--quick");
+    let quick = stannic::bench::smoke_mode();
     let effort = if quick { Effort::Quick } else { Effort::Paper };
 
     let rows = fig17::run(effort, 42);

@@ -2,12 +2,12 @@
 //! Section 8.4 workload scenarios: per-machine job distribution and
 //! average latency, plus fairness and load-balance CV.
 //!
-//! Run: `cargo bench --bench baselines` (`-- --quick` for smoke).
+//! Run: `cargo bench --bench baselines` (`-- --bench-smoke` for smoke).
 
 use stannic::report::{fig19, Effort};
 
 fn main() {
-    let quick = std::env::args().any(|a| a == "--quick");
+    let quick = stannic::bench::smoke_mode();
     let effort = if quick { Effort::Quick } else { Effort::Paper };
 
     let results = fig19::run(effort, 42);

@@ -6,7 +6,7 @@
 //! * XLA cost-query dispatch (the accelerator round-trip)
 //! * end-to-end coordinator throughput
 //!
-//! Run: `cargo bench --bench hotpath`.
+//! Run: `cargo bench --bench hotpath` (`-- --bench-smoke` for smoke).
 
 use stannic::bench::{bench, fmt_ns, BenchOpts, Table};
 use stannic::config::EngineKind;
@@ -19,13 +19,16 @@ use stannic::sim::{stannic::StannicSim, ArchSim};
 use stannic::workload::{generate_trace, WorkloadSpec};
 
 fn main() {
+    let opts = BenchOpts::from_args();
+    let smoke = stannic::bench::smoke_mode();
     let mut t = Table::new(&["hot path", "mean", "min", "per-unit"]);
 
     // 1. golden engine: saturated tick stream (insert-heavy)
     {
+        let jobs = if smoke { 300 } else { 2000 };
         let park = MachinePark::cycled(10);
-        let trace = generate_trace(&WorkloadSpec::default(), &park, 2000, 3);
-        let m = bench(BenchOpts::default(), || {
+        let trace = generate_trace(&WorkloadSpec::default(), &park, jobs, 3);
+        let m = bench(opts, || {
             let mut e = SosEngine::new(10, 20, 0.5, Precision::Int8);
             let mut events = trace.events().iter().peekable();
             let mut tick = 0u64;
@@ -42,18 +45,19 @@ fn main() {
             std::hint::black_box(tick);
         });
         t.row(vec![
-            "SosEngine full run (2k jobs, 10x20)".into(),
+            format!("SosEngine full run ({jobs} jobs, 10x20)"),
             fmt_ns(m.mean_ns),
             fmt_ns(m.min_ns),
-            format!("{}/job", fmt_ns(m.mean_ns / 2000.0)),
+            format!("{}/job", fmt_ns(m.mean_ns / jobs as f64)),
         ]);
     }
 
     // 2. stannic sim tick
     {
+        let jobs = if smoke { 200 } else { 1000 };
         let park = MachinePark::cycled(10);
-        let trace = generate_trace(&WorkloadSpec::default(), &park, 1000, 3);
-        let m = bench(BenchOpts::default(), || {
+        let trace = generate_trace(&WorkloadSpec::default(), &park, jobs, 3);
+        let m = bench(opts, || {
             let mut s = StannicSim::new(10, 20, 0.5, Precision::Int8);
             let mut events = trace.events().iter().peekable();
             let mut tick = 0u64;
@@ -69,10 +73,10 @@ fn main() {
             }
         });
         t.row(vec![
-            "StannicSim full run (1k jobs, 10x20)".into(),
+            format!("StannicSim full run ({jobs} jobs, 10x20)"),
             fmt_ns(m.mean_ns),
             fmt_ns(m.min_ns),
-            format!("{}/job", fmt_ns(m.mean_ns / 1000.0)),
+            format!("{}/job", fmt_ns(m.mean_ns / jobs as f64)),
         ]);
     }
 
@@ -97,7 +101,7 @@ fn main() {
         }
         let j_eps = vec![30.0f32; 10];
         let j_t: Vec<f32> = j_eps.iter().map(|e| 12.0 / e).collect();
-        let m = bench(BenchOpts::default(), || {
+        let m = bench(opts, || {
             std::hint::black_box(eng.cost_select(&state, 12.0, &j_eps, &j_t).unwrap());
         });
         t.row(vec![
@@ -112,19 +116,20 @@ fn main() {
 
     // 4. end-to-end coordinator
     {
+        let jobs = if smoke { 200 } else { 1000 };
         let park = MachinePark::paper_m1_m5();
-        let trace = generate_trace(&WorkloadSpec::default(), &park, 1000, 9);
-        let m = bench(BenchOpts::default(), || {
+        let trace = generate_trace(&WorkloadSpec::default(), &park, jobs, 9);
+        let m = bench(opts, || {
             let engine =
                 build_engine(EngineKind::Native, 5, 10, 0.5, Precision::Int8).unwrap();
             let r = serve(engine, &trace, &ServeOpts::default()).unwrap();
             std::hint::black_box(r.completions.len());
         });
         t.row(vec![
-            "coordinator e2e (1k jobs, native)".into(),
+            format!("coordinator e2e ({jobs} jobs, native)"),
             fmt_ns(m.mean_ns),
             fmt_ns(m.min_ns),
-            format!("{}/job", fmt_ns(m.mean_ns / 1000.0)),
+            format!("{}/job", fmt_ns(m.mean_ns / jobs as f64)),
         ]);
     }
 

@@ -1,13 +1,13 @@
 //! Bench: Fig. 7 — the quantization study. Regenerates all four panels
 //! at paper effort and times the study.
 //!
-//! Run: `cargo bench --bench quantization` (add `-- --quick` for smoke).
+//! Run: `cargo bench --bench quantization` (`-- --bench-smoke` for smoke).
 
 use stannic::bench::{bench, fmt_ns, BenchOpts};
 use stannic::report::{fig7, Effort};
 
 fn main() {
-    let quick = std::env::args().any(|a| a == "--quick");
+    let quick = stannic::bench::smoke_mode();
     let effort = if quick { Effort::Quick } else { Effort::Paper };
 
     let reports = fig7::run(effort, 42);

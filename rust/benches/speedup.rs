@@ -2,12 +2,12 @@
 //! speedup table (software SOSC wall-clock vs simulated hardware time at
 //! 371.47 MHz) for configurations C1–C4 with power estimates.
 //!
-//! Run: `cargo bench --bench speedup` (`-- --quick` for smoke).
+//! Run: `cargo bench --bench speedup` (`-- --bench-smoke` for smoke).
 
 use stannic::report::{fig16, Effort};
 
 fn main() {
-    let quick = std::env::args().any(|a| a == "--quick");
+    let quick = stannic::bench::smoke_mode();
     let effort = if quick { Effort::Quick } else { Effort::Paper };
 
     print!("{}", fig16::render_16a(&fig16::run_16a(effort, 42)));

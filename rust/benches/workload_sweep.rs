@@ -2,13 +2,13 @@
 //! (utilization trajectory + throughput stability) plus the per-workload
 //! scheduling rate.
 //!
-//! Run: `cargo bench --bench workload_sweep` (`-- --quick` for smoke).
+//! Run: `cargo bench --bench workload_sweep` (`-- --bench-smoke` for smoke).
 
 use stannic::bench::{bench, fmt_ns, BenchOpts};
 use stannic::report::{fig15, Effort};
 
 fn main() {
-    let quick = std::env::args().any(|a| a == "--quick");
+    let quick = stannic::bench::smoke_mode();
     let effort = if quick { Effort::Quick } else { Effort::Paper };
 
     let f = fig15::run(effort, 42);

@@ -53,6 +53,24 @@ impl BenchOpts {
             max_time: Duration::from_secs(3),
         }
     }
+
+    /// Resolve options from the bench driver's argv: quick in smoke mode
+    /// ([`smoke_mode`]), full-effort otherwise.
+    pub fn from_args() -> Self {
+        if smoke_mode() {
+            Self::quick()
+        } else {
+            Self::default()
+        }
+    }
+}
+
+/// True when the bench driver was invoked with `--bench-smoke` (the CI
+/// smoke flag shared by all 8 harness-less benches) or the legacy
+/// `--quick`. CI runs one bench this way so the drivers cannot rot
+/// unnoticed without paying full paper-effort wall time.
+pub fn smoke_mode() -> bool {
+    std::env::args().any(|a| a == "--bench-smoke" || a == "--quick")
 }
 
 /// Run `f` repeatedly and collect timing statistics. `f` should perform

@@ -203,7 +203,7 @@ mod tests {
         c.engine = EngineKind::StannicSim;
         c.workload = WorkloadSpec::memory_skewed();
         let j = c.to_json();
-        let back = RunConfig::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        let back = RunConfig::from_json(&Json::parse(&j.render()).unwrap()).unwrap();
         assert_eq!(back.machines, 20);
         assert_eq!(back.precision, Precision::Fp16);
         assert_eq!(back.engine, EngineKind::StannicSim);

@@ -49,8 +49,11 @@ impl Json {
         }
     }
 
-    /// Serialize (compact).
-    pub fn to_string(&self) -> String {
+    /// Serialize (compact). Named `render` so the inherent method no
+    /// longer shadows `std::string::ToString::to_string` (which now
+    /// routes through the [`std::fmt::Display`] impl and produces the
+    /// same text).
+    pub fn render(&self) -> String {
         let mut s = String::new();
         self.write(&mut s);
         s
@@ -122,6 +125,12 @@ impl Json {
             return Err(format!("trailing data at byte {}", p.i));
         }
         Ok(v)
+    }
+}
+
+impl std::fmt::Display for Json {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.render())
     }
 }
 
@@ -325,7 +334,7 @@ mod tests {
             ("flags", arr(vec![Json::Bool(true), Json::Null])),
             ("nested", obj(vec![("k", s("v\"esc\\aped\n"))])),
         ]);
-        let text = v.to_string();
+        let text = v.render();
         let back = Json::parse(&text).unwrap();
         assert_eq!(v, back);
     }
@@ -346,6 +355,18 @@ mod tests {
         assert!(Json::parse("[1,]").is_err());
         assert!(Json::parse("12 34").is_err());
         assert!(Json::parse(r#""unterminated"#).is_err());
+    }
+
+    #[test]
+    fn display_matches_render() {
+        let v = obj(vec![
+            ("k", num(1.5)),
+            ("s", s("x")),
+            ("a", arr(vec![Json::Null])),
+        ]);
+        assert_eq!(v.render(), format!("{v}"));
+        // ToString now resolves to the Display impl (no inherent shadow)
+        assert_eq!(v.render(), v.to_string());
     }
 
     #[test]

@@ -24,12 +24,18 @@ fn flag_specs() -> Vec<FlagSpec> {
         FlagSpec { name: "seed", help: "workload seed (default 42)", takes_value: true },
         FlagSpec { name: "engine", help: "native|stannic|hercules|xla (default native)", takes_value: true },
         FlagSpec { name: "precision", help: "FP32|FP16|INT8|INT4|Mixed (default INT8)", takes_value: true },
-        FlagSpec { name: "workload", help: "even|memory|compute|homogeneous (default even)", takes_value: true },
+        FlagSpec { name: "workload", help: "even|memory|compute|homogeneous|bursty|heavy (default even)", takes_value: true },
         FlagSpec { name: "trace", help: "replay a trace file instead of generating", takes_value: true },
         FlagSpec { name: "save-trace", help: "write the generated trace to a file", takes_value: true },
         FlagSpec { name: "threads", help: "sweep worker threads (default: one per core)", takes_value: true },
         FlagSpec { name: "engines", help: "sweep engine list, comma-separated or 'all'", takes_value: true },
         FlagSpec { name: "quick", help: "reduced-effort runs for smoke testing", takes_value: false },
+        FlagSpec { name: "scale", help: "sweep the Agon-scale grid (parks up to 140 machines)", takes_value: false },
+        FlagSpec { name: "record", help: "persist sweep results to a BENCH_<label>.json artifact at this path", takes_value: true },
+        FlagSpec { name: "label", help: "label stored in the sweep record (default 'sweep')", takes_value: true },
+        FlagSpec { name: "threshold", help: "sweep diff: relative slowdown that fails (default 0.25 or $STANNIC_PERF_THRESHOLD)", takes_value: true },
+        FlagSpec { name: "raw-ratios", help: "sweep diff: disable median-shift normalization", takes_value: false },
+        FlagSpec { name: "fail-on-shift", help: "sweep diff: also fail on a whole-grid median slowdown (same-host A/B runs)", takes_value: false },
         FlagSpec { name: "json", help: "emit machine-readable JSON where supported", takes_value: false },
     ]
 }
@@ -42,7 +48,7 @@ fn commands() -> Vec<(&'static str, &'static str)> {
         ("hw", "print resource/routing/power estimates for a configuration"),
         ("gen", "generate and print (or save) a workload trace"),
         ("stats", "summarize a workload trace (composition, bursts, EPT spread)"),
-        ("sweep", "run the parallel multi-engine scenario sweep"),
+        ("sweep", "run the parallel multi-engine scenario sweep (or `sweep diff <old.json> <new.json>`)"),
     ]
 }
 
@@ -63,6 +69,8 @@ fn parse_workload(name: &str) -> Result<WorkloadSpec> {
         "memory" => WorkloadSpec::memory_skewed(),
         "compute" => WorkloadSpec::compute_skewed(),
         "homogeneous" => WorkloadSpec::homogeneous_memory(),
+        "bursty" => WorkloadSpec::bursty(),
+        "heavy" | "heavy-tailed" => WorkloadSpec::heavy_tailed(),
         other => bail!("unknown workload {other}"),
     })
 }
@@ -146,7 +154,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             ("pcie_us", num(report.pcie.total_ns / 1000.0)),
             ("accel_cycles", num(report.accel_cycles as f64)),
         ]);
-        println!("{}", j.to_string());
+        println!("{j}");
     }
     Ok(())
 }
@@ -322,8 +330,70 @@ fn cmd_stats(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `sweep diff <old.json> <new.json>`: compare two persisted sweep
+/// records and fail (non-zero exit) on per-cell regressions beyond the
+/// threshold, parity breaks, unmeasured cells, or missing baseline
+/// coverage; `--fail-on-shift` additionally gates on a whole-grid
+/// median slowdown (meaningful for same-host A/B runs).
+fn cmd_sweep_diff(args: &Args) -> Result<()> {
+    let (old_path, new_path) = match (args.positionals.get(1), args.positionals.get(2)) {
+        (Some(a), Some(b)) => (a.as_str(), b.as_str()),
+        _ => bail!(
+            "usage: sweep diff <old.json> <new.json> [--threshold F] [--raw-ratios] [--fail-on-shift]"
+        ),
+    };
+    let load = |path: &str| -> Result<stannic::sweep::SweepRecord> {
+        let text = std::fs::read_to_string(path)?;
+        stannic::sweep::SweepRecord::parse(&text).map_err(|e| err!("parsing {path}: {e}"))
+    };
+    let old = load(old_path)?;
+    let new = load(new_path)?;
+    let threshold = match args.flag("threshold") {
+        Some(v) => v
+            .parse::<f64>()
+            .map_err(|e| err!("--threshold: expected number ({e})"))?,
+        None => match std::env::var("STANNIC_PERF_THRESHOLD") {
+            Ok(v) => v
+                .parse::<f64>()
+                .map_err(|e| err!("STANNIC_PERF_THRESHOLD: expected number ({e})"))?,
+            Err(_) => stannic::sweep::DiffOpts::default().threshold,
+        },
+    };
+    if !(0.0..1.0).contains(&threshold) {
+        bail!("threshold must be in [0, 1), got {threshold}");
+    }
+    let opts = stannic::sweep::DiffOpts {
+        threshold,
+        normalize: !args.has("raw-ratios"),
+        fail_on_shift: args.has("fail-on-shift"),
+    };
+    let report = stannic::sweep::diff_records(&old, &new, &opts);
+    print!("{}", report.render());
+    if !report.ok() {
+        bail!(
+            "perf gate failed: {} regressions, {} parity breaks, {} unmeasured, \
+             {} missing{} — re-bless the baseline if the change is intentional",
+            report.regressions(),
+            report.parity_breaks(),
+            report.unmeasured(),
+            report.only_in_old.len(),
+            if report.fail_on_shift && report.global_regression {
+                ", global slowdown"
+            } else {
+                ""
+            }
+        );
+    }
+    Ok(())
+}
+
 fn cmd_sweep(args: &Args) -> Result<()> {
-    let mut cfg = if args.has("quick") {
+    if args.positionals.first().is_some_and(|p| p == "diff") {
+        return cmd_sweep_diff(args);
+    }
+    let mut cfg = if args.has("scale") {
+        SweepConfig::at_scale()
+    } else if args.has("quick") {
         SweepConfig::quick()
     } else {
         SweepConfig::default()
@@ -356,6 +426,15 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     match results.check_parity() {
         Ok(groups) => println!("\ncross-engine schedule parity OK ({groups} comparisons)"),
         Err(e) => bail!("cross-engine parity violated: {e}"),
+    }
+    if let Some(path) = args.flag("record") {
+        let label = args.str_flag("label", "sweep");
+        let record = stannic::sweep::SweepRecord::from_results(label, &results);
+        std::fs::write(path, record.render())?;
+        eprintln!(
+            "recorded {} cells (label '{label}') to {path}",
+            record.cells.len()
+        );
     }
     eprintln!(
         "sweep wall time: {:.2?} on {} worker thread(s)",

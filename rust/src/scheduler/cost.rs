@@ -33,21 +33,22 @@ pub fn cost_of(vs: &VirtualSchedule, j_w: f32, j_eps: f32, j_t: f32) -> Option<C
     if vs.is_full() {
         return None;
     }
-    // Single fused pass over the schedule (perf: previously three
-    // separate traversals for sum_hi / sum_lo / position — see
-    // EXPERIMENTS.md §Perf). The ordering invariant additionally makes
-    // the HI set a prefix, so the branch is perfectly predictable.
-    let mut sum_hi = 0.0f32;
-    let mut sum_lo = 0.0f32;
-    let mut position = 0usize;
-    for s in vs.slots() {
-        if s.wspt >= j_t {
-            sum_hi += s.rem_hi();
-            position += 1;
-        } else {
-            sum_lo += s.rem_lo();
-        }
-    }
+    // Memoized-sum fast path (Section 3.3 opt. 3, mirroring the Stannic
+    // PE array): the schedule maintains incremental prefix/suffix sums,
+    // so a query is the position scan plus two O(1) lookups instead of a
+    // full re-accumulation of rem_hi/rem_lo over the depth — the cost of
+    // this function is paid once per machine per arrival, which made the
+    // rescan the golden engine's hottest loop.
+    let (sum_hi, sum_lo, position) = vs.threshold_read(j_t);
+    debug_assert!(
+        {
+            let want_hi = vs.sum_hi(j_t);
+            let want_lo = vs.sum_lo(j_t);
+            (sum_hi - want_hi).abs() <= 1e-2 * (1.0 + want_hi.abs())
+                && (sum_lo - want_lo).abs() <= 1e-2 * (1.0 + want_lo.abs())
+        },
+        "memoized threshold sums drifted from the rescan oracle"
+    );
     Some(CostBreakdown {
         hi: j_w * (j_eps + sum_hi),
         lo: j_eps * sum_lo,

@@ -67,8 +67,14 @@ impl SosEngine {
     pub fn new(machines: usize, depth: usize, alpha: f32, precision: Precision) -> Self {
         assert!(machines >= 1);
         assert!(alpha > 0.0 && alpha <= 1.0, "alpha in (0, 1] (Phase III)");
+        // Memoized threshold sums are only bit-exact for the fixed-point
+        // WSPT datapaths; floating datapaths keep the rescan so their
+        // schedules are unchanged (see vschedule module docs).
+        let memoized = matches!(precision, Precision::Int8 | Precision::Int4 | Precision::Mixed);
         SosEngine {
-            schedules: (0..machines).map(|_| VirtualSchedule::new(depth)).collect(),
+            schedules: (0..machines)
+                .map(|_| VirtualSchedule::with_memoization(depth, memoized))
+                .collect(),
             alpha,
             precision,
             pending: VecDeque::new(),
@@ -309,6 +315,25 @@ mod tests {
         let out = e.tick(Some(&job(9, 10.0, vec![20.0, 26.0])));
         let a = out.assigned.unwrap();
         assert_eq!(a.machine, 1, "queue-aware cost avoids the pile-up");
+    }
+
+    #[test]
+    fn memoization_tracks_datapath_exactness() {
+        for (p, want) in [
+            (Precision::Int8, true),
+            (Precision::Int4, true),
+            (Precision::Mixed, true),
+            (Precision::Fp32, false),
+            (Precision::Fp16, false),
+        ] {
+            let e = SosEngine::new(2, 4, 0.5, p);
+            assert_eq!(
+                e.schedule(0).is_memoized(),
+                want,
+                "{} memoization",
+                p.name()
+            );
+        }
     }
 
     #[test]

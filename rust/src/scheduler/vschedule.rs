@@ -1,5 +1,35 @@
 //! Virtual Schedule (Definition 3): the per-machine interim ordering of
 //! assigned-but-not-yet-released jobs, kept sorted by WSPT priority.
+//!
+//! Since the memoized-sum optimization (Section 3.3 opt. 3, the same
+//! trick the Stannic PE array implements in hardware) the schedule also
+//! carries incrementally-maintained threshold sums, so a cost query
+//! ([`crate::scheduler::cost_of`]) is a position scan plus two O(1)
+//! lookups instead of a full O(depth) re-accumulation of
+//! `rem_hi`/`rem_lo` per machine per arrival:
+//!
+//! * `memo_hi[i] - hi_bias` = prefix `Σ_{j<=i} rem_hi(j)` — the value
+//!   `sum^H` takes when slot `i` is the last member of `sigma^H`;
+//! * `memo_lo[i]` = suffix `Σ_{j>=i} rem_lo(j)` — the value `sum^L`
+//!   takes when slot `i` is the first member of `sigma^L`.
+//!
+//! `hi_bias` turns the per-tick accrue (which decrements *every* prefix
+//! by 1, because every prefix contains the head) into a single scalar
+//! add, keeping accrue O(1) like the pre-memoization code. With the
+//! quantized datapaths (integer W/eps, fixed-point T) every update is
+//! exact in f32, so the memoized reads are *bit-identical* to the
+//! rescans — pinned by the golden-schedule test, the cross-engine
+//! parity checks, and `prop_vschedule_memoized_sums_exact`.
+//!
+//! Exactness is a *datapath property*: it holds for the fixed-point
+//! WSPT schemes (INT8/INT4/Mixed — integer W/eps, UQ-format T, all
+//! sums well inside f32's exact range) but not for FP32/FP16, where
+//! `T = W/eps` carries enough significand that incremental updates can
+//! round differently than a fresh rescan. The engine therefore enables
+//! memoization per precision ([`VirtualSchedule::with_memoization`]):
+//! floating datapaths keep the original rescan in `threshold_read`, so
+//! their schedules stay bit-identical to the pre-memoization code (and
+//! to the SOSC/SIMD baselines) by construction.
 
 use crate::core::JobId;
 
@@ -45,15 +75,54 @@ impl Slot {
 pub struct VirtualSchedule {
     slots: Vec<Slot>,
     depth: usize,
+    /// Memoized prefix sums: `memo_hi[i] - hi_bias == Σ_{j<=i} rem_hi(j)`.
+    memo_hi: Vec<f32>,
+    /// Memoized suffix sums: `memo_lo[i] == Σ_{j>=i} rem_lo(j)`.
+    memo_lo: Vec<f32>,
+    /// Shared subtrahend for `memo_hi` (see module docs).
+    hi_bias: f32,
+    /// Whether memoized threshold reads are enabled (exact datapaths
+    /// only); when false, `threshold_read` falls back to the rescans.
+    memoized: bool,
 }
 
+/// Rebase `hi_bias` back to 0 before it grows past the f32 exact-integer
+/// range (2^24), where `hi_bias + 1.0` would stop changing the value.
+/// The bias grows by 1 per accrued head cycle, so this only triggers on
+/// schedules continuously occupied for ~8M ticks.
+const HI_BIAS_REBASE: f32 = 8_388_608.0; // 2^23
+
 impl VirtualSchedule {
+    /// Plain constructor: memoization OFF. Exactness of the memoized
+    /// reads is a datapath property the *caller* must vouch for, so the
+    /// default is the always-exact rescan; [`SosEngine::new`] opts into
+    /// memoization for the fixed-point precisions.
+    ///
+    /// [`SosEngine::new`]: crate::scheduler::SosEngine::new
     pub fn new(depth: usize) -> Self {
+        Self::with_memoization(depth, false)
+    }
+
+    /// Construct with memoized threshold sums enabled or disabled.
+    /// Enable only for datapaths whose attribute arithmetic is exact in
+    /// f32 (integer W/eps, fixed-point T — INT8/INT4/Mixed); floating
+    /// datapaths must stay on the rescan, where incremental updates are
+    /// not bit-equal.
+    pub fn with_memoization(depth: usize, memoized: bool) -> Self {
         assert!(depth >= 1);
         VirtualSchedule {
             slots: Vec::with_capacity(depth),
             depth,
+            memo_hi: Vec::with_capacity(depth),
+            memo_lo: Vec::with_capacity(depth),
+            hi_bias: 0.0,
+            memoized,
         }
+    }
+
+    /// True when cost queries use the memoized sums (exact datapaths).
+    pub fn is_memoized(&self) -> bool {
+        self.memoized
     }
 
     #[inline]
@@ -81,49 +150,122 @@ impl VirtualSchedule {
         self.slots.first()
     }
 
-    #[inline]
-    pub fn head_mut(&mut self) -> Option<&mut Slot> {
-        self.slots.first_mut()
-    }
-
     pub fn slots(&self) -> &[Slot] {
         &self.slots
     }
 
     /// Insertion index for a job with WSPT `t`: after every job with
     /// `wspt >= t` (Eq. 2 places ties in the sigma^H set, so an equal-
-    /// priority incumbent stays ahead of the newcomer).
+    /// priority incumbent stays ahead of the newcomer). The ordering
+    /// invariant (non-increasing `wspt`) makes `wspt >= t` a prefix
+    /// property, so this is an O(log depth) binary search.
     pub fn position_for(&self, t: f32) -> usize {
-        self.slots.iter().take_while(|s| s.wspt >= t).count()
+        self.slots.partition_point(|s| s.wspt >= t)
     }
 
     /// Insert a job at its WSPT position. Panics if full (the scheduler
     /// must never select a full machine — Section 6.2.2 "full V_i s can
     /// not be assigned new jobs").
+    ///
+    /// Memo maintenance mirrors the PE array's Insert iteration (Table
+    /// 2): slots behind the newcomer gain `rem_hi(new)` in their prefix,
+    /// slots ahead gain `rem_lo(new)` in their suffix, and the newcomer's
+    /// own sums extend its neighbours'.
     pub fn insert(&mut self, slot: Slot) -> usize {
         assert!(!self.is_full(), "insert into full virtual schedule");
         let pos = self.position_for(slot.wspt);
+        if self.memoized {
+            let rem_hi = slot.rem_hi();
+            let rem_lo = slot.rem_lo();
+            for m in &mut self.memo_hi[pos..] {
+                *m += rem_hi;
+            }
+            for m in &mut self.memo_lo[..pos] {
+                *m += rem_lo;
+            }
+            let prev_hi = if pos > 0 { self.memo_hi[pos - 1] } else { self.hi_bias };
+            let new_hi = prev_hi + rem_hi;
+            let new_lo = rem_lo + self.memo_lo.get(pos).copied().unwrap_or(0.0);
+            self.memo_hi.insert(pos, new_hi);
+            self.memo_lo.insert(pos, new_lo);
+        }
         self.slots.insert(pos, slot);
         pos
     }
 
     /// Remove and return the head job (a POP iteration's release).
+    ///
+    /// The departing head leaves every remaining prefix, so every true
+    /// prefix drops by `rem_hi(head)` — the PE array's `Δα` broadcast —
+    /// which the bias representation absorbs as one scalar add. Suffixes
+    /// never contained a slot to their left and are untouched.
     pub fn pop_head(&mut self) -> Option<Slot> {
         if self.slots.is_empty() {
-            None
-        } else {
-            Some(self.slots.remove(0))
+            return None;
         }
+        if self.memoized {
+            let delta_alpha = self.memo_hi[0] - self.hi_bias;
+            self.memo_hi.remove(0);
+            self.memo_lo.remove(0);
+            // reset the bias whenever the schedule drains (len 1 here
+            // means empty after the remove below) so it can't creep
+            self.hi_bias = if self.slots.len() == 1 { 0.0 } else { self.hi_bias + delta_alpha };
+        }
+        Some(self.slots.remove(0))
     }
 
     /// One cycle of virtual work on the head (Phase III discrete form).
+    /// The head's `rem_hi` drops by 1 (bias add covers every prefix) and
+    /// its `rem_lo` by its stored WSPT (only suffix 0 contains the head).
     pub fn accrue(&mut self) {
         if let Some(h) = self.slots.first_mut() {
             h.n += 1;
+            if self.memoized {
+                self.hi_bias += 1.0;
+                self.memo_lo[0] -= h.wspt;
+                if self.hi_bias >= HI_BIAS_REBASE {
+                    for m in &mut self.memo_hi {
+                        *m -= self.hi_bias;
+                    }
+                    self.hi_bias = 0.0;
+                }
+            }
         }
     }
 
+    /// Threshold read for a probe priority `t`: the insertion position
+    /// `|sigma^H|` (O(log depth) binary search) plus `sum^H` / `sum^L`
+    /// of Eq. (4)/(5) in two O(1) lookups — the software form of the PE
+    /// array's volunteered threshold values (Section 6.2.1). On
+    /// non-memoized (floating-datapath) schedules this is the original
+    /// O(depth) rescan, bit-identical to the pre-memoization engine.
+    pub fn threshold_read(&self, t: f32) -> (f32, f32, usize) {
+        if !self.memoized {
+            // the pre-memoization fused single pass, kept verbatim so
+            // floating-datapath schedules stay bit-identical (and pay
+            // one traversal, not three)
+            let mut sum_hi = 0.0f32;
+            let mut sum_lo = 0.0f32;
+            let mut pos = 0usize;
+            for s in &self.slots {
+                if s.wspt >= t {
+                    sum_hi += s.rem_hi();
+                    pos += 1;
+                } else {
+                    sum_lo += s.rem_lo();
+                }
+            }
+            return (sum_hi, sum_lo, pos);
+        }
+        let pos = self.position_for(t);
+        let sum_hi = if pos > 0 { self.memo_hi[pos - 1] - self.hi_bias } else { 0.0 };
+        let sum_lo = self.memo_lo.get(pos).copied().unwrap_or(0.0);
+        (sum_hi, sum_lo, pos)
+    }
+
     /// `sum^H` of Eq. (4): remaining-EPT mass of jobs with priority >= t.
+    /// Reference rescan — the memoized [`Self::threshold_read`] must
+    /// agree with it (exactly, under quantized datapaths).
     pub fn sum_hi(&self, t: f32) -> f32 {
         self.slots
             .iter()
@@ -133,6 +275,7 @@ impl VirtualSchedule {
     }
 
     /// `sum^L` of Eq. (5): remaining-weight mass of jobs with priority < t.
+    /// Reference rescan counterpart of [`Self::threshold_read`].
     pub fn sum_lo(&self, t: f32) -> f32 {
         self.slots
             .iter()
@@ -242,6 +385,78 @@ mod tests {
         let mut v = VirtualSchedule::new(1);
         v.insert(slot(1, 10.0, 10.0));
         v.insert(slot(2, 10.0, 10.0));
+    }
+
+    #[test]
+    fn plain_constructor_defaults_to_rescan() {
+        assert!(!VirtualSchedule::new(4).is_memoized());
+        assert!(VirtualSchedule::with_memoization(4, true).is_memoized());
+    }
+
+    #[test]
+    fn threshold_read_matches_rescan_oracle() {
+        let mut v = VirtualSchedule::with_memoization(8, true);
+        v.insert(slot(1, 40.0, 20.0)); // T=2.0
+        v.insert(slot(2, 20.0, 20.0)); // T=1.0
+        v.insert(slot(3, 10.0, 20.0)); // T=0.5
+        for _ in 0..3 {
+            v.accrue();
+        }
+        for t in [0.1, 0.5, 1.0, 2.0, 9.0] {
+            let (hi, lo, pos) = v.threshold_read(t);
+            assert_eq!(hi, v.sum_hi(t), "probe {t}");
+            assert_eq!(lo, v.sum_lo(t), "probe {t}");
+            assert_eq!(pos, v.position_for(t), "probe {t}");
+        }
+        // pop the head, probe again — Δα propagation
+        assert_eq!(v.pop_head().unwrap().id, 1);
+        for t in [0.1, 0.5, 1.0, 9.0] {
+            let (hi, lo, pos) = v.threshold_read(t);
+            assert_eq!(hi, v.sum_hi(t), "post-pop probe {t}");
+            assert_eq!(lo, v.sum_lo(t), "post-pop probe {t}");
+            assert_eq!(pos, v.position_for(t), "post-pop probe {t}");
+        }
+    }
+
+    #[test]
+    fn memoized_sums_exact_under_random_quantized_drive() {
+        // Random insert/accrue/pop with the INT8 datapath (integer W and
+        // eps, UQ4.4 T): the memoized reads must be bit-identical to the
+        // rescans — the property the golden engine's cost path relies on.
+        use crate::workload::Rng;
+        let mut rng = Rng::new(4242);
+        let depth = 10;
+        let mut v = VirtualSchedule::with_memoization(depth, true);
+        let mut id = 1u64;
+        for step in 0..4000 {
+            if v.head().is_some_and(|h| h.ready()) {
+                v.pop_head();
+            }
+            if !v.is_full() && rng.chance(0.4) {
+                let w = rng.uniform(1.0, 255.0).round();
+                let e = rng.uniform(10.0, 255.0).round();
+                let t = crate::core::fixed_round(w / e, 4, 4);
+                v.insert(Slot {
+                    id,
+                    weight: w,
+                    ept: e,
+                    wspt: t,
+                    alpha_pt: (0.5 * e).ceil() as u32,
+                    n: 0,
+                });
+                id += 1;
+            }
+            let probe = crate::core::fixed_round(
+                rng.uniform(1.0, 255.0).round() / rng.uniform(10.0, 255.0).round(),
+                4,
+                4,
+            );
+            let (hi, lo, pos) = v.threshold_read(probe);
+            assert_eq!(hi, v.sum_hi(probe), "step {step}: memoized sum_hi drifted");
+            assert_eq!(lo, v.sum_lo(probe), "step {step}: memoized sum_lo drifted");
+            assert_eq!(pos, v.position_for(probe));
+            v.accrue();
+        }
     }
 
     #[test]

@@ -18,8 +18,15 @@
 //! engine is excluded: it needs compiled artifacts and a PJRT runtime,
 //! neither of which exists offline.
 
+pub mod record;
+
+pub use record::{
+    diff_records, CellRecord, CellVerdict, DiffOpts, DiffReport, SweepRecord, RECORD_SCHEMA,
+};
+
 use std::collections::{HashMap, VecDeque};
 use std::sync::Mutex;
+use std::time::Instant;
 
 use crate::baselines::{SimdSos, SoscEngine};
 use crate::bench::Table;
@@ -129,6 +136,11 @@ pub struct CellResult {
     pub accel_cycles: u64,
     /// Mean fraction of machines holding in-flight work per tick.
     pub utilization: f64,
+    /// Host wall-clock spent running this cell, in nanoseconds. The only
+    /// non-deterministic field: excluded from `render()` (which must be
+    /// byte-identical for any worker count) but persisted by
+    /// [`record::SweepRecord`] as the perf trajectory across commits.
+    pub wall_ns: u64,
 }
 
 /// Sweep grid configuration.
@@ -179,6 +191,26 @@ impl SweepConfig {
         }
     }
 
+    /// The Agon-scale grid (arXiv:2109.00665): competitive schedulers
+    /// only pull away from greedy ones on parks of ~140 machines, far
+    /// beyond the default grid. Three park sizes up to 140, the even mix
+    /// plus the two stress mixes (bursty arrivals, heavy-tailed service
+    /// times), single alpha, all engines: 3 × 3 × 1 × 1 × 5 = 45 cells.
+    /// Selected by `sweep --scale`; deliberately not the CI default.
+    pub fn at_scale() -> Self {
+        SweepConfig {
+            workloads: vec![
+                ("even".to_string(), WorkloadSpec::even()),
+                ("bursty".to_string(), WorkloadSpec::bursty()),
+                ("heavy".to_string(), WorkloadSpec::heavy_tailed()),
+            ],
+            machine_counts: vec![35, 70, 140],
+            alphas: vec![0.5],
+            jobs: 400,
+            ..Self::default()
+        }
+    }
+
     /// Expand the grid into cells, id-ordered.
     pub fn cells(&self) -> Vec<SweepCell> {
         let mut out = Vec::new();
@@ -208,8 +240,10 @@ impl SweepConfig {
     }
 }
 
-/// Run one cell to completion (single-threaded, fully deterministic).
+/// Run one cell to completion (single-threaded; deterministic except for
+/// the measured `wall_ns`).
 pub fn run_cell(cell: &SweepCell) -> CellResult {
+    let wall_started = Instant::now();
     // cycled(5) is exactly the paper M1-M5 park, so one constructor
     // covers every grid size.
     let park = MachinePark::cycled(cell.machines);
@@ -269,6 +303,9 @@ pub fn run_cell(cell: &SweepCell) -> CellResult {
         stalls,
         accel_cycles: engine.cycles(),
         utilization: busy_machine_ticks as f64 / (cell.machines as u64 * tick) as f64,
+        // floor of 1 so a coarse clock can never record an unmeasurable
+        // (zero-throughput) cell into a perf artifact
+        wall_ns: wall_started.elapsed().as_nanos().max(1) as u64,
     }
 }
 
@@ -457,6 +494,23 @@ mod tests {
         assert!(r.p50 <= r.p95 && r.p95 <= r.p99);
         assert!(r.utilization > 0.0 && r.utilization <= 1.0);
         assert!(r.ticks > 0);
+        assert!(r.wall_ns > 0, "wall time must be measured for the perf record");
+    }
+
+    #[test]
+    fn scale_grid_reaches_agon_parks() {
+        let cfg = SweepConfig::at_scale();
+        assert!(
+            cfg.machine_counts.iter().any(|&m| m >= 140),
+            "Agon-scale grid must include a 140-machine park"
+        );
+        assert!(cfg.workloads.iter().any(|(n, _)| n == "bursty"));
+        assert!(cfg.workloads.iter().any(|(n, _)| n == "heavy"));
+        let cells = cfg.cells();
+        assert!(cells.len() >= 24, "scale grid has {} cells", cells.len());
+        for (i, c) in cells.iter().enumerate() {
+            assert_eq!(c.id, i, "dense ids");
+        }
     }
 
     #[test]

@@ -1,0 +1,804 @@
+//! Persisted sweep results + cross-commit perf diffing — the repo's
+//! benchmarking backbone.
+//!
+//! The paper's headline claims are throughput claims, yet bench tables
+//! printed to a terminal evaporate. This module makes every sweep a
+//! durable, machine-readable perf observation: [`SweepRecord`]
+//! serializes per-cell results (scenario key, schedule digest, the
+//! deterministic quality metrics, and the measured wall time) through
+//! [`crate::jsonio`] into a `BENCH_<label>.json` artifact, and
+//! [`diff_records`] compares two artifacts cell-by-cell so CI can fail a
+//! PR that slows a cell down or — worse — silently changes a schedule
+//! (a digest mismatch is a parity break, never a perf delta).
+//!
+//! Wall-clock comparisons across commits are noisy, so classification
+//! normalizes each cell's throughput ratio by the *median* ratio across
+//! the grid ("the machine got uniformly slower" is separated from "this
+//! cell regressed"); a median shift beyond the threshold is reported
+//! prominently as a whole-grid slowdown but only fails the gate under
+//! [`DiffOpts::fail_on_shift`], because across hosts it is
+//! indistinguishable from a slower machine. Set
+//! [`DiffOpts::normalize`] to `false` for raw ratios.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::time::{SystemTime, UNIX_EPOCH};
+
+use crate::bench::Table;
+use crate::jsonio::{arr, num, obj, s, Json};
+
+use super::{CellResult, SweepResults};
+
+/// Schema tag embedded in every artifact, bumped on breaking layout
+/// changes so `sweep diff` can reject mismatched files with a clear
+/// message instead of a field error.
+pub const RECORD_SCHEMA: &str = "stannic.sweep.record.v1";
+
+/// One persisted sweep cell: the full scenario key, the deterministic
+/// outcome (digest + quality metrics), and the measured wall time.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CellRecord {
+    pub engine: String,
+    pub workload: String,
+    pub machines: usize,
+    pub depth: usize,
+    pub alpha: f32,
+    pub precision: String,
+    pub jobs: usize,
+    pub seed: u64,
+    /// FNV-1a digest of the deterministic outcome; equal scenarios with
+    /// different digests mean scheduling semantics changed.
+    pub digest: String,
+    pub jobs_per_machine: Vec<usize>,
+    pub avg_latency: f64,
+    pub p50: u64,
+    pub p95: u64,
+    pub p99: u64,
+    pub ticks: u64,
+    pub stalls: u64,
+    pub accel_cycles: u64,
+    pub utilization: f64,
+    pub fairness: f64,
+    pub load_cv: f64,
+    pub throughput: f64,
+    /// Host wall-clock for the cell, ns (the only non-deterministic field).
+    pub wall_ns: u64,
+}
+
+impl CellRecord {
+    pub fn from_result(r: &CellResult) -> CellRecord {
+        let mut rec = CellRecord {
+            engine: r.cell.engine.name().to_string(),
+            workload: r.cell.workload.clone(),
+            machines: r.cell.machines,
+            depth: r.cell.depth,
+            alpha: r.cell.alpha,
+            precision: r.cell.precision.name().to_string(),
+            jobs: r.cell.jobs,
+            seed: r.cell.seed,
+            digest: String::new(),
+            jobs_per_machine: r.metrics.jobs_per_machine.clone(),
+            avg_latency: r.metrics.avg_latency,
+            p50: r.p50,
+            p95: r.p95,
+            p99: r.p99,
+            ticks: r.ticks,
+            stalls: r.stalls,
+            accel_cycles: r.accel_cycles,
+            utilization: r.utilization,
+            fairness: r.metrics.fairness,
+            load_cv: r.metrics.load_balance_cv,
+            throughput: r.metrics.throughput,
+            wall_ns: r.wall_ns,
+        };
+        rec.digest = rec.compute_digest();
+        rec
+    }
+
+    /// Scenario key: everything that must match for two cells (from two
+    /// artifacts) to be the same measurement.
+    pub fn key(&self) -> String {
+        format!(
+            "{}|{}|m{}|d{}|a{:.4}|{}|j{}|s{}",
+            self.engine,
+            self.workload,
+            self.machines,
+            self.depth,
+            self.alpha,
+            self.precision,
+            self.jobs,
+            self.seed
+        )
+    }
+
+    /// Digest of the deterministic outcome. Every input is persisted, so
+    /// a parsed record recomputes the identical value (f64 `Display`
+    /// round-trips exactly).
+    pub fn compute_digest(&self) -> String {
+        let mut canon = String::new();
+        let _ = write!(
+            canon,
+            "{:?}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}",
+            self.jobs_per_machine,
+            self.ticks,
+            self.stalls,
+            self.p50,
+            self.p95,
+            self.p99,
+            self.accel_cycles,
+            self.avg_latency,
+            self.utilization,
+            self.fairness,
+            self.throughput
+        );
+        format!("{:016x}", fnv1a64(canon.as_bytes()))
+    }
+
+    /// Scheduling throughput: jobs scheduled per wall-clock second.
+    pub fn jobs_per_sec(&self) -> f64 {
+        if self.wall_ns == 0 {
+            0.0
+        } else {
+            self.jobs as f64 / (self.wall_ns as f64 / 1e9)
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("engine", s(self.engine.clone())),
+            ("workload", s(self.workload.clone())),
+            ("machines", num(self.machines as f64)),
+            ("depth", num(self.depth as f64)),
+            ("alpha", num(f64::from(self.alpha))),
+            ("precision", s(self.precision.clone())),
+            ("jobs", num(self.jobs as f64)),
+            // u64-exact fields go through strings: jsonio numbers are f64
+            ("seed", s(self.seed.to_string())),
+            ("digest", s(self.digest.clone())),
+            (
+                "jobs_per_machine",
+                arr(self.jobs_per_machine.iter().map(|&c| num(c as f64)).collect()),
+            ),
+            ("avg_latency", num(self.avg_latency)),
+            ("p50", num(self.p50 as f64)),
+            ("p95", num(self.p95 as f64)),
+            ("p99", num(self.p99 as f64)),
+            ("ticks", num(self.ticks as f64)),
+            ("stalls", num(self.stalls as f64)),
+            ("accel_cycles", num(self.accel_cycles as f64)),
+            ("utilization", num(self.utilization)),
+            ("fairness", num(self.fairness)),
+            ("load_cv", num(self.load_cv)),
+            ("throughput", num(self.throughput)),
+            ("wall_ns", s(self.wall_ns.to_string())),
+            ("jobs_per_sec", num(self.jobs_per_sec())),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<CellRecord, String> {
+        Ok(CellRecord {
+            engine: get_str(j, "engine")?,
+            workload: get_str(j, "workload")?,
+            machines: get_uint(j, "machines")? as usize,
+            depth: get_uint(j, "depth")? as usize,
+            alpha: get_f64(j, "alpha")? as f32,
+            precision: get_str(j, "precision")?,
+            jobs: get_uint(j, "jobs")? as usize,
+            seed: get_u64_str(j, "seed")?,
+            digest: get_str(j, "digest")?,
+            jobs_per_machine: get_arr(j, "jobs_per_machine")?
+                .iter()
+                .map(|v| {
+                    v.as_f64()
+                        .ok_or_else(|| "non-numeric jobs_per_machine entry".to_string())
+                        .and_then(|n| uint_value(n, "jobs_per_machine entry"))
+                        .map(|n| n as usize)
+                })
+                .collect::<Result<Vec<usize>, String>>()?,
+            avg_latency: get_f64(j, "avg_latency")?,
+            p50: get_uint(j, "p50")?,
+            p95: get_uint(j, "p95")?,
+            p99: get_uint(j, "p99")?,
+            ticks: get_uint(j, "ticks")?,
+            stalls: get_uint(j, "stalls")?,
+            accel_cycles: get_uint(j, "accel_cycles")?,
+            utilization: get_f64(j, "utilization")?,
+            fairness: get_f64(j, "fairness")?,
+            load_cv: get_f64(j, "load_cv")?,
+            throughput: get_f64(j, "throughput")?,
+            wall_ns: get_u64_str(j, "wall_ns")?,
+        })
+    }
+}
+
+/// A persisted sweep: label + per-cell records, serializable to/from the
+/// `BENCH_<label>.json` artifact format.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepRecord {
+    pub label: String,
+    /// Unix seconds at record time (0 when the clock is unavailable).
+    pub created_unix: u64,
+    /// Worker threads the sweep ran on (informational).
+    pub threads: usize,
+    pub cells: Vec<CellRecord>,
+}
+
+impl SweepRecord {
+    pub fn from_results(label: &str, results: &SweepResults) -> SweepRecord {
+        SweepRecord {
+            label: label.to_string(),
+            created_unix: SystemTime::now()
+                .duration_since(UNIX_EPOCH)
+                .map(|d| d.as_secs())
+                .unwrap_or(0),
+            threads: results.threads,
+            cells: results.cells.iter().map(CellRecord::from_result).collect(),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("schema", s(RECORD_SCHEMA)),
+            ("label", s(self.label.clone())),
+            ("created_unix", s(self.created_unix.to_string())),
+            ("threads", num(self.threads as f64)),
+            ("cells", arr(self.cells.iter().map(CellRecord::to_json).collect())),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<SweepRecord, String> {
+        let schema = get_str(j, "schema")?;
+        if schema != RECORD_SCHEMA {
+            return Err(format!(
+                "unsupported sweep record schema '{schema}' (expected {RECORD_SCHEMA})"
+            ));
+        }
+        let cells = get_arr(j, "cells")?
+            .iter()
+            .map(CellRecord::from_json)
+            .collect::<Result<Vec<CellRecord>, String>>()?;
+        Ok(SweepRecord {
+            label: get_str(j, "label")?,
+            created_unix: get_u64_str(j, "created_unix")?,
+            threads: get_uint(j, "threads")? as usize,
+            cells,
+        })
+    }
+
+    /// Parse an artifact from its serialized text.
+    pub fn parse(text: &str) -> Result<SweepRecord, String> {
+        SweepRecord::from_json(&Json::parse(text)?)
+    }
+
+    /// Serialize to the artifact text (compact JSON + trailing newline).
+    pub fn render(&self) -> String {
+        let mut text = self.to_json().render();
+        text.push('\n');
+        text
+    }
+}
+
+/// Diff configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct DiffOpts {
+    /// Relative per-cell throughput drop that counts as a regression
+    /// (0.25 = fail on >25% slower).
+    pub threshold: f64,
+    /// Normalize each cell's ratio by the grid's median ratio, so a
+    /// uniformly slower/faster host doesn't flag every cell.
+    pub normalize: bool,
+    /// Also *fail* the gate when the median shift itself regressed past
+    /// the threshold. Off by default: the shift conflates real uniform
+    /// slowdowns with baseline-host-vs-CI-host speed differences, so it
+    /// is reported prominently but only gates when the caller knows
+    /// both records come from comparable hosts (same-machine A/B runs).
+    pub fail_on_shift: bool,
+}
+
+impl Default for DiffOpts {
+    fn default() -> Self {
+        DiffOpts {
+            threshold: 0.25,
+            normalize: true,
+            fail_on_shift: false,
+        }
+    }
+}
+
+/// Per-cell diff verdict.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CellVerdict {
+    Unchanged,
+    Regression,
+    Improvement,
+    /// The deterministic outcome digest changed: scheduling semantics
+    /// differ between the two records. Never a perf delta; requires an
+    /// intentional re-bless of the baseline.
+    ParityBreak,
+    /// One side has no usable throughput measurement (zero wall time in
+    /// a hand-edited or corrupt artifact — `run_cell` floors wall_ns at
+    /// 1). Fails the gate: an unmeasured cell must not pass as "ok".
+    Unmeasured,
+}
+
+impl CellVerdict {
+    pub fn name(&self) -> &'static str {
+        match self {
+            CellVerdict::Unchanged => "ok",
+            CellVerdict::Regression => "REGRESSION",
+            CellVerdict::Improvement => "improvement",
+            CellVerdict::ParityBreak => "PARITY-BREAK",
+            CellVerdict::Unmeasured => "UNMEASURED",
+        }
+    }
+}
+
+/// One matched cell in a diff.
+#[derive(Debug, Clone)]
+pub struct CellDiff {
+    pub key: String,
+    pub old_jps: f64,
+    pub new_jps: f64,
+    /// Raw new/old throughput ratio (>1 = faster).
+    pub ratio: f64,
+    /// Ratio divided by the grid's median shift (== `ratio` when
+    /// normalization is off).
+    pub norm_ratio: f64,
+    pub verdict: CellVerdict,
+}
+
+/// Result of diffing two sweep records.
+#[derive(Debug, Clone)]
+pub struct DiffReport {
+    pub old_label: String,
+    pub new_label: String,
+    pub cells: Vec<CellDiff>,
+    pub only_in_old: Vec<String>,
+    pub only_in_new: Vec<String>,
+    /// Median new/old throughput ratio across matched cells — the
+    /// whole-grid (host) speed shift.
+    pub shift: f64,
+    pub threshold: f64,
+    /// True when the median shift itself regressed past the threshold —
+    /// a uniform slowdown *or* a slower host. Only fails the gate under
+    /// [`DiffOpts::fail_on_shift`].
+    pub global_regression: bool,
+    /// Whether `global_regression` participates in [`Self::ok`].
+    pub fail_on_shift: bool,
+}
+
+impl DiffReport {
+    pub fn regressions(&self) -> usize {
+        self.count(CellVerdict::Regression)
+    }
+
+    pub fn improvements(&self) -> usize {
+        self.count(CellVerdict::Improvement)
+    }
+
+    pub fn parity_breaks(&self) -> usize {
+        self.count(CellVerdict::ParityBreak)
+    }
+
+    pub fn unmeasured(&self) -> usize {
+        self.count(CellVerdict::Unmeasured)
+    }
+
+    fn count(&self, v: CellVerdict) -> usize {
+        self.cells.iter().filter(|c| c.verdict == v).count()
+    }
+
+    /// Gate verdict: no per-cell regressions, no parity breaks, no
+    /// unmeasured cells, full coverage of the baseline grid, and (only
+    /// when `fail_on_shift` is set) no global slowdown.
+    pub fn ok(&self) -> bool {
+        self.regressions() == 0
+            && self.parity_breaks() == 0
+            && self.unmeasured() == 0
+            && !(self.fail_on_shift && self.global_regression)
+            && self.only_in_old.is_empty()
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "sweep diff: {} -> {} ({} matched cells, threshold {:.0}%)\n",
+            self.old_label,
+            self.new_label,
+            self.cells.len(),
+            self.threshold * 100.0
+        );
+        let mut t = Table::new(&["cell", "old jobs/s", "new jobs/s", "ratio", "norm", "verdict"]);
+        for c in &self.cells {
+            t.row(vec![
+                c.key.clone(),
+                format!("{:.0}", c.old_jps),
+                format!("{:.0}", c.new_jps),
+                format!("{:.3}", c.ratio),
+                format!("{:.3}", c.norm_ratio),
+                c.verdict.name().to_string(),
+            ]);
+        }
+        out.push_str(&t.render());
+        let _ = writeln!(
+            out,
+            "\ngrid shift (median ratio): {:.3}x{}",
+            self.shift,
+            if self.global_regression && self.fail_on_shift {
+                "  <- GLOBAL REGRESSION (gating: --fail-on-shift)"
+            } else if self.global_regression {
+                "  <- whole-grid slowdown (uniform regression OR slower \
+                 host; advisory — gate with --fail-on-shift)"
+            } else {
+                ""
+            }
+        );
+        for k in &self.only_in_old {
+            let _ = writeln!(out, "MISSING in new record: {k}");
+        }
+        for k in &self.only_in_new {
+            let _ = writeln!(out, "new cell (not in baseline): {k}");
+        }
+        let _ = writeln!(
+            out,
+            "{} regressions, {} improvements, {} parity breaks, {} unmeasured, {} missing => {}",
+            self.regressions(),
+            self.improvements(),
+            self.parity_breaks(),
+            self.unmeasured(),
+            self.only_in_old.len(),
+            if self.ok() { "OK" } else { "FAIL" }
+        );
+        out
+    }
+}
+
+/// Diff two sweep records cell-by-cell (matched on the scenario key).
+pub fn diff_records(old: &SweepRecord, new: &SweepRecord, opts: &DiffOpts) -> DiffReport {
+    let old_by_key: BTreeMap<String, &CellRecord> =
+        old.cells.iter().map(|c| (c.key(), c)).collect();
+    let new_by_key: BTreeMap<String, &CellRecord> =
+        new.cells.iter().map(|c| (c.key(), c)).collect();
+
+    let mut matched: Vec<(String, &CellRecord, &CellRecord)> = Vec::new();
+    let mut only_in_old = Vec::new();
+    for (key, o) in &old_by_key {
+        match new_by_key.get(key) {
+            Some(n) => matched.push((key.clone(), o, n)),
+            None => only_in_old.push(key.clone()),
+        }
+    }
+    let only_in_new: Vec<String> = new_by_key
+        .keys()
+        .filter(|k| !old_by_key.contains_key(*k))
+        .cloned()
+        .collect();
+
+    // Median throughput ratio over cells with sane measurements.
+    let mut ratios: Vec<f64> = matched
+        .iter()
+        .filter(|(_, o, n)| o.jobs_per_sec() > 0.0 && n.jobs_per_sec() > 0.0)
+        .map(|(_, o, n)| n.jobs_per_sec() / o.jobs_per_sec())
+        .collect();
+    ratios.sort_by(|a, b| a.partial_cmp(b).expect("finite ratios"));
+    let shift = match ratios.len() {
+        0 => 1.0,
+        n if n % 2 == 1 => ratios[n / 2],
+        n => (ratios[n / 2 - 1] * ratios[n / 2]).sqrt(),
+    };
+    // On tiny grids the median IS the (possibly regressed) cell, so
+    // normalizing by it would cancel the very signal we gate on — a
+    // 10x-slower single-cell grid must not read as "unchanged". Below
+    // this many matched cells, ratios are compared raw.
+    const MIN_CELLS_TO_NORMALIZE: usize = 4;
+    let denom = if opts.normalize && shift > 0.0 && ratios.len() >= MIN_CELLS_TO_NORMALIZE {
+        shift
+    } else {
+        1.0
+    };
+
+    let cells: Vec<CellDiff> = matched
+        .into_iter()
+        .map(|(key, o, n)| {
+            let (old_jps, new_jps) = (o.jobs_per_sec(), n.jobs_per_sec());
+            let ratio = if old_jps > 0.0 && new_jps > 0.0 {
+                new_jps / old_jps
+            } else {
+                1.0
+            };
+            let norm_ratio = ratio / denom;
+            let verdict = if o.digest != n.digest {
+                CellVerdict::ParityBreak
+            } else if old_jps <= 0.0 || new_jps <= 0.0 {
+                CellVerdict::Unmeasured
+            } else if norm_ratio < 1.0 - opts.threshold {
+                CellVerdict::Regression
+            } else if norm_ratio > 1.0 + opts.threshold {
+                CellVerdict::Improvement
+            } else {
+                CellVerdict::Unchanged
+            };
+            CellDiff {
+                key,
+                old_jps,
+                new_jps,
+                ratio,
+                norm_ratio,
+                verdict,
+            }
+        })
+        .collect();
+
+    DiffReport {
+        old_label: old.label.clone(),
+        new_label: new.label.clone(),
+        cells,
+        only_in_old,
+        only_in_new,
+        shift,
+        threshold: opts.threshold,
+        global_regression: shift < 1.0 - opts.threshold,
+        fail_on_shift: opts.fail_on_shift,
+    }
+}
+
+/// FNV-1a 64-bit — deterministic, dependency-free digest for schedule
+/// outcomes (not cryptographic; collisions only hide a parity break that
+/// the golden test would catch anyway).
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+fn get_str(j: &Json, k: &str) -> Result<String, String> {
+    j.get(k)
+        .and_then(Json::as_str)
+        .map(str::to_string)
+        .ok_or_else(|| format!("missing string field '{k}'"))
+}
+
+fn get_f64(j: &Json, k: &str) -> Result<f64, String> {
+    j.get(k)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| format!("missing numeric field '{k}'"))
+}
+
+/// Reject negative/fractional/huge values for integer-typed fields
+/// instead of silently saturating through `as` casts — a hand-edited
+/// artifact should fail at parse time with the field name, not surface
+/// later as a confusing digest mismatch.
+fn uint_value(v: f64, what: &str) -> Result<u64, String> {
+    if v.is_nan() || v < 0.0 || v.fract() != 0.0 || v > 9_007_199_254_740_992.0 {
+        return Err(format!("{what}: expected a non-negative integer, got {v}"));
+    }
+    Ok(v as u64)
+}
+
+fn get_uint(j: &Json, k: &str) -> Result<u64, String> {
+    uint_value(get_f64(j, k)?, k)
+}
+
+/// Require an actual JSON array (`Json::items` silently yields an empty
+/// slice for non-arrays, which would let a corrupt artifact parse).
+fn get_arr<'a>(j: &'a Json, k: &str) -> Result<&'a [Json], String> {
+    match j.get(k) {
+        Some(Json::Arr(v)) => Ok(v),
+        Some(_) => Err(format!("field '{k}': expected an array")),
+        None => Err(format!("missing array field '{k}'")),
+    }
+}
+
+fn get_u64_str(j: &Json, k: &str) -> Result<u64, String> {
+    get_str(j, k)?
+        .parse::<u64>()
+        .map_err(|e| format!("field '{k}': {e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{run_sweep, SweepConfig, SweepEngine};
+    use super::*;
+    use crate::quant::Precision;
+    use crate::workload::WorkloadSpec;
+
+    fn small_record() -> SweepRecord {
+        let cfg = SweepConfig {
+            engines: vec![SweepEngine::Sos, SweepEngine::Sosc, SweepEngine::Simd],
+            workloads: vec![("even".to_string(), WorkloadSpec::even())],
+            machine_counts: vec![3],
+            alphas: vec![0.5, 0.75],
+            precisions: vec![Precision::Int8],
+            depth: 6,
+            jobs: 30,
+            seed: 11,
+            threads: 2,
+        };
+        SweepRecord::from_results("test", &run_sweep(&cfg))
+    }
+
+    #[test]
+    fn record_round_trips_through_jsonio() {
+        let rec = small_record();
+        assert_eq!(rec.cells.len(), 6);
+        let text = rec.render();
+        let back = SweepRecord::parse(&text).expect("parse own artifact");
+        assert_eq!(rec, back, "parse(render(r)) == r");
+        // serialize -> parse -> serialize is a fixed point
+        assert_eq!(text, back.render());
+    }
+
+    #[test]
+    fn digest_recomputes_from_persisted_fields() {
+        let rec = small_record();
+        let back = SweepRecord::parse(&rec.render()).unwrap();
+        for c in &back.cells {
+            assert_eq!(c.digest, c.compute_digest(), "digest stable across round trip");
+        }
+    }
+
+    #[test]
+    fn rejects_wrong_schema_and_garbage() {
+        assert!(SweepRecord::parse("{}").is_err());
+        assert!(SweepRecord::parse("not json").is_err());
+        let mut rec = small_record();
+        rec.label = "x".into();
+        let text = rec.render().replace(RECORD_SCHEMA, "stannic.sweep.record.v0");
+        assert!(SweepRecord::parse(&text).is_err());
+    }
+
+    #[test]
+    fn rejects_negative_and_fractional_integer_fields() {
+        let rec = small_record();
+        let machines = format!("\"machines\":{}", rec.cells[0].machines);
+        let text = rec.render().replacen(&machines, "\"machines\":-3", 1);
+        assert!(
+            SweepRecord::parse(&text).is_err(),
+            "negative machines must be rejected at parse time"
+        );
+        let ticks = format!("\"ticks\":{}", rec.cells[0].ticks);
+        let text = rec
+            .render()
+            .replacen(&ticks, &format!("\"ticks\":{}.5", rec.cells[0].ticks), 1);
+        assert!(
+            SweepRecord::parse(&text).is_err(),
+            "fractional ticks must be rejected at parse time"
+        );
+    }
+
+    #[test]
+    fn diff_identical_records_is_ok() {
+        let rec = small_record();
+        let report = diff_records(&rec, &rec, &DiffOpts::default());
+        assert_eq!(report.cells.len(), 6);
+        assert!(report.ok(), "identical records must pass:\n{}", report.render());
+        assert_eq!(report.regressions(), 0);
+        assert_eq!(report.parity_breaks(), 0);
+        assert!((report.shift - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn diff_flags_injected_regression() {
+        let old = small_record();
+        let mut new = old.clone();
+        new.cells[0].wall_ns *= 10; // one cell 10x slower
+        let report = diff_records(&old, &new, &DiffOpts::default());
+        assert_eq!(report.regressions(), 1, "{}", report.render());
+        assert!(!report.ok());
+        // the regressed cell is the tampered one
+        let bad = report
+            .cells
+            .iter()
+            .find(|c| c.verdict == CellVerdict::Regression)
+            .unwrap();
+        assert_eq!(bad.key, old.cells[0].key());
+        assert!(bad.ratio < 0.2);
+    }
+
+    #[test]
+    fn diff_flags_improvement_without_failing() {
+        let old = small_record();
+        let mut new = old.clone();
+        new.cells[2].wall_ns = (new.cells[2].wall_ns / 10).max(1); // ~10x faster
+        let report = diff_records(&old, &new, &DiffOpts::default());
+        assert_eq!(report.improvements(), 1, "{}", report.render());
+        assert_eq!(report.regressions(), 0, "{}", report.render());
+        assert!(report.ok(), "an improvement must not fail the gate");
+    }
+
+    #[test]
+    fn diff_reports_uniform_slowdown_as_global_shift() {
+        let old = small_record();
+        let mut new = old.clone();
+        for c in &mut new.cells {
+            c.wall_ns *= 3; // whole grid 3x slower
+        }
+        // advisory by default: across hosts a uniform shift is
+        // indistinguishable from a slower machine
+        let report = diff_records(&old, &new, &DiffOpts::default());
+        assert!(report.global_regression, "{}", report.render());
+        assert!(report.ok(), "shift alone must not gate by default");
+        // normalization keeps per-cell verdicts clean: it's the host/
+        // whole-grid shift that moved, not one cell
+        assert_eq!(report.regressions(), 0);
+        // same-host A/B runs opt into gating on the shift
+        let strict = DiffOpts {
+            fail_on_shift: true,
+            ..DiffOpts::default()
+        };
+        let report = diff_records(&old, &new, &strict);
+        assert!(!report.ok(), "{}", report.render());
+    }
+
+    #[test]
+    fn tiny_grids_compare_raw_ratios() {
+        // With one matched cell the median ratio IS that cell, so
+        // normalization would cancel any regression — the guard must
+        // fall back to raw ratios and still flag it.
+        let mut old = small_record();
+        old.cells.truncate(1);
+        let mut new = old.clone();
+        new.cells[0].wall_ns *= 10;
+        let report = diff_records(&old, &new, &DiffOpts::default());
+        assert_eq!(report.regressions(), 1, "{}", report.render());
+        assert!(!report.ok());
+    }
+
+    #[test]
+    fn diff_flags_unmeasured_cells() {
+        // run_cell floors wall_ns at 1, so a zero can only come from a
+        // hand-edited or corrupt artifact — it must fail the gate, not
+        // silently pass as "unchanged".
+        let old = small_record();
+        let mut new = old.clone();
+        new.cells[0].wall_ns = 0;
+        let report = diff_records(&old, &new, &DiffOpts::default());
+        assert_eq!(report.unmeasured(), 1, "{}", report.render());
+        assert_eq!(report.regressions(), 0);
+        assert!(!report.ok());
+    }
+
+    #[test]
+    fn diff_flags_parity_break_on_digest_change() {
+        let old = small_record();
+        let mut new = old.clone();
+        new.cells[1].ticks += 1;
+        new.cells[1].digest = new.cells[1].compute_digest();
+        let report = diff_records(&old, &new, &DiffOpts::default());
+        assert_eq!(report.parity_breaks(), 1, "{}", report.render());
+        assert!(!report.ok());
+    }
+
+    #[test]
+    fn diff_fails_on_missing_baseline_cells() {
+        let old = small_record();
+        let mut new = old.clone();
+        new.cells.pop();
+        let report = diff_records(&old, &new, &DiffOpts::default());
+        assert_eq!(report.only_in_old.len(), 1);
+        assert!(!report.ok());
+        // the reverse direction (grid grew) is fine
+        let report = diff_records(&new, &old, &DiffOpts::default());
+        assert_eq!(report.only_in_new.len(), 1);
+        assert!(report.ok(), "{}", report.render());
+    }
+
+    #[test]
+    fn threshold_is_respected() {
+        let old = small_record();
+        let mut new = old.clone();
+        // ~11% slower on one cell: inside the default 25% budget
+        new.cells[0].wall_ns += new.cells[0].wall_ns / 9;
+        let report = diff_records(&old, &new, &DiffOpts::default());
+        assert!(report.ok(), "{}", report.render());
+        // but outside a 5% budget
+        let strict = DiffOpts {
+            threshold: 0.05,
+            ..DiffOpts::default()
+        };
+        let report = diff_records(&old, &new, &strict);
+        assert_eq!(report.regressions(), 1, "{}", report.render());
+    }
+}

@@ -6,7 +6,7 @@
 use crate::core::{Job, JobNature, MachineKind, MachinePark};
 
 use super::rng::Rng;
-use super::spec::{BurstType, WorkloadSpec};
+use super::spec::{BurstType, EptDist, WorkloadSpec};
 use super::trace::{Trace, TraceEvent};
 
 /// Affinity multiplier: how well a machine type runs a job nature.
@@ -28,6 +28,28 @@ pub fn affinity(nature: JobNature, kind: MachineKind) -> f32 {
     }
 }
 
+/// Draw a base EPT from the spec's service-time distribution. Exactly
+/// one RNG draw per job in every branch, and the `Uniform` branch is the
+/// seed repo's original call — so traces for `Uniform` specs (including
+/// the pinned golden scenario) are unchanged byte-for-byte.
+fn sample_base_ept(spec: &WorkloadSpec, rng: &mut Rng) -> f32 {
+    let (lo, hi) = spec.ept_range;
+    match spec.ept_dist {
+        EptDist::Uniform => rng.uniform(lo, hi),
+        EptDist::Pareto { shape } => {
+            // Bounded-Pareto inverse CDF on [lo, hi]:
+            //   x = lo / (1 - u * (1 - (lo/hi)^a))^(1/a)
+            // u=0 -> lo, u->1 -> hi; mass concentrates near lo with a
+            // heavy upper tail.
+            let u = rng.next_f64();
+            let a = shape as f64;
+            let ratio = (lo as f64 / hi as f64).powf(a);
+            let x = lo as f64 / (1.0 - u * (1.0 - ratio)).powf(1.0 / a);
+            (x as f32).clamp(lo, hi)
+        }
+    }
+}
+
 /// Synthesize one job: nature from JC, weight uniform, per-machine EPT =
 /// base * affinity * quality (clamped to the spec's representable range).
 pub fn synth_job(
@@ -46,7 +68,7 @@ pub fn synth_job(
         _ => JobNature::Mixed,
     };
     let weight = rng.uniform(spec.weight_range.0, spec.weight_range.1).round().max(1.0);
-    let base = rng.uniform(spec.ept_range.0, spec.ept_range.1);
+    let base = sample_base_ept(spec, rng);
     let ept = park
         .iter()
         .map(|m| {
@@ -201,6 +223,46 @@ mod tests {
         let ticks: Vec<u64> = t.events().iter().map(|e| e.tick).collect();
         let max_gap = ticks.windows(2).map(|w| w[1] - w[0]).max().unwrap();
         assert!(max_gap >= 10, "idle gap missing: {ticks:?}");
+    }
+
+    #[test]
+    fn heavy_tail_skews_low_with_elephants() {
+        let park = MachinePark::paper_m1_m5();
+        let uni = generate_trace(&WorkloadSpec::even(), &park, 2000, 21);
+        let hvy = generate_trace(&WorkloadSpec::heavy_tailed(), &park, 2000, 21);
+        let median = |t: &Trace| {
+            let mut v: Vec<f32> = t.jobs().map(|j| j.ept[0]).collect();
+            v.sort_by(|a, b| a.partial_cmp(b).expect("finite"));
+            v[v.len() / 2]
+        };
+        // Pareto mass concentrates near the floor...
+        assert!(
+            median(&hvy) < median(&uni),
+            "heavy-tailed median {} !< uniform median {}",
+            median(&hvy),
+            median(&uni)
+        );
+        // ...while the tail still reaches the elephants.
+        let max_hvy = hvy.jobs().map(|j| j.ept[0]).fold(0.0f32, f32::max);
+        assert!(max_hvy > 150.0, "tail too short: max EPT {max_hvy}");
+        // Bounds still respected.
+        for j in hvy.jobs() {
+            for &e in &j.ept {
+                assert!((10.0..=255.0).contains(&e));
+            }
+        }
+    }
+
+    #[test]
+    fn bursty_spec_produces_bigger_bursts() {
+        let park = MachinePark::paper_m1_m5();
+        let t = generate_trace(&WorkloadSpec::bursty(), &park, 500, 8);
+        let mut per_tick = std::collections::HashMap::new();
+        for e in t.events() {
+            *per_tick.entry(e.tick).or_insert(0usize) += 1;
+        }
+        let max_burst = per_tick.values().copied().max().unwrap();
+        assert!(max_burst >= 5, "bursty max burst only {max_burst}");
     }
 
     #[test]

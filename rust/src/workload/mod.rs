@@ -14,5 +14,5 @@ pub use dag::{generate_dag, DagSpec, TaskGraph};
 pub use generator::{affinity, generate_trace, synth_job};
 pub use montecarlo::sample_specs;
 pub use rng::Rng;
-pub use spec::{BurstType, WorkloadSpec};
+pub use spec::{BurstType, EptDist, WorkloadSpec};
 pub use trace::{Trace, TraceEvent};

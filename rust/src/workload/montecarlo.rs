@@ -4,7 +4,7 @@
 //! parameter space.
 
 use super::rng::Rng;
-use super::spec::{BurstType, WorkloadSpec};
+use super::spec::{BurstType, EptDist, WorkloadSpec};
 
 /// Sample `count` workload specifications from the WG parameter space.
 pub fn sample_specs(count: usize, seed: u64) -> Vec<WorkloadSpec> {
@@ -39,6 +39,7 @@ fn sample_one(rng: &mut Rng) -> WorkloadSpec {
         weight_range: (1.0, rng.uniform(32.0, 255.0).round()),
         ept_range: (10.0, rng.uniform(64.0, 200.0).round()),
         runtime_noise: rng.uniform(0.05, 0.3),
+        ept_dist: EptDist::Uniform,
     }
 }
 

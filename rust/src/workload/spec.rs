@@ -11,6 +11,20 @@ pub enum BurstType {
     Uniform,
 }
 
+/// Service-time (base EPT) distribution shape. The seed repo drew base
+/// EPTs uniformly; Agon-scale evaluation (arXiv:2109.00665) also needs
+/// heavy-tailed service times, where a few elephant jobs dominate the
+/// work mass and queue-aware cost functions earn their keep.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum EptDist {
+    /// Uniform over `ept_range` (the original behaviour).
+    Uniform,
+    /// Bounded Pareto on `ept_range` with the given tail exponent
+    /// (smaller `shape` = heavier tail; 1.2 is the classic web/HPC
+    /// service-time regime).
+    Pareto { shape: f32 },
+}
+
 /// Full workload specification.
 #[derive(Debug, Clone, PartialEq)]
 pub struct WorkloadSpec {
@@ -37,6 +51,8 @@ pub struct WorkloadSpec {
     pub ept_range: (f32, f32),
     /// Relative spread of actual runtime around the EPT estimate.
     pub runtime_noise: f32,
+    /// Distribution of the base EPT draw within `ept_range`.
+    pub ept_dist: EptDist,
 }
 
 impl Default for WorkloadSpec {
@@ -54,6 +70,7 @@ impl Default for WorkloadSpec {
             weight_range: (1.0, 255.0),
             ept_range: (10.0, 200.0),
             runtime_noise: 0.15,
+            ept_dist: EptDist::Uniform,
         }
     }
 }
@@ -108,6 +125,29 @@ impl WorkloadSpec {
         }
     }
 
+    /// Agon-scale mix (1): bursty arrivals — large random bursts chased
+    /// by idle troughs, the arrival pattern where queue-depth-aware cost
+    /// separates competitive schedulers from greedy ones at scale.
+    pub fn bursty() -> Self {
+        WorkloadSpec {
+            burst_factor: 8,
+            burst_type: BurstType::Random,
+            idle_time: 25,
+            idle_interval: 24,
+            ..Self::default()
+        }
+    }
+
+    /// Agon-scale mix (2): heavy-tailed service times (bounded Pareto,
+    /// shape 1.2) over the even job composition — elephant jobs make
+    /// head-of-line blocking visible in the latency percentiles.
+    pub fn heavy_tailed() -> Self {
+        WorkloadSpec {
+            ept_dist: EptDist::Pareto { shape: 1.2 },
+            ..Self::default()
+        }
+    }
+
     pub fn with_burst(mut self, bf: usize, bt: BurstType) -> Self {
         self.burst_factor = bf;
         self.burst_type = bt;
@@ -135,6 +175,11 @@ impl WorkloadSpec {
         if self.ept_range.0 < 10.0 {
             return Err("minimum EPT is 10 (Section 4.2)".into());
         }
+        if let EptDist::Pareto { shape } = self.ept_dist {
+            if !shape.is_finite() || shape <= 0.0 {
+                return Err("Pareto shape must be positive and finite".into());
+            }
+        }
         Ok(())
     }
 }
@@ -151,9 +196,21 @@ mod tests {
             WorkloadSpec::compute_skewed(),
             WorkloadSpec::homogeneous_memory(),
             WorkloadSpec::homogeneous_compute(),
+            WorkloadSpec::bursty(),
+            WorkloadSpec::heavy_tailed(),
         ] {
             s.validate().unwrap();
         }
+    }
+
+    #[test]
+    fn pareto_shape_validated() {
+        let mut s = WorkloadSpec::heavy_tailed();
+        assert!(s.validate().is_ok());
+        s.ept_dist = EptDist::Pareto { shape: 0.0 };
+        assert!(s.validate().is_err());
+        s.ept_dist = EptDist::Pareto { shape: f32::NAN };
+        assert!(s.validate().is_err());
     }
 
     #[test]

@@ -1,0 +1,167 @@
+//! End-to-end coverage of the benchmarking backbone through the real
+//! binary (Cargo exposes it as `CARGO_BIN_EXE_stannic`):
+//!
+//! * `sweep --record <path>` emits a parseable `SweepRecord` artifact;
+//! * `sweep diff a.json b.json` exits 0 on identical inputs;
+//! * an injected beyond-threshold regression (and a parity break) make
+//!   it exit non-zero.
+
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+use stannic::sweep::{diff_records, DiffOpts, SweepRecord};
+
+fn bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_stannic"))
+}
+
+fn tmp(name: &str) -> PathBuf {
+    let mut p = std::env::temp_dir();
+    p.push(format!("stannic_perfdiff_{}_{name}", std::process::id()));
+    p
+}
+
+/// Record a tiny sweep (narrow grid so the test stays fast) to `path`.
+fn record_to(path: &Path) {
+    let out = bin()
+        .args([
+            "sweep",
+            "--quick",
+            "--engines",
+            "sos,sosc",
+            "--workload",
+            "even",
+            "--machines",
+            "3",
+            "--jobs",
+            "30",
+            "--threads",
+            "2",
+            "--record",
+        ])
+        .arg(path)
+        .args(["--label", "itest"])
+        .output()
+        .expect("spawn stannic sweep");
+    assert!(
+        out.status.success(),
+        "sweep --record failed:\n{}\n{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+}
+
+#[test]
+fn record_artifact_parses_and_diff_gates_regressions() {
+    let base = tmp("base.json");
+    record_to(&base);
+
+    // artifact is parseable and non-trivial
+    let text = std::fs::read_to_string(&base).expect("artifact written");
+    let record = SweepRecord::parse(&text).expect("artifact parses as SweepRecord");
+    assert_eq!(record.label, "itest");
+    assert!(!record.cells.is_empty());
+    assert!(record.cells.iter().all(|c| c.wall_ns > 0));
+
+    // identical inputs -> exit 0
+    let ok = bin()
+        .args(["sweep", "diff"])
+        .arg(&base)
+        .arg(&base)
+        .output()
+        .expect("spawn stannic sweep diff");
+    assert!(
+        ok.status.success(),
+        "diff of identical records must exit 0:\n{}\n{}",
+        String::from_utf8_lossy(&ok.stdout),
+        String::from_utf8_lossy(&ok.stderr)
+    );
+
+    // inject a >threshold regression into one cell -> exit non-zero
+    let mut slow = record.clone();
+    slow.cells[0].wall_ns *= 10;
+    let slow_path = tmp("slow.json");
+    std::fs::write(&slow_path, slow.render()).unwrap();
+    let fail = bin()
+        .args(["sweep", "diff"])
+        .arg(&base)
+        .arg(&slow_path)
+        .output()
+        .expect("spawn stannic sweep diff");
+    assert!(
+        !fail.status.success(),
+        "injected 10x regression must fail the diff:\n{}",
+        String::from_utf8_lossy(&fail.stdout)
+    );
+    assert!(
+        String::from_utf8_lossy(&fail.stdout).contains("REGRESSION"),
+        "report names the regression:\n{}",
+        String::from_utf8_lossy(&fail.stdout)
+    );
+
+    // a loose env threshold lets the same regression pass
+    let pass = bin()
+        .args(["sweep", "diff"])
+        .arg(&base)
+        .arg(&slow_path)
+        .env("STANNIC_PERF_THRESHOLD", "0.95")
+        .output()
+        .expect("spawn stannic sweep diff");
+    assert!(
+        pass.status.success(),
+        "STANNIC_PERF_THRESHOLD=0.95 must absorb a 10x single-cell slowdown:\n{}",
+        String::from_utf8_lossy(&pass.stdout)
+    );
+
+    // a parity break (tampered deterministic outcome) fails regardless
+    let mut broken = record.clone();
+    broken.cells[0].ticks += 1;
+    broken.cells[0].digest = broken.cells[0].compute_digest();
+    let broken_path = tmp("broken.json");
+    std::fs::write(&broken_path, broken.render()).unwrap();
+    let fail = bin()
+        .args(["sweep", "diff"])
+        .arg(&base)
+        .arg(&broken_path)
+        .env("STANNIC_PERF_THRESHOLD", "0.95")
+        .output()
+        .expect("spawn stannic sweep diff");
+    assert!(
+        !fail.status.success(),
+        "parity break must fail even with a loose threshold:\n{}",
+        String::from_utf8_lossy(&fail.stdout)
+    );
+
+    // in-process sanity: the library classifies the same way the CLI did
+    let report = diff_records(&record, &slow, &DiffOpts::default());
+    assert_eq!(report.regressions(), 1);
+
+    for p in [&base, &slow_path, &broken_path] {
+        let _ = std::fs::remove_file(p);
+    }
+}
+
+#[test]
+fn two_recordings_of_same_grid_share_digests() {
+    // Wall times differ run-to-run; the deterministic outcome must not.
+    let a_path = tmp("a.json");
+    let b_path = tmp("b.json");
+    record_to(&a_path);
+    record_to(&b_path);
+    let a = SweepRecord::parse(&std::fs::read_to_string(&a_path).unwrap()).unwrap();
+    let b = SweepRecord::parse(&std::fs::read_to_string(&b_path).unwrap()).unwrap();
+    assert_eq!(a.cells.len(), b.cells.len());
+    for (ca, cb) in a.cells.iter().zip(&b.cells) {
+        assert_eq!(ca.key(), cb.key());
+        assert_eq!(ca.digest, cb.digest, "digest must be wall-time independent");
+    }
+    // and the diff never reports parity breaks or coverage gaps between
+    // honest recordings (wall-time noise on tiny cells makes the perf
+    // verdicts themselves unsuitable for a unit-test assertion)
+    let report = diff_records(&a, &b, &DiffOpts::default());
+    assert_eq!(report.parity_breaks(), 0, "{}", report.render());
+    assert!(report.only_in_old.is_empty() && report.only_in_new.is_empty());
+    for p in [&a_path, &b_path] {
+        let _ = std::fs::remove_file(p);
+    }
+}

@@ -161,6 +161,39 @@ fn prop_stannic_memoized_sums_exact() {
 }
 
 #[test]
+fn prop_vschedule_memoized_sums_exact() {
+    // The golden engine's virtual schedules now carry the same memoized
+    // threshold sums as the PE array; under the quantized datapath the
+    // memoized reads must equal the rescans *bit-exactly* at any point
+    // of a random engine drive (this is what keeps the memoized cost
+    // path from ever changing a schedule).
+    property("vschedule memoized sums", 60, |rng| {
+        let m = rng.range(1, 5);
+        let d = rng.range(2, 12);
+        let mut engine = SosEngine::new(m, d, 0.5, Precision::Int8);
+        let mut next_id = 1u64;
+        for _ in 0..rng.range(30, 150) {
+            let arrival = rng.chance(0.4).then(|| {
+                let j = random_job(rng, next_id, m);
+                next_id += 1;
+                j
+            });
+            engine.tick(arrival.as_ref());
+            for vs in engine.schedules() {
+                let probe_w = rng.uniform(1.0, 255.0).round();
+                let probe_e = rng.uniform(10.0, 255.0).round();
+                let probe = Precision::Int8.q_wspt(probe_w / probe_e);
+                let (hi, lo, pos) = vs.threshold_read(probe);
+                check(hi == vs.sum_hi(probe), "memoized sum_hi bit-exact")?;
+                check(lo == vs.sum_lo(probe), "memoized sum_lo bit-exact")?;
+                check(pos == vs.position_for(probe), "threshold position")?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_workload_generator_bounds() {
     property("workload bounds", 40, |rng| {
         let park = MachinePark::cycled(rng.range(1, 20));
