@@ -36,6 +36,17 @@ else
   echo "(skipped: python3/numpy unavailable)"
 fi
 
+echo "== smoke: multi-source serve pipeline (2 concurrent arrival streams) =="
+cargo run --release -- serve --sources 2 --jobs 150 --batch 4 \
+  --record /tmp/SERVE_smoke.json --label ci | tee /tmp/stannic_serve_smoke.txt
+# non-empty completions (every job must drain through the merge + batch
+# path) and a clean record artifact (the binary parse-back-verifies the
+# artifact before exiting 0; here we assert it exists and is non-empty)
+grep -E "jobs completed    : 150" /tmp/stannic_serve_smoke.txt
+grep -E "arrival sources   : 2" /tmp/stannic_serve_smoke.txt
+test -s /tmp/SERVE_smoke.json
+echo "serve smoke OK (150 jobs over 2 sources, artifact recorded)"
+
 echo "== smoke: parallel scenario sweep (reduced grid, determinism cross-check) =="
 cargo run --release -- sweep --quick --threads 1 > /tmp/stannic_sweep_1.txt
 cargo run --release -- sweep --quick --threads 8 > /tmp/stannic_sweep_8.txt
@@ -52,12 +63,21 @@ if [ -f BENCH_seed.json ]; then
   cargo run --release -- sweep diff BENCH_seed.json /tmp/BENCH_pr.json
 else
   cp /tmp/BENCH_pr.json BENCH_seed.json
-  echo "WARNING: no committed BENCH_seed.json baseline — the perf gate is"
-  echo "WARNING: INERT this run; blessed a fresh baseline from this sweep."
-  echo "WARNING: Commit BENCH_seed.json to arm regression detection."
+  echo "WARNING: no committed BENCH_seed.json baseline — the cross-commit perf"
+  echo "WARNING: gate is INERT this run; blessed a fresh baseline from this sweep."
+  echo "WARNING: Commit BENCH_seed.json (tools/bless_bench_seed.sh) to arm it."
   if [ -n "${GITHUB_ACTIONS:-}" ]; then
-    echo "::warning file=ci.sh::perf gate inert: no committed BENCH_seed.json baseline; commit one to arm regression detection"
+    echo "::warning file=ci.sh::perf gate inert: no committed BENCH_seed.json baseline; run tools/bless_bench_seed.sh and commit the result"
   fi
+  # Same-host A/B self-diff: even without a committed baseline, a second
+  # recording of the same grid must share every schedule digest with the
+  # blessed one — this keeps the parity gate and the whole diff pipeline
+  # live on every run. The loose threshold keeps wall-time jitter on
+  # millisecond cells from flaking CI; parity breaks fail at any
+  # threshold.
+  cargo run --release -- sweep --quick --jobs 200 --record /tmp/BENCH_pr2.json --label pr2
+  cargo run --release -- sweep diff BENCH_seed.json /tmp/BENCH_pr2.json --threshold 0.9
+  echo "same-host A/B self-diff OK (parity gate live without a committed baseline)"
 fi
 
 echo "CI OK"

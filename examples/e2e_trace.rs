@@ -19,8 +19,7 @@
 use std::time::Instant;
 
 use stannic::baselines::SoscEngine;
-use stannic::config::EngineKind;
-use stannic::coordinator::{build_engine, serve, ServeOpts};
+use stannic::coordinator::{serve, ServeOpts};
 use stannic::ensure;
 use stannic::error::Result;
 use stannic::hw::CLOCK_HZ;
@@ -35,11 +34,11 @@ fn main() -> Result<()> {
     // --- the reference path: golden software engine through the full
     //     coordinator (worker threads + PCIe accounting) ---
     let native = serve(
-        build_engine(EngineKind::Native, 5, 10, 0.5, Precision::Int8)?,
+        EngineId::Sos.build(5, 10, 0.5, Precision::Int8)?,
         &trace,
         &ServeOpts::default(),
     )?;
-    println!("native engine (L3 coordinator):");
+    println!("golden sos engine (L3 coordinator):");
     println!("  completed        : {}", native.completions.len());
     println!("  jobs per machine : {:?}", native.metrics.jobs_per_machine);
     println!("  avg latency      : {:.1} ticks", native.metrics.avg_latency);
@@ -52,7 +51,7 @@ fn main() -> Result<()> {
     println!("  host wall        : {:.2?}", native.wall);
 
     // --- the accelerated path, when L1/L2 artifacts exist ---
-    match build_engine(EngineKind::Xla, 5, 10, 0.5, Precision::Int8) {
+    match EngineId::Xla.build(5, 10, 0.5, Precision::Int8) {
         Ok(engine) => {
             let xla_report = serve(engine, &trace, &ServeOpts::default())?;
             ensure!(
@@ -72,7 +71,7 @@ fn main() -> Result<()> {
 
     // --- cycle-accurate Stannic sim: same schedule + hardware time ---
     let sim_report = serve(
-        build_engine(EngineKind::StannicSim, 5, 10, 0.5, Precision::Int8)?,
+        EngineId::StannicSim.build(5, 10, 0.5, Precision::Int8)?,
         &trace,
         &ServeOpts::default(),
     )?;

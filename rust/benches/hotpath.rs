@@ -9,9 +9,9 @@
 //! Run: `cargo bench --bench hotpath` (`-- --bench-smoke` for smoke).
 
 use stannic::bench::{bench, fmt_ns, BenchOpts, Table};
-use stannic::config::EngineKind;
-use stannic::coordinator::{build_engine, serve, ServeOpts};
+use stannic::coordinator::{serve, ServeOpts};
 use stannic::core::MachinePark;
+use stannic::engine::EngineId;
 use stannic::quant::Precision;
 use stannic::runtime::{ArtifactRegistry, CostImpl, XlaCostEngine, XlaScheduleState};
 use stannic::scheduler::SosEngine;
@@ -120,13 +120,12 @@ fn main() {
         let park = MachinePark::paper_m1_m5();
         let trace = generate_trace(&WorkloadSpec::default(), &park, jobs, 9);
         let m = bench(opts, || {
-            let engine =
-                build_engine(EngineKind::Native, 5, 10, 0.5, Precision::Int8).unwrap();
+            let engine = EngineId::Sos.build(5, 10, 0.5, Precision::Int8).unwrap();
             let r = serve(engine, &trace, &ServeOpts::default()).unwrap();
             std::hint::black_box(r.completions.len());
         });
         t.row(vec![
-            format!("coordinator e2e ({jobs} jobs, native)"),
+            format!("coordinator e2e ({jobs} jobs, sos)"),
             fmt_ns(m.mean_ns),
             fmt_ns(m.min_ns),
             format!("{}/job", fmt_ns(m.mean_ns / jobs as f64)),

@@ -13,12 +13,24 @@ pub struct Args {
     bools: Vec<String>,
 }
 
-/// A flag specification for usage text + validation.
+/// A flag specification for usage text + validation. `help` is owned so
+/// callers can interpolate single-source-of-truth strings (e.g. the
+/// engine registry's accepted-names list) instead of hand-copying them.
 #[derive(Debug, Clone)]
 pub struct FlagSpec {
     pub name: &'static str,
-    pub help: &'static str,
+    pub help: String,
     pub takes_value: bool,
+}
+
+impl FlagSpec {
+    pub fn new(name: &'static str, help: impl Into<String>, takes_value: bool) -> FlagSpec {
+        FlagSpec {
+            name,
+            help: help.into(),
+            takes_value,
+        }
+    }
 }
 
 impl Args {
@@ -123,16 +135,8 @@ mod tests {
 
     fn specs() -> Vec<FlagSpec> {
         vec![
-            FlagSpec {
-                name: "machines",
-                help: "machine count",
-                takes_value: true,
-            },
-            FlagSpec {
-                name: "quick",
-                help: "fast mode",
-                takes_value: false,
-            },
+            FlagSpec::new("machines", "machine count", true),
+            FlagSpec::new("quick", "fast mode", false),
         ]
     }
 

@@ -3,54 +3,22 @@
 //! [`crate::jsonio`]) so experiment setups can be archived.
 
 use crate::core::MachinePark;
+use crate::engine::EngineId;
 use crate::jsonio::{arr, num, obj, s, Json};
 use crate::quant::Precision;
 use crate::workload::{BurstType, WorkloadSpec};
 
-/// Which scheduling engine drives the run.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum EngineKind {
-    /// Golden software SOS engine.
-    Native,
-    /// Cycle-accurate Stannic simulator.
-    StannicSim,
-    /// Cycle-accurate Hercules simulator.
-    HerculesSim,
-    /// XLA/PJRT-offloaded cost engine (requires artifacts).
-    Xla,
-}
-
-impl EngineKind {
-    pub fn parse(name: &str) -> Result<Self, String> {
-        match name {
-            "native" => Ok(EngineKind::Native),
-            "stannic" => Ok(EngineKind::StannicSim),
-            "hercules" => Ok(EngineKind::HerculesSim),
-            "xla" => Ok(EngineKind::Xla),
-            other => Err(format!(
-                "unknown engine '{other}' (native|stannic|hercules|xla)"
-            )),
-        }
-    }
-
-    pub fn name(&self) -> &'static str {
-        match self {
-            EngineKind::Native => "native",
-            EngineKind::StannicSim => "stannic",
-            EngineKind::HerculesSim => "hercules",
-            EngineKind::Xla => "xla",
-        }
-    }
-}
-
-/// Full experiment configuration.
+/// Full experiment configuration. Engine selection goes through the
+/// single [`crate::engine::EngineId`] registry; archived configs using
+/// the historical names (`native`, `stannic`, `hercules`) still parse
+/// via the registry's aliases.
 #[derive(Debug, Clone)]
 pub struct RunConfig {
     pub machines: usize,
     pub depth: usize,
     pub alpha: f32,
     pub precision: Precision,
-    pub engine: EngineKind,
+    pub engine: EngineId,
     pub jobs: usize,
     pub seed: u64,
     pub workload: WorkloadSpec,
@@ -63,7 +31,7 @@ impl Default for RunConfig {
             depth: 10,
             alpha: 0.5,
             precision: Precision::Int8,
-            engine: EngineKind::Native,
+            engine: EngineId::Sos,
             jobs: 1000,
             seed: 42,
             workload: WorkloadSpec::default(),
@@ -148,7 +116,7 @@ impl RunConfig {
             };
         }
         if let Some(v) = j.get("engine").and_then(Json::as_str) {
-            c.engine = EngineKind::parse(v)?;
+            c.engine = EngineId::parse(v)?;
         }
         if let Some(v) = get_num(j, "jobs") {
             c.jobs = v as usize;
@@ -200,20 +168,28 @@ mod tests {
         let mut c = RunConfig::default();
         c.machines = 20;
         c.precision = Precision::Fp16;
-        c.engine = EngineKind::StannicSim;
+        c.engine = EngineId::StannicSim;
         c.workload = WorkloadSpec::memory_skewed();
         let j = c.to_json();
         let back = RunConfig::from_json(&Json::parse(&j.render()).unwrap()).unwrap();
         assert_eq!(back.machines, 20);
         assert_eq!(back.precision, Precision::Fp16);
-        assert_eq!(back.engine, EngineKind::StannicSim);
+        assert_eq!(back.engine, EngineId::StannicSim);
         assert!((back.workload.frac_memory - 0.70).abs() < 1e-9);
     }
 
     #[test]
-    fn engine_parse() {
-        assert_eq!(EngineKind::parse("xla").unwrap(), EngineKind::Xla);
-        assert!(EngineKind::parse("gpu").is_err());
+    fn archived_configs_with_alias_names_still_parse() {
+        // Pre-registry configs serialized "native"/"stannic"/"hercules".
+        let j = Json::parse(r#"{"engine": "native"}"#).unwrap();
+        assert_eq!(RunConfig::from_json(&j).unwrap().engine, EngineId::Sos);
+        let j = Json::parse(r#"{"engine": "hercules"}"#).unwrap();
+        assert_eq!(
+            RunConfig::from_json(&j).unwrap().engine,
+            EngineId::HerculesSim
+        );
+        let j = Json::parse(r#"{"engine": "gpu"}"#).unwrap();
+        assert!(RunConfig::from_json(&j).is_err());
     }
 
     #[test]

@@ -1,13 +1,12 @@
 //! Engine adapters: a single object-safe interface over every SOS
-//! implementation in the repo, so the coordinator (and the CLI) can swap
-//! engines with a flag.
+//! implementation in the repo. Construction and naming live in the
+//! [`crate::engine::EngineId`] registry; each adapter's `label()` is the
+//! registry's canonical name for that backend.
 
 use crate::baselines::{SimdSos, SoscEngine};
-use crate::error::Result;
-use crate::config::EngineKind;
 use crate::core::Job;
-use crate::quant::Precision;
-use crate::runtime::{ArtifactRegistry, CostImpl, XlaSosEngine};
+use crate::error::Result;
+use crate::runtime::XlaSosEngine;
 use crate::scheduler::{SosEngine, TickOutcome};
 use crate::sim::{hercules::HerculesSim, stannic::StannicSim, ArchSim};
 
@@ -29,7 +28,7 @@ pub trait EngineAdapter {
 
 impl EngineAdapter for SosEngine {
     fn label(&self) -> &'static str {
-        "native"
+        "sos"
     }
     fn submit(&mut self, job: Job) {
         SosEngine::submit(self, job);
@@ -123,36 +122,11 @@ impl EngineAdapter for XlaSosEngine {
     }
 }
 
-/// Construct an engine by kind.
-pub fn build_engine(
-    kind: EngineKind,
-    machines: usize,
-    depth: usize,
-    alpha: f32,
-    precision: Precision,
-) -> Result<Box<dyn EngineAdapter>> {
-    Ok(match kind {
-        EngineKind::Native => Box::new(SosEngine::new(machines, depth, alpha, precision)),
-        EngineKind::StannicSim => Box::new(StannicSim::new(machines, depth, alpha, precision)),
-        EngineKind::HerculesSim => Box::new(HerculesSim::new(machines, depth, alpha, precision)),
-        EngineKind::Xla => {
-            let reg = ArtifactRegistry::open_default()?;
-            Box::new(XlaSosEngine::new(
-                &reg,
-                CostImpl::Stannic,
-                machines,
-                depth,
-                alpha,
-                precision,
-            )?)
-        }
-    })
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::core::JobNature;
+    use crate::quant::Precision;
 
     #[test]
     fn adapters_share_semantics() {
@@ -172,18 +146,6 @@ mod tests {
         }
         for o in &outcomes[1..] {
             assert_eq!(o, &outcomes[0]);
-        }
-    }
-
-    #[test]
-    fn build_engine_constructs_sw_engines() {
-        for kind in [
-            EngineKind::Native,
-            EngineKind::StannicSim,
-            EngineKind::HerculesSim,
-        ] {
-            let e = build_engine(kind, 3, 4, 0.5, Precision::Int8).unwrap();
-            assert!(e.is_idle());
         }
     }
 }

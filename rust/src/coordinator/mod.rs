@@ -1,11 +1,41 @@
-//! The L3 online coordinator: pluggable scheduling engines behind a
-//! common adapter, a threaded serving loop with per-machine workers,
-//! and the PCIe transport model for accelerator round-trips.
+//! The L3 online coordinator — the serving spine between workload
+//! generation and the scheduling engines.
+//!
+//! The paper's coordinator exists to keep a hardware-speed scheduler fed
+//! under *stochastic online* arrivals, so this layer is built as a
+//! batched multi-source arrival pipeline rather than a trace drainer:
+//!
+//! * **Arrival sources** ([`ArrivalSource`]): N concurrent streams, each
+//!   an independent `WorkloadSpec` + RNG stream (or a replayed trace),
+//!   generated on their own threads and fed through bounded queues —
+//!   backpressure on a slow scheduler shows up as per-source enqueue
+//!   stalls, not lost jobs.
+//! * **Deterministic merge**: the scheduler thread merges queue heads in
+//!   virtual-time order (ties broken by source id) into a bounded merge
+//!   queue, so the merged arrival order — and therefore the schedule —
+//!   is identical for any thread interleaving and any queue depth
+//!   (property-tested).
+//! * **Batched admission**: up to [`ServeOpts::batch`] merged arrivals
+//!   enter the engine per tick; the merge-queue depth and batch-size
+//!   distributions are first-class telemetry on [`ServeReport`].
+//! * **Engine adapters** ([`EngineAdapter`]): one object-safe interface
+//!   over every backend; construction/naming lives in the
+//!   [`crate::engine::EngineId`] registry.
+//! * **Transport + workers**: the PCIe round-trip model ([`pcie`]) and
+//!   one virtual-time worker thread per machine, reporting
+//!   [`CompletionRecord`]s.
+//! * **Persistence** ([`ServeRecord`]): `serve --record` archives a run
+//!   through the same jsonio plumbing as `sweep --record`.
 
 mod adapter;
 pub mod pcie;
+mod record;
 mod server;
 
-pub use adapter::{build_engine, EngineAdapter};
+pub use adapter::EngineAdapter;
 pub use pcie::{PcieModel, PcieStats};
-pub use server::{serve, CompletionRecord, ServeOpts, ServeReport};
+pub use record::{ServeRecord, SourceRecord, SERVE_RECORD_SCHEMA};
+pub use server::{
+    serve, serve_sources, ArrivalSource, CompletionRecord, IdHasher, ServeOpts, ServeReport,
+    SourceStats,
+};

@@ -1,0 +1,276 @@
+//! Persisted serve reports — the coordinator's arm of the repo's
+//! benchmarking backbone.
+//!
+//! `serve --record out.json` turns one serving run into a durable,
+//! machine-readable artifact the same way `sweep --record` does for the
+//! grid: a [`ServeRecord`] serializes the run key (engine, batch,
+//! sources), the deterministic outcome (schedule metrics, tick count,
+//! merge/batch telemetry percentiles), and the timing-dependent
+//! backpressure observations (per-source enqueue stalls, wall time)
+//! through [`crate::jsonio`]. Parsing reuses the strict field accessors
+//! of [`crate::sweep::record`] (u64-exact fields travel as strings;
+//! hand-edited artifacts fail at parse time with the field name).
+
+use std::time::{SystemTime, UNIX_EPOCH};
+
+use crate::jsonio::{arr, num, obj, s, Json};
+use crate::sweep::record::{get_arr, get_str, get_u64_str, get_uint};
+
+use super::server::ServeReport;
+
+/// Schema tag embedded in every serve artifact.
+pub const SERVE_RECORD_SCHEMA: &str = "stannic.serve.record.v1";
+
+/// Per-source slice of a persisted serve run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SourceRecord {
+    pub name: String,
+    pub jobs: usize,
+    /// Enqueue stalls observed on this source's bounded arrival queue
+    /// (timing-dependent, like wall time).
+    pub enqueue_stalls: u64,
+}
+
+/// One persisted serving run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeRecord {
+    pub label: String,
+    pub engine: String,
+    /// Unix seconds at record time (0 when the clock is unavailable).
+    pub created_unix: u64,
+    pub completed: usize,
+    pub ticks: u64,
+    /// Engine-side stalled iterations (every V_i full).
+    pub stalls: u64,
+    pub accel_cycles: u64,
+    pub wall_ns: u64,
+    pub avg_latency: f64,
+    pub fairness: f64,
+    pub load_cv: f64,
+    pub throughput: f64,
+    pub jobs_per_machine: Vec<usize>,
+    pub latency_p50: u64,
+    pub latency_p95: u64,
+    pub latency_p99: u64,
+    /// Merge-queue depth percentiles (per-tick samples).
+    pub merge_depth_p50: u64,
+    pub merge_depth_p99: u64,
+    pub merge_depth_max: u64,
+    /// Admission batch-size percentiles (ticks admitting >= 1 job).
+    pub batch_p50: u64,
+    pub batch_p99: u64,
+    pub batch_max: u64,
+    pub sources: Vec<SourceRecord>,
+}
+
+impl ServeRecord {
+    pub fn from_report(label: &str, r: &ServeReport) -> ServeRecord {
+        ServeRecord {
+            label: label.to_string(),
+            engine: r.engine.to_string(),
+            created_unix: SystemTime::now()
+                .duration_since(UNIX_EPOCH)
+                .map(|d| d.as_secs())
+                .unwrap_or(0),
+            completed: r.completions.len(),
+            ticks: r.ticks,
+            stalls: r.stalls,
+            accel_cycles: r.accel_cycles,
+            wall_ns: r.wall.as_nanos().max(1) as u64,
+            avg_latency: r.metrics.avg_latency,
+            fairness: r.metrics.fairness,
+            load_cv: r.metrics.load_balance_cv,
+            throughput: r.metrics.throughput,
+            jobs_per_machine: r.metrics.jobs_per_machine.clone(),
+            latency_p50: r.latency_hist.p50(),
+            latency_p95: r.latency_hist.p95(),
+            latency_p99: r.latency_hist.p99(),
+            merge_depth_p50: r.merge_depth.p50(),
+            merge_depth_p99: r.merge_depth.p99(),
+            merge_depth_max: r.merge_depth.max(),
+            batch_p50: r.batch_sizes.p50(),
+            batch_p99: r.batch_sizes.p99(),
+            batch_max: r.batch_sizes.max(),
+            sources: r
+                .sources
+                .iter()
+                .map(|src| SourceRecord {
+                    name: src.name.clone(),
+                    jobs: src.jobs,
+                    enqueue_stalls: src.enqueue_stalls,
+                })
+                .collect(),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("schema", s(SERVE_RECORD_SCHEMA)),
+            ("label", s(self.label.clone())),
+            ("engine", s(self.engine.clone())),
+            ("created_unix", s(self.created_unix.to_string())),
+            ("completed", num(self.completed as f64)),
+            ("ticks", num(self.ticks as f64)),
+            ("stalls", num(self.stalls as f64)),
+            ("accel_cycles", num(self.accel_cycles as f64)),
+            // u64-exact fields go through strings: jsonio numbers are f64
+            ("wall_ns", s(self.wall_ns.to_string())),
+            ("avg_latency", num(self.avg_latency)),
+            ("fairness", num(self.fairness)),
+            ("load_cv", num(self.load_cv)),
+            ("throughput", num(self.throughput)),
+            (
+                "jobs_per_machine",
+                arr(self
+                    .jobs_per_machine
+                    .iter()
+                    .map(|&c| num(c as f64))
+                    .collect()),
+            ),
+            ("latency_p50", num(self.latency_p50 as f64)),
+            ("latency_p95", num(self.latency_p95 as f64)),
+            ("latency_p99", num(self.latency_p99 as f64)),
+            ("merge_depth_p50", num(self.merge_depth_p50 as f64)),
+            ("merge_depth_p99", num(self.merge_depth_p99 as f64)),
+            ("merge_depth_max", num(self.merge_depth_max as f64)),
+            ("batch_p50", num(self.batch_p50 as f64)),
+            ("batch_p99", num(self.batch_p99 as f64)),
+            ("batch_max", num(self.batch_max as f64)),
+            (
+                "sources",
+                arr(self
+                    .sources
+                    .iter()
+                    .map(|src| {
+                        obj(vec![
+                            ("name", s(src.name.clone())),
+                            ("jobs", num(src.jobs as f64)),
+                            ("enqueue_stalls", s(src.enqueue_stalls.to_string())),
+                        ])
+                    })
+                    .collect()),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<ServeRecord, String> {
+        let schema = get_str(j, "schema")?;
+        if schema != SERVE_RECORD_SCHEMA {
+            return Err(format!(
+                "unsupported serve record schema '{schema}' (expected {SERVE_RECORD_SCHEMA})"
+            ));
+        }
+        let sources = get_arr(j, "sources")?
+            .iter()
+            .map(|src| {
+                Ok(SourceRecord {
+                    name: get_str(src, "name")?,
+                    jobs: get_uint(src, "jobs")? as usize,
+                    enqueue_stalls: get_u64_str(src, "enqueue_stalls")?,
+                })
+            })
+            .collect::<Result<Vec<SourceRecord>, String>>()?;
+        Ok(ServeRecord {
+            label: get_str(j, "label")?,
+            engine: get_str(j, "engine")?,
+            created_unix: get_u64_str(j, "created_unix")?,
+            completed: get_uint(j, "completed")? as usize,
+            ticks: get_uint(j, "ticks")?,
+            stalls: get_uint(j, "stalls")?,
+            accel_cycles: get_uint(j, "accel_cycles")?,
+            wall_ns: get_u64_str(j, "wall_ns")?,
+            avg_latency: crate::sweep::record::get_f64(j, "avg_latency")?,
+            fairness: crate::sweep::record::get_f64(j, "fairness")?,
+            load_cv: crate::sweep::record::get_f64(j, "load_cv")?,
+            throughput: crate::sweep::record::get_f64(j, "throughput")?,
+            jobs_per_machine: get_arr(j, "jobs_per_machine")?
+                .iter()
+                .map(|v| {
+                    v.as_f64()
+                        .ok_or_else(|| "non-numeric jobs_per_machine entry".to_string())
+                        .and_then(|n| {
+                            crate::sweep::record::uint_value(n, "jobs_per_machine entry")
+                        })
+                        .map(|n| n as usize)
+                })
+                .collect::<Result<Vec<usize>, String>>()?,
+            latency_p50: get_uint(j, "latency_p50")?,
+            latency_p95: get_uint(j, "latency_p95")?,
+            latency_p99: get_uint(j, "latency_p99")?,
+            merge_depth_p50: get_uint(j, "merge_depth_p50")?,
+            merge_depth_p99: get_uint(j, "merge_depth_p99")?,
+            merge_depth_max: get_uint(j, "merge_depth_max")?,
+            batch_p50: get_uint(j, "batch_p50")?,
+            batch_p99: get_uint(j, "batch_p99")?,
+            batch_max: get_uint(j, "batch_max")?,
+            sources,
+        })
+    }
+
+    /// Parse an artifact from its serialized text.
+    pub fn parse(text: &str) -> Result<ServeRecord, String> {
+        ServeRecord::from_json(&Json::parse(text)?)
+    }
+
+    /// Serialize to the artifact text (compact JSON + trailing newline).
+    pub fn render(&self) -> String {
+        let mut text = self.to_json().render();
+        text.push('\n');
+        text
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::server::{serve_sources, ArrivalSource, ServeOpts};
+    use super::*;
+    use crate::engine::EngineId;
+    use crate::quant::Precision;
+    use crate::workload::WorkloadSpec;
+
+    fn small_record() -> ServeRecord {
+        let sources =
+            ArrivalSource::standard_mix(&WorkloadSpec::default(), 5, 90, 7, 2);
+        let opts = ServeOpts {
+            batch: 3,
+            ..ServeOpts::default()
+        };
+        let report = serve_sources(
+            EngineId::Sos.build(5, 10, 0.5, Precision::Int8).unwrap(),
+            sources,
+            &opts,
+        )
+        .unwrap();
+        ServeRecord::from_report("test", &report)
+    }
+
+    #[test]
+    fn record_round_trips_through_jsonio() {
+        let rec = small_record();
+        assert_eq!(rec.completed, 90);
+        assert_eq!(rec.sources.len(), 2);
+        let text = rec.render();
+        let back = ServeRecord::parse(&text).expect("parse own artifact");
+        assert_eq!(rec, back, "parse(render(r)) == r");
+        assert_eq!(text, back.render(), "serialize -> parse -> serialize fixed point");
+    }
+
+    #[test]
+    fn rejects_wrong_schema_and_garbage() {
+        assert!(ServeRecord::parse("{}").is_err());
+        assert!(ServeRecord::parse("not json").is_err());
+        let rec = small_record();
+        let text = rec
+            .render()
+            .replace(SERVE_RECORD_SCHEMA, "stannic.serve.record.v0");
+        assert!(ServeRecord::parse(&text).is_err());
+    }
+
+    #[test]
+    fn rejects_corrupt_integer_fields() {
+        let rec = small_record();
+        let ticks = format!("\"ticks\":{}", rec.ticks);
+        let text = rec.render().replacen(&ticks, "\"ticks\":-4", 1);
+        assert!(ServeRecord::parse(&text).is_err());
+    }
+}

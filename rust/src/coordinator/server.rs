@@ -1,12 +1,25 @@
-//! The online serving loop: a scheduler thread drives the engine over
-//! the arrival trace, charging PCIe transport per accelerator
-//! round-trip; released jobs stream over bounded channels to one worker
-//! thread per machine, which simulates execution in virtual time and
-//! reports completion records back. (tokio is unavailable offline; this
-//! is the std::thread + mpsc equivalent of the async runtime.)
+//! The online serving pipeline: N concurrent arrival-source threads
+//! (each an independent workload stream with its own RNG) feed bounded
+//! queues into a deterministic virtual-time merge; the scheduler thread
+//! admits merged arrivals to the engine in configurable batches per
+//! tick, charging PCIe transport per accelerator round-trip; released
+//! jobs stream over bounded channels to one worker thread per machine,
+//! which simulates execution in virtual time and reports completion
+//! records back. (tokio is unavailable offline; this is the std::thread
+//! + mpsc equivalent of the async runtime.)
+//!
+//! **Determinism is load-bearing**: the merged arrival order depends
+//! only on `(virtual tick, source id, per-source FIFO order)` — never on
+//! thread interleaving — so the schedule produced for a given source
+//! set, batch size and engine is byte-identical across runs and across
+//! `queue_depth` settings (property-tested in `tests/properties.rs`).
+//! Backpressure shows up in *telemetry*, not in the schedule: per-source
+//! enqueue stalls, the merge-queue depth histogram, and the batch-size
+//! distribution on [`ServeReport`].
 
 use std::hash::{BuildHasherDefault, Hasher};
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
 use std::thread;
 use std::time::Instant;
 
@@ -21,8 +34,12 @@ impl Hasher for IdHasher {
         self.0
     }
     fn write(&mut self, bytes: &[u8]) {
+        // Same multiplicative finisher as `write_u64`: rotate-xor alone
+        // leaves short byte keys clustered in the low bits, which would
+        // silently degrade `JobMap` if a non-u64 key type ever landed.
         for &b in bytes {
-            self.0 = self.0.rotate_left(8) ^ b as u64;
+            self.0 = (self.0.rotate_left(8) ^ u64::from(b))
+                .wrapping_mul(0x9e37_79b9_7f4a_7c15);
         }
     }
     fn write_u64(&mut self, v: u64) {
@@ -34,10 +51,10 @@ impl Hasher for IdHasher {
 
 type JobMap = std::collections::HashMap<u64, Job, BuildHasherDefault<IdHasher>>;
 
-use crate::core::{Job, MachineId};
+use crate::core::{Job, MachineId, MachinePark};
 use crate::error::Result;
 use crate::metrics::{Histogram, MetricSet, ScheduleMetrics};
-use crate::workload::Trace;
+use crate::workload::{generate_trace, Trace, WorkloadSpec};
 
 use super::adapter::EngineAdapter;
 use super::pcie::{PcieModel, PcieStats};
@@ -61,6 +78,124 @@ struct WorkItem {
     released: u64,
 }
 
+/// One arrival event in flight from a source thread to the merge stage.
+struct SourceEvent {
+    tick: u64,
+    job: Job,
+}
+
+/// What an [`ArrivalSource`] feeds through its bounded queue. The
+/// machine/job counts live once, on the [`ArrivalSource`] itself.
+enum SourcePayload {
+    /// Pre-built events (trace replay), tick-ordered.
+    Events(Vec<(u64, Job)>),
+    /// A workload synthesized *inside the source thread* — generation
+    /// overlaps with scheduling, which is the point of the pipeline.
+    Synth { spec: WorkloadSpec, seed: u64 },
+}
+
+/// One independent arrival stream feeding the coordinator's merge stage.
+pub struct ArrivalSource {
+    pub name: String,
+    machines: usize,
+    jobs: usize,
+    payload: SourcePayload,
+}
+
+impl ArrivalSource {
+    /// Replay an existing trace as a single stream. Explicit idle events
+    /// (`job: None`) are dropped: a job-less tick never reaches the
+    /// engine, and the pipeline's clock free-runs past the last arrival
+    /// until the park drains (so a trailing idle marker no longer pads
+    /// `ServeReport::ticks` the way the pre-pipeline loop did).
+    pub fn from_trace(name: &str, trace: &Trace) -> ArrivalSource {
+        let events: Vec<(u64, Job)> = trace
+            .events()
+            .iter()
+            .filter_map(|e| e.job.clone().map(|j| (e.tick, j)))
+            .collect();
+        ArrivalSource {
+            name: name.to_string(),
+            machines: trace.machines(),
+            jobs: events.len(),
+            payload: SourcePayload::Events(events),
+        }
+    }
+
+    /// A synthetic stream: `jobs` arrivals drawn from `spec` with an
+    /// independent RNG stream seeded by `seed`, generated lazily on the
+    /// source thread.
+    pub fn synthetic(
+        name: &str,
+        spec: WorkloadSpec,
+        machines: usize,
+        jobs: usize,
+        seed: u64,
+    ) -> ArrivalSource {
+        ArrivalSource {
+            name: name.to_string(),
+            machines,
+            jobs,
+            payload: SourcePayload::Synth { spec, seed },
+        }
+    }
+
+    /// The CLI's default multi-source mix: stream 0 carries the caller's
+    /// base spec ("steady"), further streams rotate through the bursty
+    /// and heavy-tailed stress mixes (the Agon regimes where concurrent
+    /// arrival streams separate schedulers — arXiv:2109.00665). Jobs are
+    /// split evenly (remainder to the earlier sources); each source gets
+    /// a distinct seed so the RNG streams are independent.
+    pub fn standard_mix(
+        base: &WorkloadSpec,
+        machines: usize,
+        total_jobs: usize,
+        seed: u64,
+        n_sources: usize,
+    ) -> Vec<ArrivalSource> {
+        let mixes: [(&str, WorkloadSpec); 3] = [
+            ("steady", base.clone()),
+            ("bursty", WorkloadSpec::bursty()),
+            ("heavy", WorkloadSpec::heavy_tailed()),
+        ];
+        (0..n_sources)
+            .map(|i| {
+                let (mix_name, spec) = &mixes[i % mixes.len()];
+                let jobs =
+                    total_jobs / n_sources + usize::from(i < total_jobs % n_sources);
+                ArrivalSource::synthetic(
+                    &format!("{i}:{mix_name}"),
+                    spec.clone(),
+                    machines,
+                    jobs,
+                    seed.wrapping_add(i as u64),
+                )
+            })
+            .collect()
+    }
+
+    /// Machine count this stream's jobs carry EPTs for.
+    pub fn machines(&self) -> usize {
+        self.machines
+    }
+
+    /// Number of jobs this stream will emit.
+    pub fn jobs(&self) -> usize {
+        self.jobs
+    }
+}
+
+/// Per-source backpressure telemetry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SourceStats {
+    pub name: String,
+    /// Jobs this source contributed to the merged stream.
+    pub jobs: usize,
+    /// Times the source blocked on a full arrival queue (timing-
+    /// dependent, like wall time — never part of determinism checks).
+    pub enqueue_stalls: u64,
+}
+
 /// Serving-run report.
 #[derive(Debug, Clone)]
 pub struct ServeReport {
@@ -78,17 +213,31 @@ pub struct ServeReport {
     pub wall: std::time::Duration,
     /// Stalled iterations (arrival waited, every V_i full).
     pub stalls: u64,
+    /// Per-source arrival/backpressure stats, in source-id order.
+    pub sources: Vec<SourceStats>,
+    /// Merge-queue depth after admission, sampled every scheduler tick
+    /// (deterministic).
+    pub merge_depth: Histogram,
+    /// Arrivals admitted per tick, over ticks admitting >= 1 job
+    /// (deterministic).
+    pub batch_sizes: Histogram,
 }
 
 /// Coordinator options.
 #[derive(Debug, Clone)]
 pub struct ServeOpts {
     pub pcie: PcieModel,
-    /// Bounded channel depth per machine worker (backpressure).
+    /// Bounded queue depth: per-source arrival channels, the merge
+    /// queue, and per-machine worker channels (backpressure).
     pub queue_depth: usize,
     pub max_ticks: u64,
     /// Metric interval for load-balance CV.
     pub metric_interval: u64,
+    /// Max arrivals admitted to the engine per scheduler tick.
+    /// `usize::MAX` (or 0, the CLI's spelling) = unbatched: admit
+    /// everything due this tick, which reproduces the single-trace
+    /// serve loop exactly.
+    pub batch: usize,
 }
 
 impl Default for ServeOpts {
@@ -98,6 +247,7 @@ impl Default for ServeOpts {
             queue_depth: 256,
             max_ticks: 5_000_000,
             metric_interval: 64,
+            batch: usize::MAX,
         }
     }
 }
@@ -128,147 +278,292 @@ fn worker(
     }
 }
 
-/// Drive `engine` over `trace` with machine workers on threads.
+/// Source thread body: push tick-ordered events through the bounded
+/// queue, counting enqueue stalls (a stall = the queue was full when the
+/// event became ready).
+fn feed_source(events: Vec<(u64, Job)>, tx: SyncSender<SourceEvent>, stalls: &AtomicU64) {
+    for (tick, job) in events {
+        match tx.try_send(SourceEvent { tick, job }) {
+            Ok(()) => {}
+            Err(TrySendError::Full(ev)) => {
+                stalls.fetch_add(1, Ordering::Relaxed);
+                if tx.send(ev).is_err() {
+                    return; // scheduler bailed (max_ticks)
+                }
+            }
+            Err(TrySendError::Disconnected(_)) => return,
+        }
+    }
+}
+
+/// Drive `engine` over a single pre-built trace (the classic replay
+/// path; a one-source pipeline with the default unbatched admission is
+/// exactly the historical serve loop).
 pub fn serve(
-    mut engine: Box<dyn EngineAdapter>,
+    engine: Box<dyn EngineAdapter>,
     trace: &Trace,
     opts: &ServeOpts,
 ) -> Result<ServeReport> {
-    let machines = trace.machines();
-    let total_jobs = trace.n_jobs();
-    let started = Instant::now();
+    serve_sources(engine, vec![ArrivalSource::from_trace("trace", trace)], opts)
+}
 
-    // spawn workers
-    let mut work_txs: Vec<SyncSender<WorkItem>> = Vec::with_capacity(machines);
-    let (done_tx, done_rx) = sync_channel::<CompletionRecord>(total_jobs.max(16));
-    let mut handles = Vec::with_capacity(machines);
-    for m in 0..machines {
-        let (tx, rx) = sync_channel::<WorkItem>(opts.queue_depth);
-        let done = done_tx.clone();
-        handles.push(
-            thread::Builder::new()
-                .name(format!("machine-{m}"))
-                .spawn(move || worker(m, rx, done))
-                .expect("spawn worker"),
-        );
-        work_txs.push(tx);
+/// Drive `engine` over N concurrent arrival sources.
+///
+/// Pipeline: each source runs on its own thread and feeds a bounded
+/// queue; the scheduler thread merges queue heads in virtual-time order
+/// (ties broken by source id) into a bounded merge queue, admits up to
+/// [`ServeOpts::batch`] merged arrivals per tick, and drives the engine;
+/// released jobs go to per-machine worker threads as before. Job ids
+/// are namespaced per source (`id + source_index << 32`) so concurrent
+/// streams can reuse local ids.
+pub fn serve_sources(
+    mut engine: Box<dyn EngineAdapter>,
+    sources: Vec<ArrivalSource>,
+    opts: &ServeOpts,
+) -> Result<ServeReport> {
+    if sources.is_empty() {
+        crate::bail!("serve_sources needs at least one arrival source");
     }
-    drop(done_tx);
+    let machines = sources[0].machines();
+    if sources.iter().any(|s| s.machines() != machines) {
+        crate::bail!("all arrival sources must target the same machine park");
+    }
+    let total_jobs: usize = sources.iter().map(ArrivalSource::jobs).sum();
+    let n_sources = sources.len();
+    let source_meta: Vec<(String, usize)> = sources
+        .iter()
+        .map(|s| (s.name.clone(), s.jobs()))
+        .collect();
+    let depth = opts.queue_depth.max(1);
+    // 0 means unbatched (the CLI convention); a literal 0 budget would
+    // otherwise admit nothing and idle-spin to max_ticks
+    let batch = if opts.batch == 0 { usize::MAX } else { opts.batch };
+    let started = Instant::now();
+    let stall_counts: Vec<AtomicU64> = (0..n_sources).map(|_| AtomicU64::new(0)).collect();
 
-    // job registry: released ids -> Job payloads (the engine tracks only
-    // metadata, like the FPGA; the host keeps the payloads)
-    let mut payloads: JobMap =
-        JobMap::with_capacity_and_hasher(total_jobs, Default::default());
+    thread::scope(|scope| -> Result<ServeReport> {
+        // spawn arrival sources
+        let mut source_rxs: Vec<Receiver<SourceEvent>> = Vec::with_capacity(n_sources);
+        let mut source_handles = Vec::with_capacity(n_sources);
+        for (i, src) in sources.into_iter().enumerate() {
+            let (tx, rx) = sync_channel::<SourceEvent>(depth);
+            let stalls = &stall_counts[i];
+            source_handles.push(scope.spawn(move || {
+                let (machines, jobs) = (src.machines, src.jobs);
+                match src.payload {
+                    SourcePayload::Events(events) => feed_source(events, tx, stalls),
+                    SourcePayload::Synth { spec, seed } => {
+                        // cycled(5) is exactly the paper M1-M5 park, so
+                        // one constructor covers every size.
+                        let park = MachinePark::cycled(machines);
+                        let trace = generate_trace(&spec, &park, jobs, seed);
+                        let events: Vec<(u64, Job)> = trace
+                            .events()
+                            .iter()
+                            .filter_map(|e| e.job.clone().map(|j| (e.tick, j)))
+                            .collect();
+                        feed_source(events, tx, stalls);
+                    }
+                }
+            }));
+            source_rxs.push(rx);
+        }
 
-    let mut pcie = PcieStats::default();
-    let mut metrics = MetricSet::new(machines, opts.metric_interval);
-    let mut stalls = 0u64;
-    let mut released_count = 0usize;
-    let mut events = trace.events().iter().peekable();
-    let mut tick = 0u64;
+        // spawn machine workers
+        let mut work_txs: Vec<SyncSender<WorkItem>> = Vec::with_capacity(machines);
+        let (done_tx, done_rx) = sync_channel::<CompletionRecord>(total_jobs.max(16));
+        for m in 0..machines {
+            let (tx, rx) = sync_channel::<WorkItem>(depth);
+            let done = done_tx.clone();
+            scope.spawn(move || worker(m, rx, done));
+            work_txs.push(tx);
+        }
+        drop(done_tx);
 
-    while tick < opts.max_ticks {
-        tick += 1;
-        // arrivals for this tick (burst serialization happens inside the
-        // engine's FIFO, matching the hardware's host interface)
-        while events.peek().is_some_and(|e| e.tick <= tick) {
-            let e = events.next().expect("peeked");
-            if let Some(job) = &e.job {
-                payloads.insert(job.id, job.clone());
-                engine.submit(job.clone());
+        // job registry: released ids -> Job payloads (the engine tracks
+        // only metadata, like the FPGA; the host keeps the payloads)
+        let mut payloads: JobMap =
+            JobMap::with_capacity_and_hasher(total_jobs, Default::default());
+
+        // merge state: one head per source (None = exhausted). Blocking
+        // recv is what makes the merge independent of interleaving — a
+        // source is either drained or must reveal its next event before
+        // the merge proceeds past its virtual time.
+        let mut heads: Vec<Option<SourceEvent>> = source_rxs
+            .iter()
+            .map(|rx| rx.recv().ok())
+            .collect();
+        let mut staged: std::collections::VecDeque<Job> =
+            std::collections::VecDeque::with_capacity(depth);
+
+        let mut pcie = PcieStats::default();
+        let mut metrics = MetricSet::new(machines, opts.metric_interval);
+        let mut merge_depth = Histogram::new();
+        let mut batch_sizes = Histogram::new();
+        let mut stalls = 0u64;
+        let mut released_count = 0usize;
+        let mut tick = 0u64;
+
+        while tick < opts.max_ticks {
+            tick += 1;
+            // arrivals for this tick: deterministic ordered merge into
+            // the bounded merge queue, then batched admission (burst
+            // serialization continues inside the engine's FIFO,
+            // matching the hardware's host interface)
+            let mut admitted = 0usize;
+            loop {
+                while staged.len() < depth {
+                    let next = heads
+                        .iter()
+                        .enumerate()
+                        .filter_map(|(i, h)| h.as_ref().map(|e| (e.tick, i)))
+                        .filter(|&(t, _)| t <= tick)
+                        .min();
+                    let Some((_, src)) = next else { break };
+                    let ev = heads[src].take().expect("selected head exists");
+                    heads[src] = source_rxs[src].recv().ok();
+                    let mut job = ev.job;
+                    if n_sources > 1 && job.id >= (1 << 32) {
+                        crate::bail!(
+                            "source {src} produced job id {} — ids must fit in 32 bits \
+                             so sources can be namespaced for the merge",
+                            job.id
+                        );
+                    }
+                    job.id += (src as u64) << 32;
+                    staged.push_back(job);
+                }
+                let budget = batch.saturating_sub(admitted);
+                if budget == 0 || staged.is_empty() {
+                    break;
+                }
+                for _ in 0..budget.min(staged.len()) {
+                    let job = staged.pop_front().expect("staged non-empty");
+                    payloads.insert(job.id, job.clone());
+                    engine.submit(job);
+                    admitted += 1;
+                }
+            }
+            merge_depth.record(staged.len() as u64);
+            if admitted > 0 {
+                batch_sizes.record(admitted as u64);
+            }
+
+            let out = engine.tick()?;
+            if out.stalled {
+                stalls += 1;
+            }
+            // transport accounting: one round-trip per scheduling
+            // iteration that talks to the accelerator (assignment and/or
+            // releases)
+            if out.assigned.is_some() || !out.released.is_empty() {
+                opts.pcie.charge(&mut pcie, machines, out.released.len());
+            }
+            if let Some(a) = &out.assigned {
+                metrics.record_assignment(a.machine, tick);
+            }
+            for (id, m) in &out.released {
+                let job = payloads
+                    .remove(id)
+                    .expect("released job must have a payload");
+                released_count += 1;
+                work_txs[*m]
+                    .send(WorkItem {
+                        job,
+                        released: tick,
+                    })
+                    .expect("worker alive");
+            }
+
+            if released_count == total_jobs
+                && engine.is_idle()
+                && staged.is_empty()
+                && heads.iter().all(Option::is_none)
+            {
+                break;
             }
         }
 
-        let out = engine.tick()?;
-        if out.stalled {
-            stalls += 1;
+        // unblock any still-feeding sources (max_ticks bailout), then
+        // wait for them so the stall counters are final
+        drop(heads);
+        drop(source_rxs);
+        for h in source_handles {
+            let _ = h.join();
         }
-        // transport accounting: one round-trip per scheduling iteration
-        // that talks to the accelerator (assignment and/or releases)
-        if out.assigned.is_some() || !out.released.is_empty() {
-            opts.pcie
-                .charge(&mut pcie, machines, out.released.len());
-        }
-        if let Some(a) = &out.assigned {
-            metrics.record_assignment(a.machine, tick);
-        }
-        for (id, m) in &out.released {
-            let job = payloads
-                .remove(id)
-                .expect("released job must have a payload");
-            released_count += 1;
-            work_txs[*m]
-                .send(WorkItem {
-                    job,
-                    released: tick,
-                })
-                .expect("worker alive");
+        let source_stats: Vec<SourceStats> = source_meta
+            .iter()
+            .zip(&stall_counts)
+            .map(|((name, jobs), stalls)| SourceStats {
+                name: name.clone(),
+                jobs: *jobs,
+                enqueue_stalls: stalls.load(Ordering::Relaxed),
+            })
+            .collect();
+
+        // close work channels; collect completions
+        drop(work_txs);
+        let mut completions: Vec<CompletionRecord> = done_rx.iter().collect();
+        completions.sort_by_key(|c| (c.finished, c.job.id));
+        let mut latency_hist = Histogram::new();
+        for c in &completions {
+            metrics.record_latency(c.machine, c.job.arrival, c.started);
+            latency_hist.record(c.started - c.job.arrival);
         }
 
-        if released_count == total_jobs && engine.is_idle() && events.peek().is_none() {
-            break;
-        }
-    }
-
-    // close work channels; collect completions
-    drop(work_txs);
-    let mut completions: Vec<CompletionRecord> = done_rx.iter().collect();
-    for h in handles {
-        let _ = h.join();
-    }
-    completions.sort_by_key(|c| (c.finished, c.job.id));
-    let mut latency_hist = Histogram::new();
-    for c in &completions {
-        metrics.record_latency(c.machine, c.job.arrival, c.started);
-        latency_hist.record(c.started - c.job.arrival);
-    }
-
-    Ok(ServeReport {
-        engine: engine.label(),
-        metrics: metrics.finish(),
-        latency_hist,
-        completions,
-        pcie,
-        ticks: tick,
-        accel_cycles: engine.cycles(),
-        wall: started.elapsed(),
-        stalls,
+        Ok(ServeReport {
+            engine: engine.label(),
+            metrics: metrics.finish(),
+            latency_hist,
+            completions,
+            pcie,
+            ticks: tick,
+            accel_cycles: engine.cycles(),
+            wall: started.elapsed(),
+            stalls,
+            sources: source_stats,
+            merge_depth,
+            batch_sizes,
+        })
     })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::EngineKind;
-    use crate::coordinator::adapter::build_engine;
     use crate::core::MachinePark;
+    use crate::engine::EngineId;
     use crate::quant::Precision;
     use crate::workload::{generate_trace, WorkloadSpec};
 
-    fn run(kind: EngineKind, jobs: usize, seed: u64) -> ServeReport {
+    fn run(id: EngineId, jobs: usize, seed: u64) -> ServeReport {
         let park = MachinePark::paper_m1_m5();
         let trace = generate_trace(&WorkloadSpec::default(), &park, jobs, seed);
-        let engine = build_engine(kind, 5, 10, 0.5, Precision::Int8).unwrap();
+        let engine = id.build(5, 10, 0.5, Precision::Int8).unwrap();
         serve(engine, &trace, &ServeOpts::default()).unwrap()
     }
 
     #[test]
-    fn serves_full_trace_with_native_engine() {
-        let r = run(EngineKind::Native, 200, 9);
+    fn serves_full_trace_with_sos_engine() {
+        let r = run(EngineId::Sos, 200, 9);
         assert_eq!(r.completions.len(), 200);
         assert_eq!(r.metrics.total_scheduled, 200);
         assert!(r.pcie.transactions > 0);
         assert!(r.metrics.avg_latency >= 0.0);
         // every machine got work under the even workload
         assert!(!r.metrics.starvation);
+        // single-source replay: one stream, all jobs, no id remapping
+        assert_eq!(r.sources.len(), 1);
+        assert_eq!(r.sources[0].jobs, 200);
+        assert!(r.completions.iter().all(|c| c.job.id < (1 << 32)));
     }
 
     #[test]
     fn sim_engine_reports_cycles() {
-        let r = run(EngineKind::StannicSim, 100, 3);
+        let r = run(EngineId::StannicSim, 100, 3);
         assert_eq!(r.completions.len(), 100);
         assert!(r.accel_cycles > 0);
-        let h = run(EngineKind::HerculesSim, 100, 3);
+        let h = run(EngineId::HerculesSim, 100, 3);
         assert!(
             h.accel_cycles > r.accel_cycles,
             "hercules {} vs stannic {}",
@@ -279,9 +574,9 @@ mod tests {
 
     #[test]
     fn identical_schedules_across_engines() {
-        let a = run(EngineKind::Native, 150, 21);
-        let b = run(EngineKind::StannicSim, 150, 21);
-        let c = run(EngineKind::HerculesSim, 150, 21);
+        let a = run(EngineId::Sos, 150, 21);
+        let b = run(EngineId::StannicSim, 150, 21);
+        let c = run(EngineId::HerculesSim, 150, 21);
         assert_eq!(a.metrics.jobs_per_machine, b.metrics.jobs_per_machine);
         assert_eq!(a.metrics.jobs_per_machine, c.metrics.jobs_per_machine);
         assert_eq!(a.metrics.avg_latency, b.metrics.avg_latency);
@@ -301,12 +596,115 @@ mod tests {
             });
         }
         let trace = Trace::new(events, 1);
-        let engine = build_engine(EngineKind::Native, 1, 10, 0.5, Precision::Int8).unwrap();
+        let engine = EngineId::Sos.build(1, 10, 0.5, Precision::Int8).unwrap();
         let r = serve(engine, &trace, &ServeOpts::default()).unwrap();
         assert_eq!(r.completions.len(), 2);
         let c0 = &r.completions[0];
         let c1 = &r.completions[1];
         assert!(c1.started >= c0.finished);
         let _ = park;
+    }
+
+    #[test]
+    fn synthetic_source_matches_trace_replay() {
+        // A one-source synthetic pipeline must produce the identical
+        // schedule to replaying the same generated trace.
+        let park = MachinePark::cycled(5);
+        let spec = WorkloadSpec::default();
+        let trace = generate_trace(&spec, &park, 120, 77);
+        let opts = ServeOpts::default();
+        let a = serve(
+            EngineId::Sos.build(5, 10, 0.5, Precision::Int8).unwrap(),
+            &trace,
+            &opts,
+        )
+        .unwrap();
+        let b = serve_sources(
+            EngineId::Sos.build(5, 10, 0.5, Precision::Int8).unwrap(),
+            vec![ArrivalSource::synthetic("synth", spec, 5, 120, 77)],
+            &opts,
+        )
+        .unwrap();
+        assert_eq!(a.metrics.jobs_per_machine, b.metrics.jobs_per_machine);
+        assert_eq!(a.metrics.avg_latency, b.metrics.avg_latency);
+        assert_eq!(a.ticks, b.ticks);
+        assert_eq!(a.stalls, b.stalls);
+    }
+
+    #[test]
+    fn multi_source_merges_all_streams() {
+        let sources =
+            ArrivalSource::standard_mix(&WorkloadSpec::default(), 5, 100, 42, 3);
+        assert_eq!(sources.iter().map(ArrivalSource::jobs).sum::<usize>(), 100);
+        let r = serve_sources(
+            EngineId::Sos.build(5, 10, 0.5, Precision::Int8).unwrap(),
+            sources,
+            &ServeOpts::default(),
+        )
+        .unwrap();
+        assert_eq!(r.completions.len(), 100);
+        assert_eq!(r.sources.len(), 3);
+        assert_eq!(r.sources.iter().map(|s| s.jobs).sum::<usize>(), 100);
+        // jobs from all three namespaces completed
+        for src in 0..3u64 {
+            assert!(
+                r.completions.iter().any(|c| c.job.id >> 32 == src),
+                "no completions from source {src}"
+            );
+        }
+    }
+
+    #[test]
+    fn batched_admission_caps_per_tick_submissions() {
+        let spec = WorkloadSpec::default();
+        let opts = ServeOpts {
+            batch: 2,
+            ..ServeOpts::default()
+        };
+        let r = serve_sources(
+            EngineId::Sos.build(5, 10, 0.5, Precision::Int8).unwrap(),
+            vec![ArrivalSource::synthetic("s", spec, 5, 150, 5)],
+            &opts,
+        )
+        .unwrap();
+        assert_eq!(r.completions.len(), 150);
+        assert!(r.batch_sizes.count() > 0);
+        assert!(
+            r.batch_sizes.max() <= 2,
+            "admission must respect the batch cap, saw {}",
+            r.batch_sizes.max()
+        );
+    }
+
+    #[test]
+    fn empty_source_set_is_an_error() {
+        assert!(serve_sources(
+            EngineId::Sos.build(5, 10, 0.5, Precision::Int8).unwrap(),
+            Vec::new(),
+            &ServeOpts::default(),
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn id_hasher_byte_path_mixes_like_u64_path() {
+        use std::hash::Hasher as _;
+        // the byte path must spread short keys across the full word, not
+        // cluster them in the low bits
+        let mut lows = std::collections::HashSet::new();
+        for k in 0u32..64 {
+            let mut h = IdHasher::default();
+            h.write(&k.to_le_bytes());
+            lows.insert(h.finish() >> 48);
+        }
+        assert!(
+            lows.len() > 32,
+            "high bits of byte-hashed keys barely vary: {} distinct",
+            lows.len()
+        );
+        // and the u64 fast path stays what the hot path relies on
+        let mut h = IdHasher::default();
+        h.write_u64(7);
+        assert_eq!(h.finish(), 7u64.wrapping_mul(0x9e37_79b9_7f4a_7c15));
     }
 }

@@ -1,0 +1,220 @@
+//! The single engine registry: every scheduling backend in the repo,
+//! one vocabulary, one constructor.
+//!
+//! Before this module existed the crate carried three parallel
+//! engine-selection surfaces (`config::EngineKind`, `sweep::SweepEngine`
+//! and `coordinator::build_engine`) with drifting name sets — exactly
+//! the registry sprawl STOMP's pluggable-policy harness
+//! (arXiv:2007.14371) warns against. [`EngineId`] is now the sole
+//! source of truth for:
+//!
+//! * **names** — [`EngineId::name`] is the canonical spelling used in
+//!   CLI output, sweep record keys and config JSON; [`EngineId::parse`]
+//!   additionally accepts the historical aliases (`native`, `stannic`,
+//!   `hercules`) so archived `RunConfig` files keep parsing;
+//! * **lists** — [`EngineId::parse_list`] for `--engines`, where `all`
+//!   selects [`EngineId::SOFTWARE`] (every artifact-free backend; the
+//!   XLA engine needs compiled PJRT artifacts and must be named
+//!   explicitly);
+//! * **construction** — [`EngineId::build`] yields the boxed
+//!   [`EngineAdapter`] the coordinator and sweep drive;
+//! * **help/error text** — [`EngineId::USAGE`] is interpolated into
+//!   every parse error and the CLI flag help, so the accepted-name list
+//!   can never drift from the parser again.
+
+use crate::baselines::{SimdSos, SoscEngine};
+use crate::coordinator::EngineAdapter;
+use crate::error::Result;
+use crate::quant::Precision;
+use crate::runtime::{ArtifactRegistry, CostImpl, XlaSosEngine};
+use crate::scheduler::SosEngine;
+use crate::sim::{hercules::HerculesSim, stannic::StannicSim};
+
+/// Identifier of one scheduling backend.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum EngineId {
+    /// Golden software SOS engine (canonical name `sos`, alias `native`).
+    Sos,
+    /// Naive single-threaded software baseline.
+    Sosc,
+    /// Lane-vectorised software SOS.
+    Simd,
+    /// Cycle-accurate Stannic simulator (alias `stannic`).
+    StannicSim,
+    /// Cycle-accurate Hercules simulator (alias `hercules`).
+    HerculesSim,
+    /// XLA/PJRT-offloaded cost engine (requires compiled artifacts).
+    Xla,
+}
+
+impl EngineId {
+    /// Every backend, including the artifact-gated XLA engine.
+    pub const ALL: [EngineId; 6] = [
+        EngineId::Sos,
+        EngineId::Sosc,
+        EngineId::Simd,
+        EngineId::StannicSim,
+        EngineId::HerculesSim,
+        EngineId::Xla,
+    ];
+
+    /// The artifact-free backends — what `--engines all` selects and
+    /// what the sweep grid fans across (XLA needs a PJRT runtime that
+    /// does not exist offline).
+    pub const SOFTWARE: [EngineId; 5] = [
+        EngineId::Sos,
+        EngineId::Sosc,
+        EngineId::Simd,
+        EngineId::StannicSim,
+        EngineId::HerculesSim,
+    ];
+
+    /// The one accepted-names string: interpolated into every parse
+    /// error, the `--engine`/`--engines` CLI help, and the docs, so the
+    /// vocabulary cannot drift between surfaces. List contexts
+    /// ([`EngineId::parse_list`]) additionally accept `all` — say so at
+    /// the call site (see the `--engines` help) rather than here, so
+    /// single-engine errors never advertise a spelling they reject.
+    pub const USAGE: &'static str =
+        "sos(=native)|sosc|simd|stannic-sim(=stannic)|hercules-sim(=hercules)|xla";
+
+    /// Canonical name — the spelling used in CLI output, sweep record
+    /// keys, and `RunConfig` JSON.
+    pub fn name(self) -> &'static str {
+        match self {
+            EngineId::Sos => "sos",
+            EngineId::Sosc => "sosc",
+            EngineId::Simd => "simd",
+            EngineId::StannicSim => "stannic-sim",
+            EngineId::HerculesSim => "hercules-sim",
+            EngineId::Xla => "xla",
+        }
+    }
+
+    /// Parse one engine name (canonical or alias).
+    pub fn parse(name: &str) -> Result<EngineId, String> {
+        match name.trim() {
+            "sos" | "native" => Ok(EngineId::Sos),
+            "sosc" => Ok(EngineId::Sosc),
+            "simd" => Ok(EngineId::Simd),
+            "stannic" | "stannic-sim" => Ok(EngineId::StannicSim),
+            "hercules" | "hercules-sim" => Ok(EngineId::HerculesSim),
+            "xla" => Ok(EngineId::Xla),
+            other => Err(format!(
+                "unknown engine '{other}' (expected {})",
+                EngineId::USAGE
+            )),
+        }
+    }
+
+    /// Parse a comma-separated engine list; `"all"` selects
+    /// [`EngineId::SOFTWARE`].
+    pub fn parse_list(text: &str) -> Result<Vec<EngineId>, String> {
+        if text.trim() == "all" {
+            return Ok(EngineId::SOFTWARE.to_vec());
+        }
+        text.split(',')
+            .map(EngineId::parse)
+            .collect::<Result<Vec<EngineId>, String>>()
+            .map_err(|e| format!("{e}; 'all' selects every artifact-free engine"))
+    }
+
+    /// True for backends that construct without compiled artifacts.
+    pub fn is_software(self) -> bool {
+        !matches!(self, EngineId::Xla)
+    }
+
+    /// Construct the backend. Software engines cannot fail; the XLA
+    /// engine errors when the artifact registry is absent.
+    pub fn build(
+        self,
+        machines: usize,
+        depth: usize,
+        alpha: f32,
+        precision: Precision,
+    ) -> Result<Box<dyn EngineAdapter>> {
+        Ok(match self {
+            EngineId::Sos => Box::new(SosEngine::new(machines, depth, alpha, precision)),
+            EngineId::Sosc => Box::new(SoscEngine::new(machines, depth, alpha, precision)),
+            EngineId::Simd => Box::new(SimdSos::new(machines, depth, alpha, precision)),
+            EngineId::StannicSim => Box::new(StannicSim::new(machines, depth, alpha, precision)),
+            EngineId::HerculesSim => Box::new(HerculesSim::new(machines, depth, alpha, precision)),
+            EngineId::Xla => {
+                let reg = ArtifactRegistry::open_default()?;
+                Box::new(XlaSosEngine::new(
+                    &reg,
+                    CostImpl::Stannic,
+                    machines,
+                    depth,
+                    alpha,
+                    precision,
+                )?)
+            }
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn canonical_names_round_trip_through_parse() {
+        for id in EngineId::ALL {
+            assert_eq!(EngineId::parse(id.name()).unwrap(), id, "{}", id.name());
+        }
+    }
+
+    #[test]
+    fn historical_aliases_accepted() {
+        assert_eq!(EngineId::parse("native").unwrap(), EngineId::Sos);
+        assert_eq!(EngineId::parse("stannic").unwrap(), EngineId::StannicSim);
+        assert_eq!(EngineId::parse("hercules").unwrap(), EngineId::HerculesSim);
+    }
+
+    #[test]
+    fn parse_error_carries_the_usage_string() {
+        let err = EngineId::parse("warp-drive").unwrap_err();
+        assert!(err.contains("warp-drive"));
+        assert!(
+            err.contains(EngineId::USAGE),
+            "error message must quote the registry's USAGE string: {err}"
+        );
+    }
+
+    #[test]
+    fn list_parsing_and_all() {
+        assert_eq!(
+            EngineId::parse_list("all").unwrap(),
+            EngineId::SOFTWARE.to_vec()
+        );
+        assert_eq!(
+            EngineId::parse_list("sos, simd").unwrap(),
+            vec![EngineId::Sos, EngineId::Simd]
+        );
+        assert_eq!(
+            EngineId::parse_list("native,stannic,xla").unwrap(),
+            vec![EngineId::Sos, EngineId::StannicSim, EngineId::Xla]
+        );
+        assert!(EngineId::parse_list("sos,gpu").is_err());
+    }
+
+    #[test]
+    fn software_engines_build_and_start_idle() {
+        for id in EngineId::SOFTWARE {
+            assert!(id.is_software());
+            let e = id.build(3, 4, 0.5, Precision::Int8).unwrap();
+            assert!(e.is_idle(), "{}", id.name());
+            assert_eq!(e.label(), id.name(), "adapter label matches registry");
+        }
+    }
+
+    #[test]
+    fn xla_is_artifact_gated() {
+        assert!(!EngineId::Xla.is_software());
+        // Offline (no artifacts) this must be a clean error, not a panic.
+        if ArtifactRegistry::open_default().is_err() {
+            assert!(EngineId::Xla.build(5, 10, 0.5, Precision::Int8).is_err());
+        }
+    }
+}

@@ -25,9 +25,13 @@
 //! * [`runtime`] — the PJRT/XLA accelerator path: loads the AOT-compiled
 //!   HLO artifacts produced by `python/compile/aot.py` and executes the
 //!   cost datapath from Rust (Python is never on the request path).
-//! * [`coordinator`] — the online serving loop (threads + channels):
-//!   job sources, burst serialization, the PCIe transport model, and
-//!   pluggable scheduling engines.
+//! * [`engine`] — the single engine registry ([`engine::EngineId`]):
+//!   one parse/name/build table over every backend, shared by the CLI,
+//!   the coordinator, the sweep, and the config JSON round-trip.
+//! * [`coordinator`] — the online serving pipeline (threads + channels):
+//!   concurrent arrival sources merged deterministically into a batched
+//!   scheduler loop, the PCIe transport model, per-machine workers, and
+//!   pluggable scheduling engines behind [`coordinator::EngineAdapter`].
 //! * [`report`] — renders every table and figure of the paper's
 //!   evaluation section from freshly-run experiments.
 //!
@@ -63,6 +67,7 @@ pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod core;
+pub mod engine;
 pub mod error;
 pub mod hw;
 pub mod jsonio;
@@ -83,6 +88,7 @@ pub mod prelude {
     pub use crate::core::{
         Job, JobId, JobNature, Machine, MachineId, MachineKind, MachinePark, Quality,
     };
+    pub use crate::engine::EngineId;
     pub use crate::metrics::{MetricSet, ScheduleMetrics};
     pub use crate::quant::Precision;
     pub use crate::scheduler::{SosEngine, TickOutcome};

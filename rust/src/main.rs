@@ -3,46 +3,54 @@
 //! parity, and inspect hardware-model estimates.
 
 use stannic::cli::{usage, Args, FlagSpec};
-use stannic::config::{EngineKind, RunConfig};
-use stannic::coordinator::{build_engine, serve, ServeOpts};
+use stannic::config::RunConfig;
+use stannic::coordinator::{
+    serve, serve_sources, ArrivalSource, ServeOpts, ServeRecord, ServeReport,
+};
 use stannic::core::MachinePark;
+use stannic::engine::EngineId;
 use stannic::error::{Error, Result};
 use stannic::quant::Precision;
 use stannic::report::{self, Effort};
 use stannic::scheduler::SosEngine;
 use stannic::sim::{hercules::HerculesSim, stannic::StannicSim, lockstep_verify};
-use stannic::sweep::{run_sweep, SweepConfig, SweepEngine};
+use stannic::sweep::{run_sweep, SweepConfig};
 use stannic::workload::{generate_trace, Trace, WorkloadSpec};
 use stannic::{bail, err};
 
 fn flag_specs() -> Vec<FlagSpec> {
     vec![
-        FlagSpec { name: "machines", help: "machine count (default 5 = paper M1-M5)", takes_value: true },
-        FlagSpec { name: "depth", help: "virtual-schedule depth (default 10)", takes_value: true },
-        FlagSpec { name: "alpha", help: "alpha release factor in (0,1] (default 0.5)", takes_value: true },
-        FlagSpec { name: "jobs", help: "number of jobs (default 1000)", takes_value: true },
-        FlagSpec { name: "seed", help: "workload seed (default 42)", takes_value: true },
-        FlagSpec { name: "engine", help: "native|stannic|hercules|xla (default native)", takes_value: true },
-        FlagSpec { name: "precision", help: "FP32|FP16|INT8|INT4|Mixed (default INT8)", takes_value: true },
-        FlagSpec { name: "workload", help: "even|memory|compute|homogeneous|bursty|heavy (default even)", takes_value: true },
-        FlagSpec { name: "trace", help: "replay a trace file instead of generating", takes_value: true },
-        FlagSpec { name: "save-trace", help: "write the generated trace to a file", takes_value: true },
-        FlagSpec { name: "threads", help: "sweep worker threads (default: one per core)", takes_value: true },
-        FlagSpec { name: "engines", help: "sweep engine list, comma-separated or 'all'", takes_value: true },
-        FlagSpec { name: "quick", help: "reduced-effort runs for smoke testing", takes_value: false },
-        FlagSpec { name: "scale", help: "sweep the Agon-scale grid (parks up to 140 machines)", takes_value: false },
-        FlagSpec { name: "record", help: "persist sweep results to a BENCH_<label>.json artifact at this path", takes_value: true },
-        FlagSpec { name: "label", help: "label stored in the sweep record (default 'sweep')", takes_value: true },
-        FlagSpec { name: "threshold", help: "sweep diff: relative slowdown that fails (default 0.25 or $STANNIC_PERF_THRESHOLD)", takes_value: true },
-        FlagSpec { name: "raw-ratios", help: "sweep diff: disable median-shift normalization", takes_value: false },
-        FlagSpec { name: "fail-on-shift", help: "sweep diff: also fail on a whole-grid median slowdown (same-host A/B runs)", takes_value: false },
-        FlagSpec { name: "json", help: "emit machine-readable JSON where supported", takes_value: false },
+        FlagSpec::new("machines", "machine count (default 5 = paper M1-M5)", true),
+        FlagSpec::new("depth", "virtual-schedule depth (default 10)", true),
+        FlagSpec::new("alpha", "alpha release factor in (0,1] (default 0.5)", true),
+        FlagSpec::new("jobs", "number of jobs (default 1000)", true),
+        FlagSpec::new("seed", "workload seed (default 42)", true),
+        // the accepted-name lists come straight from the engine registry
+        // so the help can never drift from the parser
+        FlagSpec::new("engine", format!("scheduling engine: {} (default sos)", EngineId::USAGE), true),
+        FlagSpec::new("precision", "FP32|FP16|INT8|INT4|Mixed (default INT8)", true),
+        FlagSpec::new("workload", "even|memory|compute|homogeneous|bursty|heavy (default even)", true),
+        FlagSpec::new("trace", "replay a trace file instead of generating", true),
+        FlagSpec::new("save-trace", "write the generated trace to a file", true),
+        FlagSpec::new("threads", "sweep worker threads (default: one per core)", true),
+        FlagSpec::new("engines", format!("sweep engine list, comma-separated from: {}, or 'all' for every artifact-free engine", EngineId::USAGE), true),
+        FlagSpec::new("sources", "serve: concurrent arrival-source threads (default 1; >1 rotates steady/bursty/heavy mixes)", true),
+        FlagSpec::new("batch", "serve: max arrivals admitted per scheduler tick (default 0 = unbatched)", true),
+        FlagSpec::new("queue-depth", "serve: bounded depth of arrival/merge/worker queues (default 256)", true),
+        FlagSpec::new("quick", "reduced-effort runs for smoke testing", false),
+        FlagSpec::new("scale", "sweep the Agon-scale grid (parks up to 140 machines)", false),
+        FlagSpec::new("record", "persist results (sweep: BENCH_<label>.json, serve: serve record) at this path", true),
+        FlagSpec::new("label", "label stored in the record artifact (default 'sweep'/'serve')", true),
+        FlagSpec::new("threshold", "sweep diff: relative slowdown that fails (default 0.25 or $STANNIC_PERF_THRESHOLD)", true),
+        FlagSpec::new("raw-ratios", "sweep diff: disable median-shift normalization", false),
+        FlagSpec::new("fail-on-shift", "sweep diff: also fail on a whole-grid median slowdown (same-host A/B runs)", false),
+        FlagSpec::new("json", "emit machine-readable JSON where supported", false),
     ]
 }
 
 fn commands() -> Vec<(&'static str, &'static str)> {
     vec![
-        ("serve", "run the online coordinator over a workload"),
+        ("serve", "run the online coordinator pipeline over one or more arrival sources"),
         ("report", "regenerate a paper figure: fig7|fig15|fig16a|fig16b|fig17|fig18|fig19|all"),
         ("verify", "lockstep-verify both microarchitecture sims against the golden engine"),
         ("hw", "print resource/routing/power estimates for a configuration"),
@@ -82,7 +90,7 @@ fn config_from(args: &Args) -> Result<RunConfig> {
     cfg.alpha = args.f32_flag("alpha", cfg.alpha).map_err(Error::from)?;
     cfg.jobs = args.usize_flag("jobs", cfg.jobs).map_err(Error::from)?;
     cfg.seed = args.u64_flag("seed", cfg.seed).map_err(Error::from)?;
-    cfg.engine = EngineKind::parse(args.str_flag("engine", "native")).map_err(Error::from)?;
+    cfg.engine = EngineId::parse(args.str_flag("engine", "sos")).map_err(Error::from)?;
     cfg.precision = parse_precision(args.str_flag("precision", "INT8"))?;
     cfg.workload = parse_workload(args.str_flag("workload", "even"))?;
     Ok(cfg)
@@ -101,16 +109,79 @@ fn load_or_generate(args: &Args, cfg: &RunConfig) -> Result<Trace> {
     Ok(trace)
 }
 
+fn serve_opts_from(args: &Args) -> Result<ServeOpts> {
+    let defaults = ServeOpts::default();
+    let queue_depth = args
+        .usize_flag("queue-depth", defaults.queue_depth)
+        .map_err(Error::from)?
+        .max(1);
+    let batch = args.usize_flag("batch", 0).map_err(Error::from)?;
+    Ok(ServeOpts {
+        queue_depth,
+        batch: if batch == 0 { usize::MAX } else { batch },
+        ..defaults
+    })
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     let cfg = config_from(args)?;
-    let trace = load_or_generate(args, &cfg)?;
-    let engine = build_engine(cfg.engine, cfg.machines, cfg.depth, cfg.alpha, cfg.precision)?;
-    let report = serve(engine, &trace, &ServeOpts::default())?;
+    let opts = serve_opts_from(args)?;
+    let n_sources = args.usize_flag("sources", 1).map_err(Error::from)?;
+    if n_sources == 0 {
+        bail!("--sources must be >= 1");
+    }
+    let engine = cfg
+        .engine
+        .build(cfg.machines, cfg.depth, cfg.alpha, cfg.precision)?;
+    let report: ServeReport = if n_sources == 1 {
+        let trace = load_or_generate(args, &cfg)?;
+        serve(engine, &trace, &opts)?
+    } else {
+        if args.flag("trace").is_some() {
+            bail!("--trace replays a single recorded stream; drop --sources to use it");
+        }
+        if args.flag("save-trace").is_some() {
+            bail!(
+                "--save-trace archives the single generated stream; with --sources > 1 \
+                 the workload is synthesized per source (re-create it from the same \
+                 --seed/--jobs instead)"
+            );
+        }
+        let sources = ArrivalSource::standard_mix(
+            &cfg.workload,
+            cfg.machines,
+            cfg.jobs,
+            cfg.seed,
+            n_sources,
+        );
+        serve_sources(engine, sources, &opts)?
+    };
     let m = &report.metrics;
     println!("engine            : {}", report.engine);
     println!("jobs completed    : {}", report.completions.len());
     println!("scheduler ticks   : {}", report.ticks);
     println!("stalled iterations: {}", report.stalls);
+    println!("arrival sources   : {}", report.sources.len());
+    for src in &report.sources {
+        println!(
+            "  source {:<12}: {} jobs, {} enqueue stalls",
+            src.name, src.jobs, src.enqueue_stalls
+        );
+    }
+    println!(
+        "merge queue depth : p50 {} / p99 {} / max {}",
+        report.merge_depth.p50(),
+        report.merge_depth.p99(),
+        report.merge_depth.max()
+    );
+    if report.batch_sizes.count() > 0 {
+        println!(
+            "admission batches : p50 {} / p99 {} / max {} jobs/tick",
+            report.batch_sizes.p50(),
+            report.batch_sizes.p99(),
+            report.batch_sizes.max()
+        );
+    }
     println!("jobs per machine  : {:?}", m.jobs_per_machine);
     println!("avg latency       : {:.2} ticks", m.avg_latency);
     println!(
@@ -153,8 +224,25 @@ fn cmd_serve(args: &Args) -> Result<()> {
             ),
             ("pcie_us", num(report.pcie.total_ns / 1000.0)),
             ("accel_cycles", num(report.accel_cycles as f64)),
+            ("sources", num(report.sources.len() as f64)),
         ]);
         println!("{j}");
+    }
+    if let Some(path) = args.flag("record") {
+        let label = args.str_flag("label", "serve");
+        let record = ServeRecord::from_report(label, &report);
+        std::fs::write(path, record.render())?;
+        // parse-back verification keeps CI's artifact check honest: a
+        // written record that does not round-trip is a hard error
+        let back = ServeRecord::parse(&std::fs::read_to_string(path)?)
+            .map_err(|e| err!("recorded artifact failed to parse back: {e}"))?;
+        if back != record {
+            bail!("recorded artifact round-trip mismatch at {path}");
+        }
+        eprintln!(
+            "recorded serve run (label '{label}', {} sources) to {path}",
+            record.sources.len()
+        );
     }
     Ok(())
 }
@@ -416,7 +504,13 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         cfg.workloads = vec![(name.to_string(), parse_workload(name)?)];
     }
     if let Some(list) = args.flag("engines").or_else(|| args.flag("engine")) {
-        cfg.engines = SweepEngine::parse_list(list).map_err(Error::from)?;
+        cfg.engines = EngineId::parse_list(list).map_err(Error::from)?;
+    }
+    if cfg.engines.iter().any(|e| !e.is_software()) {
+        bail!(
+            "the sweep fans across artifact-free engines only; 'xla' needs a PJRT \
+             runtime (drive it via `serve --engine xla` instead)"
+        );
     }
     let started = std::time::Instant::now();
     let results = run_sweep(&cfg);

@@ -6,10 +6,11 @@
 //! heterogeneous systems. This module turns both into infrastructure:
 //! a grid of `WorkloadSpec × MachinePark size × alpha × Precision`
 //! cells is fanned across every software/simulator engine in the repo
-//! (golden SOS, naive SOSC, lane-vectorised SIMD, and the Stannic and
-//! Hercules cycle-accurate simulators) by a self-scheduling pool of
-//! worker threads that pull cells from a shared `Mutex<VecDeque>` work
-//! queue (fast workers automatically absorb more cells).
+//! (the [`crate::engine::EngineId::SOFTWARE`] set: golden SOS, naive
+//! SOSC, lane-vectorised SIMD, and the Stannic and Hercules
+//! cycle-accurate simulators) by a self-scheduling pool of worker
+//! threads that pull cells from a shared `Mutex<VecDeque>` work queue
+//! (fast workers automatically absorb more cells).
 //!
 //! Determinism is a hard requirement (and property-tested): every cell
 //! is seeded, runs its engine single-threaded, and writes its result
@@ -28,79 +29,12 @@ use std::collections::{HashMap, VecDeque};
 use std::sync::Mutex;
 use std::time::Instant;
 
-use crate::baselines::{SimdSos, SoscEngine};
 use crate::bench::Table;
-use crate::coordinator::EngineAdapter;
 use crate::core::{JobId, MachinePark};
+use crate::engine::EngineId;
 use crate::metrics::{Histogram, MetricSet, ScheduleMetrics};
 use crate::quant::Precision;
-use crate::scheduler::SosEngine;
-use crate::sim::{hercules::HerculesSim, stannic::StannicSim};
 use crate::workload::{generate_trace, WorkloadSpec};
-
-/// Engine selector for sweep cells.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
-pub enum SweepEngine {
-    /// Golden software SOS engine.
-    Sos,
-    /// Naive single-threaded software baseline.
-    Sosc,
-    /// Lane-vectorised software SOS.
-    Simd,
-    /// Cycle-accurate Stannic simulator.
-    StannicSim,
-    /// Cycle-accurate Hercules simulator.
-    HerculesSim,
-}
-
-impl SweepEngine {
-    pub const ALL: [SweepEngine; 5] = [
-        SweepEngine::Sos,
-        SweepEngine::Sosc,
-        SweepEngine::Simd,
-        SweepEngine::StannicSim,
-        SweepEngine::HerculesSim,
-    ];
-
-    pub fn name(&self) -> &'static str {
-        match self {
-            SweepEngine::Sos => "sos",
-            SweepEngine::Sosc => "sosc",
-            SweepEngine::Simd => "simd",
-            SweepEngine::StannicSim => "stannic-sim",
-            SweepEngine::HerculesSim => "hercules-sim",
-        }
-    }
-
-    /// Parse a comma-separated engine list; `"all"` selects every engine.
-    pub fn parse_list(text: &str) -> Result<Vec<SweepEngine>, String> {
-        if text == "all" {
-            return Ok(SweepEngine::ALL.to_vec());
-        }
-        text.split(',')
-            .map(|name| match name.trim() {
-                "sos" | "native" => Ok(SweepEngine::Sos),
-                "sosc" => Ok(SweepEngine::Sosc),
-                "simd" => Ok(SweepEngine::Simd),
-                "stannic" | "stannic-sim" => Ok(SweepEngine::StannicSim),
-                "hercules" | "hercules-sim" => Ok(SweepEngine::HerculesSim),
-                other => Err(format!(
-                    "unknown sweep engine '{other}' (sos|sosc|simd|stannic|hercules|all)"
-                )),
-            })
-            .collect()
-    }
-
-    fn build(&self, machines: usize, depth: usize, alpha: f32, p: Precision) -> Box<dyn EngineAdapter> {
-        match self {
-            SweepEngine::Sos => Box::new(SosEngine::new(machines, depth, alpha, p)),
-            SweepEngine::Sosc => Box::new(SoscEngine::new(machines, depth, alpha, p)),
-            SweepEngine::Simd => Box::new(SimdSos::new(machines, depth, alpha, p)),
-            SweepEngine::StannicSim => Box::new(StannicSim::new(machines, depth, alpha, p)),
-            SweepEngine::HerculesSim => Box::new(HerculesSim::new(machines, depth, alpha, p)),
-        }
-    }
-}
 
 /// One cell of the sweep grid: a fully specified scenario + engine.
 #[derive(Debug, Clone)]
@@ -114,7 +48,7 @@ pub struct SweepCell {
     pub depth: usize,
     pub alpha: f32,
     pub precision: Precision,
-    pub engine: SweepEngine,
+    pub engine: EngineId,
     pub jobs: usize,
     pub seed: u64,
 }
@@ -146,7 +80,9 @@ pub struct CellResult {
 /// Sweep grid configuration.
 #[derive(Debug, Clone)]
 pub struct SweepConfig {
-    pub engines: Vec<SweepEngine>,
+    /// Engines to fan the grid across — artifact-free backends only
+    /// (the CLI rejects `xla`, which needs a PJRT runtime).
+    pub engines: Vec<EngineId>,
     pub workloads: Vec<(String, WorkloadSpec)>,
     pub machine_counts: Vec<usize>,
     pub alphas: Vec<f32>,
@@ -163,7 +99,7 @@ impl Default for SweepConfig {
     /// INT8 across all 5 engines = 60 cells.
     fn default() -> Self {
         SweepConfig {
-            engines: SweepEngine::ALL.to_vec(),
+            engines: EngineId::SOFTWARE.to_vec(),
             workloads: vec![
                 ("even".to_string(), WorkloadSpec::even()),
                 ("memory".to_string(), WorkloadSpec::memory_skewed()),
@@ -250,7 +186,8 @@ pub fn run_cell(cell: &SweepCell) -> CellResult {
     let trace = generate_trace(&cell.spec, &park, cell.jobs, cell.seed);
     let mut engine = cell
         .engine
-        .build(cell.machines, cell.depth, cell.alpha, cell.precision);
+        .build(cell.machines, cell.depth, cell.alpha, cell.precision)
+        .expect("sweep engines are artifact-free (xla is rejected before the sweep runs)");
 
     let mut metrics = MetricSet::new(cell.machines, 64);
     let mut hist = Histogram::new();
@@ -321,6 +258,12 @@ pub struct SweepResults {
 /// shared deque; each result lands in its cell's slot, so the output is
 /// identical for any thread count.
 pub fn run_sweep(cfg: &SweepConfig) -> SweepResults {
+    // Fail on the caller's thread with a clear message rather than
+    // poisoning a pool worker: the XLA engine cannot construct offline.
+    assert!(
+        cfg.engines.iter().all(|e| e.is_software()),
+        "sweep engines must be artifact-free (xla needs a PJRT runtime; drive it via serve)"
+    );
     let cells = cfg.cells();
     let n = cells.len();
     let threads = if cfg.threads == 0 {
@@ -433,7 +376,7 @@ impl SweepResults {
         let mut t = Table::new(&[
             "engine", "cells", "mean avg lat", "mean util", "mean fair", "total cycles",
         ]);
-        for engine in SweepEngine::ALL {
+        for engine in EngineId::SOFTWARE {
             let rs: Vec<&CellResult> = self
                 .cells
                 .iter()
@@ -463,7 +406,7 @@ mod tests {
 
     fn tiny() -> SweepConfig {
         SweepConfig {
-            engines: vec![SweepEngine::Sos, SweepEngine::StannicSim],
+            engines: vec![EngineId::Sos, EngineId::StannicSim],
             workloads: vec![("even".to_string(), WorkloadSpec::even())],
             machine_counts: vec![3],
             alphas: vec![0.5],
@@ -519,8 +462,8 @@ mod tests {
         let results = run_sweep(&cfg);
         let sos = &results.cells[0];
         let sim = &results.cells[1];
-        assert_eq!(sos.cell.engine, SweepEngine::Sos);
-        assert_eq!(sim.cell.engine, SweepEngine::StannicSim);
+        assert_eq!(sos.cell.engine, EngineId::Sos);
+        assert_eq!(sim.cell.engine, EngineId::StannicSim);
         assert_eq!(sos.accel_cycles, 0, "software engine has no cycle model");
         assert!(sim.accel_cycles > 0);
     }
@@ -528,7 +471,7 @@ mod tests {
     #[test]
     fn parity_holds_across_engines() {
         let mut cfg = tiny();
-        cfg.engines = SweepEngine::ALL.to_vec();
+        cfg.engines = EngineId::SOFTWARE.to_vec();
         let results = run_sweep(&cfg);
         assert_eq!(results.check_parity().unwrap(), 4, "4 non-reference engines");
     }
@@ -536,7 +479,7 @@ mod tests {
     #[test]
     fn results_are_slot_ordered_regardless_of_threads() {
         let mut cfg = tiny();
-        cfg.engines = SweepEngine::ALL.to_vec();
+        cfg.engines = EngineId::SOFTWARE.to_vec();
         cfg.threads = 1;
         let a = run_sweep(&cfg);
         cfg.threads = 8;
@@ -551,12 +494,12 @@ mod tests {
     }
 
     #[test]
-    fn engine_list_parsing() {
-        assert_eq!(SweepEngine::parse_list("all").unwrap().len(), 5);
-        assert_eq!(
-            SweepEngine::parse_list("sos, simd").unwrap(),
-            vec![SweepEngine::Sos, SweepEngine::Simd]
-        );
-        assert!(SweepEngine::parse_list("warp-drive").is_err());
+    fn engine_list_parsing_feeds_the_grid() {
+        // the sweep consumes the one registry's list parser directly
+        assert_eq!(EngineId::parse_list("all").unwrap(), EngineId::SOFTWARE.to_vec());
+        let mut cfg = tiny();
+        cfg.engines = EngineId::parse_list("sos, simd").unwrap();
+        assert_eq!(cfg.cells().len(), 2);
+        assert!(EngineId::parse_list("warp-drive").is_err());
     }
 }

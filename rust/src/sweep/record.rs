@@ -553,14 +553,14 @@ fn fnv1a64(bytes: &[u8]) -> u64 {
     h
 }
 
-fn get_str(j: &Json, k: &str) -> Result<String, String> {
+pub(crate) fn get_str(j: &Json, k: &str) -> Result<String, String> {
     j.get(k)
         .and_then(Json::as_str)
         .map(str::to_string)
         .ok_or_else(|| format!("missing string field '{k}'"))
 }
 
-fn get_f64(j: &Json, k: &str) -> Result<f64, String> {
+pub(crate) fn get_f64(j: &Json, k: &str) -> Result<f64, String> {
     j.get(k)
         .and_then(Json::as_f64)
         .ok_or_else(|| format!("missing numeric field '{k}'"))
@@ -570,20 +570,20 @@ fn get_f64(j: &Json, k: &str) -> Result<f64, String> {
 /// instead of silently saturating through `as` casts — a hand-edited
 /// artifact should fail at parse time with the field name, not surface
 /// later as a confusing digest mismatch.
-fn uint_value(v: f64, what: &str) -> Result<u64, String> {
+pub(crate) fn uint_value(v: f64, what: &str) -> Result<u64, String> {
     if v.is_nan() || v < 0.0 || v.fract() != 0.0 || v > 9_007_199_254_740_992.0 {
         return Err(format!("{what}: expected a non-negative integer, got {v}"));
     }
     Ok(v as u64)
 }
 
-fn get_uint(j: &Json, k: &str) -> Result<u64, String> {
+pub(crate) fn get_uint(j: &Json, k: &str) -> Result<u64, String> {
     uint_value(get_f64(j, k)?, k)
 }
 
 /// Require an actual JSON array (`Json::items` silently yields an empty
 /// slice for non-arrays, which would let a corrupt artifact parse).
-fn get_arr<'a>(j: &'a Json, k: &str) -> Result<&'a [Json], String> {
+pub(crate) fn get_arr<'a>(j: &'a Json, k: &str) -> Result<&'a [Json], String> {
     match j.get(k) {
         Some(Json::Arr(v)) => Ok(v),
         Some(_) => Err(format!("field '{k}': expected an array")),
@@ -591,7 +591,7 @@ fn get_arr<'a>(j: &'a Json, k: &str) -> Result<&'a [Json], String> {
     }
 }
 
-fn get_u64_str(j: &Json, k: &str) -> Result<u64, String> {
+pub(crate) fn get_u64_str(j: &Json, k: &str) -> Result<u64, String> {
     get_str(j, k)?
         .parse::<u64>()
         .map_err(|e| format!("field '{k}': {e}"))
@@ -599,14 +599,15 @@ fn get_u64_str(j: &Json, k: &str) -> Result<u64, String> {
 
 #[cfg(test)]
 mod tests {
-    use super::super::{run_sweep, SweepConfig, SweepEngine};
+    use super::super::{run_sweep, SweepConfig};
     use super::*;
+    use crate::engine::EngineId;
     use crate::quant::Precision;
     use crate::workload::WorkloadSpec;
 
     fn small_record() -> SweepRecord {
         let cfg = SweepConfig {
-            engines: vec![SweepEngine::Sos, SweepEngine::Sosc, SweepEngine::Simd],
+            engines: vec![EngineId::Sos, EngineId::Sosc, EngineId::Simd],
             workloads: vec![("even".to_string(), WorkloadSpec::even())],
             machine_counts: vec![3],
             alphas: vec![0.5, 0.75],

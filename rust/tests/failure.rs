@@ -3,9 +3,10 @@
 
 use stannic::baselines::{WsGreedy, WsRoundRobin};
 use stannic::cluster::{Cluster, ClusterConfig, SosCluster};
-use stannic::config::{EngineKind, RunConfig};
-use stannic::coordinator::{build_engine, serve, ServeOpts};
+use stannic::config::RunConfig;
+use stannic::coordinator::{serve, serve_sources, ArrivalSource, ServeOpts};
 use stannic::core::{Job, JobNature, MachinePark};
+use stannic::engine::EngineId;
 use stannic::jsonio::Json;
 use stannic::quant::Precision;
 use stannic::runtime::ArtifactRegistry;
@@ -54,11 +55,46 @@ fn coordinator_survives_saturating_burst() {
         });
     }
     let trace = Trace::new(events, 5);
-    let engine = build_engine(EngineKind::Native, 5, 3, 0.5, Precision::Int8).unwrap();
+    let engine = EngineId::Sos.build(5, 3, 0.5, Precision::Int8).unwrap();
     let r = serve(engine, &trace, &ServeOpts::default()).unwrap();
     assert_eq!(r.completions.len(), 100);
     assert!(r.stalls > 0);
     let _ = park;
+}
+
+#[test]
+fn bounded_arrival_queues_stall_sources_without_losing_jobs() {
+    // Backpressure path: queue_depth 1 bounds the per-source arrival
+    // channels AND the merge queue, and batch 1 drains one arrival per
+    // tick — far slower than two uniform-burst producers emit. Every
+    // source must hit a full queue (enqueue stalls > 0), and the run
+    // must still complete every job.
+    let dense = WorkloadSpec::default()
+        .with_burst(6, BurstType::Uniform)
+        .with_idle(0, 0);
+    let sources = vec![
+        ArrivalSource::synthetic("s0", dense.clone(), 5, 150, 3),
+        ArrivalSource::synthetic("s1", dense, 5, 150, 4),
+    ];
+    let opts = ServeOpts {
+        queue_depth: 1,
+        batch: 1,
+        ..ServeOpts::default()
+    };
+    let engine = EngineId::Sos.build(5, 10, 0.5, Precision::Int8).unwrap();
+    let r = serve_sources(engine, sources, &opts).unwrap();
+    assert_eq!(r.completions.len(), 300, "backpressure must not lose jobs");
+    assert_eq!(r.sources.len(), 2);
+    for src in &r.sources {
+        assert!(
+            src.enqueue_stalls > 0,
+            "source {} should have stalled on its bounded queue",
+            src.name
+        );
+    }
+    // the merge queue respects its bound, and admission respects batch
+    assert!(r.merge_depth.max() <= 1, "merge depth {}", r.merge_depth.max());
+    assert!(r.batch_sizes.max() <= 1, "batch {}", r.batch_sizes.max());
 }
 
 #[test]
@@ -142,7 +178,7 @@ fn extreme_workloads_drain() {
         .with_burst(6, BurstType::Uniform)
         .with_idle(0, 0);
     let trace = generate_trace(&spec, &park, 500, 77);
-    let engine = build_engine(EngineKind::Native, 5, 10, 0.5, Precision::Int8).unwrap();
+    let engine = EngineId::Sos.build(5, 10, 0.5, Precision::Int8).unwrap();
     let r = serve(engine, &trace, &ServeOpts::default()).unwrap();
     assert_eq!(r.completions.len(), 500);
 
@@ -164,7 +200,7 @@ fn alpha_one_and_tiny_alpha_both_terminate() {
     let park = MachinePark::paper_m1_m5();
     let trace = generate_trace(&WorkloadSpec::default(), &park, 100, 13);
     for alpha in [1.0f32, 0.01] {
-        let engine = build_engine(EngineKind::Native, 5, 10, alpha, Precision::Int8).unwrap();
+        let engine = EngineId::Sos.build(5, 10, alpha, Precision::Int8).unwrap();
         let r = serve(engine, &trace, &ServeOpts::default()).unwrap();
         assert_eq!(r.completions.len(), 100, "alpha={alpha}");
     }

@@ -1,0 +1,149 @@
+//! End-to-end coverage of the multi-source serve pipeline through the
+//! real binary (`CARGO_BIN_EXE_stannic`):
+//!
+//! * `serve --sources N --batch B --record <path>` completes every job,
+//!   prints the backpressure telemetry, and writes a parseable
+//!   [`ServeRecord`] artifact;
+//! * engine-name errors quote the registry's USAGE string on both the
+//!   `serve` and `sweep` surfaces (the CLI help and the parser share
+//!   one vocabulary).
+
+use std::path::PathBuf;
+use std::process::Command;
+
+use stannic::coordinator::ServeRecord;
+use stannic::engine::EngineId;
+
+fn bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_stannic"))
+}
+
+fn tmp(name: &str) -> PathBuf {
+    let mut p = std::env::temp_dir();
+    p.push(format!("stannic_serve_{}_{name}", std::process::id()));
+    p
+}
+
+#[test]
+fn multi_source_serve_records_a_parseable_artifact() {
+    let path = tmp("rec.json");
+    let out = bin()
+        .args([
+            "serve", "--sources", "3", "--batch", "4", "--jobs", "120", "--seed", "7",
+            "--label", "itest", "--record",
+        ])
+        .arg(&path)
+        .output()
+        .expect("spawn stannic serve");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        out.status.success(),
+        "serve --sources failed:\n{stdout}\n{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    assert!(
+        stdout.contains("jobs completed    : 120"),
+        "all jobs must complete:\n{stdout}"
+    );
+    assert!(
+        stdout.contains("arrival sources   : 3"),
+        "source telemetry missing:\n{stdout}"
+    );
+    assert!(stdout.contains("merge queue depth"), "{stdout}");
+    assert!(stdout.contains("admission batches"), "{stdout}");
+
+    let text = std::fs::read_to_string(&path).expect("artifact written");
+    let rec = ServeRecord::parse(&text).expect("artifact parses as ServeRecord");
+    assert_eq!(rec.label, "itest");
+    assert_eq!(rec.engine, "sos");
+    assert_eq!(rec.completed, 120);
+    assert_eq!(rec.sources.len(), 3);
+    assert_eq!(rec.sources.iter().map(|s| s.jobs).sum::<usize>(), 120);
+    assert!(rec.batch_max <= 4, "batch cap leaked: {}", rec.batch_max);
+    assert!(rec.wall_ns > 0);
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn deterministic_serve_fields_reproduce_across_runs() {
+    let run = |name: &str| -> ServeRecord {
+        let path = tmp(name);
+        let out = bin()
+            .args([
+                "serve", "--sources", "2", "--batch", "3", "--jobs", "80", "--seed", "11",
+                "--record",
+            ])
+            .arg(&path)
+            .output()
+            .expect("spawn stannic serve");
+        assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+        let rec = ServeRecord::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let _ = std::fs::remove_file(&path);
+        rec
+    };
+    let a = run("a.json");
+    let b = run("b.json");
+    // wall time and enqueue stalls are timing-dependent; everything
+    // else in the artifact is the deterministic outcome
+    assert_eq!(a.ticks, b.ticks);
+    assert_eq!(a.stalls, b.stalls);
+    assert_eq!(a.jobs_per_machine, b.jobs_per_machine);
+    assert_eq!(a.avg_latency, b.avg_latency);
+    assert_eq!(a.merge_depth_max, b.merge_depth_max);
+    assert_eq!(a.batch_p50, b.batch_p50);
+    assert_eq!(
+        a.sources.iter().map(|s| (&s.name, s.jobs)).collect::<Vec<_>>(),
+        b.sources.iter().map(|s| (&s.name, s.jobs)).collect::<Vec<_>>()
+    );
+}
+
+#[test]
+fn engine_errors_quote_the_registry_usage_everywhere() {
+    for cmd in [["serve", "--engine", "warp-drive"], ["sweep", "--engines", "warp-drive"]] {
+        let out = bin().args(cmd).output().expect("spawn stannic");
+        assert!(!out.status.success(), "{cmd:?} must fail");
+        let stderr = String::from_utf8_lossy(&out.stderr);
+        assert!(
+            stderr.contains(EngineId::USAGE),
+            "{cmd:?} error must carry the registry USAGE string:\n{stderr}"
+        );
+    }
+}
+
+#[test]
+fn sweep_rejects_the_artifact_gated_engine() {
+    let out = bin()
+        .args(["sweep", "--quick", "--engines", "sos,xla"])
+        .output()
+        .expect("spawn stannic sweep");
+    assert!(!out.status.success(), "sweep must reject xla");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("artifact-free"), "{stderr}");
+}
+
+#[test]
+fn serve_rejects_zero_sources_and_trace_with_sources() {
+    let out = bin()
+        .args(["serve", "--sources", "0"])
+        .output()
+        .expect("spawn stannic serve");
+    assert!(!out.status.success());
+
+    let trace_path = tmp("trace.txt");
+    let gen = bin()
+        .args(["gen", "--jobs", "10", "--save-trace"])
+        .arg(&trace_path)
+        .output()
+        .expect("spawn stannic gen");
+    assert!(gen.status.success());
+    let out = bin()
+        .args(["serve", "--sources", "2", "--trace"])
+        .arg(&trace_path)
+        .output()
+        .expect("spawn stannic serve");
+    assert!(
+        !out.status.success(),
+        "--trace with --sources > 1 must be rejected"
+    );
+    let _ = std::fs::remove_file(&trace_path);
+}

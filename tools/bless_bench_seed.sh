@@ -1,0 +1,32 @@
+#!/usr/bin/env bash
+# Bless the committed perf baseline from THIS host's toolchain.
+#
+# The cross-commit perf gate (`sweep diff` in ci.sh) needs a committed
+# BENCH_seed.json recorded by an actual cargo run — it must never be
+# hand-written, because the artifact's schedule digests are what the
+# parity gate trusts. Run this on a toolchain-equipped machine after an
+# intentional perf- or semantics-change, review the diff it prints, and
+# commit the regenerated file:
+#
+#   ./tools/bless_bench_seed.sh
+#   git add BENCH_seed.json && git commit -m "Re-bless perf baseline"
+#
+# The recording uses the exact grid ci.sh diffs against (quick grid,
+# 200 jobs), so keys and digests line up cell-for-cell.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+if ! command -v cargo >/dev/null 2>&1; then
+  echo "error: cargo not found — the baseline must come from a toolchain-equipped host" >&2
+  exit 1
+fi
+
+if [ -f BENCH_seed.json ]; then
+  echo "existing BENCH_seed.json found; recording a candidate and diffing first"
+  cargo run --release -- sweep --quick --jobs 200 --record /tmp/BENCH_candidate.json --label seed
+  cargo run --release -- sweep diff BENCH_seed.json /tmp/BENCH_candidate.json || true
+  mv /tmp/BENCH_candidate.json BENCH_seed.json
+else
+  cargo run --release -- sweep --quick --jobs 200 --record BENCH_seed.json --label seed
+fi
+echo "blessed BENCH_seed.json — review and commit it to arm the perf gate"
