@@ -2,6 +2,10 @@
 # Repo CI: tier-1 verify plus the runnable smoke paths.
 #   tier-1 : cargo build --release && cargo test -q
 #   smoke  : quickstart example + a reduced parallel scenario sweep
+#   serve  : 2-source pipeline smoke + an A/B self-diff through
+#            `serve diff` (same scenario twice must be parity-clean),
+#            plus a diff against the committed SERVE_seed.json when one
+#            exists — the serve arm of the artifact trail.
 #   perf   : record the quick sweep and diff it against the committed
 #            BENCH_seed.json baseline; fails on >25% per-cell regression
 #            (override with STANNIC_PERF_THRESHOLD, e.g. =0.5) or on any
@@ -9,6 +13,8 @@
 #            blesses a fresh one instead of diffing — commit it to pin
 #            the perf record (and re-bless by deleting it after an
 #            intentional perf-semantics change).
+# Both diff surfaces run on stannic::artifact (one schema registry, one
+# classification core), so their thresholds and parity semantics match.
 set -euo pipefail
 cd "$(dirname "$0")"
 
@@ -46,6 +52,33 @@ grep -E "jobs completed    : 150" /tmp/stannic_serve_smoke.txt
 grep -E "arrival sources   : 2" /tmp/stannic_serve_smoke.txt
 test -s /tmp/SERVE_smoke.json
 echo "serve smoke OK (150 jobs over 2 sources, artifact recorded)"
+
+echo "== serve A/B self-diff: record the same scenario twice, diff must be parity-clean =="
+cargo run --release -- serve --sources 2 --jobs 150 --batch 4 \
+  --record /tmp/SERVE_smoke2.json --label ci2 > /dev/null
+# The deterministic cells (schedule digest, ticks, completions, latency
+# percentiles, jobs/tick) are virtual-time measurements and must match
+# exactly between back-to-back runs; wall-clock jobs/sec is advisory in
+# serve diff (it only gates under --fail-on-shift), so the default
+# threshold is safe here. This exercises the serve arm of the artifact
+# diff pipeline on every CI run.
+cargo run --release -- serve diff /tmp/SERVE_smoke.json /tmp/SERVE_smoke2.json \
+  | tee /tmp/stannic_serve_diff.txt
+grep -E ", 0 parity breaks," /tmp/stannic_serve_diff.txt
+echo "serve A/B self-diff OK (zero parity breaks)"
+
+if [ -f SERVE_seed.json ]; then
+  echo "== perf: diff serve smoke against committed SERVE_seed.json =="
+  # Exact gates: digest/ticks/completions parity plus the tick-measured
+  # latency percentiles and jobs/tick (host-independent, compared raw at
+  # the default threshold). Cross-host wall jobs/sec is advisory-only.
+  # Re-bless with tools/bless_bench_seed.sh after an intentional
+  # semantics change.
+  cargo run --release -- serve diff SERVE_seed.json /tmp/SERVE_smoke.json
+else
+  echo "NOTE: no committed SERVE_seed.json — serve trail gated by the A/B self-diff only."
+  echo "NOTE: Bless one with tools/bless_bench_seed.sh on a toolchain-equipped host."
+fi
 
 echo "== smoke: parallel scenario sweep (reduced grid, determinism cross-check) =="
 cargo run --release -- sweep --quick --threads 1 > /tmp/stannic_sweep_1.txt

@@ -1,0 +1,724 @@
+//! Generic artifact diffing: the one classification/threshold/rendering
+//! core behind `sweep diff` and `serve diff`.
+//!
+//! Any record type that can present itself as keyed [`PerfCell`]s — a
+//! stable matching key, a deterministic identity string, and optionally
+//! a perf scalar — gets the full pipeline: keyed-cell matching,
+//! median-shift normalization (so a uniformly slower host doesn't flag
+//! every cell), `Regression`/`Improvement`/`ParityBreak`/`Unmeasured`
+//! classification, threshold + `--fail-on-shift` +
+//! `STANNIC_PERF_THRESHOLD` handling, and [`DiffReport`] rendering.
+//!
+//! Identity mismatches are *parity breaks* (the deterministic outcome
+//! changed — scheduling semantics, never a perf delta) and fail at any
+//! threshold. Perf ratios are "goodness" ratios (>1 = better), so cells
+//! whose scalar improves downward (latency percentiles) classify with
+//! the same code as cells that improve upward (jobs/sec).
+//!
+//! Cells declare how their scalar was measured:
+//!
+//! * **noisy** cells (wall-clock derived) are the host-speed signal:
+//!   the median shift is computed over them, and they are normalized by
+//!   it — a uniformly slower host must not flag every sweep cell.
+//! * deterministic cells (virtual-time derived) are host-independent,
+//!   so they always compare raw: normalizing them would let a uniform
+//!   real regression cancel itself through the median.
+//! * **advisory** cells' perf verdicts never fail the gate — a record
+//!   with a *single* noisy cell (serve's wall-clock jobs/sec) cannot
+//!   distinguish host speed from regression, exactly like the
+//!   whole-grid shift, so its regressions gate only via
+//!   [`DiffOpts::fail_on_shift`]. Integrity verdicts (parity break,
+//!   unmeasured) still gate on advisory cells: advisory waives perf
+//!   judgement, not artifact integrity.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use crate::bench::Table;
+use crate::error::Result;
+use crate::{bail, err, ensure};
+
+/// Environment override for the diff gate threshold, read by every
+/// artifact diff surface (`sweep diff`, `serve diff`, ci.sh).
+pub const THRESHOLD_ENV: &str = "STANNIC_PERF_THRESHOLD";
+
+/// One comparable observation extracted from a record: cells from two
+/// artifacts are matched on `key`, parity-gated on `ident`, and
+/// perf-gated on `perf`.
+#[derive(Debug, Clone)]
+pub struct PerfCell {
+    /// Stable matching key (everything that must be equal for two cells
+    /// to be the same measurement).
+    pub key: String,
+    /// Deterministic identity; matched cells with different identities
+    /// are a parity break. Empty = no parity component.
+    pub ident: String,
+    /// Perf scalar; `None` = parity-only cell, `<= 0` = unmeasured.
+    pub perf: Option<f64>,
+    /// Direction of the scalar (latency percentiles improve downward,
+    /// throughput improves upward).
+    pub lower_is_better: bool,
+    /// Wall-clock-derived (host-dependent) measurement: contributes to
+    /// the median shift and is normalized by it. Deterministic
+    /// (virtual-time) cells compare raw.
+    pub noisy: bool,
+    /// Perf verdicts (regression/improvement) never fail the gate;
+    /// integrity verdicts (parity break, unmeasured) still do.
+    pub advisory: bool,
+}
+
+impl PerfCell {
+    /// A parity-only cell: gated purely on identity equality.
+    pub fn parity(key: impl Into<String>, ident: impl Into<String>) -> PerfCell {
+        PerfCell {
+            key: key.into(),
+            ident: ident.into(),
+            perf: None,
+            lower_is_better: false,
+            noisy: false,
+            advisory: false,
+        }
+    }
+
+    /// A perf cell whose scalar improves upward (e.g. jobs/sec).
+    pub fn higher(key: impl Into<String>, value: f64) -> PerfCell {
+        PerfCell {
+            key: key.into(),
+            ident: String::new(),
+            perf: Some(value),
+            lower_is_better: false,
+            noisy: false,
+            advisory: false,
+        }
+    }
+
+    /// A perf cell whose scalar improves downward (e.g. latency).
+    pub fn lower(key: impl Into<String>, value: f64) -> PerfCell {
+        PerfCell {
+            key: key.into(),
+            ident: String::new(),
+            perf: Some(value),
+            lower_is_better: true,
+            noisy: false,
+            advisory: false,
+        }
+    }
+
+    /// Attach a deterministic identity to a perf cell (sweep cells carry
+    /// both a digest and a throughput scalar).
+    pub fn with_ident(mut self, ident: impl Into<String>) -> PerfCell {
+        self.ident = ident.into();
+        self
+    }
+
+    /// Mark the scalar as wall-clock derived (host-dependent).
+    pub fn noisy(mut self) -> PerfCell {
+        self.noisy = true;
+        self
+    }
+
+    /// Mark the cell as advisory: its perf verdicts are shown but never
+    /// gate (integrity verdicts still do).
+    pub fn advisory(mut self) -> PerfCell {
+        self.advisory = true;
+        self
+    }
+}
+
+/// A record type the generic differ understands.
+pub trait Diffable {
+    /// Kind tag for the report header and CLI usage ("sweep", "serve").
+    const KIND: &'static str;
+    /// Unit label for the perf value columns ("jobs/s", "value").
+    const UNIT: &'static str;
+    /// Human label for the report header.
+    fn label(&self) -> &str;
+    /// The record flattened into comparable cells.
+    fn cells(&self) -> Vec<PerfCell>;
+}
+
+/// Diff configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct DiffOpts {
+    /// Relative per-cell goodness drop that counts as a regression
+    /// (0.25 = fail on >25% worse).
+    pub threshold: f64,
+    /// Normalize each cell's ratio by the grid's median ratio, so a
+    /// uniformly slower/faster host doesn't flag every cell.
+    pub normalize: bool,
+    /// Also *fail* the gate when the median shift itself regressed past
+    /// the threshold. Off by default: the shift conflates real uniform
+    /// slowdowns with baseline-host-vs-CI-host speed differences, so it
+    /// is reported prominently but only gates when the caller knows
+    /// both records come from comparable hosts (same-machine A/B runs).
+    pub fail_on_shift: bool,
+}
+
+impl Default for DiffOpts {
+    fn default() -> Self {
+        DiffOpts {
+            threshold: 0.25,
+            normalize: true,
+            fail_on_shift: false,
+        }
+    }
+}
+
+/// Resolve the gate threshold: explicit flag value beats the
+/// [`THRESHOLD_ENV`] environment override beats the default; validated
+/// to `[0, 1)` on every path.
+pub fn resolve_threshold(flag: Option<&str>) -> Result<f64> {
+    let threshold = match flag {
+        Some(v) => v
+            .parse::<f64>()
+            .map_err(|e| err!("--threshold: expected number ({e})"))?,
+        None => match std::env::var(THRESHOLD_ENV) {
+            Ok(v) => v
+                .parse::<f64>()
+                .map_err(|e| err!("{THRESHOLD_ENV}: expected number ({e})"))?,
+            Err(_) => DiffOpts::default().threshold,
+        },
+    };
+    ensure!(
+        (0.0..1.0).contains(&threshold),
+        "threshold must be in [0, 1), got {threshold}"
+    );
+    Ok(threshold)
+}
+
+/// Per-cell diff verdict.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CellVerdict {
+    Unchanged,
+    Regression,
+    Improvement,
+    /// The deterministic identity changed: scheduling semantics differ
+    /// between the two records. Never a perf delta; requires an
+    /// intentional re-bless of the baseline.
+    ParityBreak,
+    /// One side has no usable perf measurement (zero wall time in a
+    /// hand-edited or corrupt artifact — recorders floor wall_ns at 1).
+    /// Fails the gate: an unmeasured cell must not pass as "ok".
+    Unmeasured,
+}
+
+impl CellVerdict {
+    pub fn name(&self) -> &'static str {
+        match self {
+            CellVerdict::Unchanged => "ok",
+            CellVerdict::Regression => "REGRESSION",
+            CellVerdict::Improvement => "improvement",
+            CellVerdict::ParityBreak => "PARITY-BREAK",
+            CellVerdict::Unmeasured => "UNMEASURED",
+        }
+    }
+}
+
+/// One matched cell in a diff.
+#[derive(Debug, Clone)]
+pub struct CellDiff {
+    pub key: String,
+    /// Raw perf scalars (`None` for parity-only cells).
+    pub old_value: Option<f64>,
+    pub new_value: Option<f64>,
+    /// Raw goodness ratio (>1 = better; 1.0 for parity-only or
+    /// unmeasured cells).
+    pub ratio: f64,
+    /// Ratio divided by the grid's median shift for noisy cells
+    /// (== `ratio` for deterministic cells or when normalization is
+    /// off).
+    pub norm_ratio: f64,
+    pub verdict: CellVerdict,
+    /// Advisory cells' perf verdicts are rendered but never fail the
+    /// gate (integrity verdicts still do).
+    pub advisory: bool,
+}
+
+/// Result of diffing two artifacts.
+#[derive(Debug, Clone)]
+pub struct DiffReport {
+    /// Kind tag of the diffed record type ("sweep", "serve").
+    pub kind: &'static str,
+    /// Unit label for the value columns.
+    pub unit: &'static str,
+    pub old_label: String,
+    pub new_label: String,
+    pub cells: Vec<CellDiff>,
+    pub only_in_old: Vec<String>,
+    pub only_in_new: Vec<String>,
+    /// Median goodness ratio across measured cells — the whole-grid
+    /// (host) speed shift.
+    pub shift: f64,
+    pub threshold: f64,
+    /// True when the median shift itself regressed past the threshold —
+    /// a uniform slowdown *or* a slower host. Only fails the gate under
+    /// [`DiffOpts::fail_on_shift`].
+    pub global_regression: bool,
+    /// Whether `global_regression` participates in [`Self::ok`].
+    pub fail_on_shift: bool,
+}
+
+impl DiffReport {
+    pub fn regressions(&self) -> usize {
+        self.count(CellVerdict::Regression)
+    }
+
+    pub fn improvements(&self) -> usize {
+        self.count(CellVerdict::Improvement)
+    }
+
+    pub fn parity_breaks(&self) -> usize {
+        self.count(CellVerdict::ParityBreak)
+    }
+
+    pub fn unmeasured(&self) -> usize {
+        self.count(CellVerdict::Unmeasured)
+    }
+
+    /// Gate counts exclude advisory cells' *perf* verdicts (regression/
+    /// improvement carry no exit-code weight there), but integrity
+    /// verdicts — parity breaks and unmeasured cells — always count:
+    /// advisory waives perf judgement, not artifact integrity.
+    fn count(&self, v: CellVerdict) -> usize {
+        let integrity = matches!(v, CellVerdict::ParityBreak | CellVerdict::Unmeasured);
+        self.cells
+            .iter()
+            .filter(|c| (integrity || !c.advisory) && c.verdict == v)
+            .count()
+    }
+
+    /// Gate verdict: no per-cell regressions, no parity breaks, no
+    /// unmeasured cells, full coverage of the baseline grid, and (only
+    /// when `fail_on_shift` is set) no global slowdown.
+    pub fn ok(&self) -> bool {
+        self.regressions() == 0
+            && self.parity_breaks() == 0
+            && self.unmeasured() == 0
+            && !(self.fail_on_shift && self.global_regression)
+            && self.only_in_old.is_empty()
+    }
+
+    /// The CLI exit gate: `Err` with the failure summary when the diff
+    /// must fail the build.
+    pub fn gate(&self) -> Result<()> {
+        if self.ok() {
+            return Ok(());
+        }
+        bail!(
+            "perf gate failed: {} regressions, {} parity breaks, {} unmeasured, \
+             {} missing{} — re-bless the baseline if the change is intentional",
+            self.regressions(),
+            self.parity_breaks(),
+            self.unmeasured(),
+            self.only_in_old.len(),
+            if self.fail_on_shift && self.global_regression {
+                ", global slowdown"
+            } else {
+                ""
+            }
+        );
+    }
+
+    fn fmt_value(v: Option<f64>) -> String {
+        match v {
+            None => "-".to_string(),
+            Some(v) if v >= 100.0 => format!("{v:.0}"),
+            Some(v) => format!("{v:.2}"),
+        }
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "{} diff: {} -> {} ({} matched cells, threshold {:.0}%)\n",
+            self.kind,
+            self.old_label,
+            self.new_label,
+            self.cells.len(),
+            self.threshold * 100.0
+        );
+        let old_col = format!("old {}", self.unit);
+        let new_col = format!("new {}", self.unit);
+        let mut t = Table::new(&[
+            "cell",
+            old_col.as_str(),
+            new_col.as_str(),
+            "ratio",
+            "norm",
+            "verdict",
+        ]);
+        for c in &self.cells {
+            // only the non-gating (perf) verdicts get the advisory tag;
+            // parity breaks and unmeasured cells gate regardless
+            let advisory_perf = c.advisory
+                && matches!(
+                    c.verdict,
+                    CellVerdict::Regression | CellVerdict::Improvement
+                );
+            let verdict = if advisory_perf {
+                format!("{} (advisory)", c.verdict.name())
+            } else {
+                c.verdict.name().to_string()
+            };
+            t.row(vec![
+                c.key.clone(),
+                Self::fmt_value(c.old_value),
+                Self::fmt_value(c.new_value),
+                format!("{:.3}", c.ratio),
+                format!("{:.3}", c.norm_ratio),
+                verdict,
+            ]);
+        }
+        out.push_str(&t.render());
+        let _ = writeln!(
+            out,
+            "\ngrid shift (median ratio): {:.3}x{}",
+            self.shift,
+            if self.global_regression && self.fail_on_shift {
+                "  <- GLOBAL REGRESSION (gating: --fail-on-shift)"
+            } else if self.global_regression {
+                "  <- whole-grid slowdown (uniform regression OR slower \
+                 host; advisory — gate with --fail-on-shift)"
+            } else {
+                ""
+            }
+        );
+        for k in &self.only_in_old {
+            let _ = writeln!(out, "MISSING in new record: {k}");
+        }
+        for k in &self.only_in_new {
+            let _ = writeln!(out, "new cell (not in baseline): {k}");
+        }
+        let _ = writeln!(
+            out,
+            "{} regressions, {} improvements, {} parity breaks, {} unmeasured, {} missing => {}",
+            self.regressions(),
+            self.improvements(),
+            self.parity_breaks(),
+            self.unmeasured(),
+            self.only_in_old.len(),
+            if self.ok() { "OK" } else { "FAIL" }
+        );
+        out
+    }
+}
+
+/// Diff two artifacts cell-by-cell (matched on the cell key).
+pub fn diff_records<R: Diffable>(old: &R, new: &R, opts: &DiffOpts) -> DiffReport {
+    let old_cells = old.cells();
+    let new_cells = new.cells();
+    let old_by_key: BTreeMap<&str, &PerfCell> =
+        old_cells.iter().map(|c| (c.key.as_str(), c)).collect();
+    let new_by_key: BTreeMap<&str, &PerfCell> =
+        new_cells.iter().map(|c| (c.key.as_str(), c)).collect();
+
+    let mut matched: Vec<(&PerfCell, &PerfCell)> = Vec::new();
+    let mut only_in_old = Vec::new();
+    for (key, o) in old_by_key.iter() {
+        match new_by_key.get(*key) {
+            Some(n) => matched.push((*o, *n)),
+            None => only_in_old.push((*key).to_string()),
+        }
+    }
+    let only_in_new: Vec<String> = new_by_key
+        .keys()
+        .filter(|k| !old_by_key.contains_key(*k))
+        .map(|k| k.to_string())
+        .collect();
+
+    // Goodness ratio (>1 = better) for a matched pair with sane
+    // measurements on both sides.
+    let goodness = |o: &PerfCell, n: &PerfCell| -> Option<f64> {
+        match (o.perf, n.perf) {
+            (Some(a), Some(b)) if a > 0.0 && b > 0.0 => {
+                Some(if o.lower_is_better { a / b } else { b / a })
+            }
+            _ => None,
+        }
+    };
+
+    // Median goodness ratio over the *noisy* (host-dependent) measured
+    // cells — the host-speed signal. Deterministic cells are excluded:
+    // folding them in would let a uniform real regression cancel itself
+    // through the median.
+    let mut ratios: Vec<f64> = matched
+        .iter()
+        .filter(|(o, _)| o.noisy)
+        .filter_map(|(o, n)| goodness(o, n))
+        .collect();
+    ratios.sort_by(|a, b| a.partial_cmp(b).expect("finite ratios"));
+    let shift = match ratios.len() {
+        0 => 1.0,
+        n if n % 2 == 1 => ratios[n / 2],
+        n => (ratios[n / 2 - 1] * ratios[n / 2]).sqrt(),
+    };
+    // On tiny grids the median IS the (possibly regressed) cell, so
+    // normalizing by it would cancel the very signal we gate on — a
+    // 10x-slower single-cell grid must not read as "unchanged". Below
+    // this many noisy cells, their ratios are compared raw.
+    const MIN_CELLS_TO_NORMALIZE: usize = 4;
+    let denom = if opts.normalize && shift > 0.0 && ratios.len() >= MIN_CELLS_TO_NORMALIZE {
+        shift
+    } else {
+        1.0
+    };
+
+    let cells: Vec<CellDiff> = matched
+        .into_iter()
+        .map(|(o, n)| {
+            let measured = goodness(o, n);
+            let ratio = measured.unwrap_or(1.0);
+            // deterministic (virtual-time) cells always compare raw
+            let norm_ratio = if o.noisy { ratio / denom } else { ratio };
+            let verdict = if o.ident != n.ident {
+                CellVerdict::ParityBreak
+            } else if o.perf.is_none() && n.perf.is_none() {
+                // parity-only cell: identity matched, nothing to measure
+                CellVerdict::Unchanged
+            } else if measured.is_none() {
+                CellVerdict::Unmeasured
+            } else if norm_ratio < 1.0 - opts.threshold {
+                CellVerdict::Regression
+            } else if norm_ratio > 1.0 + opts.threshold {
+                CellVerdict::Improvement
+            } else {
+                CellVerdict::Unchanged
+            };
+            CellDiff {
+                key: o.key.clone(),
+                old_value: o.perf,
+                new_value: n.perf,
+                ratio,
+                norm_ratio,
+                verdict,
+                advisory: o.advisory,
+            }
+        })
+        .collect();
+
+    DiffReport {
+        kind: R::KIND,
+        unit: R::UNIT,
+        old_label: old.label().to_string(),
+        new_label: new.label().to_string(),
+        cells,
+        only_in_old,
+        only_in_new,
+        shift,
+        threshold: opts.threshold,
+        global_regression: shift < 1.0 - opts.threshold,
+        fail_on_shift: opts.fail_on_shift,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A minimal Diffable: parity cells + mixed-direction perf cells,
+    /// exercising exactly the surface the real records build on.
+    struct Fake {
+        label: String,
+        cells: Vec<PerfCell>,
+    }
+
+    impl Diffable for Fake {
+        const KIND: &'static str = "fake";
+        const UNIT: &'static str = "value";
+
+        fn label(&self) -> &str {
+            &self.label
+        }
+
+        fn cells(&self) -> Vec<PerfCell> {
+            self.cells.clone()
+        }
+    }
+
+    fn fake(cells: Vec<PerfCell>) -> Fake {
+        Fake {
+            label: "fake".to_string(),
+            cells,
+        }
+    }
+
+    fn base_cells() -> Vec<PerfCell> {
+        vec![
+            PerfCell::parity("ident", "abc"),
+            PerfCell::lower("lat_p50", 40.0),
+            PerfCell::lower("lat_p99", 90.0),
+            PerfCell::higher("jps", 1000.0),
+            PerfCell::higher("thru", 2.5),
+        ]
+    }
+
+    #[test]
+    fn identical_records_pass_and_parity_cells_render_dashes() {
+        let a = fake(base_cells());
+        let b = fake(base_cells());
+        let report = diff_records(&a, &b, &DiffOpts::default());
+        assert!(report.ok(), "{}", report.render());
+        assert!(report.gate().is_ok());
+        assert_eq!(report.cells.len(), 5);
+        assert!((report.shift - 1.0).abs() < 1e-12);
+        let rendered = report.render();
+        assert!(rendered.starts_with("fake diff: fake -> fake"), "{rendered}");
+        assert!(rendered.contains("old value"), "{rendered}");
+    }
+
+    #[test]
+    fn identity_mismatch_is_a_parity_break_not_a_perf_delta() {
+        let a = fake(base_cells());
+        let mut cells = base_cells();
+        cells[0] = PerfCell::parity("ident", "different");
+        let b = fake(cells);
+        let report = diff_records(&a, &b, &DiffOpts::default());
+        assert_eq!(report.parity_breaks(), 1, "{}", report.render());
+        assert!(!report.ok());
+        assert!(report.gate().is_err());
+    }
+
+    #[test]
+    fn lower_is_better_cells_classify_by_goodness_ratio() {
+        let a = fake(base_cells());
+        let mut cells = base_cells();
+        cells[2] = PerfCell::lower("lat_p99", 900.0); // 10x worse latency
+        let b = fake(cells);
+        let report = diff_records(&a, &b, &DiffOpts::default());
+        assert_eq!(report.regressions(), 1, "{}", report.render());
+        let bad = report
+            .cells
+            .iter()
+            .find(|c| c.verdict == CellVerdict::Regression)
+            .unwrap();
+        assert_eq!(bad.key, "lat_p99");
+        assert!(bad.ratio < 0.2, "goodness ratio: {}", bad.ratio);
+
+        // the same-size move downward is an improvement
+        let mut cells = base_cells();
+        cells[2] = PerfCell::lower("lat_p99", 9.0);
+        let b = fake(cells);
+        let report = diff_records(&a, &b, &DiffOpts::default());
+        assert_eq!(report.improvements(), 1, "{}", report.render());
+        assert!(report.ok(), "improvement must not fail the gate");
+    }
+
+    #[test]
+    fn uniform_deterministic_regressions_do_not_cancel() {
+        // Deterministic (virtual-time) cells must compare raw: if they
+        // were folded into the median, a change that makes EVERY cell
+        // 2x worse would normalize to "unchanged" and pass the gate.
+        let a = fake(base_cells());
+        let b = fake(vec![
+            PerfCell::parity("ident", "abc"),
+            PerfCell::lower("lat_p50", 80.0),
+            PerfCell::lower("lat_p99", 180.0),
+            PerfCell::higher("jps", 500.0),
+            PerfCell::higher("thru", 1.25),
+        ]);
+        let report = diff_records(&a, &b, &DiffOpts::default());
+        assert_eq!(report.regressions(), 4, "{}", report.render());
+        assert!(!report.ok());
+    }
+
+    #[test]
+    fn noisy_cells_normalize_by_their_own_median() {
+        let noisy_cells = |scale: f64, odd_one: f64| -> Vec<PerfCell> {
+            vec![
+                PerfCell::higher("c0", 1000.0 * scale).noisy(),
+                PerfCell::higher("c1", 2000.0 * scale).noisy(),
+                PerfCell::higher("c2", 3000.0 * scale).noisy(),
+                PerfCell::higher("c3", 4000.0 * scale).noisy(),
+                PerfCell::higher("c4", 5000.0 * odd_one).noisy(),
+            ]
+        };
+        // whole grid uniformly 3x slower: a host effect, not a per-cell
+        // regression — advisory shift only (the sweep semantics)
+        let a = fake(noisy_cells(1.0, 1.0));
+        let b = fake(noisy_cells(1.0 / 3.0, 1.0 / 3.0));
+        let report = diff_records(&a, &b, &DiffOpts::default());
+        assert_eq!(report.regressions(), 0, "{}", report.render());
+        assert!(report.global_regression);
+        assert!(report.ok(), "uniform noisy shift must not gate by default");
+        let strict = DiffOpts {
+            fail_on_shift: true,
+            ..DiffOpts::default()
+        };
+        assert!(!diff_records(&a, &b, &strict).ok());
+
+        // one noisy cell 10x slower while the rest hold: a real per-cell
+        // regression, surfaced through the normalized ratio
+        let b = fake(noisy_cells(1.0, 0.1));
+        let report = diff_records(&a, &b, &DiffOpts::default());
+        assert_eq!(report.regressions(), 1, "{}", report.render());
+        assert!(!report.ok());
+    }
+
+    #[test]
+    fn advisory_cells_report_but_never_gate() {
+        let cells = |jps: f64| -> Vec<PerfCell> {
+            vec![
+                PerfCell::lower("lat_p50", 40.0),
+                PerfCell::lower("lat_p99", 90.0),
+                PerfCell::higher("jobs_per_sec", jps).noisy().advisory(),
+            ]
+        };
+        let a = fake(cells(1000.0));
+        let b = fake(cells(100.0)); // 10x slower wall clock
+        let report = diff_records(&a, &b, &DiffOpts::default());
+        assert_eq!(report.regressions(), 0, "{}", report.render());
+        assert!(report.ok(), "advisory cell must not gate:\n{}", report.render());
+        assert!(report.render().contains("(advisory)"), "{}", report.render());
+        // ...but it IS the host-shift signal, so --fail-on-shift gates it
+        assert!((report.shift - 0.1).abs() < 1e-9, "shift {}", report.shift);
+        assert!(report.global_regression);
+        let strict = DiffOpts {
+            fail_on_shift: true,
+            ..DiffOpts::default()
+        };
+        assert!(!diff_records(&a, &b, &strict).ok());
+
+        // advisory waives perf judgement, not integrity: an unmeasured
+        // advisory cell (corrupt artifact) still fails the gate
+        let b = fake(cells(0.0));
+        let report = diff_records(&a, &b, &DiffOpts::default());
+        assert_eq!(report.unmeasured(), 1, "{}", report.render());
+        assert!(!report.ok(), "{}", report.render());
+    }
+
+    #[test]
+    fn unmeasured_and_missing_cells_fail() {
+        let a = fake(base_cells());
+        let mut cells = base_cells();
+        cells[3] = PerfCell::higher("jps", 0.0);
+        let b = fake(cells);
+        let report = diff_records(&a, &b, &DiffOpts::default());
+        assert_eq!(report.unmeasured(), 1, "{}", report.render());
+        assert!(!report.ok());
+
+        let mut cells = base_cells();
+        cells.pop();
+        let b = fake(cells);
+        let report = diff_records(&a, &b, &DiffOpts::default());
+        assert_eq!(report.only_in_old.len(), 1);
+        assert!(!report.ok());
+        // the reverse direction (grid grew) is fine
+        let report = diff_records(&b, &a, &DiffOpts::default());
+        assert_eq!(report.only_in_new.len(), 1);
+        assert!(report.ok(), "{}", report.render());
+    }
+
+    #[test]
+    fn threshold_resolution_precedence_and_validation() {
+        assert_eq!(resolve_threshold(Some("0.4")).unwrap(), 0.4);
+        assert!(resolve_threshold(Some("1.5")).is_err());
+        assert!(resolve_threshold(Some("abc")).is_err());
+        // No flag and no env (the harness does not set it for unit
+        // tests) falls back to the default.
+        if std::env::var(THRESHOLD_ENV).is_err() {
+            assert_eq!(
+                resolve_threshold(None).unwrap(),
+                DiffOpts::default().threshold
+            );
+        }
+    }
+}

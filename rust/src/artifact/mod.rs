@@ -1,0 +1,378 @@
+//! The one versioned-artifact layer: every durable measurement file the
+//! repo writes (`BENCH_*.json` sweep records, `SERVE_*.json` serve
+//! records) goes through this module.
+//!
+//! Before it existed the repo carried two drifting artifact
+//! vocabularies — `sweep::record` (schema string, jsonio glue, FNV-1a
+//! digest, diff classification) and `coordinator::record` (a second
+//! schema check + parse-back with no digest and no diff) — and every new
+//! record type would have forced a third copy. Exactly like the engine
+//! registry consolidation, this module is the single API:
+//!
+//! * **Schema registry** — [`Schema`] is one family+version type;
+//!   [`SWEEP_RECORD`] and [`SERVE_RECORD`] are its instances, and
+//!   [`Schema::check`] is the single unsupported-schema error path
+//!   (wrong version, wrong family, and unknown tags each get a precise
+//!   message instead of a field error).
+//! * **Codec plumbing** — the [`Artifact`] trait owns
+//!   `to_json`/`from_json`/`parse`/`render`, and [`load`]/[`store`]
+//!   add path context and parse-back verification (a written artifact
+//!   that does not round-trip to an equal record is a hard error, for
+//!   every record type, before the caller reports success).
+//! * **Digest** — [`fnv1a64`]/[`fnv1a64_hex`], the deterministic
+//!   schedule-identity hash both record types embed (unit-tested
+//!   against the published FNV-1a vectors).
+//! * **Diff core** — [`diff`] classifies any two artifacts made of
+//!   keyed [`diff::PerfCell`]s; `sweep diff` and `serve diff` are thin
+//!   instantiations of [`diff::diff_records`].
+//!
+//! Everything here returns [`crate::error::Result`]; the strict field
+//! accessors ([`get_str`], [`get_uint`], ...) reject corrupt or
+//! hand-edited artifacts at parse time with the field name.
+
+pub mod diff;
+
+pub use diff::{
+    diff_records, resolve_threshold, CellDiff, CellVerdict, Diffable, DiffOpts, DiffReport,
+    PerfCell, THRESHOLD_ENV,
+};
+
+use crate::error::{Ctx, Result};
+use crate::jsonio::Json;
+use crate::{bail, err};
+
+/// One versioned artifact schema: a dotted family name plus an integer
+/// version, rendered as the `schema` field tag `<family>.v<version>`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Schema {
+    pub family: &'static str,
+    pub version: u32,
+}
+
+/// The sweep-record schema (`stannic.sweep.record.v1`).
+pub const SWEEP_RECORD: Schema = Schema {
+    family: "stannic.sweep.record",
+    version: 1,
+};
+
+/// The serve-record schema (`stannic.serve.record.v1`).
+pub const SERVE_RECORD: Schema = Schema {
+    family: "stannic.serve.record",
+    version: 1,
+};
+
+/// Every schema this build knows about — lets cross-family mistakes
+/// ("fed a serve artifact to `sweep diff`") produce a precise message.
+pub const REGISTRY: [Schema; 2] = [SWEEP_RECORD, SERVE_RECORD];
+
+impl Schema {
+    /// The tag embedded in the artifact's `schema` field.
+    pub fn tag(&self) -> String {
+        format!("{}.v{}", self.family, self.version)
+    }
+
+    /// Split a tag into (family, version); `None` when the tag does not
+    /// end in `.v<digits>`.
+    pub fn split_tag(tag: &str) -> Option<(&str, u32)> {
+        let (family, version) = tag.rsplit_once(".v")?;
+        version.parse::<u32>().ok().map(|v| (family, v))
+    }
+
+    /// The single unsupported-schema error path: verify the document's
+    /// `schema` field names exactly this schema, distinguishing a
+    /// version mismatch from a different artifact family from an
+    /// unrecognized tag.
+    pub fn check(&self, j: &Json) -> Result<()> {
+        let tag = j
+            .get("schema")
+            .and_then(Json::as_str)
+            .ctx("missing string field 'schema'")?;
+        if tag == self.tag() {
+            return Ok(());
+        }
+        match Schema::split_tag(tag) {
+            // version != self.version: a same-version tag that failed the
+            // exact-tag equality is non-canonical (e.g. `...v01`) and
+            // falls through to "unrecognized" instead of the absurd
+            // "v1 unsupported (this build reads v1)".
+            Some((family, version)) if family == self.family && version != self.version => bail!(
+                "unsupported {} schema version v{version} (this build reads v{})",
+                self.family,
+                self.version
+            ),
+            Some((family, _))
+                if family != self.family && REGISTRY.iter().any(|s| s.family == family) =>
+            {
+                bail!(
+                    "artifact is a {family} record, not {} (schema '{tag}')",
+                    self.family
+                )
+            }
+            _ => bail!(
+                "unrecognized artifact schema '{tag}' (expected {})",
+                self.tag()
+            ),
+        }
+    }
+}
+
+/// A persisted, versioned measurement record. Implementors provide the
+/// JSON layout; the trait provides the text codec, and [`load`]/
+/// [`store`] the verified file I/O.
+pub trait Artifact: Sized + PartialEq {
+    /// The registry entry this record type serializes as.
+    const SCHEMA: Schema;
+
+    /// Serialize to the JSON tree (must embed `Self::SCHEMA.tag()` under
+    /// the `schema` key).
+    fn to_json(&self) -> Json;
+
+    /// Deserialize from a JSON tree; implementations call
+    /// `Self::SCHEMA.check(j)?` first so every record type shares the
+    /// one schema error path.
+    fn from_json(j: &Json) -> Result<Self>;
+
+    /// Parse an artifact from its serialized text.
+    fn parse(text: &str) -> Result<Self> {
+        Self::from_json(&Json::parse(text)?)
+    }
+
+    /// Serialize to the artifact text (compact JSON + trailing newline).
+    fn render(&self) -> String {
+        let mut text = self.to_json().render();
+        text.push('\n');
+        text
+    }
+}
+
+/// Read and parse an artifact file, with the path in the error chain.
+pub fn load<A: Artifact>(path: &str) -> Result<A> {
+    let text = std::fs::read_to_string(path).with_ctx(|| format!("reading {path}"))?;
+    A::parse(&text).with_ctx(|| format!("parsing {path}"))
+}
+
+/// Write an artifact and parse-back-verify it: the written file must
+/// round-trip to an equal record before the caller may report success
+/// (keeps CI's artifact checks honest for every record type).
+pub fn store<A: Artifact>(path: &str, a: &A) -> Result<()> {
+    std::fs::write(path, a.render()).with_ctx(|| format!("writing {path}"))?;
+    let back: A = load(path).ctx("recorded artifact failed to parse back")?;
+    if back != *a {
+        bail!("recorded artifact round-trip mismatch at {path}");
+    }
+    Ok(())
+}
+
+/// FNV-1a 64-bit — deterministic, dependency-free digest for schedule
+/// outcomes (not cryptographic; collisions only hide a parity break that
+/// the golden test would catch anyway).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// The 16-hex-char form both record types embed as their digest field.
+pub fn fnv1a64_hex(bytes: &[u8]) -> String {
+    format!("{:016x}", fnv1a64(bytes))
+}
+
+/// Wall-clock throughput shared by both record types: jobs per second,
+/// 0.0 when the wall time is absent (recorders floor `wall_ns` at 1, so
+/// a zero only appears in hand-edited artifacts, where the diff flags
+/// the cell as unmeasured).
+pub fn jobs_per_sec(jobs: usize, wall_ns: u64) -> f64 {
+    if wall_ns == 0 {
+        0.0
+    } else {
+        jobs as f64 / (wall_ns as f64 / 1e9)
+    }
+}
+
+pub fn get_str(j: &Json, k: &str) -> Result<String> {
+    j.get(k)
+        .and_then(Json::as_str)
+        .map(str::to_string)
+        .with_ctx(|| format!("missing string field '{k}'"))
+}
+
+pub fn get_f64(j: &Json, k: &str) -> Result<f64> {
+    j.get(k)
+        .and_then(Json::as_f64)
+        .with_ctx(|| format!("missing numeric field '{k}'"))
+}
+
+/// Reject negative/fractional/huge values for integer-typed fields
+/// instead of silently saturating through `as` casts — a hand-edited
+/// artifact should fail at parse time with the field name, not surface
+/// later as a confusing digest mismatch.
+pub fn uint_value(v: f64, what: &str) -> Result<u64> {
+    if v.is_nan() || v < 0.0 || v.fract() != 0.0 || v > 9_007_199_254_740_992.0 {
+        return Err(err!("{what}: expected a non-negative integer, got {v}"));
+    }
+    Ok(v as u64)
+}
+
+pub fn get_uint(j: &Json, k: &str) -> Result<u64> {
+    uint_value(get_f64(j, k)?, k)
+}
+
+/// Require an actual JSON array (`Json::items` silently yields an empty
+/// slice for non-arrays, which would let a corrupt artifact parse).
+pub fn get_arr<'a>(j: &'a Json, k: &str) -> Result<&'a [Json]> {
+    match j.get(k) {
+        Some(Json::Arr(v)) => Ok(v),
+        Some(_) => Err(err!("field '{k}': expected an array")),
+        None => Err(err!("missing array field '{k}'")),
+    }
+}
+
+/// An array of non-negative integers (e.g. per-machine job counts),
+/// with the same strictness as [`get_uint`] per element.
+pub fn get_usize_arr(j: &Json, k: &str) -> Result<Vec<usize>> {
+    get_arr(j, k)?
+        .iter()
+        .map(|v| {
+            v.as_f64()
+                .with_ctx(|| format!("non-numeric '{k}' entry"))
+                .and_then(|n| uint_value(n, &format!("'{k}' entry")))
+                .map(|n| n as usize)
+        })
+        .collect()
+}
+
+pub fn get_u64_str(j: &Json, k: &str) -> Result<u64> {
+    get_str(j, k)?
+        .parse::<u64>()
+        .map_err(|e| err!("field '{k}': {e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::jsonio::{num, obj, s};
+
+    #[test]
+    fn fnv1a64_matches_published_vectors() {
+        // Reference vectors from the FNV test suite
+        // (draft-eastlake-fnv, fnv64a).
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x8594_4171_f739_67e8);
+        assert_eq!(fnv1a64_hex(b"foobar"), "85944171f73967e8");
+    }
+
+    #[test]
+    fn schema_tags_round_trip() {
+        assert_eq!(SWEEP_RECORD.tag(), "stannic.sweep.record.v1");
+        assert_eq!(SERVE_RECORD.tag(), "stannic.serve.record.v1");
+        assert_eq!(
+            Schema::split_tag("stannic.sweep.record.v1"),
+            Some(("stannic.sweep.record", 1))
+        );
+        assert_eq!(
+            Schema::split_tag("stannic.serve.record.v12"),
+            Some(("stannic.serve.record", 12))
+        );
+        assert_eq!(Schema::split_tag("no-version-suffix"), None);
+        assert_eq!(Schema::split_tag("family.vNaN"), None);
+    }
+
+    #[test]
+    fn check_distinguishes_version_family_and_garbage() {
+        let ok = obj(vec![("schema", s(SWEEP_RECORD.tag()))]);
+        assert!(SWEEP_RECORD.check(&ok).is_ok());
+
+        let missing = obj(vec![("other", num(1.0))]);
+        let e = SWEEP_RECORD.check(&missing).unwrap_err();
+        assert!(format!("{e:#}").contains("schema"), "{e:#}");
+
+        let newer = obj(vec![("schema", s("stannic.sweep.record.v9"))]);
+        let e = SWEEP_RECORD.check(&newer).unwrap_err();
+        let msg = format!("{e:#}");
+        assert!(msg.contains("unsupported"), "{msg}");
+        assert!(msg.contains("v9"), "{msg}");
+        assert!(msg.contains("reads v1"), "{msg}");
+
+        let cross = obj(vec![("schema", s(SERVE_RECORD.tag()))]);
+        let e = SWEEP_RECORD.check(&cross).unwrap_err();
+        let msg = format!("{e:#}");
+        assert!(msg.contains("stannic.serve.record"), "{msg}");
+        assert!(msg.contains("not stannic.sweep.record"), "{msg}");
+
+        let garbage = obj(vec![("schema", s("who.knows"))]);
+        let e = SWEEP_RECORD.check(&garbage).unwrap_err();
+        assert!(format!("{e:#}").contains("unrecognized"), "{e:#}");
+
+        // a non-canonical spelling of the supported version must not
+        // claim "v1 unsupported" from a build that reads v1
+        let noncanon = obj(vec![("schema", s("stannic.sweep.record.v01"))]);
+        let e = SWEEP_RECORD.check(&noncanon).unwrap_err();
+        assert!(format!("{e:#}").contains("unrecognized"), "{e:#}");
+    }
+
+    #[test]
+    fn strict_accessors_name_the_field() {
+        let j = obj(vec![
+            ("n", num(3.5)),
+            ("u", num(-1.0)),
+            ("s", s("text")),
+            ("big", s("18446744073709551615")),
+        ]);
+        assert_eq!(get_f64(&j, "n").unwrap(), 3.5);
+        assert_eq!(get_str(&j, "s").unwrap(), "text");
+        assert_eq!(get_u64_str(&j, "big").unwrap(), u64::MAX);
+        for (k, what) in [("n", "fractional"), ("u", "negative")] {
+            let e = get_uint(&j, k).unwrap_err();
+            assert!(format!("{e:#}").contains(k), "{what}: {e:#}");
+        }
+        assert!(get_str(&j, "absent").is_err());
+        assert!(get_arr(&j, "s").is_err(), "non-array must be rejected");
+        assert!(get_arr(&j, "absent").is_err());
+    }
+
+    #[derive(Debug, PartialEq)]
+    struct Mini {
+        v: u64,
+    }
+
+    impl Artifact for Mini {
+        const SCHEMA: Schema = Schema {
+            family: "stannic.sweep.record",
+            version: 1,
+        };
+
+        fn to_json(&self) -> Json {
+            obj(vec![
+                ("schema", s(Self::SCHEMA.tag())),
+                ("v", num(self.v as f64)),
+            ])
+        }
+
+        fn from_json(j: &Json) -> Result<Mini> {
+            Self::SCHEMA.check(j)?;
+            Ok(Mini {
+                v: get_uint(j, "v")?,
+            })
+        }
+    }
+
+    #[test]
+    fn store_parse_back_verifies_and_load_adds_path_context() {
+        let path = std::env::temp_dir().join(format!("stannic_artifact_{}.json", std::process::id()));
+        let path = path.to_str().unwrap().to_string();
+        let m = Mini { v: 7 };
+        store(&path, &m).unwrap();
+        let back: Mini = load(&path).unwrap();
+        assert_eq!(back, m);
+        let e = load::<Mini>("/nonexistent/artifact.json").unwrap_err();
+        assert!(
+            format!("{e:#}").contains("/nonexistent/artifact.json"),
+            "{e:#}"
+        );
+        let _ = std::fs::remove_file(&path);
+    }
+}

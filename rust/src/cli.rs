@@ -1,8 +1,13 @@
 //! Command-line argument substrate (clap is unavailable offline):
 //! subcommand + `--flag value` / `--flag` parsing with typed accessors
-//! and generated usage text.
+//! and generated usage text. Accessors return
+//! [`crate::error::Result`], so command handlers propagate flag errors
+//! with bare `?` instead of string-shimming.
 
 use std::collections::BTreeMap;
+
+use crate::err;
+use crate::error::{Ctx, Result};
 
 /// Parsed arguments: a subcommand, positionals, and `--key value` flags.
 #[derive(Debug, Clone, Default)]
@@ -36,10 +41,7 @@ impl FlagSpec {
 impl Args {
     /// Parse raw arguments (without argv[0]). Flags may appear anywhere;
     /// the first non-flag token is the subcommand, the rest positionals.
-    pub fn parse<I: IntoIterator<Item = String>>(
-        raw: I,
-        specs: &[FlagSpec],
-    ) -> Result<Args, String> {
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I, specs: &[FlagSpec]) -> Result<Args> {
         let mut out = Args::default();
         let mut it = raw.into_iter().peekable();
         while let Some(tok) = it.next() {
@@ -51,18 +53,18 @@ impl Args {
                 let spec = specs
                     .iter()
                     .find(|s| s.name == name)
-                    .ok_or_else(|| format!("unknown flag --{name}"))?;
+                    .with_ctx(|| format!("unknown flag --{name}"))?;
                 if spec.takes_value {
                     let v = match inline {
                         Some(v) => v,
                         None => it
                             .next()
-                            .ok_or_else(|| format!("--{name} requires a value"))?,
+                            .with_ctx(|| format!("--{name} requires a value"))?,
                     };
                     out.flags.insert(name.to_string(), v);
                 } else {
                     if inline.is_some() {
-                        return Err(format!("--{name} takes no value"));
+                        return Err(err!("--{name} takes no value"));
                     }
                     out.bools.push(name.to_string());
                 }
@@ -83,30 +85,30 @@ impl Args {
         self.bools.iter().any(|b| b == name)
     }
 
-    pub fn usize_flag(&self, name: &str, default: usize) -> Result<usize, String> {
+    pub fn usize_flag(&self, name: &str, default: usize) -> Result<usize> {
         match self.flag(name) {
             None => Ok(default),
             Some(v) => v
                 .parse()
-                .map_err(|e| format!("--{name}: expected integer ({e})")),
+                .map_err(|e| err!("--{name}: expected integer ({e})")),
         }
     }
 
-    pub fn u64_flag(&self, name: &str, default: u64) -> Result<u64, String> {
+    pub fn u64_flag(&self, name: &str, default: u64) -> Result<u64> {
         match self.flag(name) {
             None => Ok(default),
             Some(v) => v
                 .parse()
-                .map_err(|e| format!("--{name}: expected integer ({e})")),
+                .map_err(|e| err!("--{name}: expected integer ({e})")),
         }
     }
 
-    pub fn f32_flag(&self, name: &str, default: f32) -> Result<f32, String> {
+    pub fn f32_flag(&self, name: &str, default: f32) -> Result<f32> {
         match self.flag(name) {
             None => Ok(default),
             Some(v) => v
                 .parse()
-                .map_err(|e| format!("--{name}: expected number ({e})")),
+                .map_err(|e| err!("--{name}: expected number ({e})")),
         }
     }
 
@@ -140,7 +142,7 @@ mod tests {
         ]
     }
 
-    fn parse(args: &[&str]) -> Result<Args, String> {
+    fn parse(args: &[&str]) -> Result<Args> {
         Args::parse(args.iter().map(|s| s.to_string()), &specs())
     }
 

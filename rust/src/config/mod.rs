@@ -2,8 +2,10 @@
 //! coordinator, and the examples, with JSON round-trip (via
 //! [`crate::jsonio`]) so experiment setups can be archived.
 
+use crate::bail;
 use crate::core::MachinePark;
 use crate::engine::EngineId;
+use crate::error::Result;
 use crate::jsonio::{arr, num, obj, s, Json};
 use crate::quant::Precision;
 use crate::workload::{BurstType, WorkloadSpec};
@@ -93,7 +95,7 @@ impl RunConfig {
         ])
     }
 
-    pub fn from_json(j: &Json) -> Result<RunConfig, String> {
+    pub fn from_json(j: &Json) -> Result<RunConfig> {
         let mut c = RunConfig::default();
         let get_num = |j: &Json, k: &str| -> Option<f64> { j.get(k).and_then(Json::as_f64) };
         if let Some(v) = get_num(j, "machines") {
@@ -112,7 +114,7 @@ impl RunConfig {
                 "INT8" => Precision::Int8,
                 "INT4" => Precision::Int4,
                 "Mixed" => Precision::Mixed,
-                other => return Err(format!("bad precision {other}")),
+                other => bail!("bad precision {other}"),
             };
         }
         if let Some(v) = j.get("engine").and_then(Json::as_str) {
@@ -141,7 +143,7 @@ impl RunConfig {
                 c.workload.burst_type = match v {
                     "random" => BurstType::Random,
                     "uniform" => BurstType::Uniform,
-                    other => return Err(format!("bad burst_type {other}")),
+                    other => bail!("bad burst_type {other}"),
                 };
             }
             if let Some(v) = get_num(w, "idle_time") {

@@ -24,8 +24,11 @@
 //! * **Transport + workers**: the PCIe round-trip model ([`pcie`]) and
 //!   one virtual-time worker thread per machine, reporting
 //!   [`CompletionRecord`]s.
-//! * **Persistence** ([`ServeRecord`]): `serve --record` archives a run
-//!   through the same jsonio plumbing as `sweep --record`.
+//! * **Persistence + diffing** ([`ServeRecord`]): `serve --record`
+//!   archives a run through the shared [`crate::artifact`] layer
+//!   (schema-checked, parse-back-verified, schedule-identity digest),
+//!   and `serve diff` gates two archived runs through the same generic
+//!   diff core as `sweep diff`.
 
 mod adapter;
 pub mod pcie;

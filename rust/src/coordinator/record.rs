@@ -1,24 +1,37 @@
 //! Persisted serve reports — the coordinator's arm of the repo's
-//! benchmarking backbone.
+//! benchmarking backbone, built on the [`crate::artifact`] layer.
 //!
 //! `serve --record out.json` turns one serving run into a durable,
 //! machine-readable artifact the same way `sweep --record` does for the
 //! grid: a [`ServeRecord`] serializes the run key (engine, batch,
 //! sources), the deterministic outcome (schedule metrics, tick count,
-//! merge/batch telemetry percentiles), and the timing-dependent
-//! backpressure observations (per-source enqueue stalls, wall time)
-//! through [`crate::jsonio`]. Parsing reuses the strict field accessors
-//! of [`crate::sweep::record`] (u64-exact fields travel as strings;
-//! hand-edited artifacts fail at parse time with the field name).
+//! merge/batch telemetry percentiles, and a FNV-1a **schedule-identity
+//! digest**), and the timing-dependent backpressure observations
+//! (per-source enqueue stalls, wall time) through [`crate::jsonio`]
+//! under the [`crate::artifact::SERVE_RECORD`] schema.
+//!
+//! `serve diff old.json new.json` runs the same generic
+//! [`crate::artifact::diff`] core as `sweep diff`: ticks, completions
+//! and the schedule digest are parity-gated (any mismatch means the
+//! deterministic serving semantics changed — never a perf delta), while
+//! the latency percentiles and jobs-level throughput are perf-gated
+//! with identical median-shift normalization and threshold handling.
 
+use std::fmt::Write as _;
 use std::time::{SystemTime, UNIX_EPOCH};
 
+use crate::artifact::{
+    self, fnv1a64_hex, get_arr, get_f64, get_str, get_u64_str, get_uint, get_usize_arr, Artifact,
+    Diffable, PerfCell, Schema,
+};
+use crate::err;
+use crate::error::Result;
 use crate::jsonio::{arr, num, obj, s, Json};
-use crate::sweep::record::{get_arr, get_str, get_u64_str, get_uint};
 
 use super::server::ServeReport;
 
-/// Schema tag embedded in every serve artifact.
+/// Schema tag embedded in every serve artifact (the rendered form of
+/// [`artifact::SERVE_RECORD`]).
 pub const SERVE_RECORD_SCHEMA: &str = "stannic.serve.record.v1";
 
 /// Per-source slice of a persisted serve run.
@@ -44,6 +57,10 @@ pub struct ServeRecord {
     pub stalls: u64,
     pub accel_cycles: u64,
     pub wall_ns: u64,
+    /// FNV-1a digest of the schedule identity (engine, completions,
+    /// stalls, per-machine assignment counts, per-source job counts);
+    /// equal runs with different digests mean serving semantics changed.
+    pub digest: String,
     pub avg_latency: f64,
     pub fairness: f64,
     pub load_cv: f64,
@@ -65,7 +82,7 @@ pub struct ServeRecord {
 
 impl ServeRecord {
     pub fn from_report(label: &str, r: &ServeReport) -> ServeRecord {
-        ServeRecord {
+        let mut rec = ServeRecord {
             label: label.to_string(),
             engine: r.engine.to_string(),
             created_unix: SystemTime::now()
@@ -77,6 +94,7 @@ impl ServeRecord {
             stalls: r.stalls,
             accel_cycles: r.accel_cycles,
             wall_ns: r.wall.as_nanos().max(1) as u64,
+            digest: String::new(),
             avg_latency: r.metrics.avg_latency,
             fairness: r.metrics.fairness,
             load_cv: r.metrics.load_balance_cv,
@@ -100,12 +118,40 @@ impl ServeRecord {
                     enqueue_stalls: src.enqueue_stalls,
                 })
                 .collect(),
-        }
+        };
+        rec.digest = rec.compute_digest();
+        rec
     }
 
-    pub fn to_json(&self) -> Json {
+    /// Digest of the schedule identity: who scheduled what, where. The
+    /// latency trajectory is deliberately excluded — percentiles are
+    /// perf-gated by `serve diff`, and folding them into the identity
+    /// would turn every latency shift into a parity break.
+    pub fn compute_digest(&self) -> String {
+        let mut canon = String::new();
+        let _ = write!(
+            canon,
+            "{}|{}|{}|{:?}",
+            self.engine, self.completed, self.stalls, self.jobs_per_machine
+        );
+        for src in &self.sources {
+            let _ = write!(canon, "|{}={}", src.name, src.jobs);
+        }
+        fnv1a64_hex(canon.as_bytes())
+    }
+
+    /// Serving throughput: completed jobs per wall-clock second.
+    pub fn jobs_per_sec(&self) -> f64 {
+        artifact::jobs_per_sec(self.completed, self.wall_ns)
+    }
+}
+
+impl Artifact for ServeRecord {
+    const SCHEMA: Schema = artifact::SERVE_RECORD;
+
+    fn to_json(&self) -> Json {
         obj(vec![
-            ("schema", s(SERVE_RECORD_SCHEMA)),
+            ("schema", s(Self::SCHEMA.tag())),
             ("label", s(self.label.clone())),
             ("engine", s(self.engine.clone())),
             ("created_unix", s(self.created_unix.to_string())),
@@ -115,6 +161,7 @@ impl ServeRecord {
             ("accel_cycles", num(self.accel_cycles as f64)),
             // u64-exact fields go through strings: jsonio numbers are f64
             ("wall_ns", s(self.wall_ns.to_string())),
+            ("digest", s(self.digest.clone())),
             ("avg_latency", num(self.avg_latency)),
             ("fairness", num(self.fairness)),
             ("load_cv", num(self.load_cv)),
@@ -153,13 +200,8 @@ impl ServeRecord {
         ])
     }
 
-    pub fn from_json(j: &Json) -> Result<ServeRecord, String> {
-        let schema = get_str(j, "schema")?;
-        if schema != SERVE_RECORD_SCHEMA {
-            return Err(format!(
-                "unsupported serve record schema '{schema}' (expected {SERVE_RECORD_SCHEMA})"
-            ));
-        }
+    fn from_json(j: &Json) -> Result<ServeRecord> {
+        Self::SCHEMA.check(j)?;
         let sources = get_arr(j, "sources")?
             .iter()
             .map(|src| {
@@ -169,8 +211,8 @@ impl ServeRecord {
                     enqueue_stalls: get_u64_str(src, "enqueue_stalls")?,
                 })
             })
-            .collect::<Result<Vec<SourceRecord>, String>>()?;
-        Ok(ServeRecord {
+            .collect::<Result<Vec<SourceRecord>>>()?;
+        let mut rec = ServeRecord {
             label: get_str(j, "label")?,
             engine: get_str(j, "engine")?,
             created_unix: get_u64_str(j, "created_unix")?,
@@ -179,21 +221,12 @@ impl ServeRecord {
             stalls: get_uint(j, "stalls")?,
             accel_cycles: get_uint(j, "accel_cycles")?,
             wall_ns: get_u64_str(j, "wall_ns")?,
-            avg_latency: crate::sweep::record::get_f64(j, "avg_latency")?,
-            fairness: crate::sweep::record::get_f64(j, "fairness")?,
-            load_cv: crate::sweep::record::get_f64(j, "load_cv")?,
-            throughput: crate::sweep::record::get_f64(j, "throughput")?,
-            jobs_per_machine: get_arr(j, "jobs_per_machine")?
-                .iter()
-                .map(|v| {
-                    v.as_f64()
-                        .ok_or_else(|| "non-numeric jobs_per_machine entry".to_string())
-                        .and_then(|n| {
-                            crate::sweep::record::uint_value(n, "jobs_per_machine entry")
-                        })
-                        .map(|n| n as usize)
-                })
-                .collect::<Result<Vec<usize>, String>>()?,
+            digest: String::new(),
+            avg_latency: get_f64(j, "avg_latency")?,
+            fairness: get_f64(j, "fairness")?,
+            load_cv: get_f64(j, "load_cv")?,
+            throughput: get_f64(j, "throughput")?,
+            jobs_per_machine: get_usize_arr(j, "jobs_per_machine")?,
             latency_p50: get_uint(j, "latency_p50")?,
             latency_p95: get_uint(j, "latency_p95")?,
             latency_p99: get_uint(j, "latency_p99")?,
@@ -204,19 +237,59 @@ impl ServeRecord {
             batch_p99: get_uint(j, "batch_p99")?,
             batch_max: get_uint(j, "batch_max")?,
             sources,
-        })
+        };
+        // Pre-digest v1 artifacts (recorded before the artifact-layer
+        // redesign) lack the field; recompute so they stay loadable and
+        // diffable against fresh recordings. A *present* digest must
+        // match the recomputation (every identity input is an integer
+        // or string, so the recompute is exact): a stale digest on a
+        // hand-edited artifact would otherwise silently defeat the
+        // parity gate that trusts it.
+        rec.digest = rec.compute_digest();
+        if j.get("digest").is_some() {
+            let stored = get_str(j, "digest")?;
+            if stored != rec.digest {
+                return Err(err!(
+                    "digest '{stored}' does not match the artifact's identity \
+                     fields (expected '{}') — artifact was hand-edited",
+                    rec.digest
+                ));
+            }
+        }
+        Ok(rec)
+    }
+}
+
+impl Diffable for ServeRecord {
+    const KIND: &'static str = "serve";
+    const UNIT: &'static str = "value";
+
+    fn label(&self) -> &str {
+        &self.label
     }
 
-    /// Parse an artifact from its serialized text.
-    pub fn parse(text: &str) -> Result<ServeRecord, String> {
-        ServeRecord::from_json(&Json::parse(text)?)
-    }
-
-    /// Serialize to the artifact text (compact JSON + trailing newline).
-    pub fn render(&self) -> String {
-        let mut text = self.to_json().render();
-        text.push('\n');
-        text
+    /// Parity cells (schedule digest, tick count, completions) plus perf
+    /// cells. The latency percentiles (lower is better; floored at one
+    /// tick so an instant-completion run stays measurable) and jobs/tick
+    /// are virtual-time measurements — host-independent, so they gate
+    /// *raw* at the full threshold. Wall-clock jobs/sec is the record's
+    /// single noisy cell: with nothing to take a median against it
+    /// cannot distinguish host speed from regression, so it is advisory
+    /// (it feeds the reported shift, which `--fail-on-shift` gates for
+    /// same-host A/B runs).
+    fn cells(&self) -> Vec<PerfCell> {
+        vec![
+            PerfCell::parity("schedule-digest", self.digest.clone()),
+            PerfCell::parity("ticks", self.ticks.to_string()),
+            PerfCell::parity("completions", self.completed.to_string()),
+            PerfCell::lower("latency_p50", self.latency_p50.max(1) as f64),
+            PerfCell::lower("latency_p95", self.latency_p95.max(1) as f64),
+            PerfCell::lower("latency_p99", self.latency_p99.max(1) as f64),
+            PerfCell::higher("jobs_per_tick", self.throughput),
+            PerfCell::higher("jobs_per_sec", self.jobs_per_sec())
+                .noisy()
+                .advisory(),
+        ]
     }
 }
 
@@ -224,6 +297,7 @@ impl ServeRecord {
 mod tests {
     use super::super::server::{serve_sources, ArrivalSource, ServeOpts};
     use super::*;
+    use crate::artifact::{diff_records, CellVerdict, DiffOpts};
     use crate::engine::EngineId;
     use crate::quant::Precision;
     use crate::workload::WorkloadSpec;
@@ -245,6 +319,12 @@ mod tests {
     }
 
     #[test]
+    fn record_schema_is_the_registry_instance() {
+        assert_eq!(SERVE_RECORD_SCHEMA, artifact::SERVE_RECORD.tag());
+        assert_eq!(SERVE_RECORD_SCHEMA, ServeRecord::SCHEMA.tag());
+    }
+
+    #[test]
     fn record_round_trips_through_jsonio() {
         let rec = small_record();
         assert_eq!(rec.completed, 90);
@@ -253,6 +333,53 @@ mod tests {
         let back = ServeRecord::parse(&text).expect("parse own artifact");
         assert_eq!(rec, back, "parse(render(r)) == r");
         assert_eq!(text, back.render(), "serialize -> parse -> serialize fixed point");
+    }
+
+    #[test]
+    fn digest_is_wall_time_independent_and_recomputable() {
+        let mut rec = small_record();
+        assert_eq!(rec.digest, rec.compute_digest());
+        let digest = rec.digest.clone();
+        rec.wall_ns *= 17;
+        rec.sources[0].enqueue_stalls += 5;
+        assert_eq!(rec.compute_digest(), digest, "timing fields are not identity");
+        rec.jobs_per_machine[0] += 1;
+        assert_ne!(rec.compute_digest(), digest, "assignment counts are identity");
+    }
+
+    #[test]
+    fn pre_digest_artifacts_still_parse() {
+        // Artifacts recorded before the artifact-layer redesign carry no
+        // digest field; the loader recomputes it from the identity
+        // fields so old and new recordings stay diffable.
+        let rec = small_record();
+        let legacy = rec.render().replacen(
+            &format!("\"digest\":\"{}\",", rec.digest),
+            "",
+            1,
+        );
+        assert!(!legacy.contains("\"digest\""), "field removal failed:\n{legacy}");
+        let back = ServeRecord::parse(&legacy).expect("legacy artifact parses");
+        assert_eq!(back.digest, rec.digest, "digest recomputed from identity fields");
+    }
+
+    #[test]
+    fn stale_digest_is_rejected_at_parse_time() {
+        // A hand-edited artifact whose identity fields changed but whose
+        // digest was left stale must fail to parse — otherwise the
+        // parity gate would trust the lie.
+        let rec = small_record();
+        let jpm = format!("\"jobs_per_machine\":[{}", rec.jobs_per_machine[0]);
+        let tampered = rec.render().replacen(
+            &jpm,
+            &format!("\"jobs_per_machine\":[{}", rec.jobs_per_machine[0] + 1),
+            1,
+        );
+        let err = ServeRecord::parse(&tampered).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("does not match"),
+            "stale digest must be named: {err:#}"
+        );
     }
 
     #[test]
@@ -272,5 +399,84 @@ mod tests {
         let ticks = format!("\"ticks\":{}", rec.ticks);
         let text = rec.render().replacen(&ticks, "\"ticks\":-4", 1);
         assert!(ServeRecord::parse(&text).is_err());
+    }
+
+    #[test]
+    fn self_diff_is_clean() {
+        let rec = small_record();
+        let report = diff_records(&rec, &rec, &DiffOpts::default());
+        assert!(report.ok(), "{}", report.render());
+        assert_eq!(report.parity_breaks(), 0);
+        assert_eq!(report.cells.len(), 8, "3 parity + 5 perf cells");
+        assert!(report.render().starts_with("serve diff: test -> test"));
+    }
+
+    #[test]
+    fn latency_regression_is_perf_not_parity() {
+        let old = small_record();
+        let mut new = old.clone();
+        new.latency_p99 = new.latency_p99 * 10 + 100;
+        let report = diff_records(&old, &new, &DiffOpts::default());
+        assert_eq!(report.parity_breaks(), 0, "{}", report.render());
+        assert_eq!(report.regressions(), 1, "{}", report.render());
+        let bad = report
+            .cells
+            .iter()
+            .find(|c| c.verdict == CellVerdict::Regression)
+            .unwrap();
+        assert_eq!(bad.key, "latency_p99");
+        assert!(bad.ratio < 0.2, "goodness ratio: {}", bad.ratio);
+    }
+
+    #[test]
+    fn uniform_latency_regression_fails_despite_being_uniform() {
+        // The latency cells are virtual-time (host-independent), so they
+        // gate raw: a change that makes EVERY percentile 4x worse must
+        // not cancel itself through median normalization.
+        let old = small_record();
+        let mut new = old.clone();
+        new.latency_p50 = new.latency_p50 * 4 + 4;
+        new.latency_p95 = new.latency_p95 * 4 + 4;
+        new.latency_p99 = new.latency_p99 * 4 + 4;
+        let report = diff_records(&old, &new, &DiffOpts::default());
+        assert_eq!(report.regressions(), 3, "{}", report.render());
+        assert!(!report.ok());
+    }
+
+    #[test]
+    fn wall_clock_throughput_is_advisory_shift_not_a_gate() {
+        // A slower host (10x wall time, identical schedule) must not
+        // fail the gate — but it surfaces as the reported shift, which
+        // --fail-on-shift gates for same-host A/B runs.
+        let old = small_record();
+        let mut new = old.clone();
+        new.wall_ns *= 10;
+        let report = diff_records(&old, &new, &DiffOpts::default());
+        assert_eq!(report.regressions(), 0, "{}", report.render());
+        assert!(report.ok(), "{}", report.render());
+        assert!(report.render().contains("(advisory)"), "{}", report.render());
+        assert!(report.global_regression, "shift {}", report.shift);
+        let strict = DiffOpts {
+            fail_on_shift: true,
+            ..DiffOpts::default()
+        };
+        assert!(!diff_records(&old, &new, &strict).ok());
+    }
+
+    #[test]
+    fn tick_and_schedule_changes_are_parity_breaks() {
+        let old = small_record();
+        let mut new = old.clone();
+        new.ticks += 1;
+        let report = diff_records(&old, &new, &DiffOpts::default());
+        assert_eq!(report.parity_breaks(), 1, "{}", report.render());
+        assert!(!report.ok());
+
+        let mut new = old.clone();
+        new.jobs_per_machine[0] += 1;
+        new.digest = new.compute_digest();
+        let report = diff_records(&old, &new, &DiffOpts::default());
+        assert_eq!(report.parity_breaks(), 1, "{}", report.render());
+        assert!(report.gate().is_err());
     }
 }

@@ -24,6 +24,7 @@
 
 use crate::baselines::{SimdSos, SoscEngine};
 use crate::coordinator::EngineAdapter;
+use crate::err;
 use crate::error::Result;
 use crate::quant::Precision;
 use crate::runtime::{ArtifactRegistry, CostImpl, XlaSosEngine};
@@ -92,7 +93,7 @@ impl EngineId {
     }
 
     /// Parse one engine name (canonical or alias).
-    pub fn parse(name: &str) -> Result<EngineId, String> {
+    pub fn parse(name: &str) -> Result<EngineId> {
         match name.trim() {
             "sos" | "native" => Ok(EngineId::Sos),
             "sosc" => Ok(EngineId::Sosc),
@@ -100,7 +101,7 @@ impl EngineId {
             "stannic" | "stannic-sim" => Ok(EngineId::StannicSim),
             "hercules" | "hercules-sim" => Ok(EngineId::HerculesSim),
             "xla" => Ok(EngineId::Xla),
-            other => Err(format!(
+            other => Err(err!(
                 "unknown engine '{other}' (expected {})",
                 EngineId::USAGE
             )),
@@ -109,14 +110,14 @@ impl EngineId {
 
     /// Parse a comma-separated engine list; `"all"` selects
     /// [`EngineId::SOFTWARE`].
-    pub fn parse_list(text: &str) -> Result<Vec<EngineId>, String> {
+    pub fn parse_list(text: &str) -> Result<Vec<EngineId>> {
         if text.trim() == "all" {
             return Ok(EngineId::SOFTWARE.to_vec());
         }
         text.split(',')
             .map(EngineId::parse)
-            .collect::<Result<Vec<EngineId>, String>>()
-            .map_err(|e| format!("{e}; 'all' selects every artifact-free engine"))
+            .collect::<Result<Vec<EngineId>>>()
+            .map_err(|e| err!("{e}; 'all' selects every artifact-free engine"))
     }
 
     /// True for backends that construct without compiled artifacts.
@@ -174,7 +175,7 @@ mod tests {
 
     #[test]
     fn parse_error_carries_the_usage_string() {
-        let err = EngineId::parse("warp-drive").unwrap_err();
+        let err = EngineId::parse("warp-drive").unwrap_err().to_string();
         assert!(err.contains("warp-drive"));
         assert!(
             err.contains(EngineId::USAGE),

@@ -1,9 +1,14 @@
 //! Minimal JSON substrate (serde_json is unavailable offline): a value
 //! tree, a writer, and a recursive-descent parser sufficient for the
-//! artifact manifest and report output.
+//! artifact manifest and report output. Parse errors are
+//! [`crate::error::Error`]s, so artifact loaders chain path/field
+//! context with `.ctx()` instead of re-wrapping strings.
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
+
+use crate::err;
+use crate::error::Result;
 
 /// A JSON value.
 #[derive(Debug, Clone, PartialEq)]
@@ -113,7 +118,7 @@ impl Json {
     }
 
     /// Parse a JSON document.
-    pub fn parse(text: &str) -> Result<Json, String> {
+    pub fn parse(text: &str) -> Result<Json> {
         let mut p = Parser {
             b: text.as_bytes(),
             i: 0,
@@ -122,7 +127,7 @@ impl Json {
         let v = p.value()?;
         p.ws();
         if p.i != p.b.len() {
-            return Err(format!("trailing data at byte {}", p.i));
+            return Err(err!("trailing data at byte {}", p.i));
         }
         Ok(v)
     }
@@ -167,12 +172,12 @@ impl<'a> Parser<'a> {
         self.b.get(self.i).copied()
     }
 
-    fn eat(&mut self, c: u8) -> Result<(), String> {
+    fn eat(&mut self, c: u8) -> Result<()> {
         if self.peek() == Some(c) {
             self.i += 1;
             Ok(())
         } else {
-            Err(format!(
+            Err(err!(
                 "expected '{}' at byte {}, found {:?}",
                 c as char,
                 self.i,
@@ -181,7 +186,7 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn value(&mut self) -> Result<Json, String> {
+    fn value(&mut self) -> Result<Json> {
         match self.peek() {
             Some(b'{') => self.object(),
             Some(b'[') => self.array(),
@@ -190,20 +195,20 @@ impl<'a> Parser<'a> {
             Some(b'f') => self.lit("false", Json::Bool(false)),
             Some(b'n') => self.lit("null", Json::Null),
             Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
-            other => Err(format!("unexpected {other:?} at byte {}", self.i)),
+            other => Err(err!("unexpected {other:?} at byte {}", self.i)),
         }
     }
 
-    fn lit(&mut self, word: &str, v: Json) -> Result<Json, String> {
+    fn lit(&mut self, word: &str, v: Json) -> Result<Json> {
         if self.b[self.i..].starts_with(word.as_bytes()) {
             self.i += word.len();
             Ok(v)
         } else {
-            Err(format!("bad literal at byte {}", self.i))
+            Err(err!("bad literal at byte {}", self.i))
         }
     }
 
-    fn number(&mut self) -> Result<Json, String> {
+    fn number(&mut self) -> Result<Json> {
         let start = self.i;
         if self.peek() == Some(b'-') {
             self.i += 1;
@@ -218,10 +223,10 @@ impl<'a> Parser<'a> {
             .ok()
             .and_then(|s| s.parse::<f64>().ok())
             .map(Json::Num)
-            .ok_or_else(|| format!("bad number at byte {start}"))
+            .ok_or_else(|| err!("bad number at byte {start}"))
     }
 
-    fn string(&mut self) -> Result<String, String> {
+    fn string(&mut self) -> Result<String> {
         self.eat(b'"')?;
         let mut out = String::new();
         loop {
@@ -253,7 +258,7 @@ impl<'a> Parser<'a> {
                             out.push(char::from_u32(code).ok_or("bad codepoint")?);
                             self.i += 4;
                         }
-                        other => return Err(format!("bad escape {other:?}")),
+                        other => return Err(err!("bad escape {other:?}")),
                     }
                     self.i += 1;
                 }
@@ -269,7 +274,7 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn array(&mut self) -> Result<Json, String> {
+    fn array(&mut self) -> Result<Json> {
         self.eat(b'[')?;
         let mut v = Vec::new();
         self.ws();
@@ -287,12 +292,12 @@ impl<'a> Parser<'a> {
                     self.i += 1;
                     return Ok(Json::Arr(v));
                 }
-                other => return Err(format!("expected , or ] got {other:?}")),
+                other => return Err(err!("expected , or ] got {other:?}")),
             }
         }
     }
 
-    fn object(&mut self) -> Result<Json, String> {
+    fn object(&mut self) -> Result<Json> {
         self.eat(b'{')?;
         let mut m = BTreeMap::new();
         self.ws();
@@ -315,7 +320,7 @@ impl<'a> Parser<'a> {
                     self.i += 1;
                     return Ok(Json::Obj(m));
                 }
-                other => return Err(format!("expected , or }} got {other:?}")),
+                other => return Err(err!("expected , or }} got {other:?}")),
             }
         }
     }

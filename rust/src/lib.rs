@@ -40,6 +40,11 @@
 //!   × alpha × precision cells across every software/simulator engine
 //!   and aggregates per-cell latency/utilization metrics
 //!   deterministically (results are independent of thread count).
+//! * [`artifact`] — the versioned-artifact layer: the schema registry
+//!   (`stannic.sweep.record.v1`, `stannic.serve.record.v1`), the shared
+//!   jsonio codec + parse-back-verified file I/O, the FNV-1a
+//!   schedule-identity digest, and the generic diff core behind both
+//!   `sweep diff` and `serve diff`.
 //!
 //! Offline-environment substrates (clap/criterion/serde/proptest/anyhow
 //! are not available here): [`cli`], [`bench`], [`error`], [`jsonio`],
@@ -60,6 +65,7 @@
 //! }
 //! ```
 
+pub mod artifact;
 pub mod baselines;
 pub mod bench;
 pub mod cli;

@@ -2,6 +2,7 @@
 //! regenerate every figure of the paper, verify cross-implementation
 //! parity, and inspect hardware-model estimates.
 
+use stannic::artifact::{self, diff_records, resolve_threshold, Artifact, Diffable, DiffOpts};
 use stannic::cli::{usage, Args, FlagSpec};
 use stannic::config::RunConfig;
 use stannic::coordinator::{
@@ -9,12 +10,12 @@ use stannic::coordinator::{
 };
 use stannic::core::MachinePark;
 use stannic::engine::EngineId;
-use stannic::error::{Error, Result};
+use stannic::error::{Ctx, Result};
 use stannic::quant::Precision;
 use stannic::report::{self, Effort};
 use stannic::scheduler::SosEngine;
 use stannic::sim::{hercules::HerculesSim, stannic::StannicSim, lockstep_verify};
-use stannic::sweep::{run_sweep, SweepConfig};
+use stannic::sweep::{run_sweep, SweepConfig, SweepRecord};
 use stannic::workload::{generate_trace, Trace, WorkloadSpec};
 use stannic::{bail, err};
 
@@ -41,16 +42,16 @@ fn flag_specs() -> Vec<FlagSpec> {
         FlagSpec::new("scale", "sweep the Agon-scale grid (parks up to 140 machines)", false),
         FlagSpec::new("record", "persist results (sweep: BENCH_<label>.json, serve: serve record) at this path", true),
         FlagSpec::new("label", "label stored in the record artifact (default 'sweep'/'serve')", true),
-        FlagSpec::new("threshold", "sweep diff: relative slowdown that fails (default 0.25 or $STANNIC_PERF_THRESHOLD)", true),
-        FlagSpec::new("raw-ratios", "sweep diff: disable median-shift normalization", false),
-        FlagSpec::new("fail-on-shift", "sweep diff: also fail on a whole-grid median slowdown (same-host A/B runs)", false),
+        FlagSpec::new("threshold", "sweep/serve diff: relative perf drop that fails (default 0.25 or $STANNIC_PERF_THRESHOLD)", true),
+        FlagSpec::new("raw-ratios", "sweep/serve diff: disable median-shift normalization", false),
+        FlagSpec::new("fail-on-shift", "sweep/serve diff: also fail on a whole-grid median slowdown (same-host A/B runs)", false),
         FlagSpec::new("json", "emit machine-readable JSON where supported", false),
     ]
 }
 
 fn commands() -> Vec<(&'static str, &'static str)> {
     vec![
-        ("serve", "run the online coordinator pipeline over one or more arrival sources"),
+        ("serve", "run the online coordinator pipeline (or `serve diff <old.json> <new.json>`)"),
         ("report", "regenerate a paper figure: fig7|fig15|fig16a|fig16b|fig17|fig18|fig19|all"),
         ("verify", "lockstep-verify both microarchitecture sims against the golden engine"),
         ("hw", "print resource/routing/power estimates for a configuration"),
@@ -85,12 +86,12 @@ fn parse_workload(name: &str) -> Result<WorkloadSpec> {
 
 fn config_from(args: &Args) -> Result<RunConfig> {
     let mut cfg = RunConfig::default();
-    cfg.machines = args.usize_flag("machines", cfg.machines).map_err(Error::from)?;
-    cfg.depth = args.usize_flag("depth", cfg.depth).map_err(Error::from)?;
-    cfg.alpha = args.f32_flag("alpha", cfg.alpha).map_err(Error::from)?;
-    cfg.jobs = args.usize_flag("jobs", cfg.jobs).map_err(Error::from)?;
-    cfg.seed = args.u64_flag("seed", cfg.seed).map_err(Error::from)?;
-    cfg.engine = EngineId::parse(args.str_flag("engine", "sos")).map_err(Error::from)?;
+    cfg.machines = args.usize_flag("machines", cfg.machines)?;
+    cfg.depth = args.usize_flag("depth", cfg.depth)?;
+    cfg.alpha = args.f32_flag("alpha", cfg.alpha)?;
+    cfg.jobs = args.usize_flag("jobs", cfg.jobs)?;
+    cfg.seed = args.u64_flag("seed", cfg.seed)?;
+    cfg.engine = EngineId::parse(args.str_flag("engine", "sos"))?;
     cfg.precision = parse_precision(args.str_flag("precision", "INT8"))?;
     cfg.workload = parse_workload(args.str_flag("workload", "even"))?;
     Ok(cfg)
@@ -99,7 +100,7 @@ fn config_from(args: &Args) -> Result<RunConfig> {
 fn load_or_generate(args: &Args, cfg: &RunConfig) -> Result<Trace> {
     if let Some(path) = args.flag("trace") {
         let text = std::fs::read_to_string(path)?;
-        return Trace::from_text(&text).map_err(|e| err!("parsing {path}: {e}"));
+        return Trace::from_text(&text).with_ctx(|| format!("parsing {path}"));
     }
     let trace = generate_trace(&cfg.workload, &cfg.park(), cfg.jobs, cfg.seed);
     if let Some(path) = args.flag("save-trace") {
@@ -112,10 +113,9 @@ fn load_or_generate(args: &Args, cfg: &RunConfig) -> Result<Trace> {
 fn serve_opts_from(args: &Args) -> Result<ServeOpts> {
     let defaults = ServeOpts::default();
     let queue_depth = args
-        .usize_flag("queue-depth", defaults.queue_depth)
-        .map_err(Error::from)?
+        .usize_flag("queue-depth", defaults.queue_depth)?
         .max(1);
-    let batch = args.usize_flag("batch", 0).map_err(Error::from)?;
+    let batch = args.usize_flag("batch", 0)?;
     Ok(ServeOpts {
         queue_depth,
         batch: if batch == 0 { usize::MAX } else { batch },
@@ -124,9 +124,12 @@ fn serve_opts_from(args: &Args) -> Result<ServeOpts> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
+    if args.positionals.first().is_some_and(|p| p == "diff") {
+        return cmd_artifact_diff::<ServeRecord>(args);
+    }
     let cfg = config_from(args)?;
     let opts = serve_opts_from(args)?;
-    let n_sources = args.usize_flag("sources", 1).map_err(Error::from)?;
+    let n_sources = args.usize_flag("sources", 1)?;
     if n_sources == 0 {
         bail!("--sources must be >= 1");
     }
@@ -231,14 +234,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(path) = args.flag("record") {
         let label = args.str_flag("label", "serve");
         let record = ServeRecord::from_report(label, &report);
-        std::fs::write(path, record.render())?;
-        // parse-back verification keeps CI's artifact check honest: a
-        // written record that does not round-trip is a hard error
-        let back = ServeRecord::parse(&std::fs::read_to_string(path)?)
-            .map_err(|e| err!("recorded artifact failed to parse back: {e}"))?;
-        if back != record {
-            bail!("recorded artifact round-trip mismatch at {path}");
-        }
+        // artifact::store parse-back-verifies, keeping CI's artifact
+        // check honest: a record that does not round-trip is a hard error
+        artifact::store(path, &record)?;
         eprintln!(
             "recorded serve run (label '{label}', {} sources) to {path}",
             record.sources.len()
@@ -249,7 +247,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
 fn cmd_report(args: &Args) -> Result<()> {
     let effort = if args.has("quick") { Effort::Quick } else { Effort::Paper };
-    let seed = args.u64_flag("seed", 42).map_err(Error::from)?;
+    let seed = args.u64_flag("seed", 42)?;
     let which = args
         .positionals
         .first()
@@ -325,8 +323,8 @@ fn cmd_verify(args: &Args) -> Result<()> {
 
 fn cmd_hw(args: &Args) -> Result<()> {
     use stannic::hw::{power, resources, routing, U55C};
-    let m = args.usize_flag("machines", 10).map_err(Error::from)?;
-    let d = args.usize_flag("depth", 10).map_err(Error::from)?;
+    let m = args.usize_flag("machines", 10)?;
+    let d = args.usize_flag("depth", 10)?;
     let h = resources::hercules(m, d);
     let s = resources::stannic(m, d);
     println!("configuration {m}x{d} on Alveo U55C @ 371.47 MHz");
@@ -418,66 +416,35 @@ fn cmd_stats(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `sweep diff <old.json> <new.json>`: compare two persisted sweep
-/// records and fail (non-zero exit) on per-cell regressions beyond the
+/// `sweep diff` / `serve diff <old.json> <new.json>`: compare two
+/// persisted artifacts through the shared [`stannic::artifact::diff`]
+/// core and fail (non-zero exit) on per-cell regressions beyond the
 /// threshold, parity breaks, unmeasured cells, or missing baseline
 /// coverage; `--fail-on-shift` additionally gates on a whole-grid
 /// median slowdown (meaningful for same-host A/B runs).
-fn cmd_sweep_diff(args: &Args) -> Result<()> {
+fn cmd_artifact_diff<R: Artifact + Diffable>(args: &Args) -> Result<()> {
     let (old_path, new_path) = match (args.positionals.get(1), args.positionals.get(2)) {
         (Some(a), Some(b)) => (a.as_str(), b.as_str()),
         _ => bail!(
-            "usage: sweep diff <old.json> <new.json> [--threshold F] [--raw-ratios] [--fail-on-shift]"
+            "usage: {} diff <old.json> <new.json> [--threshold F] [--raw-ratios] [--fail-on-shift]",
+            R::KIND
         ),
     };
-    let load = |path: &str| -> Result<stannic::sweep::SweepRecord> {
-        let text = std::fs::read_to_string(path)?;
-        stannic::sweep::SweepRecord::parse(&text).map_err(|e| err!("parsing {path}: {e}"))
-    };
-    let old = load(old_path)?;
-    let new = load(new_path)?;
-    let threshold = match args.flag("threshold") {
-        Some(v) => v
-            .parse::<f64>()
-            .map_err(|e| err!("--threshold: expected number ({e})"))?,
-        None => match std::env::var("STANNIC_PERF_THRESHOLD") {
-            Ok(v) => v
-                .parse::<f64>()
-                .map_err(|e| err!("STANNIC_PERF_THRESHOLD: expected number ({e})"))?,
-            Err(_) => stannic::sweep::DiffOpts::default().threshold,
-        },
-    };
-    if !(0.0..1.0).contains(&threshold) {
-        bail!("threshold must be in [0, 1), got {threshold}");
-    }
-    let opts = stannic::sweep::DiffOpts {
-        threshold,
+    let old: R = artifact::load(old_path)?;
+    let new: R = artifact::load(new_path)?;
+    let opts = DiffOpts {
+        threshold: resolve_threshold(args.flag("threshold"))?,
         normalize: !args.has("raw-ratios"),
         fail_on_shift: args.has("fail-on-shift"),
     };
-    let report = stannic::sweep::diff_records(&old, &new, &opts);
+    let report = diff_records(&old, &new, &opts);
     print!("{}", report.render());
-    if !report.ok() {
-        bail!(
-            "perf gate failed: {} regressions, {} parity breaks, {} unmeasured, \
-             {} missing{} — re-bless the baseline if the change is intentional",
-            report.regressions(),
-            report.parity_breaks(),
-            report.unmeasured(),
-            report.only_in_old.len(),
-            if report.fail_on_shift && report.global_regression {
-                ", global slowdown"
-            } else {
-                ""
-            }
-        );
-    }
-    Ok(())
+    report.gate()
 }
 
 fn cmd_sweep(args: &Args) -> Result<()> {
     if args.positionals.first().is_some_and(|p| p == "diff") {
-        return cmd_sweep_diff(args);
+        return cmd_artifact_diff::<SweepRecord>(args);
     }
     let mut cfg = if args.has("scale") {
         SweepConfig::at_scale()
@@ -486,16 +453,16 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     } else {
         SweepConfig::default()
     };
-    cfg.jobs = args.usize_flag("jobs", cfg.jobs).map_err(Error::from)?;
-    cfg.seed = args.u64_flag("seed", cfg.seed).map_err(Error::from)?;
-    cfg.depth = args.usize_flag("depth", cfg.depth).map_err(Error::from)?;
-    cfg.threads = args.usize_flag("threads", cfg.threads).map_err(Error::from)?;
+    cfg.jobs = args.usize_flag("jobs", cfg.jobs)?;
+    cfg.seed = args.u64_flag("seed", cfg.seed)?;
+    cfg.depth = args.usize_flag("depth", cfg.depth)?;
+    cfg.threads = args.usize_flag("threads", cfg.threads)?;
     // The shared single-value flags narrow the corresponding grid axis.
     if args.flag("machines").is_some() {
-        cfg.machine_counts = vec![args.usize_flag("machines", 5).map_err(Error::from)?];
+        cfg.machine_counts = vec![args.usize_flag("machines", 5)?];
     }
     if args.flag("alpha").is_some() {
-        cfg.alphas = vec![args.f32_flag("alpha", 0.5).map_err(Error::from)?];
+        cfg.alphas = vec![args.f32_flag("alpha", 0.5)?];
     }
     if let Some(name) = args.flag("precision") {
         cfg.precisions = vec![parse_precision(name)?];
@@ -504,7 +471,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         cfg.workloads = vec![(name.to_string(), parse_workload(name)?)];
     }
     if let Some(list) = args.flag("engines").or_else(|| args.flag("engine")) {
-        cfg.engines = EngineId::parse_list(list).map_err(Error::from)?;
+        cfg.engines = EngineId::parse_list(list)?;
     }
     if cfg.engines.iter().any(|e| !e.is_software()) {
         bail!(
@@ -523,8 +490,8 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     }
     if let Some(path) = args.flag("record") {
         let label = args.str_flag("label", "sweep");
-        let record = stannic::sweep::SweepRecord::from_results(label, &results);
-        std::fs::write(path, record.render())?;
+        let record = SweepRecord::from_results(label, &results);
+        artifact::store(path, &record)?;
         eprintln!(
             "recorded {} cells (label '{label}') to {path}",
             record.cells.len()

@@ -54,8 +54,7 @@ impl ArtifactRegistry {
                 manifest_path.display()
             )
         })?;
-        let json = Json::parse(&text)
-            .map_err(|e| crate::err!("parsing manifest: {e}"))?;
+        let json = Json::parse(&text).ctx("parsing manifest")?;
         let configs = json
             .get("configs")
             .map(|c| {

@@ -21,9 +21,10 @@
 
 pub mod record;
 
-pub use record::{
-    diff_records, CellRecord, CellVerdict, DiffOpts, DiffReport, SweepRecord, RECORD_SCHEMA,
-};
+pub use record::{CellRecord, SweepRecord, RECORD_SCHEMA};
+// The diff machinery lives in the shared artifact layer now; these
+// re-exports keep `stannic::sweep::diff_records(...)` call sites valid.
+pub use crate::artifact::{diff_records, CellVerdict, DiffOpts, DiffReport};
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::Mutex;

@@ -1,37 +1,39 @@
-//! Persisted sweep results + cross-commit perf diffing — the repo's
-//! benchmarking backbone.
+//! Persisted sweep results — the grid arm of the repo's benchmarking
+//! backbone, built on the [`crate::artifact`] layer.
 //!
 //! The paper's headline claims are throughput claims, yet bench tables
 //! printed to a terminal evaporate. This module makes every sweep a
 //! durable, machine-readable perf observation: [`SweepRecord`]
 //! serializes per-cell results (scenario key, schedule digest, the
 //! deterministic quality metrics, and the measured wall time) through
-//! [`crate::jsonio`] into a `BENCH_<label>.json` artifact, and
-//! [`diff_records`] compares two artifacts cell-by-cell so CI can fail a
-//! PR that slows a cell down or — worse — silently changes a schedule
-//! (a digest mismatch is a parity break, never a perf delta).
+//! [`crate::jsonio`] into a `BENCH_<label>.json` artifact
+//! ([`crate::artifact::SWEEP_RECORD`] schema).
 //!
-//! Wall-clock comparisons across commits are noisy, so classification
-//! normalizes each cell's throughput ratio by the *median* ratio across
-//! the grid ("the machine got uniformly slower" is separated from "this
-//! cell regressed"); a median shift beyond the threshold is reported
-//! prominently as a whole-grid slowdown but only fails the gate under
-//! [`DiffOpts::fail_on_shift`], because across hosts it is
-//! indistinguishable from a slower machine. Set
-//! [`DiffOpts::normalize`] to `false` for raw ratios.
+//! Diffing is not implemented here: [`SweepRecord`] exposes its cells
+//! as [`PerfCell`]s (scenario key, schedule digest as the parity
+//! identity, jobs/sec as the perf scalar) and the generic
+//! [`crate::artifact::diff`] core does the classification — the same
+//! core `serve diff` runs on, so a digest mismatch is a parity break
+//! and a wall-time shift is median-normalized identically on both
+//! surfaces.
 
-use std::collections::BTreeMap;
 use std::fmt::Write as _;
 use std::time::{SystemTime, UNIX_EPOCH};
 
-use crate::bench::Table;
+use crate::artifact::{
+    self, fnv1a64_hex, get_arr, get_f64, get_str, get_u64_str, get_uint, get_usize_arr, Artifact,
+    Diffable, PerfCell, Schema,
+};
+use crate::err;
+use crate::error::Result;
 use crate::jsonio::{arr, num, obj, s, Json};
 
 use super::{CellResult, SweepResults};
 
-/// Schema tag embedded in every artifact, bumped on breaking layout
-/// changes so `sweep diff` can reject mismatched files with a clear
-/// message instead of a field error.
+/// Schema tag embedded in every artifact (the rendered form of
+/// [`artifact::SWEEP_RECORD`]), bumped on breaking layout changes so
+/// `sweep diff` can reject mismatched files with a clear message
+/// instead of a field error.
 pub const RECORD_SCHEMA: &str = "stannic.sweep.record.v1";
 
 /// One persisted sweep cell: the full scenario key, the deterministic
@@ -131,16 +133,12 @@ impl CellRecord {
             self.fairness,
             self.throughput
         );
-        format!("{:016x}", fnv1a64(canon.as_bytes()))
+        fnv1a64_hex(canon.as_bytes())
     }
 
     /// Scheduling throughput: jobs scheduled per wall-clock second.
     pub fn jobs_per_sec(&self) -> f64 {
-        if self.wall_ns == 0 {
-            0.0
-        } else {
-            self.jobs as f64 / (self.wall_ns as f64 / 1e9)
-        }
+        artifact::jobs_per_sec(self.jobs, self.wall_ns)
     }
 
     pub fn to_json(&self) -> Json {
@@ -175,8 +173,8 @@ impl CellRecord {
         ])
     }
 
-    pub fn from_json(j: &Json) -> Result<CellRecord, String> {
-        Ok(CellRecord {
+    pub fn from_json(j: &Json) -> Result<CellRecord> {
+        let rec = CellRecord {
             engine: get_str(j, "engine")?,
             workload: get_str(j, "workload")?,
             machines: get_uint(j, "machines")? as usize,
@@ -186,15 +184,7 @@ impl CellRecord {
             jobs: get_uint(j, "jobs")? as usize,
             seed: get_u64_str(j, "seed")?,
             digest: get_str(j, "digest")?,
-            jobs_per_machine: get_arr(j, "jobs_per_machine")?
-                .iter()
-                .map(|v| {
-                    v.as_f64()
-                        .ok_or_else(|| "non-numeric jobs_per_machine entry".to_string())
-                        .and_then(|n| uint_value(n, "jobs_per_machine entry"))
-                        .map(|n| n as usize)
-                })
-                .collect::<Result<Vec<usize>, String>>()?,
+            jobs_per_machine: get_usize_arr(j, "jobs_per_machine")?,
             avg_latency: get_f64(j, "avg_latency")?,
             p50: get_uint(j, "p50")?,
             p95: get_uint(j, "p95")?,
@@ -207,7 +197,21 @@ impl CellRecord {
             load_cv: get_f64(j, "load_cv")?,
             throughput: get_f64(j, "throughput")?,
             wall_ns: get_u64_str(j, "wall_ns")?,
-        })
+        };
+        // Every digest input is persisted and round-trips exactly (f64
+        // `Display` is shortest-round-trip), so a stored digest that
+        // disagrees with the recomputation can only mean the artifact
+        // was hand-edited — reject it before the parity gate trusts it.
+        let expected = rec.compute_digest();
+        if rec.digest != expected {
+            return Err(err!(
+                "cell {}: digest '{}' does not match the cell's persisted \
+                 outcome (expected '{expected}') — artifact was hand-edited",
+                rec.key(),
+                rec.digest
+            ));
+        }
+        Ok(rec)
     }
 }
 
@@ -235,10 +239,14 @@ impl SweepRecord {
             cells: results.cells.iter().map(CellRecord::from_result).collect(),
         }
     }
+}
 
-    pub fn to_json(&self) -> Json {
+impl Artifact for SweepRecord {
+    const SCHEMA: Schema = artifact::SWEEP_RECORD;
+
+    fn to_json(&self) -> Json {
         obj(vec![
-            ("schema", s(RECORD_SCHEMA)),
+            ("schema", s(Self::SCHEMA.tag())),
             ("label", s(self.label.clone())),
             ("created_unix", s(self.created_unix.to_string())),
             ("threads", num(self.threads as f64)),
@@ -246,17 +254,12 @@ impl SweepRecord {
         ])
     }
 
-    pub fn from_json(j: &Json) -> Result<SweepRecord, String> {
-        let schema = get_str(j, "schema")?;
-        if schema != RECORD_SCHEMA {
-            return Err(format!(
-                "unsupported sweep record schema '{schema}' (expected {RECORD_SCHEMA})"
-            ));
-        }
+    fn from_json(j: &Json) -> Result<SweepRecord> {
+        Self::SCHEMA.check(j)?;
         let cells = get_arr(j, "cells")?
             .iter()
             .map(CellRecord::from_json)
-            .collect::<Result<Vec<CellRecord>, String>>()?;
+            .collect::<Result<Vec<CellRecord>>>()?;
         Ok(SweepRecord {
             label: get_str(j, "label")?,
             created_unix: get_u64_str(j, "created_unix")?,
@@ -264,343 +267,37 @@ impl SweepRecord {
             cells,
         })
     }
-
-    /// Parse an artifact from its serialized text.
-    pub fn parse(text: &str) -> Result<SweepRecord, String> {
-        SweepRecord::from_json(&Json::parse(text)?)
-    }
-
-    /// Serialize to the artifact text (compact JSON + trailing newline).
-    pub fn render(&self) -> String {
-        let mut text = self.to_json().render();
-        text.push('\n');
-        text
-    }
 }
 
-/// Diff configuration.
-#[derive(Debug, Clone, Copy)]
-pub struct DiffOpts {
-    /// Relative per-cell throughput drop that counts as a regression
-    /// (0.25 = fail on >25% slower).
-    pub threshold: f64,
-    /// Normalize each cell's ratio by the grid's median ratio, so a
-    /// uniformly slower/faster host doesn't flag every cell.
-    pub normalize: bool,
-    /// Also *fail* the gate when the median shift itself regressed past
-    /// the threshold. Off by default: the shift conflates real uniform
-    /// slowdowns with baseline-host-vs-CI-host speed differences, so it
-    /// is reported prominently but only gates when the caller knows
-    /// both records come from comparable hosts (same-machine A/B runs).
-    pub fail_on_shift: bool,
-}
+impl Diffable for SweepRecord {
+    const KIND: &'static str = "sweep";
+    const UNIT: &'static str = "jobs/s";
 
-impl Default for DiffOpts {
-    fn default() -> Self {
-        DiffOpts {
-            threshold: 0.25,
-            normalize: true,
-            fail_on_shift: false,
-        }
-    }
-}
-
-/// Per-cell diff verdict.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum CellVerdict {
-    Unchanged,
-    Regression,
-    Improvement,
-    /// The deterministic outcome digest changed: scheduling semantics
-    /// differ between the two records. Never a perf delta; requires an
-    /// intentional re-bless of the baseline.
-    ParityBreak,
-    /// One side has no usable throughput measurement (zero wall time in
-    /// a hand-edited or corrupt artifact — `run_cell` floors wall_ns at
-    /// 1). Fails the gate: an unmeasured cell must not pass as "ok".
-    Unmeasured,
-}
-
-impl CellVerdict {
-    pub fn name(&self) -> &'static str {
-        match self {
-            CellVerdict::Unchanged => "ok",
-            CellVerdict::Regression => "REGRESSION",
-            CellVerdict::Improvement => "improvement",
-            CellVerdict::ParityBreak => "PARITY-BREAK",
-            CellVerdict::Unmeasured => "UNMEASURED",
-        }
-    }
-}
-
-/// One matched cell in a diff.
-#[derive(Debug, Clone)]
-pub struct CellDiff {
-    pub key: String,
-    pub old_jps: f64,
-    pub new_jps: f64,
-    /// Raw new/old throughput ratio (>1 = faster).
-    pub ratio: f64,
-    /// Ratio divided by the grid's median shift (== `ratio` when
-    /// normalization is off).
-    pub norm_ratio: f64,
-    pub verdict: CellVerdict,
-}
-
-/// Result of diffing two sweep records.
-#[derive(Debug, Clone)]
-pub struct DiffReport {
-    pub old_label: String,
-    pub new_label: String,
-    pub cells: Vec<CellDiff>,
-    pub only_in_old: Vec<String>,
-    pub only_in_new: Vec<String>,
-    /// Median new/old throughput ratio across matched cells — the
-    /// whole-grid (host) speed shift.
-    pub shift: f64,
-    pub threshold: f64,
-    /// True when the median shift itself regressed past the threshold —
-    /// a uniform slowdown *or* a slower host. Only fails the gate under
-    /// [`DiffOpts::fail_on_shift`].
-    pub global_regression: bool,
-    /// Whether `global_regression` participates in [`Self::ok`].
-    pub fail_on_shift: bool,
-}
-
-impl DiffReport {
-    pub fn regressions(&self) -> usize {
-        self.count(CellVerdict::Regression)
+    fn label(&self) -> &str {
+        &self.label
     }
 
-    pub fn improvements(&self) -> usize {
-        self.count(CellVerdict::Improvement)
+    /// One cell per grid cell: matched on the scenario key,
+    /// parity-gated on the schedule digest, perf-gated on jobs/sec
+    /// (wall-clock derived, so marked noisy: the grid's median ratio
+    /// absorbs host-speed differences).
+    fn cells(&self) -> Vec<PerfCell> {
+        self.cells
+            .iter()
+            .map(|c| {
+                PerfCell::higher(c.key(), c.jobs_per_sec())
+                    .with_ident(c.digest.clone())
+                    .noisy()
+            })
+            .collect()
     }
-
-    pub fn parity_breaks(&self) -> usize {
-        self.count(CellVerdict::ParityBreak)
-    }
-
-    pub fn unmeasured(&self) -> usize {
-        self.count(CellVerdict::Unmeasured)
-    }
-
-    fn count(&self, v: CellVerdict) -> usize {
-        self.cells.iter().filter(|c| c.verdict == v).count()
-    }
-
-    /// Gate verdict: no per-cell regressions, no parity breaks, no
-    /// unmeasured cells, full coverage of the baseline grid, and (only
-    /// when `fail_on_shift` is set) no global slowdown.
-    pub fn ok(&self) -> bool {
-        self.regressions() == 0
-            && self.parity_breaks() == 0
-            && self.unmeasured() == 0
-            && !(self.fail_on_shift && self.global_regression)
-            && self.only_in_old.is_empty()
-    }
-
-    pub fn render(&self) -> String {
-        let mut out = format!(
-            "sweep diff: {} -> {} ({} matched cells, threshold {:.0}%)\n",
-            self.old_label,
-            self.new_label,
-            self.cells.len(),
-            self.threshold * 100.0
-        );
-        let mut t = Table::new(&["cell", "old jobs/s", "new jobs/s", "ratio", "norm", "verdict"]);
-        for c in &self.cells {
-            t.row(vec![
-                c.key.clone(),
-                format!("{:.0}", c.old_jps),
-                format!("{:.0}", c.new_jps),
-                format!("{:.3}", c.ratio),
-                format!("{:.3}", c.norm_ratio),
-                c.verdict.name().to_string(),
-            ]);
-        }
-        out.push_str(&t.render());
-        let _ = writeln!(
-            out,
-            "\ngrid shift (median ratio): {:.3}x{}",
-            self.shift,
-            if self.global_regression && self.fail_on_shift {
-                "  <- GLOBAL REGRESSION (gating: --fail-on-shift)"
-            } else if self.global_regression {
-                "  <- whole-grid slowdown (uniform regression OR slower \
-                 host; advisory — gate with --fail-on-shift)"
-            } else {
-                ""
-            }
-        );
-        for k in &self.only_in_old {
-            let _ = writeln!(out, "MISSING in new record: {k}");
-        }
-        for k in &self.only_in_new {
-            let _ = writeln!(out, "new cell (not in baseline): {k}");
-        }
-        let _ = writeln!(
-            out,
-            "{} regressions, {} improvements, {} parity breaks, {} unmeasured, {} missing => {}",
-            self.regressions(),
-            self.improvements(),
-            self.parity_breaks(),
-            self.unmeasured(),
-            self.only_in_old.len(),
-            if self.ok() { "OK" } else { "FAIL" }
-        );
-        out
-    }
-}
-
-/// Diff two sweep records cell-by-cell (matched on the scenario key).
-pub fn diff_records(old: &SweepRecord, new: &SweepRecord, opts: &DiffOpts) -> DiffReport {
-    let old_by_key: BTreeMap<String, &CellRecord> =
-        old.cells.iter().map(|c| (c.key(), c)).collect();
-    let new_by_key: BTreeMap<String, &CellRecord> =
-        new.cells.iter().map(|c| (c.key(), c)).collect();
-
-    let mut matched: Vec<(String, &CellRecord, &CellRecord)> = Vec::new();
-    let mut only_in_old = Vec::new();
-    for (key, o) in &old_by_key {
-        match new_by_key.get(key) {
-            Some(n) => matched.push((key.clone(), o, n)),
-            None => only_in_old.push(key.clone()),
-        }
-    }
-    let only_in_new: Vec<String> = new_by_key
-        .keys()
-        .filter(|k| !old_by_key.contains_key(*k))
-        .cloned()
-        .collect();
-
-    // Median throughput ratio over cells with sane measurements.
-    let mut ratios: Vec<f64> = matched
-        .iter()
-        .filter(|(_, o, n)| o.jobs_per_sec() > 0.0 && n.jobs_per_sec() > 0.0)
-        .map(|(_, o, n)| n.jobs_per_sec() / o.jobs_per_sec())
-        .collect();
-    ratios.sort_by(|a, b| a.partial_cmp(b).expect("finite ratios"));
-    let shift = match ratios.len() {
-        0 => 1.0,
-        n if n % 2 == 1 => ratios[n / 2],
-        n => (ratios[n / 2 - 1] * ratios[n / 2]).sqrt(),
-    };
-    // On tiny grids the median IS the (possibly regressed) cell, so
-    // normalizing by it would cancel the very signal we gate on — a
-    // 10x-slower single-cell grid must not read as "unchanged". Below
-    // this many matched cells, ratios are compared raw.
-    const MIN_CELLS_TO_NORMALIZE: usize = 4;
-    let denom = if opts.normalize && shift > 0.0 && ratios.len() >= MIN_CELLS_TO_NORMALIZE {
-        shift
-    } else {
-        1.0
-    };
-
-    let cells: Vec<CellDiff> = matched
-        .into_iter()
-        .map(|(key, o, n)| {
-            let (old_jps, new_jps) = (o.jobs_per_sec(), n.jobs_per_sec());
-            let ratio = if old_jps > 0.0 && new_jps > 0.0 {
-                new_jps / old_jps
-            } else {
-                1.0
-            };
-            let norm_ratio = ratio / denom;
-            let verdict = if o.digest != n.digest {
-                CellVerdict::ParityBreak
-            } else if old_jps <= 0.0 || new_jps <= 0.0 {
-                CellVerdict::Unmeasured
-            } else if norm_ratio < 1.0 - opts.threshold {
-                CellVerdict::Regression
-            } else if norm_ratio > 1.0 + opts.threshold {
-                CellVerdict::Improvement
-            } else {
-                CellVerdict::Unchanged
-            };
-            CellDiff {
-                key,
-                old_jps,
-                new_jps,
-                ratio,
-                norm_ratio,
-                verdict,
-            }
-        })
-        .collect();
-
-    DiffReport {
-        old_label: old.label.clone(),
-        new_label: new.label.clone(),
-        cells,
-        only_in_old,
-        only_in_new,
-        shift,
-        threshold: opts.threshold,
-        global_regression: shift < 1.0 - opts.threshold,
-        fail_on_shift: opts.fail_on_shift,
-    }
-}
-
-/// FNV-1a 64-bit — deterministic, dependency-free digest for schedule
-/// outcomes (not cryptographic; collisions only hide a parity break that
-/// the golden test would catch anyway).
-fn fnv1a64(bytes: &[u8]) -> u64 {
-    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-    for &b in bytes {
-        h ^= u64::from(b);
-        h = h.wrapping_mul(0x0000_0100_0000_01b3);
-    }
-    h
-}
-
-pub(crate) fn get_str(j: &Json, k: &str) -> Result<String, String> {
-    j.get(k)
-        .and_then(Json::as_str)
-        .map(str::to_string)
-        .ok_or_else(|| format!("missing string field '{k}'"))
-}
-
-pub(crate) fn get_f64(j: &Json, k: &str) -> Result<f64, String> {
-    j.get(k)
-        .and_then(Json::as_f64)
-        .ok_or_else(|| format!("missing numeric field '{k}'"))
-}
-
-/// Reject negative/fractional/huge values for integer-typed fields
-/// instead of silently saturating through `as` casts — a hand-edited
-/// artifact should fail at parse time with the field name, not surface
-/// later as a confusing digest mismatch.
-pub(crate) fn uint_value(v: f64, what: &str) -> Result<u64, String> {
-    if v.is_nan() || v < 0.0 || v.fract() != 0.0 || v > 9_007_199_254_740_992.0 {
-        return Err(format!("{what}: expected a non-negative integer, got {v}"));
-    }
-    Ok(v as u64)
-}
-
-pub(crate) fn get_uint(j: &Json, k: &str) -> Result<u64, String> {
-    uint_value(get_f64(j, k)?, k)
-}
-
-/// Require an actual JSON array (`Json::items` silently yields an empty
-/// slice for non-arrays, which would let a corrupt artifact parse).
-pub(crate) fn get_arr<'a>(j: &'a Json, k: &str) -> Result<&'a [Json], String> {
-    match j.get(k) {
-        Some(Json::Arr(v)) => Ok(v),
-        Some(_) => Err(format!("field '{k}': expected an array")),
-        None => Err(format!("missing array field '{k}'")),
-    }
-}
-
-pub(crate) fn get_u64_str(j: &Json, k: &str) -> Result<u64, String> {
-    get_str(j, k)?
-        .parse::<u64>()
-        .map_err(|e| format!("field '{k}': {e}"))
 }
 
 #[cfg(test)]
 mod tests {
     use super::super::{run_sweep, SweepConfig};
     use super::*;
+    use crate::artifact::{diff_records, CellVerdict, DiffOpts};
     use crate::engine::EngineId;
     use crate::quant::Precision;
     use crate::workload::WorkloadSpec;
@@ -621,6 +318,12 @@ mod tests {
     }
 
     #[test]
+    fn record_schema_is_the_registry_instance() {
+        assert_eq!(RECORD_SCHEMA, artifact::SWEEP_RECORD.tag());
+        assert_eq!(RECORD_SCHEMA, SweepRecord::SCHEMA.tag());
+    }
+
+    #[test]
     fn record_round_trips_through_jsonio() {
         let rec = small_record();
         assert_eq!(rec.cells.len(), 6);
@@ -638,6 +341,23 @@ mod tests {
         for c in &back.cells {
             assert_eq!(c.digest, c.compute_digest(), "digest stable across round trip");
         }
+    }
+
+    #[test]
+    fn stale_digest_is_rejected_at_parse_time() {
+        // A hand-edited artifact whose deterministic outcome changed but
+        // whose digest was left stale must fail to parse — the parity
+        // gate trusts stored digests.
+        let rec = small_record();
+        let ticks = format!("\"ticks\":{}", rec.cells[0].ticks);
+        let tampered = rec
+            .render()
+            .replacen(&ticks, &format!("\"ticks\":{}", rec.cells[0].ticks + 1), 1);
+        let err = SweepRecord::parse(&tampered).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("does not match"),
+            "stale digest must be named: {err:#}"
+        );
     }
 
     #[test]
@@ -678,6 +398,7 @@ mod tests {
         assert_eq!(report.regressions(), 0);
         assert_eq!(report.parity_breaks(), 0);
         assert!((report.shift - 1.0).abs() < 1e-9);
+        assert!(report.render().starts_with("sweep diff: test -> test"));
     }
 
     #[test]

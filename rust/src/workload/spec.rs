@@ -2,6 +2,9 @@
 //! Composition (JC), Machine Composition (MC, carried by `MachinePark`),
 //! Burst Factor (BF), Burst Type (BT), Idle Time (IT), Idle Interval (II).
 
+use crate::bail;
+use crate::error::Result;
+
 /// Job arrival pattern (BT).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum BurstType {
@@ -161,23 +164,23 @@ impl WorkloadSpec {
     }
 
     /// Validate that JC sums to 1 (within rounding).
-    pub fn validate(&self) -> Result<(), String> {
+    pub fn validate(&self) -> Result<()> {
         let s = self.frac_compute + self.frac_memory + self.frac_mixed;
         if (s - 1.0).abs() > 1e-6 {
-            return Err(format!("job composition sums to {s}, expected 1.0"));
+            bail!("job composition sums to {s}, expected 1.0");
         }
         if self.burst_factor == 0 {
-            return Err("burst_factor must be >= 1".into());
+            bail!("burst_factor must be >= 1");
         }
         if self.weight_range.0 < 1.0 {
-            return Err("minimum job weight is 1 (Section 4.2)".into());
+            bail!("minimum job weight is 1 (Section 4.2)");
         }
         if self.ept_range.0 < 10.0 {
-            return Err("minimum EPT is 10 (Section 4.2)".into());
+            bail!("minimum EPT is 10 (Section 4.2)");
         }
         if let EptDist::Pareto { shape } = self.ept_dist {
             if !shape.is_finite() || shape <= 0.0 {
-                return Err("Pareto shape must be positive and finite".into());
+                bail!("Pareto shape must be positive and finite");
             }
         }
         Ok(())

@@ -1,7 +1,9 @@
 //! Arrival traces: the serialized form of a generated workload, plus a
 //! text round-trip format so experiments can be archived and replayed.
 
+use crate::bail;
 use crate::core::{Job, JobNature};
+use crate::error::Result;
 
 /// One arrival event on the scheduler clock.
 #[derive(Debug, Clone, PartialEq)]
@@ -75,7 +77,7 @@ impl Trace {
     }
 
     /// Parse the text format produced by [`Trace::to_text`].
-    pub fn from_text(text: &str) -> Result<Trace, String> {
+    pub fn from_text(text: &str) -> Result<Trace> {
         let mut lines = text.lines();
         let header = lines.next().ok_or("empty trace")?;
         let machines: usize = header
@@ -102,19 +104,14 @@ impl Trace {
                 "C" => JobNature::Compute,
                 "M" => JobNature::Memory,
                 "X" => JobNature::Mixed,
-                other => return Err(format!("line {}: bad nature {other}", ln + 2)),
+                other => bail!("line {}: bad nature {other}", ln + 2),
             };
             let af: f32 = next("factor")?.parse().map_err(|e| format!("factor: {e}"))?;
             let ept: Vec<f32> = it
                 .map(|v| v.parse().map_err(|e| format!("ept: {e}")))
                 .collect::<Result<_, _>>()?;
             if ept.len() != machines {
-                return Err(format!(
-                    "line {}: {} EPTs for {} machines",
-                    ln + 2,
-                    ept.len(),
-                    machines
-                ));
+                bail!("line {}: {} EPTs for {} machines", ln + 2, ept.len(), machines);
             }
             events.push(TraceEvent {
                 tick,

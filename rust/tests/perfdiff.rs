@@ -9,6 +9,7 @@
 use std::path::{Path, PathBuf};
 use std::process::Command;
 
+use stannic::artifact::Artifact;
 use stannic::sweep::{diff_records, DiffOpts, SweepRecord};
 
 fn bin() -> Command {

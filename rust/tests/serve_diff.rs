@@ -1,0 +1,214 @@
+//! End-to-end coverage of `serve diff` through the real binary
+//! (`CARGO_BIN_EXE_stannic`) — the serve arm of the artifact layer:
+//!
+//! * an A/B self-diff of the same scenario exits 0 with zero parity
+//!   breaks (the gate ci.sh runs every build);
+//! * a tick-count mismatch and a schedule-digest change are parity
+//!   breaks (non-zero exit at any threshold);
+//! * a latency regression fails at the default threshold and passes
+//!   under a loose `--threshold`/`STANNIC_PERF_THRESHOLD`;
+//! * schema rejection is routed through the shared loader for both
+//!   record types (wrong version, and a serve artifact fed to
+//!   `sweep diff`).
+
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+use stannic::artifact::Artifact;
+use stannic::coordinator::ServeRecord;
+
+fn bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_stannic"))
+}
+
+fn tmp(name: &str) -> PathBuf {
+    let mut p = std::env::temp_dir();
+    p.push(format!("stannic_servediff_{}_{name}", std::process::id()));
+    p
+}
+
+/// Record one serve run of the fixed A/B scenario to `path`.
+fn record_to(path: &Path, label: &str) -> ServeRecord {
+    let out = bin()
+        .args([
+            "serve", "--sources", "2", "--batch", "3", "--jobs", "80", "--seed", "11",
+            "--label", label, "--record",
+        ])
+        .arg(path)
+        .output()
+        .expect("spawn stannic serve");
+    assert!(
+        out.status.success(),
+        "serve --record failed:\n{}\n{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    ServeRecord::parse(&std::fs::read_to_string(path).expect("artifact written"))
+        .expect("artifact parses as ServeRecord")
+}
+
+fn diff(old: &Path, new: &Path, extra: &[&str]) -> std::process::Output {
+    let mut cmd = bin();
+    cmd.args(["serve", "diff"]).arg(old).arg(new).args(extra);
+    cmd.output().expect("spawn stannic serve diff")
+}
+
+#[test]
+fn ab_self_diff_exits_zero_with_no_parity_breaks() {
+    let a = tmp("ab_a.json");
+    let b = tmp("ab_b.json");
+    record_to(&a, "run-a");
+    record_to(&b, "run-b");
+    // Default threshold: the deterministic cells match exactly between
+    // back-to-back runs, and the jittery wall-clock jobs/sec cell is
+    // advisory (it only gates under --fail-on-shift).
+    let out = diff(&a, &b, &[]);
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        out.status.success(),
+        "A/B self-diff must pass:\n{stdout}\n{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    assert!(stdout.contains("serve diff: run-a -> run-b"), "{stdout}");
+    assert!(stdout.contains(", 0 parity breaks,"), "{stdout}");
+    assert!(stdout.contains("schedule-digest"), "{stdout}");
+    for p in [&a, &b] {
+        let _ = std::fs::remove_file(p);
+    }
+}
+
+#[test]
+fn tick_count_mismatch_is_a_parity_break() {
+    let a = tmp("tick_a.json");
+    let rec = record_to(&a, "base");
+    let mut tampered = rec.clone();
+    tampered.ticks += 1;
+    let b = tmp("tick_b.json");
+    std::fs::write(&b, tampered.render()).unwrap();
+    // parity breaks fail at any threshold
+    let out = diff(&a, &b, &["--threshold", "0.9"]);
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(!out.status.success(), "tick mismatch must fail:\n{stdout}");
+    assert!(stdout.contains("PARITY-BREAK"), "{stdout}");
+    assert!(stdout.contains("ticks"), "{stdout}");
+    for p in [&a, &b] {
+        let _ = std::fs::remove_file(p);
+    }
+}
+
+#[test]
+fn schedule_digest_change_is_a_parity_break() {
+    let a = tmp("dig_a.json");
+    let rec = record_to(&a, "base");
+    let mut tampered = rec.clone();
+    tampered.jobs_per_machine[0] += 1; // a different schedule...
+    tampered.digest = tampered.compute_digest(); // ...honestly digested
+    let b = tmp("dig_b.json");
+    std::fs::write(&b, tampered.render()).unwrap();
+    let out = diff(&a, &b, &["--threshold", "0.9"]);
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(!out.status.success(), "digest change must fail:\n{stdout}");
+    assert!(stdout.contains("PARITY-BREAK"), "{stdout}");
+    assert!(stdout.contains("schedule-digest"), "{stdout}");
+    for p in [&a, &b] {
+        let _ = std::fs::remove_file(p);
+    }
+}
+
+#[test]
+fn latency_regression_gates_by_threshold_flag_and_env() {
+    let a = tmp("lat_a.json");
+    let rec = record_to(&a, "base");
+    let mut slow = rec.clone();
+    slow.latency_p99 = slow.latency_p99 * 10 + 100; // >10x worse tail
+    let b = tmp("lat_b.json");
+    std::fs::write(&b, slow.render()).unwrap();
+
+    // default threshold (25%): regression, non-zero exit
+    let out = diff(&a, &b, &[]);
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(!out.status.success(), "10x latency must fail:\n{stdout}");
+    assert!(stdout.contains("REGRESSION"), "{stdout}");
+    assert!(stdout.contains("latency_p99"), "{stdout}");
+
+    // a loose --threshold absorbs it
+    let out = diff(&a, &b, &["--threshold", "0.95"]);
+    assert!(
+        out.status.success(),
+        "--threshold 0.95 must absorb the slowdown:\n{}",
+        String::from_utf8_lossy(&out.stdout)
+    );
+
+    // and so does the shared env override
+    let mut cmd = bin();
+    cmd.args(["serve", "diff"]).arg(&a).arg(&b);
+    cmd.env("STANNIC_PERF_THRESHOLD", "0.95");
+    let out = cmd.output().expect("spawn stannic serve diff");
+    assert!(
+        out.status.success(),
+        "STANNIC_PERF_THRESHOLD=0.95 must absorb the slowdown:\n{}",
+        String::from_utf8_lossy(&out.stdout)
+    );
+    for p in [&a, &b] {
+        let _ = std::fs::remove_file(p);
+    }
+}
+
+#[test]
+fn schema_rejection_routes_through_the_shared_loader() {
+    let a = tmp("schema_a.json");
+    let rec = record_to(&a, "base");
+
+    // unsupported future version of the serve family
+    let b = tmp("schema_v9.json");
+    std::fs::write(
+        &b,
+        rec.render()
+            .replace("stannic.serve.record.v1", "stannic.serve.record.v9"),
+    )
+    .unwrap();
+    let out = diff(&a, &b, &[]);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(!out.status.success(), "v9 artifact must be rejected");
+    assert!(stderr.contains("unsupported"), "{stderr}");
+    assert!(stderr.contains("v9"), "{stderr}");
+    // the loader names the offending file
+    assert!(stderr.contains("schema_v9.json"), "{stderr}");
+
+    // a serve artifact fed to `sweep diff` is a cross-family error, not
+    // a confusing missing-field error
+    let out = bin()
+        .args(["sweep", "diff"])
+        .arg(&a)
+        .arg(&a)
+        .output()
+        .expect("spawn stannic sweep diff");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(!out.status.success(), "cross-family diff must be rejected");
+    assert!(stderr.contains("stannic.serve.record"), "{stderr}");
+    assert!(stderr.contains("not stannic.sweep.record"), "{stderr}");
+
+    for p in [&a, &b] {
+        let _ = std::fs::remove_file(p);
+    }
+}
+
+#[test]
+fn completions_mismatch_breaks_parity_even_when_perf_passes() {
+    let a = tmp("comp_a.json");
+    let rec = record_to(&a, "base");
+    let mut tampered = rec.clone();
+    tampered.completed += 1;
+    tampered.digest = tampered.compute_digest();
+    let b = tmp("comp_b.json");
+    std::fs::write(&b, tampered.render()).unwrap();
+    let out = diff(&a, &b, &["--threshold", "0.9"]);
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(!out.status.success(), "{stdout}");
+    assert!(stdout.contains("completions"), "{stdout}");
+    // both the explicit completions cell and the digest cell break
+    assert!(stdout.matches("PARITY-BREAK").count() >= 2, "{stdout}");
+    for p in [&a, &b] {
+        let _ = std::fs::remove_file(p);
+    }
+}

@@ -11,6 +11,7 @@
 use std::path::PathBuf;
 use std::process::Command;
 
+use stannic::artifact::Artifact;
 use stannic::coordinator::ServeRecord;
 use stannic::engine::EngineId;
 

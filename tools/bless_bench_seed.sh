@@ -1,23 +1,25 @@
 #!/usr/bin/env bash
-# Bless the committed perf baseline from THIS host's toolchain.
+# Bless the committed perf baselines from THIS host's toolchain.
 #
-# The cross-commit perf gate (`sweep diff` in ci.sh) needs a committed
-# BENCH_seed.json recorded by an actual cargo run — it must never be
-# hand-written, because the artifact's schedule digests are what the
-# parity gate trusts. Run this on a toolchain-equipped machine after an
-# intentional perf- or semantics-change, review the diff it prints, and
-# commit the regenerated file:
+# The cross-commit perf gates (`sweep diff` and `serve diff` in ci.sh)
+# need committed BENCH_seed.json / SERVE_seed.json artifacts recorded by
+# an actual cargo run — they must never be hand-written, because the
+# artifacts' schedule digests are what the parity gates trust. Run this
+# on a toolchain-equipped machine after an intentional perf- or
+# semantics-change, review the diffs it prints, and commit the
+# regenerated files:
 #
 #   ./tools/bless_bench_seed.sh
-#   git add BENCH_seed.json && git commit -m "Re-bless perf baseline"
+#   git add BENCH_seed.json SERVE_seed.json && git commit -m "Re-bless perf baselines"
 #
-# The recording uses the exact grid ci.sh diffs against (quick grid,
-# 200 jobs), so keys and digests line up cell-for-cell.
+# The recordings use the exact scenarios ci.sh diffs against (quick
+# sweep grid with 200 jobs; 2-source/150-job/batch-4 serve run), so keys
+# and digests line up cell-for-cell.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 if ! command -v cargo >/dev/null 2>&1; then
-  echo "error: cargo not found — the baseline must come from a toolchain-equipped host" >&2
+  echo "error: cargo not found — the baselines must come from a toolchain-equipped host" >&2
   exit 1
 fi
 
@@ -29,4 +31,16 @@ if [ -f BENCH_seed.json ]; then
 else
   cargo run --release -- sweep --quick --jobs 200 --record BENCH_seed.json --label seed
 fi
-echo "blessed BENCH_seed.json — review and commit it to arm the perf gate"
+
+if [ -f SERVE_seed.json ]; then
+  echo "existing SERVE_seed.json found; recording a candidate and diffing first"
+  cargo run --release -- serve --sources 2 --jobs 150 --batch 4 \
+    --record /tmp/SERVE_candidate.json --label seed > /dev/null
+  cargo run --release -- serve diff SERVE_seed.json /tmp/SERVE_candidate.json || true
+  mv /tmp/SERVE_candidate.json SERVE_seed.json
+else
+  cargo run --release -- serve --sources 2 --jobs 150 --batch 4 \
+    --record SERVE_seed.json --label seed > /dev/null
+fi
+
+echo "blessed BENCH_seed.json + SERVE_seed.json — review and commit them to arm both perf gates"
