@@ -81,10 +81,14 @@ else
 fi
 
 echo "== smoke: parallel scenario sweep (reduced grid, determinism cross-check) =="
+# The sweep output embeds the cross-engine schedule-parity verdict; the
+# tickless sos engine must stay parity-clean against the per-tick
+# engines, so assert the line explicitly rather than only via exit code.
 cargo run --release -- sweep --quick --threads 1 > /tmp/stannic_sweep_1.txt
 cargo run --release -- sweep --quick --threads 8 > /tmp/stannic_sweep_8.txt
 diff /tmp/stannic_sweep_1.txt /tmp/stannic_sweep_8.txt
-echo "sweep output identical for 1 and 8 worker threads"
+grep -E "cross-engine schedule parity OK" /tmp/stannic_sweep_1.txt
+echo "sweep output identical for 1 and 8 worker threads (parity OK)"
 
 echo "== perf: record quick sweep, diff against committed baseline =="
 # --jobs 200 (vs the quick default 60) keeps per-cell wall times in the
@@ -102,15 +106,20 @@ else
   if [ -n "${GITHUB_ACTIONS:-}" ]; then
     echo "::warning file=ci.sh::perf gate inert: no committed BENCH_seed.json baseline; run tools/bless_bench_seed.sh and commit the result"
   fi
-  # Same-host A/B self-diff: even without a committed baseline, a second
-  # recording of the same grid must share every schedule digest with the
-  # blessed one — this keeps the parity gate and the whole diff pipeline
-  # live on every run. The loose threshold keeps wall-time jitter on
-  # millisecond cells from flaking CI; parity breaks fail at any
-  # threshold.
-  cargo run --release -- sweep --quick --jobs 200 --record /tmp/BENCH_pr2.json --label pr2
-  cargo run --release -- sweep diff BENCH_seed.json /tmp/BENCH_pr2.json --threshold 0.9
-  echo "same-host A/B self-diff OK (parity gate live without a committed baseline)"
 fi
+
+echo "== sweep A/B self-diff: same grid recorded twice must be parity-clean =="
+# Runs every CI pass (not only when the committed baseline is missing):
+# a second recording of the same grid must share every schedule digest
+# with the first — if the tickless engine's jumps ever changed a
+# schedule or a tick count, this is the stage that names it. The loose
+# threshold keeps wall-time jitter on millisecond cells from flaking
+# CI; parity breaks fail at any threshold, and the grep pins the
+# parity-clean line itself.
+cargo run --release -- sweep --quick --jobs 200 --record /tmp/BENCH_pr2.json --label pr2
+cargo run --release -- sweep diff /tmp/BENCH_pr.json /tmp/BENCH_pr2.json --threshold 0.9 \
+  | tee /tmp/stannic_sweep_diff.txt
+grep -E ", 0 parity breaks," /tmp/stannic_sweep_diff.txt
+echo "sweep A/B self-diff OK (zero parity breaks)"
 
 echo "CI OK"

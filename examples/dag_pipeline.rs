@@ -25,29 +25,23 @@ fn main() -> Result<()> {
         1 + max_desc
     );
 
-    // 2. schedule it; watch the high-fanout roots go first-class
+    // 2. schedule it (tickless drive: idle gaps between DAG layers are
+    //    jumped, not ticked); watch the high-fanout roots go first-class
     let mut engine = SosEngine::new(park.len(), 10, 0.5, Precision::Int8);
-    let mut events = graph.trace.events().iter().peekable();
     let mut first_assignments = Vec::new();
-    let mut t = 0u64;
-    loop {
-        t += 1;
-        while events.peek().is_some_and(|e| e.tick <= t) {
-            engine.submit(events.next().unwrap().job.clone().unwrap());
-        }
-        let out = engine.tick(None);
-        if let Some(a) = out.assigned {
+    let stats = drive_trace(&mut engine, &graph.trace, 10_000_000, |_, out| {
+        if let Some(a) = &out.assigned {
             if first_assignments.len() < 5 {
                 let node = (a.job - 1) as usize;
                 first_assignments.push((a.job, graph.descendants[node], a.machine));
             }
         }
-        if engine.is_idle() && events.peek().is_none() {
-            break;
-        }
-    }
+    })?;
     println!("first assignments (job, descendants, machine): {first_assignments:?}");
-    println!("drained in {t} ticks\n");
+    println!(
+        "drained in {} virtual ticks ({} engine iterations)\n",
+        stats.ticks, stats.iterations
+    );
 
     // 3. what-if triage via the batched artifact: 16 hypothetical next
     // jobs costed against a half-full schedule in one dispatch.

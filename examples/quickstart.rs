@@ -23,17 +23,12 @@ fn main() {
     );
 
     // 3. Schedule with the golden SOS engine at the paper's INT8
-    //    precision, alpha = 0.5, depth-10 virtual schedules.
+    //    precision, alpha = 0.5, depth-10 virtual schedules. The
+    //    tickless driver jumps virtual time between events, so the run
+    //    executes far fewer engine iterations than virtual ticks elapse.
     let mut engine = SosEngine::new(park.len(), 10, 0.5, Precision::Int8);
-    let mut events = trace.events().iter().peekable();
     let mut jobs_per_machine = vec![0usize; park.len()];
-    let mut tick = 0u64;
-    loop {
-        tick += 1;
-        while events.peek().is_some_and(|e| e.tick <= tick) {
-            engine.submit(events.next().unwrap().job.clone().unwrap());
-        }
-        let out = engine.tick(None);
+    let stats = drive_trace(&mut engine, &trace, 10_000_000, |_, out| {
         if let Some(a) = &out.assigned {
             jobs_per_machine[a.machine] += 1;
             if a.job <= 5 {
@@ -46,11 +41,12 @@ fn main() {
                 );
             }
         }
-        if engine.is_idle() && events.peek().is_none() {
-            break;
-        }
-    }
-    println!("jobs per machine: {jobs_per_machine:?} ({tick} ticks)");
+    })
+    .unwrap();
+    println!(
+        "jobs per machine: {jobs_per_machine:?} ({} virtual ticks in {} engine iterations)",
+        stats.ticks, stats.iterations
+    );
 
     // 4. The cycle-accurate systolic simulator produces the *identical*
     //    schedule while counting hardware cycles.

@@ -14,7 +14,7 @@ use stannic::core::MachinePark;
 use stannic::engine::EngineId;
 use stannic::quant::Precision;
 use stannic::runtime::{ArtifactRegistry, CostImpl, XlaCostEngine, XlaScheduleState};
-use stannic::scheduler::SosEngine;
+use stannic::scheduler::{drive_trace, SosEngine};
 use stannic::sim::{stannic::StannicSim, ArchSim};
 use stannic::workload::{generate_trace, WorkloadSpec};
 
@@ -23,12 +23,52 @@ fn main() {
     let smoke = stannic::bench::smoke_mode();
     let mut t = Table::new(&["hot path", "mean", "min", "per-unit"]);
 
-    // 1. golden engine: saturated tick stream (insert-heavy)
+    // 1. golden engine: saturated tick stream (insert-heavy), driven by
+    // the tickless event-jumping loop
     {
         let jobs = if smoke { 300 } else { 2000 };
         let park = MachinePark::cycled(10);
         let trace = generate_trace(&WorkloadSpec::default(), &park, jobs, 3);
         let m = bench(opts, || {
+            let mut e = SosEngine::new(10, 20, 0.5, Precision::Int8);
+            let stats = drive_trace(&mut e, &trace, u64::MAX, |_, out| {
+                std::hint::black_box(out);
+            })
+            .expect("hotpath trace drains");
+            std::hint::black_box(stats);
+        });
+        t.row(vec![
+            format!("SosEngine full run ({jobs} jobs, 10x20)"),
+            fmt_ns(m.mean_ns),
+            fmt_ns(m.min_ns),
+            format!("{}/job", fmt_ns(m.mean_ns / jobs as f64)),
+        ]);
+    }
+
+    // 1b. sparse arrivals, deep drain: the tickless payoff case. Long
+    // inter-arrival gaps (idle_time 2000 after every <=4 jobs) plus the
+    // alpha-release drain tail mean almost every virtual tick is empty;
+    // the event horizon must turn them into jumps. The per-tick loop is
+    // measured alongside as the baseline, and the run *asserts* the
+    // >=5x iteration reduction so CI smoke (--bench-smoke) gates it.
+    {
+        let jobs = if smoke { 120 } else { 600 };
+        let park = MachinePark::cycled(10);
+        let spec = WorkloadSpec::default().with_idle(2000, 4);
+        let trace = generate_trace(&spec, &park, jobs, 11);
+
+        let mut virtual_ticks = 0u64;
+        let mut iterations = 0u64;
+        let m_jump = bench(opts, || {
+            let mut e = SosEngine::new(10, 20, 0.5, Precision::Int8);
+            let stats = drive_trace(&mut e, &trace, u64::MAX, |_, out| {
+                std::hint::black_box(out);
+            })
+            .expect("sparse trace drains");
+            virtual_ticks = stats.ticks;
+            iterations = stats.iterations;
+        });
+        let m_ticked = bench(opts, || {
             let mut e = SosEngine::new(10, 20, 0.5, Precision::Int8);
             let mut events = trace.events().iter().peekable();
             let mut tick = 0u64;
@@ -42,13 +82,25 @@ fn main() {
                     break;
                 }
             }
-            std::hint::black_box(tick);
+            assert_eq!(tick, virtual_ticks, "per-tick loop disagrees on virtual time");
         });
+        let ratio = virtual_ticks as f64 / iterations.max(1) as f64;
+        assert!(
+            ratio >= 5.0,
+            "tickless engine-loop reduction regressed: only {ratio:.1}x \
+             ({iterations} iterations over {virtual_ticks} virtual ticks)"
+        );
         t.row(vec![
-            format!("SosEngine full run ({jobs} jobs, 10x20)"),
-            fmt_ns(m.mean_ns),
-            fmt_ns(m.min_ns),
-            format!("{}/job", fmt_ns(m.mean_ns / jobs as f64)),
+            format!("SosEngine sparse tickless ({jobs} jobs, {virtual_ticks} vticks)"),
+            fmt_ns(m_jump.mean_ns),
+            fmt_ns(m_jump.min_ns),
+            format!("{:.0}x fewer iterations ({iterations} executed)", ratio),
+        ]);
+        t.row(vec![
+            format!("SosEngine sparse per-tick baseline ({jobs} jobs)"),
+            fmt_ns(m_ticked.mean_ns),
+            fmt_ns(m_ticked.min_ns),
+            format!("{:.1}x wall vs tickless", m_ticked.mean_ns / m_jump.mean_ns.max(1.0)),
         ]);
     }
 

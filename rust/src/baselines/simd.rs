@@ -17,7 +17,7 @@ use std::collections::VecDeque;
 
 use crate::core::{Job, JobId};
 use crate::quant::Precision;
-use crate::scheduler::{Assignment, TickOutcome, FULL_COST};
+use crate::scheduler::{Assignment, TickOutcome};
 
 pub const LANES: usize = 8;
 
@@ -190,7 +190,6 @@ impl SimdSos {
 
     fn assign(&mut self, job: &Job) -> Assignment {
         let m_count = self.schedules.len();
-        let mut cost_vec = vec![FULL_COST; m_count];
         let mut best: Option<(usize, f32, usize)> = None;
         for m in 0..m_count {
             if self.schedules[m].len >= self.depth {
@@ -199,7 +198,6 @@ impl SimdSos {
             let (j_w, j_eps, j_t) = self.precision.q_job(job.weight, job.ept[m]);
             let (s_hi, s_lo, pos) = self.schedules[m].sums(j_t);
             let c = j_w * (j_eps + s_hi) + j_eps * s_lo;
-            cost_vec[m] = c;
             if best.map_or(true, |(_, bc, _)| c < bc) {
                 best = Some((m, c, pos));
             }
@@ -219,7 +217,6 @@ impl SimdSos {
             machine,
             position,
             cost,
-            cost_vector: cost_vec,
         }
     }
 }

@@ -183,7 +183,6 @@ impl SoscEngine {
 
     fn assign(&mut self, job: &Job) -> crate::scheduler::Assignment {
         let m_count = self.schedules.len();
-        let mut cost_vec = vec![crate::scheduler::FULL_COST; m_count];
         let mut best: Option<(usize, f32, usize)> = None;
         for m in 0..m_count {
             if self.schedules[m].len() >= self.depth {
@@ -191,7 +190,6 @@ impl SoscEngine {
             }
             let (j_w, j_eps, j_t) = self.precision.q_job(job.weight, job.ept[m]);
             let (c, p) = self.cost(m, j_w, j_eps, j_t);
-            cost_vec[m] = c;
             if best.map_or(true, |(_, bc, _)| c < bc) {
                 best = Some((m, c, p));
             }
@@ -216,7 +214,6 @@ impl SoscEngine {
             machine,
             position,
             cost,
-            cost_vector: cost_vec,
         }
     }
 }

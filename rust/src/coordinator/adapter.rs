@@ -7,7 +7,7 @@ use crate::baselines::{SimdSos, SoscEngine};
 use crate::core::Job;
 use crate::error::Result;
 use crate::runtime::XlaSosEngine;
-use crate::scheduler::{SosEngine, TickOutcome};
+use crate::scheduler::{Horizon, SosEngine, TickOutcome};
 use crate::sim::{hercules::HerculesSim, stannic::StannicSim, ArchSim};
 
 /// Object-safe engine interface used by the coordinator. (Not `Send`:
@@ -24,6 +24,19 @@ pub trait EngineAdapter {
     fn cycles(&self) -> u64 {
         0
     }
+    /// The engine's event horizon. Engines that cannot fast-forward
+    /// report [`Horizon::Unknown`] and are driven per-tick, which is
+    /// exactly the historical behaviour.
+    fn horizon(&mut self) -> Horizon {
+        Horizon::Unknown
+    }
+    /// Fast-forward virtual time to `tick`. Drive loops only call this
+    /// for a window their own `horizon()` call proved event-free, and
+    /// never on [`Horizon::Unknown`] engines.
+    fn advance_to(&mut self, tick: u64) {
+        let _ = tick;
+        unreachable!("advance_to on an engine that reported Horizon::Unknown");
+    }
 }
 
 impl EngineAdapter for SosEngine {
@@ -38,6 +51,12 @@ impl EngineAdapter for SosEngine {
     }
     fn is_idle(&self) -> bool {
         SosEngine::is_idle(self)
+    }
+    fn horizon(&mut self) -> Horizon {
+        Horizon::of(self.next_event_tick())
+    }
+    fn advance_to(&mut self, tick: u64) {
+        SosEngine::advance_to(self, tick);
     }
 }
 
@@ -127,6 +146,34 @@ mod tests {
     use super::*;
     use crate::core::JobNature;
     use crate::quant::Precision;
+
+    #[test]
+    fn golden_adapter_exposes_the_event_horizon() {
+        let mut e: Box<dyn EngineAdapter> =
+            Box::new(SosEngine::new(2, 4, 0.5, Precision::Int8));
+        assert_eq!(e.horizon(), Horizon::Idle, "fresh engine: nothing scheduled");
+        e.submit(Job::new(1, 8.0, vec![40.0, 90.0], JobNature::Mixed));
+        assert_eq!(e.horizon(), Horizon::At(1), "pending arrival: next tick");
+        e.tick().unwrap(); // assign; alpha_pt = 20 -> pops at tick 21
+        assert_eq!(e.horizon(), Horizon::At(21));
+        e.advance_to(20);
+        let out = e.tick().unwrap();
+        assert_eq!(out.released, vec![(1, 0)]);
+        assert_eq!(e.horizon(), Horizon::Idle);
+    }
+
+    #[test]
+    fn per_tick_adapters_report_unknown_horizon() {
+        let mut engines: Vec<Box<dyn EngineAdapter>> = vec![
+            Box::new(SoscEngine::new(2, 4, 0.5, Precision::Int8)),
+            Box::new(SimdSos::new(2, 4, 0.5, Precision::Int8)),
+            Box::new(StannicSim::new(2, 4, 0.5, Precision::Int8)),
+            Box::new(HerculesSim::new(2, 4, 0.5, Precision::Int8)),
+        ];
+        for e in engines.iter_mut() {
+            assert_eq!(e.horizon(), Horizon::Unknown, "{}", e.label());
+        }
+    }
 
     #[test]
     fn adapters_share_semantics() {

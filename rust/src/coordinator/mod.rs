@@ -36,6 +36,10 @@ mod record;
 mod server;
 
 pub use adapter::EngineAdapter;
+// Horizon lives in the scheduler (it describes the golden engine's
+// event horizon); re-exported here because EngineAdapter::horizon is
+// the coordinator-facing way to read it.
+pub use crate::scheduler::Horizon;
 pub use pcie::{PcieModel, PcieStats};
 pub use record::{ServeRecord, SourceRecord, SERVE_RECORD_SCHEMA};
 pub use server::{

@@ -16,6 +16,14 @@
 //! Backpressure shows up in *telemetry*, not in the schedule: per-source
 //! enqueue stalls, the merge-queue depth histogram, and the batch-size
 //! distribution on [`ServeReport`].
+//!
+//! **The scheduler loop is tickless**: when the merge queue is empty,
+//! virtual time jumps to `min(engine event horizon, earliest source
+//! head)` instead of idle-spinning toward `max_ticks` one tick at a
+//! time (engines without a horizon — [`crate::scheduler::Horizon::Unknown`] — keep the
+//! per-tick loop). Jumps are semantically invisible: tick counts,
+//! schedules, digests and the per-tick merge-depth histogram (bulk
+//! zero samples) are bit-identical to per-tick driving.
 
 use std::hash::{BuildHasherDefault, Hasher};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -405,6 +413,28 @@ pub fn serve_sources(
         let mut tick = 0u64;
 
         while tick < opts.max_ticks {
+            // Tickless jump: when the merge queue is drained, the next
+            // tick that can matter is the earlier of the engine's event
+            // horizon and the earliest source head. Skipped ticks are
+            // provably empty (no admission, empty outcome, no exit-
+            // condition change), so only telemetry needs accounting:
+            // each skipped tick sampled an empty merge queue. Engines
+            // without a horizon (Horizon::Unknown) run per-tick — the
+            // historical loop. The jump target is deterministic (heads
+            // are a pure function of the merged streams), so the
+            // schedule and tick count stay interleaving-independent.
+            if staged.is_empty() {
+                let next_arrival = heads.iter().flatten().map(|e| e.tick).min();
+                let target = engine
+                    .horizon()
+                    .jump_target(next_arrival, tick)
+                    .min(opts.max_ticks);
+                if target > tick + 1 {
+                    merge_depth.record_n(0, target - 1 - tick);
+                    engine.advance_to(target - 1);
+                    tick = target - 1;
+                }
+            }
             tick += 1;
             // arrivals for this tick: deterministic ordered merge into
             // the bounded merge queue, then batched admission (burst

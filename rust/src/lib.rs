@@ -97,7 +97,7 @@ pub mod prelude {
     pub use crate::engine::EngineId;
     pub use crate::metrics::{MetricSet, ScheduleMetrics};
     pub use crate::quant::Precision;
-    pub use crate::scheduler::{SosEngine, TickOutcome};
+    pub use crate::scheduler::{drive_trace, DriveStats, SosEngine, TickOutcome};
     pub use crate::sim::{hercules::HerculesSim, stannic::StannicSim, ArchSim, IterationKind};
     pub use crate::workload::{generate_trace, Trace, WorkloadSpec};
 }

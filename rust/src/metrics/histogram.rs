@@ -49,9 +49,20 @@ impl Histogram {
     }
 
     pub fn record(&mut self, v: u64) {
-        self.buckets[bucket_of(v)] += 1;
-        self.count += 1;
-        self.sum += v as u128;
+        self.record_n(v, 1);
+    }
+
+    /// Record `n` identical samples in O(1) — equivalent to calling
+    /// [`Self::record`] `n` times. Lets tickless drive loops keep
+    /// per-tick telemetry histograms bit-identical while skipping the
+    /// ticks themselves (the skipped ticks all sample the same value).
+    pub fn record_n(&mut self, v: u64, n: u64) {
+        if n == 0 {
+            return;
+        }
+        self.buckets[bucket_of(v)] += n;
+        self.count += n;
+        self.sum += (v as u128) * (n as u128);
         self.max = self.max.max(v);
     }
 
@@ -150,5 +161,23 @@ mod tests {
         let h = Histogram::new();
         assert_eq!(h.p99(), 0);
         assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn record_n_equals_repeated_record() {
+        let mut bulk = Histogram::new();
+        let mut looped = Histogram::new();
+        for (v, n) in [(0u64, 500), (3, 2), (977, 41), (12, 0)] {
+            bulk.record_n(v, n);
+            for _ in 0..n {
+                looped.record(v);
+            }
+        }
+        assert_eq!(bulk.count(), looped.count());
+        assert_eq!(bulk.mean(), looped.mean());
+        assert_eq!(bulk.max(), looped.max());
+        for q in [0.5, 0.95, 0.99] {
+            assert_eq!(bulk.quantile(q), looped.quantile(q), "q{q}");
+        }
     }
 }

@@ -77,22 +77,15 @@ pub fn depth_sweep(effort: Effort, seed: u64) -> Vec<DepthRow> {
     [2usize, 5, 10, 20, 40]
         .iter()
         .map(|&depth| {
-            // stall measurement on the raw engine
+            // stall measurement on the raw engine (event-jumping drive:
+            // stalls only happen on backlogged ticks, which are never
+            // skipped, so the count is identical to per-tick driving)
             let mut engine = SosEngine::new(5, depth, 0.5, Precision::Int8);
-            let mut events = trace.events().iter().peekable();
             let mut stalled = 0u64;
-            let mut t = 0u64;
-            loop {
-                t += 1;
-                while events.peek().is_some_and(|e| e.tick <= t) {
-                    engine.submit(events.next().expect("peeked").job.clone().expect("job"));
-                }
-                let out = engine.tick(None);
+            crate::scheduler::drive_trace(&mut engine, &trace, u64::MAX, |_, out| {
                 stalled += out.stalled as u64;
-                if engine.is_idle() && events.peek().is_none() {
-                    break;
-                }
-            }
+            })
+            .expect("depth-sweep run did not drain");
             // schedule quality through the executor
             let mut s = SosCluster::new(5, depth, 0.5, Precision::Int8);
             let sum = Cluster::new(park.clone(), ClusterConfig::default()).run(&mut s, &trace);

@@ -5,7 +5,7 @@
 use crate::bench::Table;
 use crate::core::MachinePark;
 use crate::quant::Precision;
-use crate::scheduler::SosEngine;
+use crate::scheduler::{drive_trace, SosEngine};
 use crate::workload::{generate_trace, sample_specs};
 
 use super::Effort;
@@ -35,24 +35,19 @@ fn run_one(spec_seed: (usize, u64), n_jobs: usize) -> (Vec<Vec<usize>>, f64) {
     let mut checkpoints: Vec<Vec<usize>> = Vec::with_capacity(FRACTIONS.len());
     let mut assigned = 0usize;
     let mut next_frac = 0usize;
-    let mut events = trace.events().iter().peekable();
-    let mut t = 0u64;
     // Scheduler throughput (Fig. 15b) = assignments per *active* tick —
     // ticks where the scheduler had work pending. This measures the
     // scheduler's own decision rate (the paper's near-constant jobs per
-    // clock tick), independent of workload sparsity (idle periods).
+    // clock tick), independent of workload sparsity (idle periods). A
+    // tick had backlog exactly when it assigned or stalled, so the
+    // event-jumping driver counts the same active ticks the per-tick
+    // loop did (skipped ticks never have backlog).
     let mut active_ticks = 0u64;
-    loop {
-        t += 1;
-        while events.peek().is_some_and(|e| e.tick <= t) {
-            engine.submit(events.next().expect("peeked").job.clone().expect("job"));
-        }
-        let had_backlog = engine.backlog() > 0;
-        let out = engine.tick(None);
-        if had_backlog {
+    drive_trace(&mut engine, &trace, 50_000_000, |_, out| {
+        if out.assigned.is_some() || out.stalled {
             active_ticks += 1;
         }
-        if let Some(a) = out.assigned {
+        if let Some(a) = &out.assigned {
             counts[a.machine] += 1;
             assigned += 1;
             while next_frac < FRACTIONS.len()
@@ -62,13 +57,8 @@ fn run_one(spec_seed: (usize, u64), n_jobs: usize) -> (Vec<Vec<usize>>, f64) {
                 next_frac += 1;
             }
         }
-        if engine.is_idle() && events.peek().is_none() {
-            break;
-        }
-        if t > 50_000_000 {
-            panic!("fig15 run did not drain");
-        }
-    }
+    })
+    .expect("fig15 run did not drain");
     while checkpoints.len() < FRACTIONS.len() {
         checkpoints.push(counts.clone());
     }

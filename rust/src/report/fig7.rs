@@ -7,34 +7,25 @@ use crate::core::MachinePark;
 use crate::quant::{
     alpha_error_pct, distribution_divergence, wspt_error_pct, Precision, QuantErrorReport,
 };
-use crate::scheduler::SosEngine;
+use crate::scheduler::{drive_trace, SosEngine};
 use crate::workload::{generate_trace, Trace, WorkloadSpec};
 
 use super::Effort;
 
 /// Run the SOS engine at `precision` over a trace; return jobs/machine.
+/// Tickless: the event-jumping driver executes only the ticks that can
+/// assign or release, which is what makes regenerating this figure at
+/// paper effort cheap.
 fn schedule_distribution(trace: &Trace, precision: Precision, depth: usize) -> Vec<usize> {
     let m = trace.machines();
     let mut engine = SosEngine::new(m, depth, 0.5, precision);
     let mut counts = vec![0usize; m];
-    let mut events = trace.events().iter().peekable();
-    let mut t = 0u64;
-    loop {
-        t += 1;
-        while events.peek().is_some_and(|e| e.tick <= t) {
-            engine.submit(events.next().expect("peeked").job.clone().expect("job"));
-        }
-        let out = engine.tick(None);
-        if let Some(a) = out.assigned {
+    drive_trace(&mut engine, trace, 50_000_000, |_, out| {
+        if let Some(a) = &out.assigned {
             counts[a.machine] += 1;
         }
-        if engine.is_idle() && events.peek().is_none() {
-            break;
-        }
-        if t > 50_000_000 {
-            panic!("fig7 run did not drain");
-        }
-    }
+    })
+    .expect("fig7 run did not drain");
     counts
 }
 

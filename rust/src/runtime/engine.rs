@@ -228,7 +228,6 @@ impl XlaSosEngine {
                     machine: best,
                     position: pos[best] as usize,
                     cost: cost_vec[best],
-                    cost_vector: cost_vec,
                 });
             } else {
                 out.stalled = true;

@@ -195,6 +195,9 @@ mod tests {
             // continuous: probe cost before assignment, then assign+advance
             if let Some(j) = &arr {
                 let (cc, cp) = cont.cost(j.weight as f64, j.ept[0] as f64);
+                // the tickless engine materializes virtual work lazily;
+                // sync it so the probe sees the per-tick state
+                disc.materialize();
                 let dc = cost_of(disc.schedule(0), j.weight, j.ept[0], j.wspt(0));
                 if let Some(d) = dc {
                     assert!(

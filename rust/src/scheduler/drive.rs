@@ -1,0 +1,224 @@
+//! Event-jumping trace driver for the golden engine — the drive-loop
+//! half of the tickless core.
+//!
+//! Every report generator, example and bench used to spin the same
+//! per-tick loop (`tick += 1; submit due arrivals; engine.tick(None)`),
+//! paying one engine call per *virtual* tick even across the long idle
+//! gaps and drain tails where nothing can happen. [`drive_trace`] is the
+//! shared replacement: it jumps virtual time straight to
+//! `min(next_release, next_arrival)` via [`SosEngine::next_event_tick`]
+//! and [`SosEngine::advance_to`], executing only the ticks that can
+//! produce a non-empty [`TickOutcome`]. The skipped ticks are exactly
+//! the ones a per-tick loop would observe as empty, so callbacks, final
+//! tick counts and the schedule itself are bit-identical to the
+//! historical loop — only [`DriveStats::iterations`] shrinks.
+
+use crate::bail;
+use crate::error::Result;
+use crate::workload::Trace;
+
+use super::engine::{SosEngine, TickOutcome};
+
+/// An engine's event horizon, as seen by a drive loop deciding whether
+/// it may jump virtual time. Produced by
+/// [`SosEngine::next_event_tick`] (via [`Horizon::of`]) and by
+/// `coordinator::EngineAdapter::horizon` for type-erased engines.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Horizon {
+    /// The engine cannot predict its next event — drive it one tick at
+    /// a time (the default for per-tick engines: the baselines, both
+    /// cycle-accurate simulators, and the XLA path).
+    Unknown,
+    /// Given no further submissions, every tick strictly before this
+    /// one produces an empty [`TickOutcome`], and this is the earliest
+    /// tick that can produce a non-empty one.
+    At(u64),
+    /// Nothing will ever happen again without a new submission.
+    Idle,
+}
+
+impl Horizon {
+    /// Wrap [`SosEngine::next_event_tick`]'s answer.
+    pub fn of(next_event: Option<u64>) -> Horizon {
+        match next_event {
+            Some(t) => Horizon::At(t),
+            None => Horizon::Idle,
+        }
+    }
+
+    /// The next tick a drive loop must actually execute, at virtual
+    /// time `tick` with the next known arrival (if any): the earlier of
+    /// the engine's horizon and the arrival, never before `tick + 1`.
+    /// [`Horizon::Unknown`] engines — and idle engines with nothing
+    /// arriving — get `tick + 1`, which is exactly the per-tick loop.
+    /// This is the one definition of the event-jump invariant; every
+    /// tickless drive loop (trace driver, sweep cells, serve pipeline,
+    /// lockstep verify) routes through it.
+    pub fn jump_target(self, next_arrival: Option<u64>, tick: u64) -> u64 {
+        match (self, next_arrival) {
+            (Horizon::At(t), Some(a)) => t.min(a),
+            (Horizon::At(t), None) => t,
+            (Horizon::Idle, Some(a)) => a,
+            (Horizon::Idle, None) | (Horizon::Unknown, _) => tick + 1,
+        }
+        .max(tick + 1)
+    }
+}
+
+/// What a [`drive_trace`] run consumed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DriveStats {
+    /// Virtual ticks elapsed (identical to the per-tick loop's count).
+    pub ticks: u64,
+    /// Engine-loop iterations actually executed (ticks not skipped by
+    /// event-horizon jumps). The tickless win is `ticks / iterations`.
+    pub iterations: u64,
+}
+
+/// Drive `engine` over `trace` until both are drained, jumping virtual
+/// time between events. `on_tick(tick, outcome)` fires for every
+/// *executed* tick — precisely the ticks where a per-tick loop could
+/// see a non-default outcome (arrival submission, assignment, stall or
+/// release). Errors if the trace does not drain within `max_ticks`
+/// virtual ticks (same bound a per-tick loop would enforce).
+pub fn drive_trace<F: FnMut(u64, &TickOutcome)>(
+    engine: &mut SosEngine,
+    trace: &Trace,
+    max_ticks: u64,
+    mut on_tick: F,
+) -> Result<DriveStats> {
+    let mut events = trace.events().iter().peekable();
+    let mut tick = engine.tick_no();
+    let mut iterations = 0u64;
+    loop {
+        // The next tick that can matter: the engine's event horizon or
+        // the next trace arrival, whichever comes first. An idle engine
+        // with a drained trace gets one more tick so the loop observes
+        // the drained state, exactly like the historical loop did.
+        let next_arrival = events.peek().map(|e| e.tick);
+        let target = Horizon::of(engine.next_event_tick()).jump_target(next_arrival, tick);
+        if target > max_ticks {
+            bail!("trace did not drain within {max_ticks} virtual ticks");
+        }
+        engine.advance_to(target - 1);
+        tick = target;
+        while events.peek().is_some_and(|e| e.tick <= tick) {
+            if let Some(job) = &events.next().expect("peeked").job {
+                engine.submit(job.clone());
+            }
+        }
+        let out = engine.tick(None);
+        iterations += 1;
+        on_tick(tick, &out);
+        if engine.is_idle() && events.peek().is_none() {
+            return Ok(DriveStats { ticks: tick, iterations });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::MachinePark;
+    use crate::quant::Precision;
+    use crate::workload::{generate_trace, WorkloadSpec};
+
+    fn paper_engine() -> SosEngine {
+        SosEngine::new(5, 10, 0.5, Precision::Int8)
+    }
+
+    #[test]
+    fn jumped_drive_matches_per_tick_loop() {
+        let park = MachinePark::paper_m1_m5();
+        let trace = generate_trace(&WorkloadSpec::default(), &park, 120, 17);
+
+        // reference: the historical per-tick loop
+        let mut ref_engine = paper_engine();
+        let mut ref_log: Vec<(u64, TickOutcome)> = Vec::new();
+        let mut events = trace.events().iter().peekable();
+        let mut t = 0u64;
+        let ref_ticks = loop {
+            t += 1;
+            while events.peek().is_some_and(|e| e.tick <= t) {
+                ref_engine.submit(events.next().unwrap().job.clone().unwrap());
+            }
+            let out = ref_engine.tick(None);
+            if out != TickOutcome::default() {
+                ref_log.push((t, out));
+            }
+            if ref_engine.is_idle() && events.peek().is_none() {
+                break t;
+            }
+            assert!(t < 1_000_000);
+        };
+
+        let mut engine = paper_engine();
+        let mut log: Vec<(u64, TickOutcome)> = Vec::new();
+        let stats = drive_trace(&mut engine, &trace, 1_000_000, |tick, out| {
+            if *out != TickOutcome::default() {
+                log.push((tick, out.clone()));
+            }
+        })
+        .unwrap();
+        assert_eq!(stats.ticks, ref_ticks, "virtual time is preserved");
+        assert_eq!(log, ref_log, "event streams bit-identical");
+        assert!(
+            stats.iterations <= stats.ticks,
+            "iterations {} vs ticks {}",
+            stats.iterations,
+            stats.ticks
+        );
+    }
+
+    #[test]
+    fn sparse_arrivals_skip_most_ticks() {
+        // Long inter-arrival gaps: the jump loop must execute far fewer
+        // iterations than virtual ticks elapse.
+        let park = MachinePark::paper_m1_m5();
+        let spec = WorkloadSpec::default().with_idle(500, 3);
+        let trace = generate_trace(&spec, &park, 60, 5);
+        let mut engine = paper_engine();
+        let stats = drive_trace(&mut engine, &trace, 10_000_000, |_, _| {}).unwrap();
+        assert!(
+            stats.iterations * 5 <= stats.ticks,
+            "expected >=5x fewer iterations: {} iterations over {} ticks",
+            stats.iterations,
+            stats.ticks
+        );
+    }
+
+    #[test]
+    fn undrainable_trace_errors_at_the_bound() {
+        let park = MachinePark::paper_m1_m5();
+        let trace = generate_trace(&WorkloadSpec::default(), &park, 50, 3);
+        let mut engine = paper_engine();
+        let err = drive_trace(&mut engine, &trace, 10, |_, _| {}).unwrap_err();
+        assert!(err.to_string().contains("did not drain"));
+    }
+
+    #[test]
+    fn jump_target_encodes_the_event_jump_invariant() {
+        use super::Horizon::*;
+        // earliest of horizon and arrival wins
+        assert_eq!(At(50).jump_target(Some(30), 10), 30);
+        assert_eq!(At(20).jump_target(Some(30), 10), 20);
+        assert_eq!(At(50).jump_target(None, 10), 50);
+        assert_eq!(Idle.jump_target(Some(30), 10), 30);
+        // nothing known / nothing left: the very next tick (per-tick)
+        assert_eq!(Idle.jump_target(None, 10), 11);
+        assert_eq!(Unknown.jump_target(Some(30), 10), 11);
+        assert_eq!(Unknown.jump_target(None, 10), 11);
+        // never before tick + 1, even against stale-looking inputs
+        assert_eq!(At(5).jump_target(Some(3), 10), 11);
+        assert_eq!(super::Horizon::of(Some(7)), At(7));
+        assert_eq!(super::Horizon::of(None), Idle);
+    }
+
+    #[test]
+    fn empty_trace_drains_in_one_tick() {
+        let trace = Trace::new(Vec::new(), 5);
+        let mut engine = paper_engine();
+        let stats = drive_trace(&mut engine, &trace, 100, |_, _| {}).unwrap();
+        assert_eq!(stats, DriveStats { ticks: 1, iterations: 1 });
+    }
+}

@@ -1,4 +1,4 @@
-//! The golden discrete-time SOS engine.
+//! The golden discrete-time SOS engine — tickless.
 //!
 //! One [`SosEngine::tick`] = one pass around the cyclical algorithmic
 //! flow of Fig. 2b / Fig. 9, executing (in order):
@@ -12,12 +12,34 @@
 //! 3. **Virtual work** (`F`) — the head of every non-empty schedule
 //!    accrues one cycle of virtual work.
 //!
+//! Phases 1 and 3 used to cost O(machines) on *every* tick — including
+//! the millions of pure-drain ticks at the end of a sweep cell, where
+//! nothing can change. The engine is now event-driven:
+//!
+//! * **Phase 3 is implicit.** Virtual work lives lazily in each
+//!   [`VirtualSchedule`] (`n = now - head_since`; see the vschedule
+//!   module docs): the engine never loops over machines to accrue, it
+//!   materializes a schedule only when it actually observes it (a pop or
+//!   a cost query), via `sync_to(tick - 1)`.
+//! * **Phase 1 reads an event horizon.** A min-heap of per-machine head
+//!   release ticks (`head_since + alpha_pt - n₀`, pushed whenever a head
+//!   is crowned, invalidated lazily) tells the engine exactly which
+//!   machines can pop at the current tick, so pops cost
+//!   O(pops · log machines) instead of an O(machines) scan per tick.
+//! * **Drivers can jump.** [`SosEngine::next_event_tick`] exposes the
+//!   horizon (earliest tick that can produce a non-empty
+//!   [`TickOutcome`], absent new arrivals) and
+//!   [`SosEngine::advance_to`] fast-forwards virtual time over a
+//!   provably event-free window in O(1). Per-tick driving remains fully
+//!   supported and bit-identical — the golden test pins it.
+//!
 //! Burst arrivals are serialized through the engine's internal FIFO: the
 //! SOS algorithm assumes sequential job arrival (Phase I), so at most one
 //! job is assigned per tick; the rest wait, exactly as the hardware's
 //! host interface feeds one job per scheduling iteration.
 
-use std::collections::VecDeque;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
 
 use crate::core::{Job, JobId, MachineId};
 use crate::quant::Precision;
@@ -25,7 +47,10 @@ use crate::quant::Precision;
 use super::cost::{cost_of, FULL_COST};
 use super::vschedule::{Slot, VirtualSchedule};
 
-/// Result of assigning one job (Phase II).
+/// Result of assigning one job (Phase II). The full per-machine cost
+/// vector is not stored here (it cost a heap allocation per assignment);
+/// callers that render it read [`SosEngine::last_cost_vector`] right
+/// after the tick instead.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Assignment {
     pub job: JobId,
@@ -34,8 +59,6 @@ pub struct Assignment {
     pub position: usize,
     /// Winning (minimum) cost.
     pub cost: f32,
-    /// Full per-machine cost vector (FULL_COST where the V_i was full).
-    pub cost_vector: Vec<f32>,
 }
 
 /// Everything that happened in one scheduler tick.
@@ -59,8 +82,16 @@ pub struct SosEngine {
     pending: VecDeque<Job>,
     tick_no: u64,
     /// Scratch cost vector, reused across ticks to keep the hot loop
-    /// allocation-free.
+    /// allocation-free; exposed via [`Self::last_cost_vector`].
     cost_scratch: Vec<f32>,
+    /// Event horizon: min-heap of (head release tick, machine). Entries
+    /// are pushed whenever a head is crowned and invalidated lazily —
+    /// an entry that no longer matches its machine's current head
+    /// release is stale and skipped.
+    horizon: BinaryHeap<Reverse<(u64, usize)>>,
+    /// Scratch list of machines due at the current tick (kept as a
+    /// field so pop processing allocates nothing in steady state).
+    due_scratch: Vec<usize>,
 }
 
 impl SosEngine {
@@ -80,6 +111,8 @@ impl SosEngine {
             pending: VecDeque::new(),
             tick_no: 0,
             cost_scratch: vec![0.0; machines],
+            horizon: BinaryHeap::with_capacity(machines),
+            due_scratch: Vec::with_capacity(machines),
         }
     }
 
@@ -103,12 +136,27 @@ impl SosEngine {
         self.tick_no
     }
 
+    /// One machine's virtual schedule. NOTE: the head's stored `n` is
+    /// materialized lazily; call [`Self::materialize`] first when
+    /// inspecting virtual-work counters mid-run.
     pub fn schedule(&self, m: MachineId) -> &VirtualSchedule {
         &self.schedules[m]
     }
 
+    /// All virtual schedules (same lazy-`n` caveat as [`Self::schedule`]).
     pub fn schedules(&self) -> &[VirtualSchedule] {
         &self.schedules
+    }
+
+    /// Materialize every schedule's virtual work through the current
+    /// tick, so external inspection of slot `n` values sees the same
+    /// state a per-tick engine would have after this tick's Phase III.
+    /// Purely observational — never changes scheduling decisions.
+    pub fn materialize(&mut self) {
+        let now = self.tick_no;
+        for vs in &mut self.schedules {
+            vs.sync_to(now);
+        }
     }
 
     /// Jobs waiting in the arrival FIFO (not yet assigned).
@@ -126,22 +174,89 @@ impl SosEngine {
         self.pending.push_back(job);
     }
 
+    /// The earliest future tick that can produce a non-empty
+    /// [`TickOutcome`], given no further submissions: the next tick
+    /// while the FIFO holds work (an assignment or stall happens every
+    /// tick), else the earliest head release on the event horizon, else
+    /// `None` (the engine is fully idle — nothing will ever happen
+    /// again without a new arrival). Prunes stale horizon entries.
+    pub fn next_event_tick(&mut self) -> Option<u64> {
+        if !self.pending.is_empty() {
+            return Some(self.tick_no + 1);
+        }
+        while let Some(&Reverse((release, m))) = self.horizon.peek() {
+            if self.schedules[m].head_release_tick() == Some(release) {
+                return Some(release.max(self.tick_no + 1));
+            }
+            self.horizon.pop(); // stale: that head was popped or displaced
+        }
+        None
+    }
+
+    /// Fast-forward virtual time to `tick` in O(1). The caller must
+    /// ensure the skipped window is event-free, i.e.
+    /// `tick < next_event_tick()` (and that no arrival is due inside
+    /// the window) — every skipped tick would have produced an empty
+    /// outcome, so the jump is semantically invisible: virtual work is
+    /// captured by the schedules' lazy representation.
+    pub fn advance_to(&mut self, tick: u64) {
+        assert!(tick >= self.tick_no, "virtual time cannot rewind");
+        debug_assert!(
+            self.next_event_tick().map_or(true, |e| e > tick),
+            "advance_to({tick}) would jump over a scheduler event"
+        );
+        self.tick_no = tick;
+    }
+
+    /// (Re)arm the event horizon for machine `m`'s current head, if any.
+    /// Called whenever a head is crowned (pop revealing a successor, or
+    /// an insert landing at position 0). Old entries for the machine are
+    /// not removed — they become stale and are skipped lazily.
+    fn arm_horizon(&mut self, m: usize) {
+        if let Some(release) = self.schedules[m].head_release_tick() {
+            self.horizon.push(Reverse((release, m)));
+        }
+    }
+
     /// Run one scheduler tick; `arrival` is this tick's new job, if any.
     pub fn tick(&mut self, arrival: Option<&Job>) -> TickOutcome {
         self.tick_no += 1;
+        let now = self.tick_no;
         if let Some(j) = arrival {
             self.pending.push_back(j.clone());
         }
 
         let mut out = TickOutcome::default();
 
-        // (1) POP iteration part: alpha-ready heads release to machines.
-        for (m, vs) in self.schedules.iter_mut().enumerate() {
-            if vs.head().is_some_and(|h| h.ready()) {
-                let slot = vs.pop_head().expect("head checked above");
-                out.released.push((slot.id, m));
+        // (1) POP iteration part: only machines whose horizon entry is
+        // due can possibly release. Releases must be reported in
+        // machine-index order (matching the historical O(M) scan), so
+        // collect, sort, dedupe, then process.
+        let mut due = std::mem::take(&mut self.due_scratch);
+        while let Some(&Reverse((release, m))) = self.horizon.peek() {
+            if release > now {
+                break;
             }
+            self.horizon.pop();
+            due.push(m);
         }
+        if !due.is_empty() {
+            due.sort_unstable();
+            due.dedup();
+            for &m in &due {
+                let vs = &mut self.schedules[m];
+                vs.sync_to(now - 1);
+                if vs.head().is_some_and(|h| h.ready()) {
+                    let slot = vs.pop_head().expect("head checked above");
+                    out.released.push((slot.id, m));
+                    self.arm_horizon(m); // successor head, if any
+                }
+                // else: a stale entry fired early; the machine's real
+                // head keeps its own (future) horizon entry.
+            }
+            due.clear();
+        }
+        self.due_scratch = due;
 
         // (2) Insert iteration part: assign the oldest pending arrival.
         if !self.pending.is_empty() {
@@ -154,19 +269,21 @@ impl SosEngine {
             }
         }
 
-        // (3) Standard iteration part: heads accrue virtual work.
-        for vs in &mut self.schedules {
-            vs.accrue();
-        }
-
+        // (3) Standard iteration part: virtual work accrues implicitly —
+        // each schedule materializes `now - synced_at` cycles on its
+        // head the next time it is observed.
         out
     }
 
     /// Phase II machine assignment: cost all machines, argmin, insert.
     fn assign(&mut self, job: &Job) -> Assignment {
         debug_assert_eq!(job.fanout(), self.schedules.len());
+        let now = self.tick_no;
         let mut best: Option<(usize, f32, usize)> = None; // (machine, cost, pos)
-        for (m, vs) in self.schedules.iter().enumerate() {
+        for (m, vs) in self.schedules.iter_mut().enumerate() {
+            // cost is computed over the post-pop state with virtual work
+            // through the previous tick's Phase III
+            vs.sync_to(now - 1);
             let (j_w, j_eps, j_t) = self.precision.q_job(job.weight, job.ept[m]);
             match cost_of(vs, j_w, j_eps, j_t) {
                 Some(c) => {
@@ -196,13 +313,26 @@ impl SosEngine {
         let inserted_at = self.schedules[machine].insert(slot);
         debug_assert_eq!(inserted_at, position, "cost position == insert position");
         debug_assert!(self.schedules[machine].is_properly_ordered());
+        if inserted_at == 0 {
+            // the newcomer is the head (fresh schedule or displacement):
+            // its release defines the machine's next horizon event
+            self.arm_horizon(machine);
+        }
         Assignment {
             job: job.id,
             machine,
             position,
             cost,
-            cost_vector: self.cost_scratch.clone(),
         }
+    }
+
+    /// Full per-machine cost vector of the most recent assignment
+    /// (`FULL_COST` where the V_i was full) — borrowed from the engine's
+    /// scratch, valid until the next assignment. This replaces the old
+    /// per-assignment `Assignment.cost_vector` clone so the steady-state
+    /// assign path allocates nothing.
+    pub fn last_cost_vector(&self) -> &[f32] {
+        &self.cost_scratch
     }
 
     /// Drain-mode tick: no arrivals, just pops + virtual work. Used to
@@ -235,7 +365,7 @@ mod tests {
         assert_eq!(a.machine, 1); // cost = W*eps = 100/20/60
         assert_eq!(a.cost, 20.0);
         assert_eq!(a.position, 0);
-        assert_eq!(a.cost_vector, vec![100.0, 20.0, 60.0]);
+        assert_eq!(e.last_cost_vector(), &[100.0, 20.0, 60.0][..]);
     }
 
     #[test]
@@ -344,5 +474,85 @@ mod tests {
         assert_eq!(s.weight, 4.0);
         assert_eq!(s.ept, 42.0);
         assert_eq!(s.alpha_pt, 21);
+    }
+
+    #[test]
+    fn next_event_tick_predicts_the_release() {
+        let mut e = SosEngine::new(2, 4, 0.5, Precision::Fp32);
+        assert_eq!(e.next_event_tick(), None, "fresh engine has no events");
+        e.submit(job(1, 2.0, vec![10.0, 50.0])); // lands on m0, alpha_pt 5
+        assert_eq!(e.next_event_tick(), Some(1), "pending arrival = next tick");
+        e.tick(None); // assign at tick 1
+        // accrues ticks 1..=5, pops at tick 6
+        assert_eq!(e.next_event_tick(), Some(6));
+        // per-tick driving confirms the prediction
+        for t in 2..=5u64 {
+            let out = e.tick(None);
+            assert_eq!(out, TickOutcome::default(), "tick {t} must be empty");
+        }
+        let out = e.tick(None);
+        assert_eq!(out.released, vec![(1, 0)]);
+        assert_eq!(e.next_event_tick(), None, "drained: no further events");
+    }
+
+    #[test]
+    fn advance_to_skips_exactly_the_empty_window() {
+        // Two engines over the same scenario: one ticked, one jumped.
+        let drive = |jump: bool| -> (u64, TickOutcome) {
+            let mut e = SosEngine::new(2, 4, 0.5, Precision::Int8);
+            e.submit(job(1, 8.0, vec![40.0, 90.0])); // alpha_pt = 20 on m0
+            e.tick(None); // tick 1: assign
+            let release = e.next_event_tick().expect("release scheduled");
+            if jump {
+                e.advance_to(release - 1);
+            } else {
+                for _ in e.tick_no()..release - 1 {
+                    assert_eq!(e.tick(None), TickOutcome::default());
+                }
+            }
+            assert_eq!(e.tick_no(), release - 1);
+            (release, e.tick(None))
+        };
+        let (rt, ticked) = drive(false);
+        let (rj, jumped) = drive(true);
+        assert_eq!(rt, rj);
+        assert_eq!(ticked, jumped);
+        assert_eq!(ticked.released, vec![(1, 0)]);
+    }
+
+    #[test]
+    fn horizon_survives_head_displacement() {
+        // A higher-priority newcomer displaces the head; the stale
+        // horizon entry must not cause an early pop, and the new head's
+        // release must be predicted correctly.
+        let mut e = SosEngine::new(1, 4, 1.0, Precision::Fp32);
+        e.tick(Some(&job(1, 1.0, vec![100.0]))); // T=0.01, alpha_pt=100
+        assert_eq!(e.next_event_tick(), Some(101));
+        e.tick(Some(&job(2, 50.0, vec![10.0]))); // T=5 takes the head, alpha_pt=10
+        // new head crowned at tick 2, accrues 2..=11, pops at 12
+        assert_eq!(e.next_event_tick(), Some(12));
+        e.advance_to(11);
+        let out = e.tick(None);
+        assert_eq!(out.released, vec![(2, 0)]);
+        // job 1 resumes at the head with its retained n=1: crowned at
+        // tick 12 (synced through 11), needs 99 more cycles -> pops at
+        // 12 + 99 = 111
+        assert_eq!(e.next_event_tick(), Some(111));
+        e.advance_to(110);
+        assert_eq!(e.tick(None).released, vec![(1, 0)]);
+        assert!(e.is_idle());
+    }
+
+    #[test]
+    fn materialize_exposes_per_tick_virtual_work() {
+        let mut e = SosEngine::new(1, 4, 0.5, Precision::Int8);
+        e.tick(Some(&job(1, 8.0, vec![40.0]))); // alpha_pt = 20
+        for _ in 0..5 {
+            e.tick(None);
+        }
+        // lazily the stored n may lag; materialized it must equal the
+        // eager engine's count (assigned at tick 1, accrued ticks 1..=6)
+        e.materialize();
+        assert_eq!(e.schedule(0).head().unwrap().n, 6);
     }
 }

@@ -8,10 +8,12 @@
 
 mod continuous;
 mod cost;
+mod drive;
 mod engine;
 mod vschedule;
 
 pub use continuous::ContinuousSos;
 pub use cost::{cost_of, CostBreakdown, FULL_COST};
+pub use drive::{drive_trace, DriveStats, Horizon};
 pub use engine::{Assignment, SosEngine, TickOutcome};
 pub use vschedule::{Slot, VirtualSchedule};

@@ -13,23 +13,57 @@
 //! * `memo_lo[i]` = suffix `Σ_{j>=i} rem_lo(j)` — the value `sum^L`
 //!   takes when slot `i` is the first member of `sigma^L`.
 //!
-//! `hi_bias` turns the per-tick accrue (which decrements *every* prefix
-//! by 1, because every prefix contains the head) into a single scalar
-//! add, keeping accrue O(1) like the pre-memoization code. With the
-//! quantized datapaths (integer W/eps, fixed-point T) every update is
-//! exact in f32, so the memoized reads are *bit-identical* to the
-//! rescans — pinned by the golden-schedule test, the cross-engine
-//! parity checks, and `prop_vschedule_memoized_sums_exact`.
+//! # Lazy virtual work (the tickless representation)
 //!
-//! Exactness is a *datapath property*: it holds for the fixed-point
-//! WSPT schemes (INT8/INT4/Mixed — integer W/eps, UQ-format T, all
-//! sums well inside f32's exact range) but not for FP32/FP16, where
-//! `T = W/eps` carries enough significand that incremental updates can
-//! round differently than a fresh rescan. The engine therefore enables
-//! memoization per precision ([`VirtualSchedule::with_memoization`]):
-//! floating datapaths keep the original rescan in `threshold_read`, so
-//! their schedules stay bit-identical to the pre-memoization code (and
-//! to the SOSC/SIMD baselines) by construction.
+//! The discretized algorithm accrues one cycle of virtual work on every
+//! head per tick (Phase III). Mutating every machine every tick is
+//! exactly the O(machines)-per-tick scan the paper's hardware avoids, so
+//! the schedule stores virtual work *implicitly*: [`Self::synced_at`] is
+//! the virtual tick through which the head's stored `n` is materialized,
+//! and [`Self::sync_to`] fast-forwards the gap in O(1) —
+//! `n += k`, `hi_bias += k`, `memo_lo[head] -= k * wspt` for a gap of
+//! `k` ticks (the per-tick [`Self::accrue`] is the `k = 1` case, kept
+//! for the per-tick baselines and tests). Equivalently the head's
+//! virtual work is `n = now - head_since`; the engine only pays to
+//! materialize it when the schedule is actually observed (a pop check or
+//! a cost query), which is what makes event-horizon jumps over idle
+//! drain tails free.
+//!
+//! **Why fast-forward is exact, per datapath:** `n` is a `u32`, so
+//! `n += k` is bit-identical to `k` unit increments for *every*
+//! precision; non-memoized (floating-datapath) schedules recompute
+//! `rem_hi`/`rem_lo` from `n` on read and are therefore unaffected by
+//! how `n` advanced. For the memoized fixed-point datapaths
+//! (INT8/INT4/Mixed), every quantity is a multiple of the WSPT fixed
+//! step (2^-4 for UQ4.4, 2^-2 for UQ2.2) and bounded far below f32's
+//! exact-integer range, so `hi_bias += k` and `memo_lo -= k * wspt` are
+//! exact and bit-equal to `k` repeated unit updates. The golden test,
+//! the cross-engine parity suites and `tests/tickless.rs` pin this.
+//!
+//! `hi_bias` turns the accrue (which decrements *every* prefix by the
+//! head's progress, because every prefix contains the head) into a
+//! single scalar add, keeping accrue O(1) like the pre-memoization code.
+//!
+//! Exactness of the *memoized reads* is a datapath property: it holds
+//! for the fixed-point WSPT schemes (INT8/INT4/Mixed — integer W/eps,
+//! UQ-format T, all sums well inside f32's exact range) but not for
+//! FP32/FP16, where `T = W/eps` carries enough significand that
+//! incremental updates can round differently than a fresh rescan. The
+//! engine therefore enables memoization per precision
+//! ([`VirtualSchedule::with_memoization`]): floating datapaths keep the
+//! original rescan in `threshold_read`, so their schedules stay
+//! bit-identical to the pre-memoization code (and to the SOSC/SIMD
+//! baselines) by construction.
+//!
+//! # O(1) pops
+//!
+//! Slots live in a front-offset buffer: [`Self::pop_head`] advances
+//! `start` instead of shifting `slots`/`memo_hi`/`memo_lo` left, so a
+//! pop is O(1) (the bias representation absorbs the PE array's `Δα`
+//! broadcast as one scalar add). [`Self::slots`] stays a contiguous
+//! `&[Slot]` view; the dead prefix is reclaimed on the next insert
+//! (which is O(depth) anyway for the positional shift), so the buffer
+//! never grows past `depth` dead plus `depth` live entries.
 
 use crate::core::JobId;
 
@@ -69,27 +103,37 @@ impl Slot {
 
 /// A WSPT-ordered virtual schedule of bounded depth (the paper's `V_i`
 /// with capacity `N`). Ordering invariant: non-increasing `wspt` from
-/// head (index 0) to tail — Definition 4's "properly ordered" property,
-/// minus the systolic bubbles (a `Vec` has none by construction).
-#[derive(Debug, Clone, PartialEq)]
+/// head to tail — Definition 4's "properly ordered" property, minus the
+/// systolic bubbles (the live view has none by construction).
+#[derive(Debug, Clone)]
 pub struct VirtualSchedule {
+    /// Backing buffer; the live schedule is `slots[start..]`.
     slots: Vec<Slot>,
     depth: usize,
-    /// Memoized prefix sums: `memo_hi[i] - hi_bias == Σ_{j<=i} rem_hi(j)`.
+    /// Memoized prefix sums over the live range:
+    /// `memo_hi[i] - hi_bias == Σ_{start <= j <= i} rem_hi(j)`.
     memo_hi: Vec<f32>,
-    /// Memoized suffix sums: `memo_lo[i] == Σ_{j>=i} rem_lo(j)`.
+    /// Memoized suffix sums over the live range:
+    /// `memo_lo[i] == Σ_{j >= i} rem_lo(j)`.
     memo_lo: Vec<f32>,
     /// Shared subtrahend for `memo_hi` (see module docs).
     hi_bias: f32,
     /// Whether memoized threshold reads are enabled (exact datapaths
     /// only); when false, `threshold_read` falls back to the rescans.
     memoized: bool,
+    /// Ring offset of the head inside `slots`/`memo_hi`/`memo_lo`.
+    start: usize,
+    /// Virtual tick through which the head's virtual work is
+    /// materialized (lazy-`n`; see module docs). Only meaningful for
+    /// owners that drive the schedule through [`Self::sync_to`].
+    synced_at: u64,
 }
 
 /// Rebase `hi_bias` back to 0 before it grows past the f32 exact-integer
-/// range (2^24), where `hi_bias + 1.0` would stop changing the value.
-/// The bias grows by 1 per accrued head cycle, so this only triggers on
-/// schedules continuously occupied for ~8M ticks.
+/// range (2^24), where adding small increments would stop changing the
+/// value. The bias grows with accrued head cycles and absorbed pop
+/// deltas, so this only triggers on schedules continuously occupied for
+/// ~8M ticks.
 const HI_BIAS_REBASE: f32 = 8_388_608.0; // 2^23
 
 impl VirtualSchedule {
@@ -117,6 +161,8 @@ impl VirtualSchedule {
             memo_lo: Vec::with_capacity(depth),
             hi_bias: 0.0,
             memoized,
+            start: 0,
+            synced_at: 0,
         }
     }
 
@@ -127,17 +173,17 @@ impl VirtualSchedule {
 
     #[inline]
     pub fn len(&self) -> usize {
-        self.slots.len()
+        self.slots.len() - self.start
     }
 
     #[inline]
     pub fn is_empty(&self) -> bool {
-        self.slots.is_empty()
+        self.start == self.slots.len()
     }
 
     #[inline]
     pub fn is_full(&self) -> bool {
-        self.slots.len() == self.depth
+        self.len() == self.depth
     }
 
     #[inline]
@@ -147,11 +193,18 @@ impl VirtualSchedule {
 
     #[inline]
     pub fn head(&self) -> Option<&Slot> {
-        self.slots.first()
+        self.slots.get(self.start)
     }
 
+    /// Contiguous view of the live schedule, head first.
     pub fn slots(&self) -> &[Slot] {
-        &self.slots
+        &self.slots[self.start..]
+    }
+
+    /// Virtual tick through which the head's stored `n` is materialized.
+    #[inline]
+    pub fn synced_at(&self) -> u64 {
+        self.synced_at
     }
 
     /// Insertion index for a job with WSPT `t`: after every job with
@@ -160,12 +213,26 @@ impl VirtualSchedule {
     /// invariant (non-increasing `wspt`) makes `wspt >= t` a prefix
     /// property, so this is an O(log depth) binary search.
     pub fn position_for(&self, t: f32) -> usize {
-        self.slots.partition_point(|s| s.wspt >= t)
+        self.slots[self.start..].partition_point(|s| s.wspt >= t)
+    }
+
+    /// Reclaim the dead prefix left behind by O(1) pops so positional
+    /// insertion can index from 0 again.
+    fn compact(&mut self) {
+        if self.start == 0 {
+            return;
+        }
+        self.slots.drain(..self.start);
+        if self.memoized {
+            self.memo_hi.drain(..self.start);
+            self.memo_lo.drain(..self.start);
+        }
+        self.start = 0;
     }
 
     /// Insert a job at its WSPT position. Panics if full (the scheduler
     /// must never select a full machine — Section 6.2.2 "full V_i s can
-    /// not be assigned new jobs").
+    /// not be assigned new jobs"). Returns the insertion index.
     ///
     /// Memo maintenance mirrors the PE array's Insert iteration (Table
     /// 2): slots behind the newcomer gain `rem_hi(new)` in their prefix,
@@ -173,6 +240,7 @@ impl VirtualSchedule {
     /// own sums extend its neighbours'.
     pub fn insert(&mut self, slot: Slot) -> usize {
         assert!(!self.is_full(), "insert into full virtual schedule");
+        self.compact();
         let pos = self.position_for(slot.wspt);
         if self.memoized {
             let rem_hi = slot.rem_hi();
@@ -193,44 +261,87 @@ impl VirtualSchedule {
         pos
     }
 
-    /// Remove and return the head job (a POP iteration's release).
+    /// Remove and return the head job (a POP iteration's release) — O(1).
     ///
     /// The departing head leaves every remaining prefix, so every true
     /// prefix drops by `rem_hi(head)` — the PE array's `Δα` broadcast —
     /// which the bias representation absorbs as one scalar add. Suffixes
-    /// never contained a slot to their left and are untouched.
+    /// never contained a slot to their left and are untouched; the head
+    /// entry itself is retired by advancing the ring offset.
     pub fn pop_head(&mut self) -> Option<Slot> {
-        if self.slots.is_empty() {
+        if self.is_empty() {
             return None;
         }
         if self.memoized {
-            let delta_alpha = self.memo_hi[0] - self.hi_bias;
-            self.memo_hi.remove(0);
-            self.memo_lo.remove(0);
-            // reset the bias whenever the schedule drains (len 1 here
-            // means empty after the remove below) so it can't creep
-            self.hi_bias = if self.slots.len() == 1 { 0.0 } else { self.hi_bias + delta_alpha };
+            let delta_alpha = self.memo_hi[self.start] - self.hi_bias;
+            self.hi_bias += delta_alpha;
         }
-        Some(self.slots.remove(0))
+        let slot = self.slots[self.start];
+        self.start += 1;
+        if self.is_empty() {
+            // reset the ring and the bias whenever the schedule drains
+            // so neither can creep
+            self.slots.clear();
+            self.memo_hi.clear();
+            self.memo_lo.clear();
+            self.start = 0;
+            self.hi_bias = 0.0;
+        }
+        Some(slot)
     }
 
-    /// One cycle of virtual work on the head (Phase III discrete form).
-    /// The head's `rem_hi` drops by 1 (bias add covers every prefix) and
-    /// its `rem_lo` by its stored WSPT (only suffix 0 contains the head).
-    pub fn accrue(&mut self) {
-        if let Some(h) = self.slots.first_mut() {
-            h.n += 1;
-            if self.memoized {
-                self.hi_bias += 1.0;
-                self.memo_lo[0] -= h.wspt;
-                if self.hi_bias >= HI_BIAS_REBASE {
-                    for m in &mut self.memo_hi {
-                        *m -= self.hi_bias;
-                    }
-                    self.hi_bias = 0.0;
+    /// Apply `k` cycles of virtual work to the head in O(1): the head's
+    /// `rem_hi` drops by `k` (bias add covers every prefix) and its
+    /// `rem_lo` by `k` times its stored WSPT (only the head suffix
+    /// contains the head). Bit-equal to `k` single-cycle accrues on
+    /// every datapath (see module docs).
+    fn advance_head(&mut self, k: u64) {
+        let Some(h) = self.slots.get_mut(self.start) else {
+            return;
+        };
+        debug_assert!(k <= u32::MAX as u64, "virtual-work jump overflows n");
+        h.n += k as u32;
+        if self.memoized {
+            let kf = k as f32;
+            self.hi_bias += kf;
+            self.memo_lo[self.start] -= kf * h.wspt;
+            if self.hi_bias >= HI_BIAS_REBASE {
+                for m in &mut self.memo_hi[self.start..] {
+                    *m -= self.hi_bias;
                 }
+                self.hi_bias = 0.0;
             }
         }
+    }
+
+    /// One cycle of virtual work on the head (Phase III discrete form) —
+    /// the per-tick spelling of [`Self::sync_to`], used by per-tick
+    /// drivers and tests that do not track virtual time.
+    pub fn accrue(&mut self) {
+        self.advance_head(1);
+    }
+
+    /// Materialize the head's virtual work through virtual tick `now`
+    /// (lazy-`n` fast-forward). Owners that use this must route *all*
+    /// accrual through it (never mix with [`Self::accrue`]); `now` must
+    /// be monotone.
+    pub fn sync_to(&mut self, now: u64) {
+        debug_assert!(now >= self.synced_at, "virtual time cannot rewind");
+        let k = now - self.synced_at;
+        self.synced_at = now;
+        if k > 0 {
+            self.advance_head(k);
+        }
+    }
+
+    /// The virtual tick at whose start the current head is (or becomes)
+    /// alpha-ready, i.e. the tick a per-tick driver would pop it on.
+    /// Sync-invariant: `synced_at + 1 + (alpha_pt - n)` gives the same
+    /// tick at any materialization level, so the engine's event horizon
+    /// can read it without paying a sync.
+    pub fn head_release_tick(&self) -> Option<u64> {
+        let h = self.head()?;
+        Some(self.synced_at + 1 + u64::from(h.alpha_pt.saturating_sub(h.n)))
     }
 
     /// Threshold read for a probe priority `t`: the insertion position
@@ -247,7 +358,7 @@ impl VirtualSchedule {
             let mut sum_hi = 0.0f32;
             let mut sum_lo = 0.0f32;
             let mut pos = 0usize;
-            for s in &self.slots {
+            for s in &self.slots[self.start..] {
                 if s.wspt >= t {
                     sum_hi += s.rem_hi();
                     pos += 1;
@@ -258,8 +369,12 @@ impl VirtualSchedule {
             return (sum_hi, sum_lo, pos);
         }
         let pos = self.position_for(t);
-        let sum_hi = if pos > 0 { self.memo_hi[pos - 1] - self.hi_bias } else { 0.0 };
-        let sum_lo = self.memo_lo.get(pos).copied().unwrap_or(0.0);
+        let sum_hi = if pos > 0 {
+            self.memo_hi[self.start + pos - 1] - self.hi_bias
+        } else {
+            0.0
+        };
+        let sum_lo = self.memo_lo.get(self.start + pos).copied().unwrap_or(0.0);
         (sum_hi, sum_lo, pos)
     }
 
@@ -267,7 +382,7 @@ impl VirtualSchedule {
     /// Reference rescan — the memoized [`Self::threshold_read`] must
     /// agree with it (exactly, under quantized datapaths).
     pub fn sum_hi(&self, t: f32) -> f32 {
-        self.slots
+        self.slots[self.start..]
             .iter()
             .filter(|s| s.wspt >= t)
             .map(|s| s.rem_hi())
@@ -277,7 +392,7 @@ impl VirtualSchedule {
     /// `sum^L` of Eq. (5): remaining-weight mass of jobs with priority < t.
     /// Reference rescan counterpart of [`Self::threshold_read`].
     pub fn sum_lo(&self, t: f32) -> f32 {
-        self.slots
+        self.slots[self.start..]
             .iter()
             .filter(|s| s.wspt < t)
             .map(|s| s.rem_lo())
@@ -286,7 +401,9 @@ impl VirtualSchedule {
 
     /// Check the ordering invariant (used by tests and debug assertions).
     pub fn is_properly_ordered(&self) -> bool {
-        self.slots.windows(2).all(|w| w[0].wspt >= w[1].wspt)
+        self.slots[self.start..]
+            .windows(2)
+            .all(|w| w[0].wspt >= w[1].wspt)
     }
 
     /// True when no non-head job carries virtual work. NOTE: this is not
@@ -295,7 +412,7 @@ impl VirtualSchedule {
     /// `n_K(t)` per job); it merely stops accruing until it regains the
     /// head. The property holds only while no displacement has occurred.
     pub fn vw_only_at_head(&self) -> bool {
-        self.slots.iter().skip(1).all(|s| s.n == 0)
+        self.slots[self.start..].iter().skip(1).all(|s| s.n == 0)
     }
 }
 
@@ -467,5 +584,92 @@ mod tests {
         assert_eq!(v.pop_head().unwrap().id, 2);
         assert_eq!(v.pop_head().unwrap().id, 1);
         assert!(v.pop_head().is_none());
+    }
+
+    #[test]
+    fn ring_offset_keeps_views_contiguous_across_interleaved_ops() {
+        // Pops advance the offset instead of shifting; inserts compact
+        // and re-index. The observable views (slots(), sums, positions)
+        // must behave as if the buffer were always front-aligned.
+        for memoized in [false, true] {
+            let mut v = VirtualSchedule::with_memoization(6, memoized);
+            v.insert(slot(1, 60.0, 20.0)); // T=3.0
+            v.insert(slot(2, 40.0, 20.0)); // T=2.0
+            v.insert(slot(3, 20.0, 20.0)); // T=1.0
+            assert_eq!(v.pop_head().unwrap().id, 1);
+            assert_eq!(v.len(), 2);
+            assert_eq!(v.slots().iter().map(|s| s.id).collect::<Vec<_>>(), [2, 3]);
+            // insert after a pop: compaction must land the newcomer at
+            // its WSPT position within the live range
+            let pos = v.insert(slot(4, 30.0, 20.0)); // T=1.5 -> between 2 and 3
+            assert_eq!(pos, 1);
+            assert_eq!(
+                v.slots().iter().map(|s| s.id).collect::<Vec<_>>(),
+                [2, 4, 3]
+            );
+            assert!(v.is_properly_ordered());
+            for probe in [0.5f32, 1.0, 1.5, 2.0, 9.0] {
+                let (hi, lo, pos) = v.threshold_read(probe);
+                assert_eq!(hi, v.sum_hi(probe), "memoized={memoized} probe {probe}");
+                assert_eq!(lo, v.sum_lo(probe), "memoized={memoized} probe {probe}");
+                assert_eq!(pos, v.position_for(probe));
+            }
+            // drain completely; the ring must reset
+            assert_eq!(v.pop_head().unwrap().id, 2);
+            assert_eq!(v.pop_head().unwrap().id, 4);
+            assert_eq!(v.pop_head().unwrap().id, 3);
+            assert!(v.is_empty());
+            assert!(v.pop_head().is_none());
+            // and be reusable afterwards
+            v.insert(slot(5, 10.0, 20.0));
+            assert_eq!(v.head().unwrap().id, 5);
+        }
+    }
+
+    #[test]
+    fn sync_to_fast_forward_matches_per_tick_accrue() {
+        // The lazy representation must be bit-identical to ticking: for
+        // every datapath-relevant shape, advancing k ticks in one jump
+        // produces the same slots and the same threshold reads as k
+        // single accrues.
+        for memoized in [false, true] {
+            let build = |mem: bool| {
+                let mut v = VirtualSchedule::with_memoization(8, mem);
+                v.insert(slot(1, 40.0, 20.0)); // T=2.0
+                v.insert(slot(2, 20.0, 20.0)); // T=1.0
+                v.insert(slot(3, 10.0, 20.0)); // T=0.5
+                v
+            };
+            let mut ticked = build(memoized);
+            let mut jumped = build(memoized);
+            for now in 1..=7u64 {
+                ticked.sync_to(now); // k = 1 each call
+            }
+            jumped.sync_to(7); // one k = 7 jump
+            assert_eq!(ticked.slots(), jumped.slots(), "memoized={memoized}");
+            assert_eq!(ticked.synced_at(), jumped.synced_at());
+            for probe in [0.1f32, 0.5, 1.0, 2.0, 9.0] {
+                assert_eq!(
+                    ticked.threshold_read(probe),
+                    jumped.threshold_read(probe),
+                    "memoized={memoized} probe {probe}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn head_release_tick_is_sync_invariant() {
+        let mut v = VirtualSchedule::new(4);
+        assert_eq!(v.head_release_tick(), None);
+        v.insert(slot(1, 10.0, 20.0)); // alpha_pt = 10
+        // crowned with synced_at = 0: ready after 10 accruals (ticks
+        // 1..=10), so a per-tick driver pops it at tick 11
+        assert_eq!(v.head_release_tick(), Some(11));
+        v.sync_to(4);
+        assert_eq!(v.head_release_tick(), Some(11), "invariant under sync");
+        v.sync_to(10);
+        assert!(v.head().unwrap().ready());
+        assert_eq!(v.head_release_tick(), Some(11), "ready head pops next tick");
     }
 }

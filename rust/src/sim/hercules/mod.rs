@@ -20,7 +20,7 @@ use std::collections::VecDeque;
 
 use crate::core::Job;
 use crate::quant::Precision;
-use crate::scheduler::{Assignment, TickOutcome, FULL_COST};
+use crate::scheduler::{Assignment, TickOutcome};
 use crate::sim::{ArchSim, IterationKind, IterationStats};
 
 use alpha_check::AlphaCheck;
@@ -79,7 +79,6 @@ impl HerculesSim {
         // Phase II: each machine's CC computes concurrently; the CR scans
         // costs iteratively (lowest index wins ties).
         let m_count = self.slices.len();
-        let mut cost_vec = vec![FULL_COST; m_count];
         let mut best: Option<(usize, f32, usize)> = None;
         for m in 0..m_count {
             if self.slices[m].vsm.is_full() {
@@ -87,7 +86,6 @@ impl HerculesSim {
             }
             let (j_w, j_eps, j_t) = self.precision.q_job(job.weight, job.ept[m]);
             let out = cost_calculator(self.slices[m].jmm.bank(), j_w, j_eps, j_t);
-            cost_vec[m] = out.cost;
             if best.map_or(true, |(_, bc, _)| out.cost < bc) {
                 best = Some((m, out.cost, out.index));
             }
@@ -116,7 +114,6 @@ impl HerculesSim {
             machine,
             position: index,
             cost,
-            cost_vector: cost_vec,
         }
     }
 }

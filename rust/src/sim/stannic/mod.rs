@@ -84,12 +84,10 @@ impl StannicSim {
         // iterative comparator scans machines in index order (ties keep
         // the earlier machine, matching the golden engine).
         let m_count = self.smmus.len();
-        let mut cost_vec = vec![FULL_COST; m_count];
         let mut best: Option<(usize, f32, ThresholdRead)> = None;
         for m in 0..m_count {
             let (j_w, j_eps, j_t) = self.precision.q_job(job.weight, job.ept[m]);
             let (c, read) = self.smmus[m].cost(j_w, j_eps, j_t);
-            cost_vec[m] = c;
             if c < FULL_COST && best.as_ref().map_or(true, |&(_, bc, _)| c < bc) {
                 best = Some((m, c, read));
             }
@@ -105,7 +103,6 @@ impl StannicSim {
             machine,
             position: read.pos,
             cost,
-            cost_vector: cost_vec,
         }
     }
 }

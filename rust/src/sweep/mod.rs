@@ -179,6 +179,16 @@ impl SweepConfig {
 
 /// Run one cell to completion (single-threaded; deterministic except for
 /// the measured `wall_ns`).
+///
+/// Tickless: engines that expose an event horizon
+/// ([`crate::scheduler::Horizon::At`], today the golden `sos` engine)
+/// have their event-free windows jumped instead of ticked — the
+/// virtual-tick counter, metrics and digests are bit-identical to
+/// per-tick driving (skipped ticks are exactly the ones that produce
+/// empty outcomes, and the per-tick utilization samples are
+/// bulk-accounted since occupancy cannot change inside a jumped
+/// window). [`crate::scheduler::Horizon::Unknown`] engines run
+/// per-tick, which is the historical loop unchanged.
 pub fn run_cell(cell: &SweepCell) -> CellResult {
     let wall_started = Instant::now();
     // cycled(5) is exactly the paper M1-M5 park, so one constructor
@@ -200,7 +210,16 @@ pub fn run_cell(cell: &SweepCell) -> CellResult {
     let mut tick = 0u64;
 
     loop {
-        tick += 1;
+        let next_arrival = events.peek().map(|e| e.tick);
+        let target = engine.horizon().jump_target(next_arrival, tick);
+        if target > tick + 1 {
+            // event-free window: machine occupancy cannot change, so the
+            // per-tick utilization samples are all equal — bulk them
+            let busy = in_flight.iter().filter(|&&n| n > 0).count() as u64;
+            busy_machine_ticks += (target - 1 - tick) * busy;
+            engine.advance_to(target - 1);
+        }
+        tick = target;
         while events.peek().is_some_and(|e| e.tick <= tick) {
             let e = events.next().expect("peeked");
             if let Some(job) = &e.job {
@@ -467,6 +486,27 @@ mod tests {
         assert_eq!(sim.cell.engine, EngineId::StannicSim);
         assert_eq!(sos.accel_cycles, 0, "software engine has no cycle model");
         assert!(sim.accel_cycles > 0);
+    }
+
+    #[test]
+    fn tickless_sos_cell_matches_per_tick_engines() {
+        // The sos cell is driven with event-horizon jumps; sosc runs the
+        // historical per-tick loop. Every deterministic field — virtual
+        // tick count, stalls, latency percentiles, utilization — must be
+        // bit-identical, proving the jumps are semantically invisible.
+        let mut cfg = tiny();
+        cfg.engines = vec![EngineId::Sos, EngineId::Sosc];
+        let results = run_sweep(&cfg);
+        let a = &results.cells[0];
+        let b = &results.cells[1];
+        assert_eq!(a.cell.engine, EngineId::Sos);
+        assert_eq!(b.cell.engine, EngineId::Sosc);
+        assert_eq!(a.ticks, b.ticks, "virtual time preserved across the jumps");
+        assert_eq!(a.stalls, b.stalls);
+        assert_eq!((a.p50, a.p95, a.p99), (b.p50, b.p95, b.p99));
+        assert_eq!(a.metrics.jobs_per_machine, b.metrics.jobs_per_machine);
+        assert_eq!(a.metrics.avg_latency, b.metrics.avg_latency);
+        assert_eq!(a.utilization, b.utilization, "bulk-accounted samples exact");
     }
 
     #[test]

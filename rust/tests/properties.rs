@@ -133,6 +133,9 @@ fn prop_stannic_memoized_sums_exact() {
             }
             golden.tick(None);
             ArchSim::tick(&mut sim, None);
+            // the tickless engine materializes virtual work lazily; sync
+            // it so slot n values match the per-tick simulator's view
+            golden.materialize();
             for mac in 0..m {
                 let vs = golden.schedule(mac);
                 let arr = &sim.smmu(mac).array;

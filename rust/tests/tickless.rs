@@ -1,0 +1,214 @@
+//! Tickless-core equivalence suite: the event-horizon fast-forward path
+//! must be *semantically invisible*. For random workloads across all
+//! five precision schemes, the jump-driven golden engine must produce
+//! bit-identical schedules, `TickOutcome` sequences and FNV-1a schedule
+//! digests versus (a) the same engine driven by the historical
+//! tick-by-tick loop — kept here verbatim as the test oracle — and
+//! (b) the independently-implemented eager SOSC baseline.
+
+use stannic::artifact::fnv1a64_hex;
+use stannic::baselines::SoscEngine;
+use stannic::core::{Job, JobNature, MachinePark};
+use stannic::quant::Precision;
+use stannic::scheduler::{drive_trace, SosEngine, TickOutcome};
+use stannic::testing::{check, property};
+use stannic::workload::{generate_trace, Rng, Trace, WorkloadSpec};
+
+/// One schedule event, tick-stamped: the comparable projection of a
+/// non-empty [`TickOutcome`].
+type Event = (u64, Vec<(u64, usize)>, Option<(u64, usize, usize)>, bool);
+
+fn project(tick: u64, out: &TickOutcome) -> Event {
+    (
+        tick,
+        out.released.clone(),
+        out.assigned.as_ref().map(|a| (a.job, a.machine, a.position)),
+        out.stalled,
+    )
+}
+
+/// FNV-1a digest over an event log — the same digest family the
+/// artifact layer uses for schedule identity.
+fn digest(events: &[Event]) -> String {
+    let mut canon = String::new();
+    for (tick, released, assigned, stalled) in events {
+        canon.push_str(&format!("{tick}|{released:?}|{assigned:?}|{stalled}\n"));
+    }
+    fnv1a64_hex(canon.as_bytes())
+}
+
+/// The engines the per-tick oracle can drive: the golden engine (so the
+/// jumped drive compares against its own tick-by-tick semantics) and
+/// the naive SOSC baseline (an independent eager implementation —
+/// per-tick by construction, it reconstructs virtual work from history
+/// logs, nothing lazy anywhere).
+trait EagerDrive {
+    fn submit_job(&mut self, job: Job);
+    fn tick_once(&mut self) -> TickOutcome;
+    fn drained(&self) -> bool;
+}
+
+impl EagerDrive for SosEngine {
+    fn submit_job(&mut self, job: Job) {
+        self.submit(job);
+    }
+    fn tick_once(&mut self) -> TickOutcome {
+        self.tick(None)
+    }
+    fn drained(&self) -> bool {
+        self.is_idle()
+    }
+}
+
+impl EagerDrive for SoscEngine {
+    fn submit_job(&mut self, job: Job) {
+        self.submit(job);
+    }
+    fn tick_once(&mut self) -> TickOutcome {
+        self.tick(None)
+    }
+    fn drained(&self) -> bool {
+        self.is_idle()
+    }
+}
+
+/// The OLD drive loop, kept verbatim as the oracle: tick every virtual
+/// tick, record every non-empty outcome. Returns (events, final tick).
+fn drive_per_tick<E: EagerDrive>(engine: &mut E, trace: &Trace, max_ticks: u64) -> (Vec<Event>, u64) {
+    let mut events = trace.events().iter().peekable();
+    let mut log = Vec::new();
+    let mut t = 0u64;
+    loop {
+        t += 1;
+        assert!(t <= max_ticks, "oracle did not drain");
+        while events.peek().is_some_and(|e| e.tick <= t) {
+            engine.submit_job(events.next().unwrap().job.clone().unwrap());
+        }
+        let out = engine.tick_once();
+        if out != TickOutcome::default() {
+            log.push(project(t, &out));
+        }
+        if engine.drained() && events.peek().is_none() {
+            return (log, t);
+        }
+    }
+}
+
+fn random_spec(rng: &mut Rng) -> WorkloadSpec {
+    // span saturated bursts, steady streams and long sparse gaps — the
+    // regimes where the horizon logic differs most
+    let spec = WorkloadSpec {
+        burst_factor: rng.range(1, 6),
+        ..WorkloadSpec::default()
+    };
+    if rng.chance(0.5) {
+        spec.with_idle(rng.range(1, 400) as u64, rng.range(2, 12))
+    } else {
+        spec
+    }
+}
+
+#[test]
+fn prop_fast_forward_bit_identical_across_all_precisions() {
+    property("tickless == per-tick oracle", 12, |rng| {
+        let machines = rng.range(2, 8);
+        let depth = rng.range(2, 10);
+        let jobs = rng.range(20, 90);
+        let alpha = [0.1f32, 0.25, 0.5, 0.75, 1.0][rng.range(0, 4)];
+        let seed = rng.next_u64();
+        let park = MachinePark::cycled(machines);
+        let spec = random_spec(rng);
+        let trace = generate_trace(&spec, &park, jobs, seed);
+        let max = 50_000_000u64;
+
+        for precision in Precision::ALL {
+            // oracle: the historical per-tick loop over a fresh engine
+            let mut oracle = SosEngine::new(machines, depth, alpha, precision);
+            let (oracle_log, oracle_ticks) = drive_per_tick(&mut oracle, &trace, max);
+
+            // tickless: the event-jumping driver
+            let mut engine = SosEngine::new(machines, depth, alpha, precision);
+            let mut log = Vec::new();
+            let stats = drive_trace(&mut engine, &trace, max, |tick, out| {
+                if *out != TickOutcome::default() {
+                    log.push(project(tick, out));
+                }
+            })
+            .map_err(|e| format!("{} tickless drive failed: {e}", precision.name()))?;
+
+            check(
+                stats.ticks == oracle_ticks,
+                "virtual tick count preserved",
+            )?;
+            check(
+                stats.iterations <= stats.ticks,
+                "never more iterations than ticks",
+            )?;
+            check(log == oracle_log, "TickOutcome event streams bit-identical")?;
+            check(
+                digest(&log) == digest(&oracle_log),
+                "FNV schedule digests identical",
+            )?;
+
+            // cross-implementation oracle: the eager SOSC baseline (its
+            // TickOutcome carries no cost field differences — project()
+            // compares job/machine/position/stall/release only)
+            let mut sosc = SoscEngine::new(machines, depth, alpha, precision);
+            let (sosc_log, sosc_ticks) = drive_per_tick(&mut sosc, &trace, max);
+            check(sosc_ticks == stats.ticks, "sosc agrees on virtual time")?;
+            check(
+                log == sosc_log,
+                "independent eager implementation agrees",
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fast_forward_saves_iterations_on_sparse_workloads() {
+    property("tickless skips idle windows", 8, |rng| {
+        let park = MachinePark::cycled(rng.range(2, 6));
+        let spec = WorkloadSpec::default().with_idle(rng.range(300, 900) as u64, 3);
+        let trace = generate_trace(&spec, &park, rng.range(20, 60), rng.next_u64());
+        let mut engine = SosEngine::new(park.len(), 8, 0.5, Precision::Int8);
+        let stats = drive_trace(&mut engine, &trace, 50_000_000, |_, _| {})
+            .map_err(|e| format!("drive failed: {e}"))?;
+        check(
+            stats.iterations * 5 <= stats.ticks,
+            "sparse workload must skip >=5x of its virtual ticks",
+        )
+    });
+}
+
+#[test]
+fn burst_saturation_stall_ticks_are_never_skipped() {
+    // Saturate a 2x2 park with a 30-job burst: every backlogged tick
+    // must execute (assign or stall), so the tickless event stream —
+    // including per-tick stall outcomes — matches the oracle exactly.
+    let mut events = Vec::new();
+    for id in 1..=30u64 {
+        events.push(stannic::workload::TraceEvent {
+            tick: 1,
+            job: Some(Job::new(id, 10.0, vec![30.0, 45.0], JobNature::Mixed).with_arrival(1)),
+        });
+    }
+    let trace = Trace::new(events, 2);
+    let mut oracle = SosEngine::new(2, 2, 1.0, Precision::Int8);
+    let (oracle_log, oracle_ticks) = drive_per_tick(&mut oracle, &trace, 1_000_000);
+    assert!(
+        oracle_log.iter().any(|(_, _, _, stalled)| *stalled),
+        "scenario must actually stall"
+    );
+
+    let mut engine = SosEngine::new(2, 2, 1.0, Precision::Int8);
+    let mut log = Vec::new();
+    let stats = drive_trace(&mut engine, &trace, 1_000_000, |tick, out| {
+        if *out != TickOutcome::default() {
+            log.push(project(tick, out));
+        }
+    })
+    .unwrap();
+    assert_eq!(stats.ticks, oracle_ticks);
+    assert_eq!(log, oracle_log, "stall-for-stall identical under saturation");
+}
