@@ -6,6 +6,11 @@
 #            `serve diff` (same scenario twice must be parity-clean),
 #            plus a diff against the committed SERVE_seed.json when one
 #            exists — the serve arm of the artifact trail.
+#   faults : one seeded `serve --faults` scenario recorded twice and
+#            self-diffed — deterministic fault injection must be as
+#            reproducible as a clean run, and the faulted artifact
+#            carries its fault key so it can never pair with a clean
+#            baseline.
 #   perf   : record the quick sweep and diff it against the committed
 #            BENCH_seed.json baseline; fails on >25% per-cell regression
 #            (override with STANNIC_PERF_THRESHOLD, e.g. =0.5) or on any
@@ -66,6 +71,24 @@ cargo run --release -- serve diff /tmp/SERVE_smoke.json /tmp/SERVE_smoke2.json \
   | tee /tmp/stannic_serve_diff.txt
 grep -E ", 0 parity breaks," /tmp/stannic_serve_diff.txt
 echo "serve A/B self-diff OK (zero parity breaks)"
+
+echo "== serve faulted smoke: seeded fault injection, A/B self-diff =="
+# One mid-run machine-down window, a straggler window, and a 6-job
+# arrival storm, all on a fixed fault seed. Fault events ride the event
+# horizon, so two recordings of the same faulted scenario must share
+# every schedule digest — the faulted run is exactly as reproducible as
+# a clean one.
+FAULTS='down=1@40+30,slow=0@20+40x4,storm=6@60,seed=7'
+cargo run --release -- serve --sources 2 --jobs 150 --batch 4 --faults "$FAULTS" \
+  --record /tmp/SERVE_faulted_a.json --label ci-faults | tee /tmp/stannic_serve_faulted.txt
+grep -E "fault spec        : down=" /tmp/stannic_serve_faulted.txt
+grep -E "jobs completed    : 156" /tmp/stannic_serve_faulted.txt
+cargo run --release -- serve --sources 2 --jobs 150 --batch 4 --faults "$FAULTS" \
+  --record /tmp/SERVE_faulted_b.json --label ci-faults2 > /dev/null
+cargo run --release -- serve diff /tmp/SERVE_faulted_a.json /tmp/SERVE_faulted_b.json \
+  | tee /tmp/stannic_serve_faulted_diff.txt
+grep -E ", 0 parity breaks," /tmp/stannic_serve_faulted_diff.txt
+echo "faulted serve A/B self-diff OK (zero parity breaks)"
 
 if [ -f SERVE_seed.json ]; then
   echo "== perf: diff serve smoke against committed SERVE_seed.json =="

@@ -4,8 +4,10 @@
 //! registry's canonical name for that backend.
 
 use crate::baselines::{SimdSos, SoscEngine};
+use crate::bail;
 use crate::core::Job;
 use crate::error::Result;
+use crate::faults::{FaultPlan, FaultStats};
 use crate::runtime::XlaSosEngine;
 use crate::scheduler::{Horizon, SosEngine, TickOutcome};
 use crate::sim::{hercules::HerculesSim, stannic::StannicSim, ArchSim};
@@ -37,6 +39,21 @@ pub trait EngineAdapter {
         let _ = tick;
         unreachable!("advance_to on an engine that reported Horizon::Unknown");
     }
+    /// Arm a deterministic fault plan ([`crate::faults`]). Only the
+    /// golden engine carries the fault layer; every other backend
+    /// rejects the request up front so `serve --faults` fails loudly
+    /// instead of silently running clean.
+    fn install_faults(&mut self, plan: FaultPlan) -> Result<()> {
+        let _ = plan;
+        bail!(
+            "engine `{}` does not support fault injection (use --engine sos)",
+            self.label()
+        );
+    }
+    /// Recovery metrics of the installed fault plan, if any.
+    fn fault_stats(&self) -> Option<FaultStats> {
+        None
+    }
 }
 
 impl EngineAdapter for SosEngine {
@@ -57,6 +74,13 @@ impl EngineAdapter for SosEngine {
     }
     fn advance_to(&mut self, tick: u64) {
         SosEngine::advance_to(self, tick);
+    }
+    fn install_faults(&mut self, plan: FaultPlan) -> Result<()> {
+        SosEngine::install_faults(self, plan);
+        Ok(())
+    }
+    fn fault_stats(&self) -> Option<FaultStats> {
+        SosEngine::fault_stats(self).cloned()
     }
 }
 
@@ -173,6 +197,22 @@ mod tests {
         for e in engines.iter_mut() {
             assert_eq!(e.horizon(), Horizon::Unknown, "{}", e.label());
         }
+    }
+
+    #[test]
+    fn only_the_golden_adapter_accepts_faults() {
+        let plan = crate::faults::FaultSpec::parse("down=0@5+2")
+            .unwrap()
+            .plan(2)
+            .unwrap();
+        let mut sos: Box<dyn EngineAdapter> =
+            Box::new(SosEngine::new(2, 4, 0.5, Precision::Int8));
+        assert!(sos.install_faults(plan.clone()).is_ok());
+        assert!(sos.fault_stats().is_some());
+        let mut sosc: Box<dyn EngineAdapter> =
+            Box::new(SoscEngine::new(2, 4, 0.5, Precision::Int8));
+        assert!(sosc.install_faults(plan).is_err());
+        assert!(sosc.fault_stats().is_none());
     }
 
     #[test]

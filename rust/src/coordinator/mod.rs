@@ -29,6 +29,11 @@
 //!   (schema-checked, parse-back-verified, schedule-identity digest),
 //!   and `serve diff` gates two archived runs through the same generic
 //!   diff core as `sweep diff`.
+//! * **Fault injection** ([`crate::faults`]): `serve --faults SPEC` arms
+//!   a seeded, deterministic fault plan on the golden engine (machine
+//!   down/up, stragglers, storms) and applies source-dropout cut-offs at
+//!   the merge; recovery metrics ride on [`ServeReport`] and the
+//!   artifact, keyed by the canonical fault string.
 
 mod adapter;
 pub mod pcie;

@@ -78,6 +78,23 @@ pub struct ServeRecord {
     pub batch_p99: u64,
     pub batch_max: u64,
     pub sources: Vec<SourceRecord>,
+    /// Canonical fault key ([`crate::faults::FaultSpec::render`]); empty
+    /// for clean runs. Folded into the digest only when non-empty, so a
+    /// faulted recording can never parity-pair with a clean one while
+    /// clean artifacts stay byte-identical to pre-fault recordings.
+    pub fault: String,
+    /// Recovery metrics of the faulted run (all zero, and unrendered,
+    /// when clean): evictions, storm injections, dropped arrivals, work
+    /// lost, utilization-dip duration/area/depth, re-queue percentiles.
+    pub fault_evicted: u64,
+    pub fault_injected: u64,
+    pub fault_dropped: u64,
+    pub fault_work_lost: u64,
+    pub fault_degraded_ticks: u64,
+    pub fault_down_machine_ticks: u64,
+    pub fault_max_down: u64,
+    pub fault_requeue_p50: u64,
+    pub fault_requeue_p99: u64,
 }
 
 impl ServeRecord {
@@ -118,6 +135,19 @@ impl ServeRecord {
                     enqueue_stalls: src.enqueue_stalls,
                 })
                 .collect(),
+            fault: r.fault_key.clone(),
+            fault_evicted: r.faults.as_ref().map_or(0, |f| f.evicted_jobs),
+            fault_injected: r.faults.as_ref().map_or(0, |f| f.injected_jobs),
+            fault_dropped: r.faults.as_ref().map_or(0, |f| f.dropped_arrivals),
+            fault_work_lost: r.faults.as_ref().map_or(0, |f| f.work_lost_cycles),
+            fault_degraded_ticks: r.faults.as_ref().map_or(0, |f| f.degraded_ticks),
+            fault_down_machine_ticks: r
+                .faults
+                .as_ref()
+                .map_or(0, |f| f.down_machine_ticks),
+            fault_max_down: r.faults.as_ref().map_or(0, |f| f.max_concurrent_down as u64),
+            fault_requeue_p50: r.faults.as_ref().map_or(0, |f| f.requeue_latency.p50()),
+            fault_requeue_p99: r.faults.as_ref().map_or(0, |f| f.requeue_latency.p99()),
         };
         rec.digest = rec.compute_digest();
         rec
@@ -137,6 +167,22 @@ impl ServeRecord {
         for src in &self.sources {
             let _ = write!(canon, "|{}={}", src.name, src.jobs);
         }
+        // the fault scenario and its deterministic recovery outcome are
+        // identity — only when faulted, so clean digests are unchanged
+        if !self.fault.is_empty() {
+            let _ = write!(
+                canon,
+                "|f:{}|{}|{}|{}|{}|{}|{}|{}",
+                self.fault,
+                self.fault_evicted,
+                self.fault_injected,
+                self.fault_dropped,
+                self.fault_work_lost,
+                self.fault_degraded_ticks,
+                self.fault_down_machine_ticks,
+                self.fault_max_down
+            );
+        }
         fnv1a64_hex(canon.as_bytes())
     }
 
@@ -146,11 +192,21 @@ impl ServeRecord {
     }
 }
 
+/// [`get_uint`] for a field that may be absent (defaults to 0): the
+/// fault block only exists on faulted recordings.
+fn opt_uint(j: &Json, key: &str) -> Result<u64> {
+    if j.get(key).is_some() {
+        get_uint(j, key)
+    } else {
+        Ok(0)
+    }
+}
+
 impl Artifact for ServeRecord {
     const SCHEMA: Schema = artifact::SERVE_RECORD;
 
     fn to_json(&self) -> Json {
-        obj(vec![
+        let mut fields = vec![
             ("schema", s(Self::SCHEMA.tag())),
             ("label", s(self.label.clone())),
             ("engine", s(self.engine.clone())),
@@ -197,7 +253,25 @@ impl Artifact for ServeRecord {
                     })
                     .collect()),
             ),
-        ])
+        ];
+        // only faulted runs carry the fault block: clean artifacts render
+        // byte-identically to pre-fault versions of this schema
+        if !self.fault.is_empty() {
+            fields.push(("fault", s(self.fault.clone())));
+            fields.push(("fault_evicted", num(self.fault_evicted as f64)));
+            fields.push(("fault_injected", num(self.fault_injected as f64)));
+            fields.push(("fault_dropped", num(self.fault_dropped as f64)));
+            fields.push(("fault_work_lost", num(self.fault_work_lost as f64)));
+            fields.push(("fault_degraded_ticks", num(self.fault_degraded_ticks as f64)));
+            fields.push((
+                "fault_down_machine_ticks",
+                num(self.fault_down_machine_ticks as f64),
+            ));
+            fields.push(("fault_max_down", num(self.fault_max_down as f64)));
+            fields.push(("fault_requeue_p50", num(self.fault_requeue_p50 as f64)));
+            fields.push(("fault_requeue_p99", num(self.fault_requeue_p99 as f64)));
+        }
+        obj(fields)
     }
 
     fn from_json(j: &Json) -> Result<ServeRecord> {
@@ -237,6 +311,22 @@ impl Artifact for ServeRecord {
             batch_p99: get_uint(j, "batch_p99")?,
             batch_max: get_uint(j, "batch_max")?,
             sources,
+            // absent on clean (and pre-fault) artifacts; a present field
+            // is still strictly validated
+            fault: if j.get("fault").is_some() {
+                get_str(j, "fault")?
+            } else {
+                String::new()
+            },
+            fault_evicted: opt_uint(j, "fault_evicted")?,
+            fault_injected: opt_uint(j, "fault_injected")?,
+            fault_dropped: opt_uint(j, "fault_dropped")?,
+            fault_work_lost: opt_uint(j, "fault_work_lost")?,
+            fault_degraded_ticks: opt_uint(j, "fault_degraded_ticks")?,
+            fault_down_machine_ticks: opt_uint(j, "fault_down_machine_ticks")?,
+            fault_max_down: opt_uint(j, "fault_max_down")?,
+            fault_requeue_p50: opt_uint(j, "fault_requeue_p50")?,
+            fault_requeue_p99: opt_uint(j, "fault_requeue_p99")?,
         };
         // Pre-digest v1 artifacts (recorded before the artifact-layer
         // redesign) lack the field; recompute so they stay loadable and
@@ -278,7 +368,7 @@ impl Diffable for ServeRecord {
     /// (it feeds the reported shift, which `--fail-on-shift` gates for
     /// same-host A/B runs).
     fn cells(&self) -> Vec<PerfCell> {
-        vec![
+        let mut cells = vec![
             PerfCell::parity("schedule-digest", self.digest.clone()),
             PerfCell::parity("ticks", self.ticks.to_string()),
             PerfCell::parity("completions", self.completed.to_string()),
@@ -289,7 +379,28 @@ impl Diffable for ServeRecord {
             PerfCell::higher("jobs_per_sec", self.jobs_per_sec())
                 .noisy()
                 .advisory(),
-        ]
+        ];
+        // faulted runs add a parity cell keyed by the fault scenario:
+        // its recovery outcome is deterministic, and the key itself
+        // guarantees a faulted record never cleanly pairs with a clean
+        // one (the unmatched cell fails the gate even before the digest
+        // parity break does)
+        if !self.fault.is_empty() {
+            cells.push(PerfCell::parity(
+                format!("fault[{}]", self.fault),
+                format!(
+                    "{}|{}|{}|{}|{}|{}|{}",
+                    self.fault_evicted,
+                    self.fault_injected,
+                    self.fault_dropped,
+                    self.fault_work_lost,
+                    self.fault_degraded_ticks,
+                    self.fault_down_machine_ticks,
+                    self.fault_max_down
+                ),
+            ));
+        }
+        cells
     }
 }
 
@@ -318,10 +429,53 @@ mod tests {
         ServeRecord::from_report("test", &report)
     }
 
+    fn faulted_record() -> ServeRecord {
+        let opts = ServeOpts {
+            batch: 3,
+            faults: Some(
+                crate::faults::FaultSpec::parse("down=0@15+10,storm=3@20,seed=2").unwrap(),
+            ),
+            ..ServeOpts::default()
+        };
+        let report = serve_sources(
+            EngineId::Sos.build(5, 10, 0.5, Precision::Int8).unwrap(),
+            ArrivalSource::standard_mix(&WorkloadSpec::default(), 5, 90, 7, 2),
+            &opts,
+        )
+        .unwrap();
+        ServeRecord::from_report("test", &report)
+    }
+
     #[test]
     fn record_schema_is_the_registry_instance() {
         assert_eq!(SERVE_RECORD_SCHEMA, artifact::SERVE_RECORD.tag());
         assert_eq!(SERVE_RECORD_SCHEMA, ServeRecord::SCHEMA.tag());
+    }
+
+    #[test]
+    fn faulted_record_round_trips_and_self_diffs_clean() {
+        let rec = faulted_record();
+        assert_eq!(rec.fault, "down=0@15+10,storm=3@20,seed=2");
+        assert_eq!(rec.completed, 93, "90 trace jobs + 3 storm jobs");
+        assert_eq!(rec.fault_injected, 3);
+        assert_eq!(rec.fault_degraded_ticks, 10, "down window is ticks 15..25");
+        let back = ServeRecord::parse(&rec.render()).expect("faulted artifact parses");
+        assert_eq!(rec, back);
+        // faulted A/B self-diff: parity-clean, with the extra fault cell
+        let report = diff_records(&rec, &rec, &DiffOpts::default());
+        assert!(report.ok(), "{}", report.render());
+        assert_eq!(report.parity_breaks(), 0);
+        assert_eq!(report.cells.len(), 9, "8 standard + 1 fault parity cell");
+    }
+
+    #[test]
+    fn faulted_and_clean_records_never_pair_silently() {
+        let clean = small_record();
+        assert!(!clean.render().contains("\"fault\""), "clean artifact unchanged");
+        let faulted = faulted_record();
+        assert_ne!(clean.digest, faulted.digest, "the fault key is identity");
+        let report = diff_records(&clean, &faulted, &DiffOpts::default());
+        assert!(!report.ok(), "a faulted run must never gate-pass against clean");
     }
 
     #[test]

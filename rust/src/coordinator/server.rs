@@ -61,6 +61,7 @@ type JobMap = std::collections::HashMap<u64, Job, BuildHasherDefault<IdHasher>>;
 
 use crate::core::{Job, MachineId, MachinePark};
 use crate::error::Result;
+use crate::faults::{FaultSpec, FaultStats};
 use crate::metrics::{Histogram, MetricSet, ScheduleMetrics};
 use crate::workload::{generate_trace, Trace, WorkloadSpec};
 
@@ -229,6 +230,12 @@ pub struct ServeReport {
     /// Arrivals admitted per tick, over ticks admitting >= 1 job
     /// (deterministic).
     pub batch_sizes: Histogram,
+    /// Canonical fault key ([`FaultSpec::render`]) when the run was
+    /// faulted; empty for clean runs (keeps clean artifacts byte-stable).
+    pub fault_key: String,
+    /// Recovery metrics for a faulted run (`None` when clean), with
+    /// [`FaultStats::dropped_arrivals`] filled in by the pipeline.
+    pub faults: Option<FaultStats>,
 }
 
 /// Coordinator options.
@@ -246,6 +253,10 @@ pub struct ServeOpts {
     /// everything due this tick, which reproduces the single-trace
     /// serve loop exactly.
     pub batch: usize,
+    /// Deterministic fault scenario ([`crate::faults`]). `None` (or an
+    /// empty spec) runs clean — bit-identical to a build without the
+    /// fault layer. Requires the golden engine; others reject the plan.
+    pub faults: Option<FaultSpec>,
 }
 
 impl Default for ServeOpts {
@@ -256,6 +267,7 @@ impl Default for ServeOpts {
             max_ticks: 5_000_000,
             metric_interval: 64,
             batch: usize::MAX,
+            faults: None,
         }
     }
 }
@@ -304,6 +316,26 @@ fn feed_source(events: Vec<(u64, Job)>, tx: SyncSender<SourceEvent>, stalls: &At
     }
 }
 
+/// Receive a source's next *surviving* event, discarding (and counting)
+/// everything at or past the source's dropout cut-off. Dropout is a
+/// stream fault: the source thread still feeds its whole trace, the
+/// merge just never sees the tail, so the engine-side schedule is a pure
+/// function of the surviving arrivals.
+fn next_live(
+    rx: &Receiver<SourceEvent>,
+    drop_at: Option<u64>,
+    dropped: &mut u64,
+) -> Option<SourceEvent> {
+    loop {
+        let ev = rx.recv().ok()?;
+        if drop_at.is_some_and(|t| ev.tick >= t) {
+            *dropped += 1;
+            continue;
+        }
+        return Some(ev);
+    }
+}
+
 /// Drive `engine` over a single pre-built trace (the classic replay
 /// path; a one-source pipeline with the default unbatched admission is
 /// exactly the historical serve loop).
@@ -338,6 +370,29 @@ pub fn serve_sources(
     }
     let total_jobs: usize = sources.iter().map(ArrivalSource::jobs).sum();
     let n_sources = sources.len();
+    // Arm the fault layer up front: plan validation (machine bounds,
+    // storm synthesis) and engine support both fail before any thread
+    // spawns. Drop clauses never reach the engine — they become
+    // per-source cut-offs applied where arrivals are still attributed
+    // to sources.
+    let mut drop_after: Vec<Option<u64>> = vec![None; n_sources];
+    let mut injected_total = 0usize;
+    let mut fault_key = String::new();
+    if let Some(spec) = opts.faults.as_ref().filter(|s| !s.is_empty()) {
+        for (src, at) in spec.drops() {
+            if src >= n_sources {
+                crate::bail!(
+                    "fault spec drops source {src}, but only {n_sources} source(s) exist"
+                );
+            }
+            let cut = drop_after[src].get_or_insert(at);
+            *cut = (*cut).min(at);
+        }
+        injected_total = spec.injected_total();
+        let plan = spec.plan(machines)?;
+        fault_key = plan.key().to_string();
+        engine.install_faults(plan)?;
+    }
     let source_meta: Vec<(String, usize)> = sources
         .iter()
         .map(|s| (s.name.clone(), s.jobs()))
@@ -379,7 +434,8 @@ pub fn serve_sources(
 
         // spawn machine workers
         let mut work_txs: Vec<SyncSender<WorkItem>> = Vec::with_capacity(machines);
-        let (done_tx, done_rx) = sync_channel::<CompletionRecord>(total_jobs.max(16));
+        let (done_tx, done_rx) =
+            sync_channel::<CompletionRecord>((total_jobs + injected_total).max(16));
         for m in 0..machines {
             let (tx, rx) = sync_channel::<WorkItem>(depth);
             let done = done_tx.clone();
@@ -390,17 +446,21 @@ pub fn serve_sources(
 
         // job registry: released ids -> Job payloads (the engine tracks
         // only metadata, like the FPGA; the host keeps the payloads)
-        let mut payloads: JobMap =
-            JobMap::with_capacity_and_hasher(total_jobs, Default::default());
+        let mut payloads: JobMap = JobMap::with_capacity_and_hasher(
+            total_jobs + injected_total,
+            Default::default(),
+        );
 
         // merge state: one head per source (None = exhausted). Blocking
         // recv is what makes the merge independent of interleaving — a
         // source is either drained or must reveal its next event before
-        // the merge proceeds past its virtual time.
-        let mut heads: Vec<Option<SourceEvent>> = source_rxs
-            .iter()
-            .map(|rx| rx.recv().ok())
-            .collect();
+        // the merge proceeds past its virtual time. Dropout cut-offs
+        // filter here, so a dropped tail never influences the merge.
+        let mut dropped = 0u64;
+        let mut heads: Vec<Option<SourceEvent>> = Vec::with_capacity(n_sources);
+        for src in 0..n_sources {
+            heads.push(next_live(&source_rxs[src], drop_after[src], &mut dropped));
+        }
         let mut staged: std::collections::VecDeque<Job> =
             std::collections::VecDeque::with_capacity(depth);
 
@@ -451,7 +511,7 @@ pub fn serve_sources(
                         .min();
                     let Some((_, src)) = next else { break };
                     let ev = heads[src].take().expect("selected head exists");
-                    heads[src] = source_rxs[src].recv().ok();
+                    heads[src] = next_live(&source_rxs[src], drop_after[src], &mut dropped);
                     let mut job = ev.job;
                     if n_sources > 1 && job.id >= (1 << 32) {
                         crate::bail!(
@@ -483,6 +543,13 @@ pub fn serve_sources(
             if out.stalled {
                 stalls += 1;
             }
+            // storm-injected jobs materialize inside the engine and
+            // bypass the merge, but the host still owns their payloads
+            // (evicted jobs need nothing: their payloads stay registered
+            // until the re-queued job is eventually released)
+            for job in &out.injected {
+                payloads.insert(job.id, job.clone());
+            }
             // transport accounting: one round-trip per scheduling
             // iteration that talks to the accelerator (assignment and/or
             // releases)
@@ -505,7 +572,7 @@ pub fn serve_sources(
                     .expect("worker alive");
             }
 
-            if released_count == total_jobs
+            if released_count + dropped as usize == total_jobs + injected_total
                 && engine.is_idle()
                 && staged.is_empty()
                 && heads.iter().all(Option::is_none)
@@ -541,6 +608,10 @@ pub fn serve_sources(
             latency_hist.record(c.started - c.job.arrival);
         }
 
+        let faults = engine.fault_stats().map(|mut s| {
+            s.dropped_arrivals = dropped;
+            s
+        });
         Ok(ServeReport {
             engine: engine.label(),
             metrics: metrics.finish(),
@@ -554,6 +625,8 @@ pub fn serve_sources(
             sources: source_stats,
             merge_depth,
             batch_sizes,
+            fault_key,
+            faults,
         })
     })
 }
@@ -617,7 +690,6 @@ mod tests {
         // one machine, two jobs released same tick: second starts when
         // the first finishes
         use crate::core::JobNature;
-        let park = MachinePark::homogeneous_cpu(1);
         let mut events = Vec::new();
         for id in 1..=2u64 {
             events.push(crate::workload::TraceEvent {
@@ -632,7 +704,6 @@ mod tests {
         let c0 = &r.completions[0];
         let c1 = &r.completions[1];
         assert!(c1.started >= c0.finished);
-        let _ = park;
     }
 
     #[test]
@@ -714,6 +785,106 @@ mod tests {
             &ServeOpts::default(),
         )
         .is_err());
+    }
+
+    #[test]
+    fn faulted_serve_completes_and_reports_recovery() {
+        use crate::faults::FaultSpec;
+        let spec = WorkloadSpec::default();
+        let opts = ServeOpts {
+            faults: Some(FaultSpec::parse("down=1@20+30,storm=4@25,seed=3").unwrap()),
+            ..ServeOpts::default()
+        };
+        let r = serve_sources(
+            EngineId::Sos.build(5, 10, 0.5, Precision::Int8).unwrap(),
+            vec![ArrivalSource::synthetic("s", spec, 5, 80, 11)],
+            &opts,
+        )
+        .unwrap();
+        // every trace job plus every storm job completes
+        assert_eq!(r.completions.len(), 84);
+        assert_eq!(r.fault_key, "down=1@20+30,storm=4@25,seed=3");
+        let stats = r.faults.expect("faulted run reports recovery metrics");
+        assert_eq!(stats.downs, 1);
+        assert_eq!(stats.ups, 1);
+        assert_eq!(stats.injected_jobs, 4);
+        assert_eq!(
+            stats.degraded_ticks, 30,
+            "the down window is ticks 20..50 whether executed or jumped"
+        );
+        assert_eq!(stats.down_machine_ticks, 30);
+    }
+
+    #[test]
+    fn faulted_serve_is_queue_depth_invariant() {
+        use crate::faults::FaultSpec;
+        let run = |depth: usize| {
+            let opts = ServeOpts {
+                queue_depth: depth,
+                faults: Some(
+                    FaultSpec::parse("down=0@15+20,slow=2@10+40x4,policy=lose").unwrap(),
+                ),
+                ..ServeOpts::default()
+            };
+            serve_sources(
+                EngineId::Sos.build(5, 10, 0.5, Precision::Int8).unwrap(),
+                ArrivalSource::standard_mix(&WorkloadSpec::default(), 5, 90, 13, 2),
+                &opts,
+            )
+            .unwrap()
+        };
+        let a = run(4);
+        let b = run(256);
+        assert_eq!(a.completions, b.completions);
+        assert_eq!(a.ticks, b.ticks);
+        assert_eq!(a.metrics.jobs_per_machine, b.metrics.jobs_per_machine);
+    }
+
+    #[test]
+    fn source_dropout_discards_the_tail() {
+        use crate::faults::FaultSpec;
+        // drop=0@1 silences the only source entirely: nothing completes,
+        // and the pipeline still terminates with full accounting
+        let opts = ServeOpts {
+            faults: Some(FaultSpec::parse("drop=0@1").unwrap()),
+            ..ServeOpts::default()
+        };
+        let r = serve_sources(
+            EngineId::Sos.build(5, 10, 0.5, Precision::Int8).unwrap(),
+            vec![ArrivalSource::synthetic("s", WorkloadSpec::default(), 5, 40, 9)],
+            &opts,
+        )
+        .unwrap();
+        assert_eq!(r.completions.len(), 0);
+        assert_eq!(r.faults.expect("faulted run").dropped_arrivals, 40);
+
+        // a drop clause naming a source that does not exist fails loudly
+        let opts = ServeOpts {
+            faults: Some(FaultSpec::parse("drop=7@5").unwrap()),
+            ..ServeOpts::default()
+        };
+        assert!(serve_sources(
+            EngineId::Sos.build(5, 10, 0.5, Precision::Int8).unwrap(),
+            vec![ArrivalSource::synthetic("s", WorkloadSpec::default(), 5, 10, 9)],
+            &opts,
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn non_golden_engine_rejects_fault_specs() {
+        use crate::faults::FaultSpec;
+        let opts = ServeOpts {
+            faults: Some(FaultSpec::parse("down=0@5+5").unwrap()),
+            ..ServeOpts::default()
+        };
+        let err = serve_sources(
+            EngineId::Sosc.build(5, 10, 0.5, Precision::Int8).unwrap(),
+            vec![ArrivalSource::synthetic("s", WorkloadSpec::default(), 5, 10, 1)],
+            &opts,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("does not support fault injection"));
     }
 
     #[test]

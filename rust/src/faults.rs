@@ -1,0 +1,549 @@
+//! Seeded, deterministic fault injection — the chaos layer.
+//!
+//! Production scale means machines die mid-job, stragglers run 10× slow,
+//! and storms arrive correlated. This module turns those into
+//! *first-class virtual-time events* on the same event horizon the
+//! tickless core jumps on: a [`FaultPlan`] is a sorted queue of
+//! [`FaultEvent`]s that [`crate::scheduler::SosEngine`] consumes at the
+//! start of every tick, and whose next pending tick is folded into
+//! `SosEngine::next_event_tick` as a release-class event. That is the
+//! load-bearing invariant — any fault that is *not* on the horizon would
+//! be silently jumped over by `advance_to`, so faulted runs stay
+//! bit-reproducible and every jump-invariance gate (golden test,
+//! `tests/tickless.rs`, the sweep/serve A/B self-diffs) keeps holding
+//! with faults enabled.
+//!
+//! # Spec grammar
+//!
+//! A fault scenario is a comma-separated list of clauses
+//! ([`FaultSpec::parse`] / [`FaultSpec::render`] round-trip):
+//!
+//! | clause          | meaning                                                        |
+//! |-----------------|----------------------------------------------------------------|
+//! | `down=M@T+D`    | machine `M` goes down at tick `T`, back up at `T+D`            |
+//! | `slow=M@T+DxF`  | machine `M` straggles ×`F` for arrivals assigned in `[T, T+D)` |
+//! | `storm=K@T`     | `K` correlated synthetic jobs injected at tick `T`             |
+//! | `drop=S@T`      | arrival source `S` drops every event with tick ≥ `T` (serve)   |
+//! | `policy=lose\|resume` | fate of a down machine's running head (default `resume`) |
+//! | `seed=N`        | RNG seed for storm-job synthesis (default 0)                   |
+//!
+//! Determinism: the spec is the only input — storm jobs are synthesized
+//! from `seed` via the same [`crate::workload::Rng`] substrate as the
+//! workload generators, events fire in (tick, clause-order) order, and a
+//! down machine's evicted slots re-enter the arrival FIFO in schedule
+//! order. Two runs with the same spec produce identical schedules for
+//! any thread count or queue depth; the canonical [`FaultSpec::render`]
+//! string doubles as the artifact fault key, so `diff` never pairs a
+//! faulted recording with a clean one.
+//!
+//! # Recovery metrics
+//!
+//! [`FaultStats`] records re-queue latency (eviction → reassignment),
+//! work lost (discarded virtual-work cycles), and the utilization dip
+//! (degraded-tick duration, down-machine-tick area, max concurrent
+//! downs), surfaced per run through `ServeReport` and the artifact
+//! records.
+
+use std::collections::VecDeque;
+
+use crate::core::{Job, JobId, JobNature, MachineId};
+use crate::error::Result;
+use crate::metrics::Histogram;
+use crate::workload::Rng;
+use crate::{bail, err};
+
+/// Storm-injected job ids live in their own namespace, far above both
+/// trace ids and the serve pipeline's per-source (src << 32) namespaces.
+pub const STORM_ID_BASE: JobId = 1 << 48;
+
+/// Fate of a down machine's *running head* (queued-but-unstarted slots
+/// are always evicted back to the arrival FIFO).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DownPolicy {
+    /// The head's accrued virtual work is discarded and the job re-queues
+    /// from scratch (the work-lost cycles are recorded).
+    Lose,
+    /// The head stays in place and resumes exactly where it stopped when
+    /// the machine comes back up (no virtual work accrues while down).
+    ResumeOnUp,
+}
+
+/// One parsed fault clause, in spec order.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FaultClause {
+    Down { machine: MachineId, at: u64, dur: u64 },
+    Slow { machine: MachineId, at: u64, dur: u64, factor: u32 },
+    Storm { jobs: usize, at: u64 },
+    Drop { source: usize, at: u64 },
+}
+
+/// A parsed fault scenario: the seed, the head policy, and the clauses.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultSpec {
+    pub seed: u64,
+    pub policy: DownPolicy,
+    clauses: Vec<FaultClause>,
+}
+
+/// Accepted clause vocabulary, interpolated into every parse error.
+pub const USAGE: &str =
+    "down=M@T+D, slow=M@T+DxF, storm=K@T, drop=S@T, policy=lose|resume, seed=N";
+
+fn parse_u64(what: &str, s: &str) -> Result<u64> {
+    s.trim()
+        .parse()
+        .map_err(|e| err!("fault spec: bad {what} `{s}`: {e}"))
+}
+
+impl FaultSpec {
+    /// Parse the comma-separated clause grammar (see module docs).
+    pub fn parse(s: &str) -> Result<FaultSpec> {
+        let mut spec = FaultSpec {
+            seed: 0,
+            policy: DownPolicy::ResumeOnUp,
+            clauses: Vec::new(),
+        };
+        for part in s.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let Some((key, val)) = part.split_once('=') else {
+                bail!("fault spec: clause `{part}` is not key=value (expected: {USAGE})");
+            };
+            match key {
+                "seed" => spec.seed = parse_u64("seed", val)?,
+                "policy" => {
+                    spec.policy = match val {
+                        "lose" => DownPolicy::Lose,
+                        "resume" => DownPolicy::ResumeOnUp,
+                        other => bail!("fault spec: unknown policy `{other}` (lose|resume)"),
+                    }
+                }
+                "down" => {
+                    let (m, rest) = val
+                        .split_once('@')
+                        .ok_or_else(|| err!("fault spec: down=`{val}` wants M@T+D"))?;
+                    let (at, dur) = rest
+                        .split_once('+')
+                        .ok_or_else(|| err!("fault spec: down=`{val}` wants M@T+D"))?;
+                    spec.clauses.push(FaultClause::Down {
+                        machine: parse_u64("machine", m)? as usize,
+                        at: parse_u64("tick", at)?,
+                        dur: parse_u64("duration", dur)?,
+                    });
+                }
+                "slow" => {
+                    let (m, rest) = val
+                        .split_once('@')
+                        .ok_or_else(|| err!("fault spec: slow=`{val}` wants M@T+DxF"))?;
+                    let (at, rest) = rest
+                        .split_once('+')
+                        .ok_or_else(|| err!("fault spec: slow=`{val}` wants M@T+DxF"))?;
+                    let (dur, factor) = rest
+                        .split_once('x')
+                        .ok_or_else(|| err!("fault spec: slow=`{val}` wants M@T+DxF"))?;
+                    spec.clauses.push(FaultClause::Slow {
+                        machine: parse_u64("machine", m)? as usize,
+                        at: parse_u64("tick", at)?,
+                        dur: parse_u64("duration", dur)?,
+                        factor: parse_u64("factor", factor)? as u32,
+                    });
+                }
+                "storm" => {
+                    let (k, at) = val
+                        .split_once('@')
+                        .ok_or_else(|| err!("fault spec: storm=`{val}` wants K@T"))?;
+                    spec.clauses.push(FaultClause::Storm {
+                        jobs: parse_u64("job count", k)? as usize,
+                        at: parse_u64("tick", at)?,
+                    });
+                }
+                "drop" => {
+                    let (s, at) = val
+                        .split_once('@')
+                        .ok_or_else(|| err!("fault spec: drop=`{val}` wants S@T"))?;
+                    spec.clauses.push(FaultClause::Drop {
+                        source: parse_u64("source", s)? as usize,
+                        at: parse_u64("tick", at)?,
+                    });
+                }
+                other => bail!("fault spec: unknown clause `{other}` (expected: {USAGE})"),
+            }
+        }
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    fn validate(&self) -> Result<()> {
+        for c in &self.clauses {
+            match *c {
+                FaultClause::Down { at, dur, .. } => {
+                    if at == 0 {
+                        bail!("fault spec: down at tick 0 (scheduler ticks start at 1)");
+                    }
+                    if dur == 0 {
+                        bail!("fault spec: down duration must be >= 1");
+                    }
+                }
+                FaultClause::Slow { at, dur, factor, .. } => {
+                    if at == 0 {
+                        bail!("fault spec: slow at tick 0 (scheduler ticks start at 1)");
+                    }
+                    if dur == 0 {
+                        bail!("fault spec: slow duration must be >= 1");
+                    }
+                    if factor < 2 {
+                        bail!("fault spec: slow factor must be >= 2 (1 is a no-op)");
+                    }
+                }
+                FaultClause::Storm { jobs, at } => {
+                    if at == 0 {
+                        bail!("fault spec: storm at tick 0 (scheduler ticks start at 1)");
+                    }
+                    if jobs == 0 || jobs > 100_000 {
+                        bail!("fault spec: storm size must be in 1..=100000");
+                    }
+                }
+                FaultClause::Drop { at, .. } => {
+                    if at == 0 {
+                        bail!("fault spec: drop at tick 0 (scheduler ticks start at 1)");
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// No clauses at all — scheduling is bit-identical to a clean run.
+    pub fn is_empty(&self) -> bool {
+        self.clauses.is_empty()
+    }
+
+    pub fn clauses(&self) -> &[FaultClause] {
+        &self.clauses
+    }
+
+    /// Canonical spec string: clauses in spec order, then non-default
+    /// `policy`/`seed`. Re-parses to an equal spec, and doubles as the
+    /// artifact fault key (so a faulted cell can never pair with a clean
+    /// one in `diff`).
+    pub fn render(&self) -> String {
+        let mut parts: Vec<String> = self
+            .clauses
+            .iter()
+            .map(|c| match *c {
+                FaultClause::Down { machine, at, dur } => format!("down={machine}@{at}+{dur}"),
+                FaultClause::Slow { machine, at, dur, factor } => {
+                    format!("slow={machine}@{at}+{dur}x{factor}")
+                }
+                FaultClause::Storm { jobs, at } => format!("storm={jobs}@{at}"),
+                FaultClause::Drop { source, at } => format!("drop={source}@{at}"),
+            })
+            .collect();
+        if self.policy == DownPolicy::Lose {
+            parts.push("policy=lose".into());
+        }
+        if self.seed != 0 {
+            parts.push(format!("seed={}", self.seed));
+        }
+        parts.join(",")
+    }
+
+    /// Per-source dropout cut-offs: `(source, first dropped tick)`.
+    /// Dropout is a *source-stream* fault, applied by the serve pipeline
+    /// where arrivals are still attributed to sources — the engine never
+    /// sees the dropped events.
+    pub fn drops(&self) -> impl Iterator<Item = (usize, u64)> + '_ {
+        self.clauses.iter().filter_map(|c| match *c {
+            FaultClause::Drop { source, at } => Some((source, at)),
+            _ => None,
+        })
+    }
+
+    pub fn has_drops(&self) -> bool {
+        self.drops().next().is_some()
+    }
+
+    /// Total jobs the storm clauses will inject.
+    pub fn injected_total(&self) -> usize {
+        self.clauses
+            .iter()
+            .map(|c| match *c {
+                FaultClause::Storm { jobs, .. } => jobs,
+                _ => 0,
+            })
+            .sum()
+    }
+
+    /// Materialize the engine-side event queue for a park of `machines`.
+    /// Validates machine indices and synthesizes storm jobs
+    /// deterministically from the seed (one independent RNG stream per
+    /// storm clause, so reordering unrelated clauses cannot change a
+    /// storm's jobs).
+    pub fn plan(&self, machines: usize) -> Result<FaultPlan> {
+        let mut events: Vec<FaultEvent> = Vec::new();
+        for (ci, c) in self.clauses.iter().enumerate() {
+            match *c {
+                FaultClause::Down { machine, at, dur } => {
+                    if machine >= machines {
+                        bail!("fault spec: down machine {machine} out of range (park has {machines})");
+                    }
+                    events.push(FaultEvent { tick: at, kind: FaultKind::Down(machine) });
+                    events.push(FaultEvent { tick: at + dur, kind: FaultKind::Up(machine) });
+                }
+                FaultClause::Slow { machine, at, dur, factor } => {
+                    if machine >= machines {
+                        bail!("fault spec: slow machine {machine} out of range (park has {machines})");
+                    }
+                    events.push(FaultEvent {
+                        tick: at,
+                        kind: FaultKind::SlowStart(machine, factor),
+                    });
+                    events.push(FaultEvent { tick: at + dur, kind: FaultKind::SlowEnd(machine) });
+                }
+                FaultClause::Storm { jobs, at } => {
+                    let mut rng = Rng::new(self.seed.wrapping_add((ci as u64 + 1) << 32));
+                    let batch: Vec<Job> = (0..jobs)
+                        .map(|k| {
+                            let id = STORM_ID_BASE + ((ci as u64) << 24) + k as u64;
+                            let weight = rng.uniform(1.0, 64.0).round().max(1.0);
+                            let ept: Vec<f32> = (0..machines)
+                                .map(|_| rng.uniform(10.0, 255.0).round())
+                                .collect();
+                            Job::new(id, weight, ept, JobNature::Mixed).with_arrival(at)
+                        })
+                        .collect();
+                    events.push(FaultEvent { tick: at, kind: FaultKind::Storm(batch) });
+                }
+                FaultClause::Drop { .. } => {} // serve-side, not an engine event
+            }
+        }
+        // Stable by tick: same-tick events keep clause order, so the
+        // plan is a pure function of the spec string.
+        events.sort_by_key(|e| e.tick);
+        Ok(FaultPlan {
+            events: events.into(),
+            policy: self.policy,
+            key: self.render(),
+            machines,
+        })
+    }
+}
+
+/// What happens at a fault event's tick.
+#[derive(Debug, Clone)]
+pub enum FaultKind {
+    /// Machine goes down: tail slots evicted to the FIFO, head per policy.
+    Down(MachineId),
+    /// Machine comes back up; a resumed head re-arms the event horizon.
+    Up(MachineId),
+    /// Machine starts straggling: EPTs of *newly assigned* jobs inflate
+    /// by the factor (in-flight heads keep their contracted rate).
+    SlowStart(MachineId, u32),
+    SlowEnd(MachineId),
+    /// A correlated burst of synthetic jobs enters the arrival FIFO.
+    Storm(Vec<Job>),
+}
+
+/// One scheduled perturbation on the virtual clock.
+#[derive(Debug, Clone)]
+pub struct FaultEvent {
+    pub tick: u64,
+    pub kind: FaultKind,
+}
+
+/// The materialized, engine-consumable event queue (sorted by tick,
+/// clause order within a tick).
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    events: VecDeque<FaultEvent>,
+    pub policy: DownPolicy,
+    key: String,
+    machines: usize,
+}
+
+impl FaultPlan {
+    /// The canonical spec string this plan was built from (artifact key).
+    pub fn key(&self) -> &str {
+        &self.key
+    }
+
+    pub fn machines(&self) -> usize {
+        self.machines
+    }
+
+    /// Tick of the next pending fault event — a release-class event for
+    /// `SosEngine::next_event_tick`, which is what keeps a fault inside
+    /// an otherwise-empty window from being jumped over.
+    pub fn next_tick(&self) -> Option<u64> {
+        self.events.front().map(|e| e.tick)
+    }
+
+    /// Pop the next event if it is due at or before `now`.
+    pub fn pop_due(&mut self, now: u64) -> Option<FaultEvent> {
+        if self.events.front().is_some_and(|e| e.tick <= now) {
+            self.events.pop_front()
+        } else {
+            None
+        }
+    }
+
+    /// All events consumed — the run may drain (an idle engine must keep
+    /// running while ups/storms are still scheduled).
+    pub fn is_done(&self) -> bool {
+        self.events.is_empty()
+    }
+}
+
+/// Recovery metrics for one faulted run.
+#[derive(Debug, Clone, Default)]
+pub struct FaultStats {
+    /// Fault events applied, by kind.
+    pub downs: u64,
+    pub ups: u64,
+    pub slow_events: u64,
+    pub storms: u64,
+    /// Jobs injected by storm events.
+    pub injected_jobs: u64,
+    /// Slots evicted from down machines back into the arrival FIFO.
+    pub evicted_jobs: u64,
+    /// Virtual-work cycles discarded by evictions (`policy=lose` heads
+    /// plus any accrued work on displaced tail slots).
+    pub work_lost_cycles: u64,
+    /// Eviction → reassignment latency per evicted job.
+    pub requeue_latency: Histogram,
+    /// Ticks with at least one machine down (utilization dip duration).
+    pub degraded_ticks: u64,
+    /// Σ over ticks of the number of down machines (dip area).
+    pub down_machine_ticks: u64,
+    /// Dip depth: most machines simultaneously down.
+    pub max_concurrent_down: usize,
+    /// Arrivals lost to source dropout (filled in by the serve pipeline;
+    /// the engine never sees them).
+    pub dropped_arrivals: u64,
+}
+
+/// Live fault state carried by a faulted [`crate::scheduler::SosEngine`]:
+/// the remaining plan, per-machine down/straggle flags, the retained
+/// payloads needed to re-queue evicted slots, and the recovery metrics.
+#[derive(Debug, Clone)]
+pub struct FaultState {
+    pub plan: FaultPlan,
+    pub down: Vec<bool>,
+    pub n_down: usize,
+    /// Service-time inflation factor per machine (1 = nominal).
+    pub slow: Vec<u32>,
+    /// Original `Job` per in-flight slot id. The engine stores quantized
+    /// `Slot`s, so re-queuing an evicted slot needs the job it came from;
+    /// entries are dropped on release.
+    pub retained: std::collections::HashMap<JobId, Job>,
+    /// Eviction tick per job currently awaiting reassignment.
+    pub evicted_at: std::collections::HashMap<JobId, u64>,
+    pub stats: FaultStats,
+}
+
+impl FaultState {
+    pub fn new(plan: FaultPlan, machines: usize) -> Self {
+        debug_assert_eq!(plan.machines(), machines, "plan built for a different park");
+        FaultState {
+            plan,
+            down: vec![false; machines],
+            n_down: 0,
+            slow: vec![1; machines],
+            retained: std::collections::HashMap::new(),
+            evicted_at: std::collections::HashMap::new(),
+            stats: FaultStats::default(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_render_round_trip() {
+        let s = "down=1@40+20,slow=0@10+5x4,storm=8@30,drop=1@25,policy=lose,seed=7";
+        let spec = FaultSpec::parse(s).unwrap();
+        assert_eq!(spec.render(), s);
+        assert_eq!(FaultSpec::parse(&spec.render()).unwrap(), spec);
+        assert_eq!(spec.policy, DownPolicy::Lose);
+        assert_eq!(spec.seed, 7);
+        assert_eq!(spec.clauses().len(), 4);
+        assert!(spec.has_drops());
+        assert_eq!(spec.injected_total(), 8);
+    }
+
+    #[test]
+    fn defaults_are_elided_from_the_canonical_form() {
+        let spec = FaultSpec::parse("down=0@5+3,policy=resume,seed=0").unwrap();
+        assert_eq!(spec.render(), "down=0@5+3");
+        assert!(FaultSpec::parse("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn parse_rejects_malformed_clauses() {
+        for bad in [
+            "nonsense",
+            "boom=1@2+3",
+            "down=1@2",          // missing +D
+            "down=1@0+5",        // tick 0
+            "down=1@5+0",        // zero duration
+            "slow=1@5+5x1",      // factor 1 is a no-op
+            "slow=1@5+5",        // missing xF
+            "storm=0@5",         // empty storm
+            "storm=5",           // missing @T
+            "policy=explode",
+            "seed=abc",
+        ] {
+            assert!(FaultSpec::parse(bad).is_err(), "accepted `{bad}`");
+        }
+    }
+
+    #[test]
+    fn plan_orders_events_and_validates_machines() {
+        let spec = FaultSpec::parse("storm=3@50,down=1@10+15").unwrap();
+        let mut plan = spec.plan(2).unwrap();
+        assert_eq!(plan.next_tick(), Some(10));
+        assert!(matches!(plan.pop_due(10).unwrap().kind, FaultKind::Down(1)));
+        assert_eq!(plan.next_tick(), Some(25)); // the paired Up
+        assert!(plan.pop_due(20).is_none(), "not due yet");
+        assert!(matches!(plan.pop_due(25).unwrap().kind, FaultKind::Up(1)));
+        assert!(matches!(plan.pop_due(50).unwrap().kind, FaultKind::Storm(_)));
+        assert!(plan.is_done());
+        // machine 1 does not exist in a 1-machine park
+        assert!(spec.plan(1).is_err());
+    }
+
+    #[test]
+    fn storm_jobs_are_deterministic_and_namespaced() {
+        let spec = FaultSpec::parse("storm=4@30,seed=9").unwrap();
+        let jobs = |p: &mut FaultPlan| -> Vec<Job> {
+            match p.pop_due(30).unwrap().kind {
+                FaultKind::Storm(js) => js,
+                other => panic!("expected storm, got {other:?}"),
+            }
+        };
+        let a = jobs(&mut spec.plan(3).unwrap());
+        let b = jobs(&mut spec.plan(3).unwrap());
+        assert_eq!(a, b, "same spec, same jobs");
+        for j in &a {
+            assert!(j.id >= STORM_ID_BASE);
+            assert_eq!(j.arrival, 30);
+            assert_eq!(j.fanout(), 3);
+            assert!(j.weight >= 1.0 && j.ept.iter().all(|&e| e >= 1.0));
+        }
+        // a different seed gives a different storm
+        let c = jobs(&mut FaultSpec::parse("storm=4@30,seed=10").unwrap().plan(3).unwrap());
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn drop_clauses_never_reach_the_engine_plan() {
+        let spec = FaultSpec::parse("drop=0@100").unwrap();
+        let plan = spec.plan(2).unwrap();
+        assert!(plan.is_done(), "drop is serve-side only");
+        assert_eq!(spec.drops().collect::<Vec<_>>(), vec![(0, 100)]);
+    }
+}

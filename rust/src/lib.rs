@@ -45,6 +45,10 @@
 //!   jsonio codec + parse-back-verified file I/O, the FNV-1a
 //!   schedule-identity digest, and the generic diff core behind both
 //!   `sweep diff` and `serve diff`.
+//! * [`faults`] — seeded deterministic fault injection (machine
+//!   down/up, stragglers, arrival storms, source dropout) as
+//!   first-class virtual-time events on the tickless event horizon,
+//!   with per-run recovery metrics.
 //!
 //! Offline-environment substrates (clap/criterion/serde/proptest/anyhow
 //! are not available here): [`cli`], [`bench`], [`error`], [`jsonio`],
@@ -75,6 +79,7 @@ pub mod coordinator;
 pub mod core;
 pub mod engine;
 pub mod error;
+pub mod faults;
 pub mod hw;
 pub mod jsonio;
 pub mod metrics;

@@ -11,6 +11,7 @@ use stannic::coordinator::{
 use stannic::core::MachinePark;
 use stannic::engine::EngineId;
 use stannic::error::{Ctx, Result};
+use stannic::faults::FaultSpec;
 use stannic::quant::Precision;
 use stannic::report::{self, Effort};
 use stannic::scheduler::SosEngine;
@@ -38,6 +39,7 @@ fn flag_specs() -> Vec<FlagSpec> {
         FlagSpec::new("sources", "serve: concurrent arrival-source threads (default 1; >1 rotates steady/bursty/heavy mixes)", true),
         FlagSpec::new("batch", "serve: max arrivals admitted per scheduler tick (default 0 = unbatched)", true),
         FlagSpec::new("queue-depth", "serve: bounded depth of arrival/merge/worker queues (default 256)", true),
+        FlagSpec::new("faults", "serve/sweep: seeded fault spec, e.g. 'down=1@40+30,slow=0@20+40x4,storm=6@60,seed=7'", true),
         FlagSpec::new("quick", "reduced-effort runs for smoke testing", false),
         FlagSpec::new("scale", "sweep the Agon-scale grid (parks up to 140 machines)", false),
         FlagSpec::new("record", "persist results (sweep: BENCH_<label>.json, serve: serve record) at this path", true),
@@ -116,9 +118,14 @@ fn serve_opts_from(args: &Args) -> Result<ServeOpts> {
         .usize_flag("queue-depth", defaults.queue_depth)?
         .max(1);
     let batch = args.usize_flag("batch", 0)?;
+    let faults = match args.flag("faults") {
+        Some(spec) => Some(FaultSpec::parse(spec).with_ctx(|| "parsing --faults".to_string())?),
+        None => None,
+    };
     Ok(ServeOpts {
         queue_depth,
         batch: if batch == 0 { usize::MAX } else { batch },
+        faults,
         ..defaults
     })
 }
@@ -210,10 +217,33 @@ fn cmd_serve(args: &Args) -> Result<()> {
             report.accel_cycles as f64 / stannic::hw::CLOCK_HZ * 1e3
         );
     }
+    if let Some(f) = report.faults.as_ref() {
+        println!("fault spec        : {}", report.fault_key);
+        println!(
+            "fault events      : {} down / {} up / {} slow / {} storm ({} jobs injected)",
+            f.downs, f.ups, f.slow_events, f.storms, f.injected_jobs
+        );
+        println!(
+            "fault evictions   : {} jobs re-queued, {} cycles of work lost, {} arrivals dropped",
+            f.evicted_jobs, f.work_lost_cycles, f.dropped_arrivals
+        );
+        if f.requeue_latency.count() > 0 {
+            println!(
+                "re-queue latency  : p50 {} / p99 {} / max {} ticks",
+                f.requeue_latency.p50(),
+                f.requeue_latency.p99(),
+                f.requeue_latency.max()
+            );
+        }
+        println!(
+            "utilization dip   : {} degraded ticks, {} machine-ticks down (max {} down at once)",
+            f.degraded_ticks, f.down_machine_ticks, f.max_concurrent_down
+        );
+    }
     println!("host wall         : {:.2?}", report.wall);
     if args.has("json") {
         use stannic::jsonio::{arr, num, obj, s};
-        let j = obj(vec![
+        let mut fields = vec![
             ("engine", s(report.engine)),
             ("completed", num(report.completions.len() as f64)),
             ("ticks", num(report.ticks as f64)),
@@ -228,7 +258,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
             ("pcie_us", num(report.pcie.total_ns / 1000.0)),
             ("accel_cycles", num(report.accel_cycles as f64)),
             ("sources", num(report.sources.len() as f64)),
-        ]);
+        ];
+        if let Some(f) = report.faults.as_ref() {
+            fields.push(("fault", s(report.fault_key.clone())));
+            fields.push(("fault_injected", num(f.injected_jobs as f64)));
+            fields.push(("fault_evicted", num(f.evicted_jobs as f64)));
+            fields.push(("fault_dropped", num(f.dropped_arrivals as f64)));
+        }
+        let j = obj(fields);
         println!("{j}");
     }
     if let Some(path) = args.flag("record") {
@@ -472,6 +509,18 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     }
     if let Some(list) = args.flag("engines").or_else(|| args.flag("engine")) {
         cfg.engines = EngineId::parse_list(list)?;
+    }
+    if let Some(spec) = args.flag("faults") {
+        let parsed = FaultSpec::parse(spec).with_ctx(|| "parsing --faults".to_string())?;
+        if parsed.has_drops() {
+            bail!(
+                "drop= clauses cut live arrival sources; the sweep replays fixed \
+                 traces (use `serve --faults` for source dropout)"
+            );
+        }
+        // store the canonical rendering so cell keys and artifact fault
+        // keys are identical no matter how the user spelled the spec
+        cfg.faults = if parsed.is_empty() { Vec::new() } else { vec![parsed.render()] };
     }
     if cfg.engines.iter().any(|e| !e.is_software()) {
         bail!(

@@ -84,6 +84,13 @@ impl Histogram {
 
     /// Approximate quantile (bucket lower bound; <= 12.5% relative
     /// error by construction).
+    ///
+    /// `q = 0` (or below) returns the minimum recorded value, up to
+    /// bucket resolution: the target rank is clamped to at least 1, so
+    /// the scan stops at the first non-empty bucket instead of
+    /// degenerating to "0 samples seen satisfies rank 0". This is also
+    /// why `quantile(0.125)` over the eight samples `0..=7` is 0 — rank
+    /// 1 lands in the minimum's bucket.
     pub fn quantile(&self, q: f64) -> u64 {
         if self.count == 0 {
             return 0;
@@ -127,6 +134,27 @@ mod tests {
         assert_eq!(h.p50(), 3);
         assert_eq!(h.max(), 7);
         assert!((h.mean() - 3.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantile_zero_is_the_minimum_recorded_value() {
+        // exact buckets below SUB: q=0 is the true minimum
+        let mut h = Histogram::new();
+        for v in [3u64, 5, 7] {
+            h.record(v);
+        }
+        assert_eq!(h.quantile(0.0), 3);
+        assert_eq!(h.quantile(-1.0), 3, "q clamps into [0, 1]");
+        // log buckets: q=0 is the minimum's bucket lower bound
+        let mut big = Histogram::new();
+        for v in [42u64, 100, 7000] {
+            big.record(v);
+        }
+        assert_eq!(big.quantile(0.0), bucket_lower_bound(bucket_of(42)));
+        // a lone zero sample stays zero
+        let mut z = Histogram::new();
+        z.record(0);
+        assert_eq!(z.quantile(0.0), 0);
     }
 
     #[test]

@@ -31,7 +31,10 @@ pub enum Horizon {
     Unknown,
     /// Given no further submissions, every tick strictly before this
     /// one produces an empty [`TickOutcome`], and this is the earliest
-    /// tick that can produce a non-empty one.
+    /// tick that can produce a non-empty one. Pending fault events
+    /// ([`crate::faults`]) are release-class here: the golden engine
+    /// folds them into [`SosEngine::next_event_tick`], so a jump can
+    /// never skip over a machine-down/up, straggler or storm event.
     At(u64),
     /// Nothing will ever happen again without a new submission.
     Idle,

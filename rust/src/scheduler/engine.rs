@@ -42,6 +42,7 @@ use std::cmp::Reverse;
 use std::collections::{BinaryHeap, VecDeque};
 
 use crate::core::{Job, JobId, MachineId};
+use crate::faults::{DownPolicy, FaultKind, FaultPlan, FaultState, FaultStats};
 use crate::quant::Precision;
 
 use super::cost::{cost_of, FULL_COST};
@@ -70,6 +71,12 @@ pub struct TickOutcome {
     pub assigned: Option<Assignment>,
     /// True when an arrival was waiting but *every* machine was full.
     pub stalled: bool,
+    /// Jobs evicted from a down machine back into the arrival FIFO this
+    /// tick (fault layer; always empty in fault-free runs).
+    pub evicted: Vec<(JobId, MachineId)>,
+    /// Storm jobs injected into the arrival FIFO this tick (fault
+    /// layer; the serve pipeline registers their payloads from here).
+    pub injected: Vec<Job>,
 }
 
 /// Golden software model of the discretized SOS algorithm.
@@ -92,6 +99,10 @@ pub struct SosEngine {
     /// Scratch list of machines due at the current tick (kept as a
     /// field so pop processing allocates nothing in steady state).
     due_scratch: Vec<usize>,
+    /// Installed fault layer, if any ([`Self::install_faults`]). Boxed:
+    /// fault-free engines pay one pointer of state and a null check per
+    /// tick phase.
+    faults: Option<Box<FaultState>>,
 }
 
 impl SosEngine {
@@ -113,7 +124,29 @@ impl SosEngine {
             cost_scratch: vec![0.0; machines],
             horizon: BinaryHeap::with_capacity(machines),
             due_scratch: Vec::with_capacity(machines),
+            faults: None,
         }
+    }
+
+    /// Arm a deterministic fault plan (see [`crate::faults`]). The plan
+    /// must have been built for this engine's park size, and must be
+    /// installed before the first tick so every event lands on the
+    /// virtual clock it was scheduled against.
+    pub fn install_faults(&mut self, plan: FaultPlan) {
+        assert_eq!(
+            plan.machines(),
+            self.schedules.len(),
+            "fault plan built for a different park size"
+        );
+        assert_eq!(self.tick_no, 0, "install faults before driving the engine");
+        let machines = self.schedules.len();
+        self.faults = Some(Box::new(FaultState::new(plan, machines)));
+    }
+
+    /// Recovery metrics of the installed fault plan (None when the
+    /// engine runs fault-free).
+    pub fn fault_stats(&self) -> Option<&FaultStats> {
+        self.faults.as_deref().map(|f| &f.stats)
     }
 
     pub fn machines(&self) -> usize {
@@ -177,20 +210,42 @@ impl SosEngine {
     /// The earliest future tick that can produce a non-empty
     /// [`TickOutcome`], given no further submissions: the next tick
     /// while the FIFO holds work (an assignment or stall happens every
-    /// tick), else the earliest head release on the event horizon, else
-    /// `None` (the engine is fully idle — nothing will ever happen
-    /// again without a new arrival). Prunes stale horizon entries.
+    /// tick), else the earliest of the next head release on the event
+    /// horizon and the next pending fault event, else `None` (the
+    /// engine is fully idle — nothing will ever happen again without a
+    /// new arrival). Prunes stale horizon entries.
+    ///
+    /// Fault events are release-class events here *by construction*:
+    /// every drive loop jumps to `min(next_event_tick, next_arrival)`,
+    /// so a fault that was not folded into this minimum would be
+    /// silently jumped over by [`Self::advance_to`]. A down machine's
+    /// horizon entries are treated as stale (its head cannot pop); the
+    /// matching up event re-arms them.
     pub fn next_event_tick(&mut self) -> Option<u64> {
+        let floor = self.tick_no + 1;
+        let fault_next = self
+            .faults
+            .as_deref()
+            .and_then(|f| f.plan.next_tick())
+            .map(|t| t.max(floor));
         if !self.pending.is_empty() {
-            return Some(self.tick_no + 1);
+            return Some(floor);
         }
+        let mut release_next = None;
         while let Some(&Reverse((release, m))) = self.horizon.peek() {
-            if self.schedules[m].head_release_tick() == Some(release) {
-                return Some(release.max(self.tick_no + 1));
+            let is_down = self.faults.as_deref().is_some_and(|f| f.down[m]);
+            if !is_down && self.schedules[m].head_release_tick() == Some(release) {
+                release_next = Some(release.max(floor));
+                break;
             }
-            self.horizon.pop(); // stale: that head was popped or displaced
+            // stale: that head was popped or displaced — or its machine
+            // is down (the up event re-arms the surviving head)
+            self.horizon.pop();
         }
-        None
+        match (release_next, fault_next) {
+            (Some(r), Some(f)) => Some(r.min(f)),
+            (r, f) => r.or(f),
+        }
     }
 
     /// Fast-forward virtual time to `tick` in O(1). The caller must
@@ -205,6 +260,16 @@ impl SosEngine {
             self.next_event_tick().map_or(true, |e| e > tick),
             "advance_to({tick}) would jump over a scheduler event"
         );
+        // Down machines stay down across the jump: account the dip
+        // area/duration for the skipped window in bulk, bit-equal to
+        // per-tick accounting.
+        if let Some(f) = self.faults.as_deref_mut() {
+            if f.n_down > 0 {
+                let span = tick - self.tick_no;
+                f.stats.degraded_ticks += span;
+                f.stats.down_machine_ticks += span * f.n_down as u64;
+            }
+        }
         self.tick_no = tick;
     }
 
@@ -228,6 +293,18 @@ impl SosEngine {
 
         let mut out = TickOutcome::default();
 
+        // (0) Fault iteration part: apply every fault event due at this
+        // tick before the pops, so the perturbed park is what the
+        // tick's phases observe; then count the dip for this executed
+        // tick (skipped windows are accounted in `advance_to`).
+        self.apply_due_faults(now, &mut out);
+        if let Some(f) = self.faults.as_deref_mut() {
+            if f.n_down > 0 {
+                f.stats.degraded_ticks += 1;
+                f.stats.down_machine_ticks += f.n_down as u64;
+            }
+        }
+
         // (1) POP iteration part: only machines whose horizon entry is
         // due can possibly release. Releases must be reported in
         // machine-index order (matching the historical O(M) scan), so
@@ -244,10 +321,18 @@ impl SosEngine {
             due.sort_unstable();
             due.dedup();
             for &m in &due {
+                if self.faults.as_deref().is_some_and(|f| f.down[m]) {
+                    // down machine: the entry is dropped here and the
+                    // surviving head re-armed by the up event
+                    continue;
+                }
                 let vs = &mut self.schedules[m];
                 vs.sync_to(now - 1);
                 if vs.head().is_some_and(|h| h.ready()) {
                     let slot = vs.pop_head().expect("head checked above");
+                    if let Some(f) = self.faults.as_deref_mut() {
+                        f.retained.remove(&slot.id);
+                    }
                     out.released.push((slot.id, m));
                     self.arm_horizon(m); // successor head, if any
                 }
@@ -260,7 +345,13 @@ impl SosEngine {
 
         // (2) Insert iteration part: assign the oldest pending arrival.
         if !self.pending.is_empty() {
-            let any_free = self.schedules.iter().any(|v| !v.is_full());
+            let any_free = self
+                .schedules
+                .iter()
+                .enumerate()
+                .any(|(m, v)| {
+                    !v.is_full() && !self.faults.as_deref().is_some_and(|f| f.down[m])
+                });
             if any_free {
                 let job = self.pending.pop_front().expect("front checked");
                 out.assigned = Some(self.assign(&job));
@@ -275,16 +366,103 @@ impl SosEngine {
         out
     }
 
+    /// Apply every installed fault event due at `now` (start-of-tick).
+    /// Field accesses stay split-borrow-friendly: the fault state is a
+    /// disjoint field from the schedules/FIFO/horizon, so horizon pushes
+    /// are inlined instead of going through [`Self::arm_horizon`].
+    fn apply_due_faults(&mut self, now: u64, out: &mut TickOutcome) {
+        let Some(f) = self.faults.as_deref_mut() else {
+            return;
+        };
+        while let Some(ev) = f.plan.pop_due(now) {
+            match ev.kind {
+                FaultKind::Down(m) => {
+                    f.stats.downs += 1;
+                    if f.down[m] {
+                        continue; // overlapping down window: already down
+                    }
+                    f.down[m] = true;
+                    f.n_down += 1;
+                    f.stats.max_concurrent_down = f.stats.max_concurrent_down.max(f.n_down);
+                    let vs = &mut self.schedules[m];
+                    vs.sync_to(now - 1);
+                    let evicted = match f.plan.policy {
+                        DownPolicy::Lose => vs.evict_all(),
+                        DownPolicy::ResumeOnUp => vs.evict_tail(),
+                    };
+                    for slot in evicted {
+                        f.stats.evicted_jobs += 1;
+                        f.stats.work_lost_cycles += u64::from(slot.n);
+                        let job = f
+                            .retained
+                            .remove(&slot.id)
+                            .expect("every in-flight slot has a retained job");
+                        f.evicted_at.insert(slot.id, now);
+                        out.evicted.push((slot.id, m));
+                        // re-queue in schedule (priority) order: the
+                        // FIFO serializes the re-assignments one per
+                        // tick, deterministically
+                        self.pending.push_back(job);
+                    }
+                }
+                FaultKind::Up(m) => {
+                    f.stats.ups += 1;
+                    if !f.down[m] {
+                        continue;
+                    }
+                    f.down[m] = false;
+                    f.n_down -= 1;
+                    let vs = &mut self.schedules[m];
+                    // downtime cycles never happened: advance the
+                    // schedule's clock without accrual so the surviving
+                    // head resumes exactly where it stopped
+                    vs.skip_to(now - 1);
+                    if let Some(release) = vs.head_release_tick() {
+                        self.horizon.push(Reverse((release, m)));
+                    }
+                }
+                FaultKind::SlowStart(m, factor) => {
+                    f.stats.slow_events += 1;
+                    f.slow[m] = factor.max(1);
+                }
+                FaultKind::SlowEnd(m) => {
+                    f.slow[m] = 1;
+                }
+                FaultKind::Storm(jobs) => {
+                    f.stats.storms += 1;
+                    for job in jobs {
+                        f.stats.injected_jobs += 1;
+                        out.injected.push(job.clone());
+                        self.pending.push_back(job);
+                    }
+                }
+            }
+        }
+    }
+
     /// Phase II machine assignment: cost all machines, argmin, insert.
     fn assign(&mut self, job: &Job) -> Assignment {
         debug_assert_eq!(job.fanout(), self.schedules.len());
         let now = self.tick_no;
         let mut best: Option<(usize, f32, usize)> = None; // (machine, cost, pos)
         for (m, vs) in self.schedules.iter_mut().enumerate() {
+            if self.faults.as_deref().is_some_and(|f| f.down[m]) {
+                // a down machine is excluded from Phase II outright (its
+                // V_i is unreachable); do NOT sync it — downtime must
+                // not accrue virtual work
+                self.cost_scratch[m] = FULL_COST;
+                continue;
+            }
             // cost is computed over the post-pop state with virtual work
             // through the previous tick's Phase III
             vs.sync_to(now - 1);
-            let (j_w, j_eps, j_t) = self.precision.q_job(job.weight, job.ept[m]);
+            // a straggling machine inflates the EPTs of *newly assigned*
+            // jobs (in-flight slots keep their contracted rate)
+            let ept_m = match self.faults.as_deref() {
+                Some(f) if f.slow[m] > 1 => job.ept[m] * f.slow[m] as f32,
+                _ => job.ept[m],
+            };
+            let (j_w, j_eps, j_t) = self.precision.q_job(job.weight, ept_m);
             match cost_of(vs, j_w, j_eps, j_t) {
                 Some(c) => {
                     let total = c.total();
@@ -301,7 +479,11 @@ impl SosEngine {
         }
         let (machine, cost, position) =
             best.expect("assign() requires at least one non-full machine");
-        let (j_w, j_eps, j_t) = self.precision.q_job(job.weight, job.ept[machine]);
+        let ept_w = match self.faults.as_deref() {
+            Some(f) if f.slow[machine] > 1 => job.ept[machine] * f.slow[machine] as f32,
+            _ => job.ept[machine],
+        };
+        let (j_w, j_eps, j_t) = self.precision.q_job(job.weight, ept_w);
         let slot = Slot {
             id: job.id,
             weight: j_w,
@@ -317,6 +499,15 @@ impl SosEngine {
             // the newcomer is the head (fresh schedule or displacement):
             // its release defines the machine's next horizon event
             self.arm_horizon(machine);
+        }
+        if let Some(f) = self.faults.as_deref_mut() {
+            // retain the payload so a future machine-down can re-queue
+            // this slot; close the re-queue latency loop if this very
+            // assignment is such a re-queue landing
+            f.retained.insert(job.id, job.clone());
+            if let Some(t0) = f.evicted_at.remove(&job.id) {
+                f.stats.requeue_latency.record(now - t0);
+            }
         }
         Assignment {
             job: job.id,
@@ -341,9 +532,14 @@ impl SosEngine {
         self.tick(None)
     }
 
-    /// True when no work remains anywhere in the scheduler.
+    /// True when no work remains anywhere in the scheduler. A faulted
+    /// engine is never idle while fault events are still scheduled — an
+    /// empty park must keep running into a pending storm (and a down
+    /// machine's recovery metrics need its up event to fire).
     pub fn is_idle(&self) -> bool {
-        self.pending.is_empty() && self.schedules.iter().all(|v| v.is_empty())
+        self.pending.is_empty()
+            && self.schedules.iter().all(|v| v.is_empty())
+            && self.faults.as_deref().map_or(true, |f| f.plan.is_done())
     }
 }
 
@@ -541,6 +737,97 @@ mod tests {
         e.advance_to(110);
         assert_eq!(e.tick(None).released, vec![(1, 0)]);
         assert!(e.is_idle());
+    }
+
+    #[test]
+    fn fault_event_bounds_the_horizon_jump() {
+        // An otherwise-empty engine with a pending storm: the storm tick
+        // must surface through next_event_tick, so drive loops cannot
+        // jump over it (the tickless fault invariant).
+        let mut e = SosEngine::new(2, 4, 0.5, Precision::Int8);
+        e.install_faults(
+            crate::faults::FaultSpec::parse("storm=2@50,seed=3")
+                .unwrap()
+                .plan(2)
+                .unwrap(),
+        );
+        assert!(!e.is_idle(), "pending storm keeps the engine live");
+        assert_eq!(e.next_event_tick(), Some(50));
+        e.advance_to(49); // legal: [1, 49] is provably event-free
+        let out = e.tick(None);
+        assert_eq!(out.injected.len(), 2);
+        assert!(out.assigned.is_some(), "first storm job assigned same tick");
+        assert_eq!(e.fault_stats().unwrap().injected_jobs, 2);
+    }
+
+    #[test]
+    fn down_resume_pauses_the_head_and_evicts_the_tail() {
+        let mut e = SosEngine::new(1, 4, 1.0, Precision::Fp32);
+        e.install_faults(crate::faults::FaultSpec::parse("down=0@5+10").unwrap().plan(1).unwrap());
+        e.tick(Some(&job(1, 2.0, vec![10.0]))); // tick 1: head, alpha_pt 10 -> pops at 11
+        e.tick(Some(&job(2, 1.0, vec![10.0]))); // tick 2: tail (T 0.1 < 0.2)
+        e.advance_to(4);
+        let out = e.tick(None); // tick 5: machine 0 goes down
+        assert_eq!(out.evicted, vec![(2, 0)]);
+        // the evicted job re-queues immediately, but the whole park is
+        // down, so the engine stalls deterministically until the up
+        assert!(out.stalled);
+        for t in 6..=14u64 {
+            assert!(e.tick(None).stalled, "tick {t}: park fully down");
+        }
+        let out = e.tick(None); // tick 15: up fires, job 2 re-assigns
+        assert_eq!(out.assigned.expect("re-queued job lands").job, 2);
+        // the head accrued 4 cycles before the down (ticks 1..=4) and
+        // none while down: 6 remain after the up at 15 -> pops at 21
+        assert_eq!(e.next_event_tick(), Some(21));
+        e.advance_to(20);
+        assert_eq!(e.tick(None).released, vec![(1, 0)]);
+        let stats = e.fault_stats().unwrap();
+        assert_eq!(stats.evicted_jobs, 1);
+        assert_eq!(stats.degraded_ticks, 10);
+        assert_eq!(stats.down_machine_ticks, 10);
+        assert_eq!(stats.max_concurrent_down, 1);
+        assert_eq!(stats.requeue_latency.count(), 1);
+        assert_eq!(stats.requeue_latency.max(), 10, "evicted at 5, re-landed at 15");
+        assert_eq!(stats.work_lost_cycles, 0, "resume: no virtual work discarded");
+    }
+
+    #[test]
+    fn down_lose_discards_the_heads_progress() {
+        let mut e = SosEngine::new(2, 4, 1.0, Precision::Fp32);
+        e.install_faults(
+            crate::faults::FaultSpec::parse("down=0@6+4,policy=lose")
+                .unwrap()
+                .plan(2)
+                .unwrap(),
+        );
+        e.tick(Some(&job(1, 2.0, vec![10.0, 100.0]))); // m0, alpha_pt 10
+        e.advance_to(5);
+        let out = e.tick(None); // tick 6: down evicts the running head
+        assert_eq!(out.evicted, vec![(1, 0)]);
+        // the evicted job re-enters the FIFO before Phase II, so it
+        // restarts from scratch the same tick; m0 is down -> lands on m1
+        let a = out.assigned.unwrap();
+        assert_eq!((a.job, a.machine), (1, 1));
+        assert_eq!(e.fault_stats().unwrap().work_lost_cycles, 5);
+    }
+
+    #[test]
+    fn slow_machine_inflates_new_assignments_only() {
+        let mut e = SosEngine::new(1, 4, 0.5, Precision::Fp32);
+        e.install_faults(crate::faults::FaultSpec::parse("slow=0@2+10x4").unwrap().plan(1).unwrap());
+        e.tick(Some(&job(1, 2.0, vec![10.0]))); // before the slow: ept 10
+        assert_eq!(e.schedule(0).head().unwrap().ept, 10.0);
+        let out = e.tick(Some(&job(2, 2.0, vec![10.0]))); // during: ept x4
+        assert!(out.assigned.is_some());
+        let slot = e.schedule(0).slots().iter().find(|s| s.id == 2).unwrap();
+        assert_eq!(slot.ept, 40.0, "straggler inflation applied at assignment");
+        assert_eq!(slot.alpha_pt, 20);
+        assert_eq!(
+            e.schedule(0).head().unwrap().ept,
+            10.0,
+            "in-flight head keeps its contracted rate"
+        );
     }
 
     #[test]

@@ -334,6 +334,50 @@ impl VirtualSchedule {
         }
     }
 
+    /// Advance `synced_at` to `now` *without* accruing virtual work —
+    /// the gap's cycles never happened, as opposed to [`Self::sync_to`]
+    /// where they are materialized onto the head. Used by the fault
+    /// layer when a machine comes back up: the head resumes with exactly
+    /// its pre-down progress, and `head_release_tick` (being
+    /// `synced_at`-relative) shifts out by the downtime automatically.
+    pub fn skip_to(&mut self, now: u64) {
+        debug_assert!(now >= self.synced_at, "virtual time cannot rewind");
+        self.synced_at = now;
+    }
+
+    /// Evict every queued-but-unstarted slot behind the head, returning
+    /// them in schedule (priority) order. The head stays in place with
+    /// its accrued virtual work; used on a machine-down event under
+    /// `policy=resume`. Memoized sums: the head's prefix (`memo_hi`) is
+    /// untouched by removing slots behind it, and its suffix collapses
+    /// to its own `rem_lo`.
+    pub fn evict_tail(&mut self) -> Vec<Slot> {
+        if self.len() <= 1 {
+            return Vec::new();
+        }
+        let evicted: Vec<Slot> = self.slots.drain(self.start + 1..).collect();
+        if self.memoized {
+            self.memo_hi.truncate(self.start + 1);
+            self.memo_lo.truncate(self.start + 1);
+            self.memo_lo[self.start] = self.slots[self.start].rem_lo();
+        }
+        evicted
+    }
+
+    /// Evict *every* slot, head included, returning them in schedule
+    /// order; the ring, bias and memo state fully reset (as after a
+    /// natural drain) while `synced_at` is preserved. Used on a
+    /// machine-down event under `policy=lose`.
+    pub fn evict_all(&mut self) -> Vec<Slot> {
+        let evicted: Vec<Slot> = self.slots.drain(self.start..).collect();
+        self.slots.clear();
+        self.memo_hi.clear();
+        self.memo_lo.clear();
+        self.start = 0;
+        self.hi_bias = 0.0;
+        evicted
+    }
+
     /// The virtual tick at whose start the current head is (or becomes)
     /// alpha-ready, i.e. the tick a per-tick driver would pop it on.
     /// Sync-invariant: `synced_at + 1 + (alpha_pt - n)` gives the same
@@ -656,6 +700,80 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn evict_tail_keeps_the_head_and_its_sums() {
+        for memoized in [false, true] {
+            let mut v = VirtualSchedule::with_memoization(6, memoized);
+            v.insert(slot(1, 60.0, 20.0)); // T=3.0 (head)
+            v.insert(slot(2, 40.0, 20.0)); // T=2.0
+            v.insert(slot(3, 20.0, 20.0)); // T=1.0
+            v.sync_to(4); // head accrues 4 cycles
+            let evicted = v.evict_tail();
+            assert_eq!(
+                evicted.iter().map(|s| s.id).collect::<Vec<_>>(),
+                [2, 3],
+                "tail evicted in schedule order"
+            );
+            assert_eq!(v.len(), 1);
+            assert_eq!(v.head().unwrap().id, 1);
+            assert_eq!(v.head().unwrap().n, 4, "head keeps accrued work");
+            for probe in [0.5f32, 1.0, 2.0, 3.0, 9.0] {
+                let (hi, lo, pos) = v.threshold_read(probe);
+                assert_eq!(hi, v.sum_hi(probe), "memoized={memoized} probe {probe}");
+                assert_eq!(lo, v.sum_lo(probe), "memoized={memoized} probe {probe}");
+                assert_eq!(pos, v.position_for(probe));
+            }
+            // schedule stays usable: insert + pop behave normally
+            assert_eq!(v.insert(slot(4, 40.0, 20.0)), 1);
+            assert!(v.is_properly_ordered());
+        }
+    }
+
+    #[test]
+    fn evict_tail_of_singleton_or_empty_is_a_noop() {
+        let mut v = VirtualSchedule::with_memoization(4, true);
+        assert!(v.evict_tail().is_empty());
+        v.insert(slot(1, 10.0, 20.0));
+        assert!(v.evict_tail().is_empty());
+        assert_eq!(v.head().unwrap().id, 1);
+    }
+
+    #[test]
+    fn evict_all_resets_like_a_drain() {
+        for memoized in [false, true] {
+            let mut v = VirtualSchedule::with_memoization(4, memoized);
+            v.insert(slot(1, 60.0, 20.0));
+            v.insert(slot(2, 40.0, 20.0));
+            v.sync_to(3);
+            let evicted = v.evict_all();
+            assert_eq!(evicted.iter().map(|s| s.id).collect::<Vec<_>>(), [1, 2]);
+            assert_eq!(evicted[0].n, 3, "evicted head carries its lost work");
+            assert!(v.is_empty());
+            assert_eq!(v.synced_at(), 3, "virtual time is preserved");
+            assert_eq!(v.head_release_tick(), None);
+            // reusable afterwards, memo state consistent
+            v.insert(slot(5, 20.0, 20.0));
+            let (hi, lo, _) = v.threshold_read(1.0);
+            assert_eq!(hi, v.sum_hi(1.0));
+            assert_eq!(lo, v.sum_lo(1.0));
+        }
+    }
+
+    #[test]
+    fn skip_to_advances_time_without_accrual() {
+        let mut v = VirtualSchedule::new(4);
+        v.insert(slot(1, 10.0, 20.0)); // alpha_pt = 10, crowned at synced_at=0
+        v.sync_to(4);
+        assert_eq!(v.head().unwrap().n, 4);
+        assert_eq!(v.head_release_tick(), Some(11));
+        v.skip_to(30); // 26 ticks of downtime: no virtual work
+        assert_eq!(v.head().unwrap().n, 4, "no accrual across the skip");
+        // 6 cycles remain, so the head pops at 30 + 1 + 6
+        assert_eq!(v.head_release_tick(), Some(37));
+        v.sync_to(36);
+        assert!(v.head().unwrap().ready());
     }
 
     #[test]

@@ -33,6 +33,7 @@ use std::time::Instant;
 use crate::bench::Table;
 use crate::core::{JobId, MachinePark};
 use crate::engine::EngineId;
+use crate::faults::FaultSpec;
 use crate::metrics::{Histogram, MetricSet, ScheduleMetrics};
 use crate::quant::Precision;
 use crate::workload::{generate_trace, WorkloadSpec};
@@ -52,6 +53,10 @@ pub struct SweepCell {
     pub engine: EngineId,
     pub jobs: usize,
     pub seed: u64,
+    /// Canonical fault key ([`FaultSpec::render`]); empty = clean cell.
+    /// Faulted cells run the golden engine only (the fault layer lives
+    /// there) and never pair with clean cells in parity or diff.
+    pub fault: String,
 }
 
 /// Measured outcome of one cell.
@@ -93,6 +98,11 @@ pub struct SweepConfig {
     pub seed: u64,
     /// Worker threads; 0 = one per available core.
     pub threads: usize,
+    /// Fault-scenario axis: canonical [`FaultSpec`] strings. For each
+    /// scenario the grid gains one golden-engine cell per clean
+    /// scenario, *appended after* every clean cell so clean ids (and
+    /// therefore clean artifacts) are unchanged by the axis.
+    pub faults: Vec<String>,
 }
 
 impl Default for SweepConfig {
@@ -113,17 +123,21 @@ impl Default for SweepConfig {
             jobs: 200,
             seed: 42,
             threads: 0,
+            faults: Vec::new(),
         }
     }
 }
 
 impl SweepConfig {
     /// A reduced grid for smoke runs: one park size, fewer jobs
-    /// (3 workloads × 2 alphas × 5 engines = 30 cells).
+    /// (3 workloads × 2 alphas × 5 engines = 30 clean cells), plus one
+    /// chaos scenario (down + straggler + storm) fanned across the
+    /// clean scenarios on the golden engine — 6 faulted cells.
     pub fn quick() -> Self {
         SweepConfig {
             machine_counts: vec![5],
             jobs: 60,
+            faults: vec!["down=1@40+30,slow=0@20+40x4,storm=6@60,seed=7".to_string()],
             ..Self::default()
         }
     }
@@ -148,30 +162,39 @@ impl SweepConfig {
         }
     }
 
-    /// Expand the grid into cells, id-ordered.
+    /// Expand the grid into cells, id-ordered: every clean cell first
+    /// (ids identical to a fault-free grid), then the fault axis —
+    /// golden-engine cells only, one per (scenario × fault).
     pub fn cells(&self) -> Vec<SweepCell> {
         let mut out = Vec::new();
-        for (name, spec) in &self.workloads {
-            for &machines in &self.machine_counts {
-                for &alpha in &self.alphas {
-                    for &precision in &self.precisions {
-                        for &engine in &self.engines {
-                            out.push(SweepCell {
-                                id: out.len(),
-                                workload: name.clone(),
-                                spec: spec.clone(),
-                                machines,
-                                depth: self.depth,
-                                alpha,
-                                precision,
-                                engine,
-                                jobs: self.jobs,
-                                seed: self.seed,
-                            });
+        let push = |out: &mut Vec<SweepCell>, engines: &[EngineId], fault: &str| {
+            for (name, spec) in &self.workloads {
+                for &machines in &self.machine_counts {
+                    for &alpha in &self.alphas {
+                        for &precision in &self.precisions {
+                            for &engine in engines {
+                                out.push(SweepCell {
+                                    id: out.len(),
+                                    workload: name.clone(),
+                                    spec: spec.clone(),
+                                    machines,
+                                    depth: self.depth,
+                                    alpha,
+                                    precision,
+                                    engine,
+                                    jobs: self.jobs,
+                                    seed: self.seed,
+                                    fault: fault.to_string(),
+                                });
+                            }
                         }
                     }
                 }
             }
+        };
+        push(&mut out, &self.engines, "");
+        for fault in &self.faults {
+            push(&mut out, &[EngineId::Sos], fault);
         }
         out
     }
@@ -199,6 +222,14 @@ pub fn run_cell(cell: &SweepCell) -> CellResult {
         .engine
         .build(cell.machines, cell.depth, cell.alpha, cell.precision)
         .expect("sweep engines are artifact-free (xla is rejected before the sweep runs)");
+    if !cell.fault.is_empty() {
+        let plan = FaultSpec::parse(&cell.fault)
+            .and_then(|s| s.plan(cell.machines))
+            .expect("faulted cells carry a canonical, park-validated fault key");
+        engine
+            .install_faults(plan)
+            .expect("faulted cells run the golden engine");
+    }
 
     let mut metrics = MetricSet::new(cell.machines, 64);
     let mut hist = Histogram::new();
@@ -236,6 +267,14 @@ pub fn run_cell(cell: &SweepCell) -> CellResult {
         if let Some(a) = &out.assigned {
             metrics.record_assignment(a.machine, tick);
             in_flight[a.machine] += 1;
+        }
+        // fault traffic: storm jobs need an arrival for the latency
+        // accounting; evicted slots leave their machine until reassigned
+        for job in &out.injected {
+            arrivals.insert(job.id, job.arrival);
+        }
+        for (_, machine) in &out.evicted {
+            in_flight[*machine] -= 1;
         }
         for (id, machine) in &out.released {
             let arrived = arrivals.remove(id).expect("released job has an arrival");
@@ -326,7 +365,10 @@ impl SweepResults {
     /// a scenario must produce identical schedules. Returns the number
     /// of multi-engine scenario groups checked, or the first divergence.
     pub fn check_parity(&self) -> Result<usize, String> {
-        let mut groups: HashMap<(String, usize, u32, &'static str), &CellResult> = HashMap::new();
+        // the fault key is part of the scenario: a faulted cell can
+        // never be compared against (or pair with) a clean one
+        type ScenarioKey = (String, usize, u32, &'static str, String);
+        let mut groups: HashMap<ScenarioKey, &CellResult> = HashMap::new();
         let mut checked = 0usize;
         for r in &self.cells {
             let key = (
@@ -334,6 +376,7 @@ impl SweepResults {
                 r.cell.machines,
                 r.cell.alpha.to_bits(),
                 r.cell.precision.name(),
+                r.cell.fault.clone(),
             );
             match groups.get(&key) {
                 None => {
@@ -400,7 +443,7 @@ impl SweepResults {
             let rs: Vec<&CellResult> = self
                 .cells
                 .iter()
-                .filter(|r| r.cell.engine == engine)
+                .filter(|r| r.cell.engine == engine && r.cell.fault.is_empty())
                 .collect();
             if rs.is_empty() {
                 continue;
@@ -416,6 +459,27 @@ impl SweepResults {
             ]);
         }
         out.push_str(&t.render());
+
+        // fault keys per cell id, only when the sweep had a fault axis —
+        // a clean sweep's render stays byte-identical to earlier versions
+        let faulted: Vec<&CellResult> = self
+            .cells
+            .iter()
+            .filter(|r| !r.cell.fault.is_empty())
+            .collect();
+        if !faulted.is_empty() {
+            out.push_str("\nfaulted cells (golden engine)\n");
+            let mut t = Table::new(&["cell", "workload", "M", "fault"]);
+            for r in &faulted {
+                t.row(vec![
+                    r.cell.id.to_string(),
+                    r.cell.workload.clone(),
+                    r.cell.machines.to_string(),
+                    r.cell.fault.clone(),
+                ]);
+            }
+            out.push_str(&t.render());
+        }
         out
     }
 }
@@ -435,6 +499,7 @@ mod tests {
             jobs: 40,
             seed: 9,
             threads: 2,
+            faults: Vec::new(),
         }
     }
 
@@ -532,6 +597,63 @@ mod tests {
             assert_eq!(x.metrics.avg_latency, y.metrics.avg_latency);
             assert_eq!(x.ticks, y.ticks);
         }
+    }
+
+    #[test]
+    fn fault_axis_appends_sos_only_cells_after_the_clean_grid() {
+        let q = SweepConfig::quick();
+        let cells = q.cells();
+        let clean: Vec<&SweepCell> = cells.iter().filter(|c| c.fault.is_empty()).collect();
+        let faulted: Vec<&SweepCell> = cells.iter().filter(|c| !c.fault.is_empty()).collect();
+        assert_eq!(clean.len(), 30, "clean quick grid unchanged by the axis");
+        assert_eq!(faulted.len(), 6, "one chaos scenario x 6 clean scenarios");
+        assert!(faulted.iter().all(|c| c.engine == EngineId::Sos));
+        // clean cells come first with the same dense ids a fault-free
+        // grid would assign, so clean artifacts are unaffected
+        let mut no_faults = q.clone();
+        no_faults.faults.clear();
+        for (a, b) in no_faults.cells().iter().zip(&clean) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.engine, b.engine);
+            assert_eq!(a.workload, b.workload);
+        }
+        // every fault key round-trips as a canonical spec valid for its park
+        for c in &faulted {
+            let spec = crate::faults::FaultSpec::parse(&c.fault).unwrap();
+            assert_eq!(spec.render(), c.fault);
+            assert!(spec.plan(c.machines).is_ok());
+        }
+    }
+
+    #[test]
+    fn faulted_cells_are_deterministic_and_parity_isolated() {
+        let mut cfg = tiny();
+        cfg.engines = EngineId::SOFTWARE.to_vec();
+        cfg.faults = vec!["down=0@10+15,storm=3@12,seed=5".to_string()];
+        let results = run_sweep(&cfg);
+        // the faulted cell is a singleton scenario group: parity still
+        // checks exactly the clean multi-engine groups
+        assert_eq!(results.check_parity().unwrap(), 4, "4 non-reference engines");
+        let faulted: Vec<&CellResult> = results
+            .cells
+            .iter()
+            .filter(|r| !r.cell.fault.is_empty())
+            .collect();
+        assert_eq!(faulted.len(), 1);
+        let f = faulted[0];
+        assert!(
+            f.metrics.total_scheduled >= 43,
+            "40 trace jobs + 3 storm jobs (re-assignments after eviction may add more): {}",
+            f.metrics.total_scheduled
+        );
+        // bit-reproducible: re-running the cell gives the identical result
+        let again = run_cell(&f.cell);
+        assert_eq!(again.metrics.jobs_per_machine, f.metrics.jobs_per_machine);
+        assert_eq!(again.metrics.avg_latency, f.metrics.avg_latency);
+        assert_eq!(again.ticks, f.ticks);
+        assert_eq!((again.p50, again.p95, again.p99), (f.p50, f.p95, f.p99));
+        // and the render names the faulted cell with its canonical key
+        assert!(results.render().contains("down=0@10+15,storm=3@12,seed=5"));
     }
 
     #[test]

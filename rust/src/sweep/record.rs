@@ -48,6 +48,11 @@ pub struct CellRecord {
     pub precision: String,
     pub jobs: usize,
     pub seed: u64,
+    /// Canonical fault key ([`crate::faults::FaultSpec::render`]); empty
+    /// for clean cells. Part of the scenario key and digest only when
+    /// non-empty, so clean artifacts stay byte-identical to pre-fault
+    /// recordings (and `v1` files without the field keep parsing).
+    pub fault: String,
     /// FNV-1a digest of the deterministic outcome; equal scenarios with
     /// different digests mean scheduling semantics changed.
     pub digest: String,
@@ -78,6 +83,7 @@ impl CellRecord {
             precision: r.cell.precision.name().to_string(),
             jobs: r.cell.jobs,
             seed: r.cell.seed,
+            fault: r.cell.fault.clone(),
             digest: String::new(),
             jobs_per_machine: r.metrics.jobs_per_machine.clone(),
             avg_latency: r.metrics.avg_latency,
@@ -100,7 +106,7 @@ impl CellRecord {
     /// Scenario key: everything that must match for two cells (from two
     /// artifacts) to be the same measurement.
     pub fn key(&self) -> String {
-        format!(
+        let mut key = format!(
             "{}|{}|m{}|d{}|a{:.4}|{}|j{}|s{}",
             self.engine,
             self.workload,
@@ -110,7 +116,13 @@ impl CellRecord {
             self.precision,
             self.jobs,
             self.seed
-        )
+        );
+        // the fault key is scenario identity: a faulted cell must never
+        // be diffed against the clean cell it was derived from
+        if !self.fault.is_empty() {
+            let _ = write!(key, "|f:{}", self.fault);
+        }
+        key
     }
 
     /// Digest of the deterministic outcome. Every input is persisted, so
@@ -133,6 +145,9 @@ impl CellRecord {
             self.fairness,
             self.throughput
         );
+        if !self.fault.is_empty() {
+            let _ = write!(canon, "|{}", self.fault);
+        }
         fnv1a64_hex(canon.as_bytes())
     }
 
@@ -142,7 +157,7 @@ impl CellRecord {
     }
 
     pub fn to_json(&self) -> Json {
-        obj(vec![
+        let mut fields = vec![
             ("engine", s(self.engine.clone())),
             ("workload", s(self.workload.clone())),
             ("machines", num(self.machines as f64)),
@@ -170,7 +185,13 @@ impl CellRecord {
             ("throughput", num(self.throughput)),
             ("wall_ns", s(self.wall_ns.to_string())),
             ("jobs_per_sec", num(self.jobs_per_sec())),
-        ])
+        ];
+        // only faulted cells carry the field: clean artifacts render
+        // byte-identically to pre-fault versions of this schema
+        if !self.fault.is_empty() {
+            fields.push(("fault", s(self.fault.clone())));
+        }
+        obj(fields)
     }
 
     pub fn from_json(j: &Json) -> Result<CellRecord> {
@@ -183,6 +204,7 @@ impl CellRecord {
             precision: get_str(j, "precision")?,
             jobs: get_uint(j, "jobs")? as usize,
             seed: get_u64_str(j, "seed")?,
+            fault: get_str(j, "fault").unwrap_or_default(),
             digest: get_str(j, "digest")?,
             jobs_per_machine: get_usize_arr(j, "jobs_per_machine")?,
             avg_latency: get_f64(j, "avg_latency")?,
@@ -313,8 +335,42 @@ mod tests {
             jobs: 30,
             seed: 11,
             threads: 2,
+            faults: Vec::new(),
         };
         SweepRecord::from_results("test", &run_sweep(&cfg))
+    }
+
+    #[test]
+    fn faulted_cells_round_trip_and_never_pair_with_clean() {
+        // clean artifacts carry no fault field at all
+        let clean = small_record();
+        assert!(!clean.render().contains("\"fault\""));
+
+        let cfg = SweepConfig {
+            engines: vec![EngineId::Sos],
+            workloads: vec![("even".to_string(), WorkloadSpec::even())],
+            machine_counts: vec![3],
+            alphas: vec![0.5],
+            precisions: vec![Precision::Int8],
+            depth: 6,
+            jobs: 30,
+            seed: 11,
+            threads: 1,
+            faults: vec!["storm=2@8,seed=3".to_string()],
+        };
+        let rec = SweepRecord::from_results("test", &run_sweep(&cfg));
+        assert_eq!(rec.cells.len(), 2, "one clean + one faulted cell");
+        let (c, f) = (&rec.cells[0], &rec.cells[1]);
+        assert!(c.fault.is_empty() && f.fault == "storm=2@8,seed=3");
+        // same scenario otherwise, yet the keys (and digests) diverge:
+        // diff can never pair the faulted cell with the clean one
+        assert_ne!(c.key(), f.key());
+        assert!(f.key().ends_with("|f:storm=2@8,seed=3"));
+        assert_ne!(c.digest, f.digest);
+        // the fault key survives the artifact round trip digest-checked
+        let back = SweepRecord::parse(&rec.render()).unwrap();
+        assert_eq!(rec, back);
+        assert_eq!(back.cells[1].fault, "storm=2@8,seed=3");
     }
 
     #[test]

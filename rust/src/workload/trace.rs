@@ -77,7 +77,19 @@ impl Trace {
     }
 
     /// Parse the text format produced by [`Trace::to_text`].
+    ///
+    /// Every line [`Trace::to_text`] emits is newline-terminated, so
+    /// text that does not end in `'\n'` was truncated mid-record and is
+    /// rejected outright. Field-level checks alone cannot catch this: a
+    /// float cut to `"25."` still parses, and a record cut between EPTs
+    /// can leave a prefix that passes every per-token check.
     pub fn from_text(text: &str) -> Result<Trace> {
+        if !text.is_empty() && !text.ends_with('\n') {
+            bail!(
+                "line {}: trace truncated mid-record (no trailing newline)",
+                text.lines().count()
+            );
+        }
         let mut lines = text.lines();
         let header = lines.next().ok_or("empty trace")?;
         let machines: usize = header
@@ -153,6 +165,24 @@ mod tests {
         assert!(Trace::from_text("").is_err());
         assert!(Trace::from_text("# stannic-trace v1 machines=2\n1 1 5 C 1.0 10\n").is_err());
         assert!(Trace::from_text("# stannic-trace v1 machines=1\n1 1 5 Q 1.0 10\n").is_err());
+    }
+
+    #[test]
+    fn from_text_rejects_truncation_anywhere_in_the_tail() {
+        let park = MachinePark::paper_m1_m5();
+        let good = generate_trace(&WorkloadSpec::default(), &park, 10, 1).to_text();
+        assert!(good.ends_with('\n'), "to_text must newline-terminate");
+        // cutting anywhere inside the final record must be a hard error,
+        // even where the surviving prefix still parses token-by-token
+        for cut in 1..=6 {
+            let bad = &good[..good.len() - cut];
+            let err = Trace::from_text(bad).unwrap_err().to_string();
+            assert!(err.contains("truncated"), "cut {cut}: {err}");
+            assert!(
+                err.contains(&format!("line {}", good.lines().count())),
+                "cut {cut} not line-numbered: {err}"
+            );
+        }
     }
 
     #[test]
