@@ -11,6 +11,13 @@
 #            reproducible as a clean run, and the faulted artifact
 #            carries its fault key so it can never pair with a clean
 #            baseline.
+#   shards : `serve --shards 4` recorded twice and self-diffed (per-shard
+#            parity cells included), a sharded-vs-unsharded diff that
+#            must FAIL (shard blocks are identity), and the 10x-machine
+#            scaling scenario: the same burst on a 50-machine park, one
+#            shard vs four — completions must match and the 4-shard run
+#            must drain in fewer virtual ticks (deterministic, so the
+#            gate cannot flake; wall jobs/sec is printed for the trail).
 #   perf   : record the quick sweep and diff it against the committed
 #            BENCH_seed.json baseline; fails on >25% per-cell regression
 #            (override with STANNIC_PERF_THRESHOLD, e.g. =0.5) or on any
@@ -89,6 +96,51 @@ cargo run --release -- serve diff /tmp/SERVE_faulted_a.json /tmp/SERVE_faulted_b
   | tee /tmp/stannic_serve_faulted_diff.txt
 grep -E ", 0 parity breaks," /tmp/stannic_serve_faulted_diff.txt
 echo "faulted serve A/B self-diff OK (zero parity breaks)"
+
+echo "== sharded smoke: 4-shard park recorded twice, A/B self-diff parity-clean =="
+# Routing is a pure function of the merged virtual-time order and jobs
+# change shards only at rebalance barriers, so two recordings of the
+# same sharded scenario must share every per-shard digest.
+cargo run --release -- serve --sources 2 --machines 12 --shards 4 --jobs 150 --batch 4 \
+  --record /tmp/SERVE_sharded_a.json --label ci-shards | tee /tmp/stannic_serve_sharded.txt
+grep -E "jobs completed    : 150" /tmp/stannic_serve_sharded.txt
+grep -E "shards            : 4 parks" /tmp/stannic_serve_sharded.txt
+cargo run --release -- serve --sources 2 --machines 12 --shards 4 --jobs 150 --batch 4 \
+  --record /tmp/SERVE_sharded_b.json --label ci-shards2 > /dev/null
+cargo run --release -- serve diff /tmp/SERVE_sharded_a.json /tmp/SERVE_sharded_b.json \
+  | tee /tmp/stannic_serve_sharded_diff.txt
+grep -E ", 0 parity breaks," /tmp/stannic_serve_sharded_diff.txt
+echo "sharded serve A/B self-diff OK (zero parity breaks incl. per-shard cells)"
+
+echo "== sharded scaling: 10x-machine park, 1 shard vs 4 =="
+# 50 machines = 10x the paper's M1-M5 park. The single-domain engine
+# admits one arrival per tick (the decision-pipeline serialization the
+# paper's systolic array attacks); four independent shards make up to
+# four decisions per virtual tick, so the same bursty 1500-job workload
+# must drain in fewer virtual ticks. Both tick counts are virtual-time
+# facts — deterministic for a fixed seed — so this gate cannot flake;
+# wall-clock jobs/sec is printed into the trail but not gated.
+cargo run --release -- serve --sources 4 --machines 50 --shards 1 --workload bursty \
+  --jobs 1500 --batch 8 --record /tmp/SERVE_scale_k1.json --label scale-k1 \
+  | tee /tmp/stannic_scale_k1.txt
+cargo run --release -- serve --sources 4 --machines 50 --shards 4 --workload bursty \
+  --jobs 1500 --batch 8 --record /tmp/SERVE_scale_k4.json --label scale-k4 \
+  | tee /tmp/stannic_scale_k4.txt
+grep -E "jobs completed    : 1500" /tmp/stannic_scale_k1.txt
+grep -E "jobs completed    : 1500" /tmp/stannic_scale_k4.txt
+T1=$(awk -F': ' '/scheduler ticks/ {print $2}' /tmp/stannic_scale_k1.txt)
+T4=$(awk -F': ' '/scheduler ticks/ {print $2}' /tmp/stannic_scale_k4.txt)
+echo "virtual drain time: shards=1 -> $T1 ticks, shards=4 -> $T4 ticks"
+test "$T4" -lt "$T1"
+# a sharded recording must never gate-pass against the unsharded one:
+# the shard block is schedule identity, not telemetry
+if cargo run --release -- serve diff /tmp/SERVE_scale_k1.json /tmp/SERVE_scale_k4.json \
+  > /tmp/stannic_scale_diff.txt 2>&1; then
+  echo "ERROR: sharded artifact gate-passed against an unsharded baseline"
+  cat /tmp/stannic_scale_diff.txt
+  exit 1
+fi
+echo "sharded scaling OK (4 shards drain the burst in fewer virtual ticks; artifacts never pair)"
 
 if [ -f SERVE_seed.json ]; then
   echo "== perf: diff serve smoke against committed SERVE_seed.json =="

@@ -36,7 +36,7 @@ fn main() -> Result<()> {
     let native = serve(
         EngineId::Sos.build(5, 10, 0.5, Precision::Int8)?,
         &trace,
-        &ServeOpts::default(),
+        &ServeOpts::new(),
     )?;
     println!("golden sos engine (L3 coordinator):");
     println!("  completed        : {}", native.completions.len());
@@ -53,7 +53,7 @@ fn main() -> Result<()> {
     // --- the accelerated path, when L1/L2 artifacts exist ---
     match EngineId::Xla.build(5, 10, 0.5, Precision::Int8) {
         Ok(engine) => {
-            let xla_report = serve(engine, &trace, &ServeOpts::default())?;
+            let xla_report = serve(engine, &trace, &ServeOpts::new())?;
             ensure!(
                 native.metrics.jobs_per_machine == xla_report.metrics.jobs_per_machine,
                 "XLA vs native schedule divergence"
@@ -73,7 +73,7 @@ fn main() -> Result<()> {
     let sim_report = serve(
         EngineId::StannicSim.build(5, 10, 0.5, Precision::Int8)?,
         &trace,
-        &ServeOpts::default(),
+        &ServeOpts::new(),
     )?;
     ensure!(
         sim_report.metrics.jobs_per_machine == native.metrics.jobs_per_machine,

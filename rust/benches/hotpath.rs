@@ -173,7 +173,7 @@ fn main() {
         let trace = generate_trace(&WorkloadSpec::default(), &park, jobs, 9);
         let m = bench(opts, || {
             let engine = EngineId::Sos.build(5, 10, 0.5, Precision::Int8).unwrap();
-            let r = serve(engine, &trace, &ServeOpts::default()).unwrap();
+            let r = serve(engine, &trace, &ServeOpts::new()).unwrap();
             std::hint::black_box(r.completions.len());
         });
         t.row(vec![

@@ -2,6 +2,14 @@
 //! implementation in the repo. Construction and naming live in the
 //! [`crate::engine::EngineId`] registry; each adapter's `label()` is the
 //! registry's canonical name for that backend.
+//!
+//! Per-tick engines (no event horizon, no fault layer, infallible tick)
+//! all adapt identically except for the label and the method-dispatch
+//! path; [`per_tick_adapter!`] stamps those impls out, so adding a new
+//! per-tick backend is one line here, not a forty-line copy-paste.
+//! Engines with real capabilities (the golden tickless [`SosEngine`],
+//! the sharded [`super::shard::ShardedEngine`], the fallible
+//! [`XlaSosEngine`]) keep hand-written impls.
 
 use crate::baselines::{SimdSos, SoscEngine};
 use crate::bail;
@@ -11,6 +19,8 @@ use crate::faults::{FaultPlan, FaultStats};
 use crate::runtime::XlaSosEngine;
 use crate::scheduler::{Horizon, SosEngine, TickOutcome};
 use crate::sim::{hercules::HerculesSim, stannic::StannicSim, ArchSim};
+
+use super::shard::ShardTelemetry;
 
 /// Object-safe engine interface used by the coordinator. (Not `Send`:
 /// the PJRT client is single-threaded by design; the coordinator keeps
@@ -37,7 +47,10 @@ pub trait EngineAdapter {
     /// never on [`Horizon::Unknown`] engines.
     fn advance_to(&mut self, tick: u64) {
         let _ = tick;
-        unreachable!("advance_to on an engine that reported Horizon::Unknown");
+        unreachable!(
+            "advance_to on engine `{}`, which reported Horizon::Unknown",
+            self.label()
+        );
     }
     /// Arm a deterministic fault plan ([`crate::faults`]). Only the
     /// golden engine carries the fault layer; every other backend
@@ -54,7 +67,53 @@ pub trait EngineAdapter {
     fn fault_stats(&self) -> Option<FaultStats> {
         None
     }
+    /// Per-shard telemetry (routing counts, schedule digests, rebalance
+    /// activity). `Some` only for the sharded coordinator engine —
+    /// `serve --shards K>1` refuses any engine that returns `None`, so
+    /// a shard request can never silently run single-domain.
+    fn shard_stats(&self) -> Option<ShardTelemetry> {
+        None
+    }
 }
+
+/// Stamp out an [`EngineAdapter`] impl for a per-tick engine: label,
+/// submit/tick/is_idle forwarded through `$via` (the inherent or trait
+/// path the engine's methods live on), horizon left at the
+/// [`Horizon::Unknown`] default. Append `, cycles` for simulators whose
+/// `stats().total_cycles()` models accelerator time.
+macro_rules! per_tick_adapter {
+    ($engine:ty, $label:expr, via $via:ident) => {
+        per_tick_adapter!(@impl $engine, $label, $via;);
+    };
+    ($engine:ty, $label:expr, via $via:ident, cycles) => {
+        per_tick_adapter!(@impl $engine, $label, $via;
+            fn cycles(&self) -> u64 {
+                self.stats().total_cycles()
+            });
+    };
+    (@impl $engine:ty, $label:expr, $via:ident; $($extra:item)*) => {
+        impl EngineAdapter for $engine {
+            fn label(&self) -> &'static str {
+                $label
+            }
+            fn submit(&mut self, job: Job) {
+                $via::submit(self, job);
+            }
+            fn tick(&mut self) -> Result<TickOutcome> {
+                Ok($via::tick(self, None))
+            }
+            fn is_idle(&self) -> bool {
+                $via::is_idle(self)
+            }
+            $($extra)*
+        }
+    };
+}
+
+per_tick_adapter!(SoscEngine, "sosc", via SoscEngine);
+per_tick_adapter!(SimdSos, "simd", via SimdSos);
+per_tick_adapter!(StannicSim, "stannic-sim", via ArchSim, cycles);
+per_tick_adapter!(HerculesSim, "hercules-sim", via ArchSim, cycles);
 
 impl EngineAdapter for SosEngine {
     fn label(&self) -> &'static str {
@@ -81,72 +140,6 @@ impl EngineAdapter for SosEngine {
     }
     fn fault_stats(&self) -> Option<FaultStats> {
         SosEngine::fault_stats(self).cloned()
-    }
-}
-
-impl EngineAdapter for SoscEngine {
-    fn label(&self) -> &'static str {
-        "sosc"
-    }
-    fn submit(&mut self, job: Job) {
-        SoscEngine::submit(self, job);
-    }
-    fn tick(&mut self) -> Result<TickOutcome> {
-        Ok(SoscEngine::tick(self, None))
-    }
-    fn is_idle(&self) -> bool {
-        SoscEngine::is_idle(self)
-    }
-}
-
-impl EngineAdapter for SimdSos {
-    fn label(&self) -> &'static str {
-        "simd"
-    }
-    fn submit(&mut self, job: Job) {
-        SimdSos::submit(self, job);
-    }
-    fn tick(&mut self) -> Result<TickOutcome> {
-        Ok(SimdSos::tick(self, None))
-    }
-    fn is_idle(&self) -> bool {
-        SimdSos::is_idle(self)
-    }
-}
-
-impl EngineAdapter for StannicSim {
-    fn label(&self) -> &'static str {
-        "stannic-sim"
-    }
-    fn submit(&mut self, job: Job) {
-        ArchSim::submit(self, job);
-    }
-    fn tick(&mut self) -> Result<TickOutcome> {
-        Ok(ArchSim::tick(self, None))
-    }
-    fn is_idle(&self) -> bool {
-        ArchSim::is_idle(self)
-    }
-    fn cycles(&self) -> u64 {
-        self.stats().total_cycles()
-    }
-}
-
-impl EngineAdapter for HerculesSim {
-    fn label(&self) -> &'static str {
-        "hercules-sim"
-    }
-    fn submit(&mut self, job: Job) {
-        ArchSim::submit(self, job);
-    }
-    fn tick(&mut self) -> Result<TickOutcome> {
-        Ok(ArchSim::tick(self, None))
-    }
-    fn is_idle(&self) -> bool {
-        ArchSim::is_idle(self)
-    }
-    fn cycles(&self) -> u64 {
-        self.stats().total_cycles()
     }
 }
 
@@ -197,6 +190,14 @@ mod tests {
         for e in engines.iter_mut() {
             assert_eq!(e.horizon(), Horizon::Unknown, "{}", e.label());
         }
+    }
+
+    #[test]
+    #[should_panic(expected = "engine `sosc`")]
+    fn advance_to_default_names_the_misbehaving_engine() {
+        let mut e: Box<dyn EngineAdapter> =
+            Box::new(SoscEngine::new(2, 4, 0.5, Precision::Int8));
+        e.advance_to(10);
     }
 
     #[test]

@@ -34,11 +34,23 @@
 //!   down/up, stragglers, storms) and applies source-dropout cut-offs at
 //!   the merge; recovery metrics ride on [`ServeReport`] and the
 //!   artifact, keyed by the canonical fault string.
+//! * **Sharding** ([`shard`]): `serve --shards K` routes merged arrivals
+//!   across K independent tickless parks behind one adapter. The
+//!   invariant that keeps sharding deterministic and diffable: *routing
+//!   is a pure function of the merged virtual-time order* (least-loaded
+//!   shard, ties to the lowest index — decided post-merge, where the
+//!   order is already interleaving-invariant), and *jobs change shards
+//!   only at global virtual-time barriers*, which drain and re-route
+//!   queued-but-unstarted work in canonical shard order. `--shards 1`
+//!   is bit-identical to the unsharded pipeline; per-shard telemetry
+//!   (completions, schedule digests, rebalance counts, imbalance CV)
+//!   rides on [`ServeReport`] and, as parity cells, on the artifact.
 
 mod adapter;
 pub mod pcie;
 mod record;
 mod server;
+pub mod shard;
 
 pub use adapter::EngineAdapter;
 // Horizon lives in the scheduler (it describes the golden engine's
@@ -46,8 +58,9 @@ pub use adapter::EngineAdapter;
 // the coordinator-facing way to read it.
 pub use crate::scheduler::Horizon;
 pub use pcie::{PcieModel, PcieStats};
-pub use record::{ServeRecord, SourceRecord, SERVE_RECORD_SCHEMA};
+pub use record::{ServeRecord, ShardRecord, SourceRecord, SERVE_RECORD_SCHEMA};
 pub use server::{
     serve, serve_sources, ArrivalSource, CompletionRecord, IdHasher, ServeOpts, ServeReport,
     SourceStats,
 };
+pub use shard::{ShardSlice, ShardTelemetry, ShardedEngine, REBALANCE_INTERVAL};

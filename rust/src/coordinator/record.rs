@@ -16,6 +16,16 @@
 //! deterministic serving semantics changed — never a perf delta), while
 //! the latency percentiles and jobs-level throughput are perf-gated
 //! with identical median-shift normalization and threshold handling.
+//!
+//! Sharded runs (`serve --shards K`, K > 1) add a shard block: one
+//! [`ShardRecord`] per shard (machine range, routing/completion counts,
+//! per-shard schedule digest, rebalance traffic) plus the global
+//! rebalance counters and the load-imbalance CV. Like the fault block,
+//! it is rendered, digested and diffed *only when present* — clean
+//! unsharded (and `--shards 1`) artifacts stay byte-identical to
+//! pre-shard recordings, and the extra parity cells guarantee a sharded
+//! recording can never silently gate-pass against an unsharded
+//! baseline.
 
 use std::fmt::Write as _;
 use std::time::{SystemTime, UNIX_EPOCH};
@@ -42,6 +52,27 @@ pub struct SourceRecord {
     /// Enqueue stalls observed on this source's bounded arrival queue
     /// (timing-dependent, like wall time).
     pub enqueue_stalls: u64,
+}
+
+/// Per-shard slice of a persisted sharded serve run — the artifact form
+/// of [`crate::coordinator::ShardSlice`]. Everything here is virtual
+/// time, hence deterministic and parity-gated.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardRecord {
+    /// First global machine index the shard owns.
+    pub first_machine: usize,
+    /// Machines in the shard.
+    pub machines: usize,
+    /// Arrivals (incl. storm jobs) the router sent here first.
+    pub routed: u64,
+    /// Jobs the shard released.
+    pub completed: u64,
+    /// FNV-1a digest of the shard's `(tick, job, global machine)`
+    /// release stream.
+    pub digest: String,
+    /// Jobs rebalance barriers moved into / out of the shard.
+    pub moved_in: u64,
+    pub moved_out: u64,
 }
 
 /// One persisted serving run.
@@ -95,6 +126,20 @@ pub struct ServeRecord {
     pub fault_max_down: u64,
     pub fault_requeue_p50: u64,
     pub fault_requeue_p99: u64,
+    /// Shard block ([`crate::coordinator::ShardTelemetry`]); empty for
+    /// unsharded and `--shards 1` runs, which keeps their artifacts
+    /// byte-identical to pre-shard recordings. Folded into the digest
+    /// and the parity cells only when non-empty, so sharded and
+    /// unsharded recordings can never silently pair.
+    pub shards: Vec<ShardRecord>,
+    /// Jobs that changed shard at a rebalance barrier.
+    pub rebalance_moves: u64,
+    /// Barriers that drained at least one queued job for re-routing.
+    pub rebalance_events: u64,
+    /// Coefficient of variation of per-shard completion counts
+    /// (0 = perfectly balanced). Deterministic, parity-gated with fixed
+    /// 4-decimal rendering.
+    pub shard_imbalance_cv: f64,
 }
 
 impl ServeRecord {
@@ -148,6 +193,25 @@ impl ServeRecord {
             fault_max_down: r.faults.as_ref().map_or(0, |f| f.max_concurrent_down as u64),
             fault_requeue_p50: r.faults.as_ref().map_or(0, |f| f.requeue_latency.p50()),
             fault_requeue_p99: r.faults.as_ref().map_or(0, |f| f.requeue_latency.p99()),
+            // the report carries telemetry only for K > 1 (the server
+            // filters K = 1 down to None, preserving bit-identity)
+            shards: r.shards.as_ref().map_or_else(Vec::new, |t| {
+                t.per_shard
+                    .iter()
+                    .map(|sh| ShardRecord {
+                        first_machine: sh.first_machine,
+                        machines: sh.machines,
+                        routed: sh.routed,
+                        completed: sh.completed,
+                        digest: sh.digest.clone(),
+                        moved_in: sh.moved_in,
+                        moved_out: sh.moved_out,
+                    })
+                    .collect()
+            }),
+            rebalance_moves: r.shards.as_ref().map_or(0, |t| t.rebalance_moves),
+            rebalance_events: r.shards.as_ref().map_or(0, |t| t.rebalance_events),
+            shard_imbalance_cv: r.shards.as_ref().map_or(0.0, |t| t.imbalance_cv),
         };
         rec.digest = rec.compute_digest();
         rec
@@ -183,6 +247,29 @@ impl ServeRecord {
                 self.fault_max_down
             );
         }
+        // the shard map and every shard's deterministic outcome are
+        // identity — only when sharded, so unsharded digests are
+        // unchanged (and sharded can never collide with unsharded)
+        for sh in &self.shards {
+            let _ = write!(
+                canon,
+                "|s:{}+{}:{}:{}/{}:{}/{}",
+                sh.first_machine,
+                sh.machines,
+                sh.digest,
+                sh.completed,
+                sh.routed,
+                sh.moved_in,
+                sh.moved_out
+            );
+        }
+        if !self.shards.is_empty() {
+            let _ = write!(
+                canon,
+                "|rb:{}/{}",
+                self.rebalance_moves, self.rebalance_events
+            );
+        }
         fnv1a64_hex(canon.as_bytes())
     }
 
@@ -193,12 +280,21 @@ impl ServeRecord {
 }
 
 /// [`get_uint`] for a field that may be absent (defaults to 0): the
-/// fault block only exists on faulted recordings.
+/// fault and shard blocks only exist on faulted/sharded recordings.
 fn opt_uint(j: &Json, key: &str) -> Result<u64> {
     if j.get(key).is_some() {
         get_uint(j, key)
     } else {
         Ok(0)
+    }
+}
+
+/// [`get_f64`] for a field that may be absent (defaults to 0.0).
+fn opt_f64(j: &Json, key: &str) -> Result<f64> {
+    if j.get(key).is_some() {
+        get_f64(j, key)
+    } else {
+        Ok(0.0)
     }
 }
 
@@ -271,6 +367,31 @@ impl Artifact for ServeRecord {
             fields.push(("fault_requeue_p50", num(self.fault_requeue_p50 as f64)));
             fields.push(("fault_requeue_p99", num(self.fault_requeue_p99 as f64)));
         }
+        // only sharded runs carry the shard block (same compat pattern
+        // as the fault block above)
+        if !self.shards.is_empty() {
+            fields.push((
+                "shards",
+                arr(self
+                    .shards
+                    .iter()
+                    .map(|sh| {
+                        obj(vec![
+                            ("first_machine", num(sh.first_machine as f64)),
+                            ("machines", num(sh.machines as f64)),
+                            ("routed", num(sh.routed as f64)),
+                            ("completed", num(sh.completed as f64)),
+                            ("digest", s(sh.digest.clone())),
+                            ("moved_in", num(sh.moved_in as f64)),
+                            ("moved_out", num(sh.moved_out as f64)),
+                        ])
+                    })
+                    .collect()),
+            ));
+            fields.push(("rebalance_moves", num(self.rebalance_moves as f64)));
+            fields.push(("rebalance_events", num(self.rebalance_events as f64)));
+            fields.push(("shard_imbalance_cv", num(self.shard_imbalance_cv)));
+        }
         obj(fields)
     }
 
@@ -327,6 +448,29 @@ impl Artifact for ServeRecord {
             fault_max_down: opt_uint(j, "fault_max_down")?,
             fault_requeue_p50: opt_uint(j, "fault_requeue_p50")?,
             fault_requeue_p99: opt_uint(j, "fault_requeue_p99")?,
+            // absent on unsharded artifacts; present fields are still
+            // strictly validated
+            shards: if j.get("shards").is_some() {
+                get_arr(j, "shards")?
+                    .iter()
+                    .map(|sh| {
+                        Ok(ShardRecord {
+                            first_machine: get_uint(sh, "first_machine")? as usize,
+                            machines: get_uint(sh, "machines")? as usize,
+                            routed: get_uint(sh, "routed")?,
+                            completed: get_uint(sh, "completed")?,
+                            digest: get_str(sh, "digest")?,
+                            moved_in: get_uint(sh, "moved_in")?,
+                            moved_out: get_uint(sh, "moved_out")?,
+                        })
+                    })
+                    .collect::<Result<Vec<ShardRecord>>>()?
+            } else {
+                Vec::new()
+            },
+            rebalance_moves: opt_uint(j, "rebalance_moves")?,
+            rebalance_events: opt_uint(j, "rebalance_events")?,
+            shard_imbalance_cv: opt_f64(j, "shard_imbalance_cv")?,
         };
         // Pre-digest v1 artifacts (recorded before the artifact-layer
         // redesign) lack the field; recompute so they stay loadable and
@@ -400,6 +544,30 @@ impl Diffable for ServeRecord {
                 ),
             ));
         }
+        // sharded runs add one parity cell per shard plus the global
+        // rebalance and imbalance cells — all deterministic virtual-time
+        // facts, and unmatched against any unsharded (or differently
+        // sharded) baseline, so the gate fails before a human has to
+        // notice the shard counts differ
+        for (i, sh) in self.shards.iter().enumerate() {
+            cells.push(PerfCell::parity(
+                format!("shard{i}[{}+{}]", sh.first_machine, sh.machines),
+                format!(
+                    "{}|{}|{}|{}|{}",
+                    sh.digest, sh.completed, sh.routed, sh.moved_in, sh.moved_out
+                ),
+            ));
+        }
+        if !self.shards.is_empty() {
+            cells.push(PerfCell::parity(
+                "rebalance",
+                format!("{}|{}", self.rebalance_moves, self.rebalance_events),
+            ));
+            cells.push(PerfCell::parity(
+                "shard_imbalance_cv",
+                format!("{:.4}", self.shard_imbalance_cv),
+            ));
+        }
         cells
     }
 }
@@ -416,10 +584,7 @@ mod tests {
     fn small_record() -> ServeRecord {
         let sources =
             ArrivalSource::standard_mix(&WorkloadSpec::default(), 5, 90, 7, 2);
-        let opts = ServeOpts {
-            batch: 3,
-            ..ServeOpts::default()
-        };
+        let opts = ServeOpts::new().with_batch(3);
         let report = serve_sources(
             EngineId::Sos.build(5, 10, 0.5, Precision::Int8).unwrap(),
             sources,
@@ -430,16 +595,25 @@ mod tests {
     }
 
     fn faulted_record() -> ServeRecord {
-        let opts = ServeOpts {
-            batch: 3,
-            faults: Some(
-                crate::faults::FaultSpec::parse("down=0@15+10,storm=3@20,seed=2").unwrap(),
-            ),
-            ..ServeOpts::default()
-        };
+        let opts = ServeOpts::new().with_batch(3).with_faults(
+            crate::faults::FaultSpec::parse("down=0@15+10,storm=3@20,seed=2").unwrap(),
+        );
         let report = serve_sources(
             EngineId::Sos.build(5, 10, 0.5, Precision::Int8).unwrap(),
             ArrivalSource::standard_mix(&WorkloadSpec::default(), 5, 90, 7, 2),
+            &opts,
+        )
+        .unwrap();
+        ServeRecord::from_report("test", &report)
+    }
+
+    fn sharded_record(shards: usize) -> ServeRecord {
+        let opts = ServeOpts::new().with_batch(3).with_shards(shards);
+        let report = serve_sources(
+            EngineId::Sos
+                .build_sharded(shards, 6, 10, 0.5, Precision::Int8)
+                .unwrap(),
+            ArrivalSource::standard_mix(&WorkloadSpec::default(), 6, 90, 7, 2),
             &opts,
         )
         .unwrap();
@@ -476,6 +650,82 @@ mod tests {
         assert_ne!(clean.digest, faulted.digest, "the fault key is identity");
         let report = diff_records(&clean, &faulted, &DiffOpts::default());
         assert!(!report.ok(), "a faulted run must never gate-pass against clean");
+    }
+
+    #[test]
+    fn sharded_record_round_trips_and_self_diffs_clean() {
+        let rec = sharded_record(2);
+        assert_eq!(rec.shards.len(), 2, "one ShardRecord per shard");
+        assert_eq!(rec.shards[0].first_machine, 0);
+        assert_eq!(rec.shards[0].machines, 3);
+        assert_eq!(rec.shards[1].first_machine, 3);
+        assert_eq!(rec.shards[1].machines, 3);
+        assert_eq!(
+            rec.shards.iter().map(|sh| sh.completed).sum::<u64>(),
+            rec.completed as u64,
+            "every completion belongs to exactly one shard"
+        );
+        let back = ServeRecord::parse(&rec.render()).expect("sharded artifact parses");
+        assert_eq!(rec, back);
+        let report = diff_records(&rec, &rec, &DiffOpts::default());
+        assert!(report.ok(), "{}", report.render());
+        assert_eq!(report.parity_breaks(), 0);
+        assert_eq!(
+            report.cells.len(),
+            12,
+            "8 standard + 2 shard + rebalance + imbalance cells"
+        );
+    }
+
+    #[test]
+    fn sharded_and_unsharded_records_never_pair_silently() {
+        let rec = sharded_record(2);
+        // unsharded baseline over the same park and workload
+        let base = {
+            let report = serve_sources(
+                EngineId::Sos.build(6, 10, 0.5, Precision::Int8).unwrap(),
+                ArrivalSource::standard_mix(&WorkloadSpec::default(), 6, 90, 7, 2),
+                &ServeOpts::new().with_batch(3),
+            )
+            .unwrap();
+            ServeRecord::from_report("test", &report)
+        };
+        assert!(
+            !base.render().contains("shard"),
+            "clean artifact carries no shard block: {}",
+            base.render()
+        );
+        assert_ne!(base.digest, rec.digest, "the shard map is identity");
+        let report = diff_records(&base, &rec, &DiffOpts::default());
+        assert!(
+            !report.ok(),
+            "a sharded run must never gate-pass against an unsharded baseline"
+        );
+    }
+
+    #[test]
+    fn shard_one_records_byte_identically_to_unsharded() {
+        // --shards 1 is the degenerate identity: the record must not
+        // merely be equivalent, it must render the very same bytes
+        // (modulo the wall-clock fields excluded from identity).
+        let sharded = sharded_record(1);
+        let base = {
+            let report = serve_sources(
+                EngineId::Sos.build(6, 10, 0.5, Precision::Int8).unwrap(),
+                ArrivalSource::standard_mix(&WorkloadSpec::default(), 6, 90, 7, 2),
+                &ServeOpts::new().with_batch(3),
+            )
+            .unwrap();
+            ServeRecord::from_report("test", &report)
+        };
+        assert!(sharded.shards.is_empty(), "K = 1 records as unsharded");
+        assert_eq!(sharded.digest, base.digest);
+        assert_eq!(sharded.ticks, base.ticks);
+        assert_eq!(sharded.completed, base.completed);
+        assert_eq!(sharded.jobs_per_machine, base.jobs_per_machine);
+        let report = diff_records(&base, &sharded, &DiffOpts::default());
+        assert!(report.ok(), "{}", report.render());
+        assert_eq!(report.parity_breaks(), 0);
     }
 
     #[test]

@@ -67,6 +67,7 @@ use crate::workload::{generate_trace, Trace, WorkloadSpec};
 
 use super::adapter::EngineAdapter;
 use super::pcie::{PcieModel, PcieStats};
+use super::shard::ShardTelemetry;
 
 /// One completed job as reported by a machine worker.
 #[derive(Debug, Clone, PartialEq)]
@@ -236,9 +237,18 @@ pub struct ServeReport {
     /// Recovery metrics for a faulted run (`None` when clean), with
     /// [`FaultStats::dropped_arrivals`] filled in by the pipeline.
     pub faults: Option<FaultStats>,
+    /// Per-shard telemetry when the run drove the sharded coordinator
+    /// with more than one shard (`None` for single-domain runs — keeps
+    /// unsharded reports and artifacts byte-stable).
+    pub shards: Option<ShardTelemetry>,
 }
 
 /// Coordinator options.
+///
+/// Construct with the builder chain — `ServeOpts::new().with_batch(4)`
+/// — rather than struct literals: every field addition (the `faults`
+/// field, then `shards`) otherwise ripples through all construction
+/// sites. The fields stay `pub` for read access.
 #[derive(Debug, Clone)]
 pub struct ServeOpts {
     pub pcie: PcieModel,
@@ -257,6 +267,12 @@ pub struct ServeOpts {
     /// empty spec) runs clean — bit-identical to a build without the
     /// fault layer. Requires the golden engine; others reject the plan.
     pub faults: Option<FaultSpec>,
+    /// Scheduling domains the engine is expected to expose. `1` (the
+    /// default) accepts any engine; `> 1` requires an engine built via
+    /// [`crate::engine::EngineId::build_sharded`] with exactly this
+    /// shard count — the pipeline refuses a mismatch up front, so a
+    /// shard request can never silently run single-domain.
+    pub shards: usize,
 }
 
 impl Default for ServeOpts {
@@ -268,7 +284,52 @@ impl Default for ServeOpts {
             metric_interval: 64,
             batch: usize::MAX,
             faults: None,
+            shards: 1,
         }
+    }
+}
+
+impl ServeOpts {
+    /// Builder entry point (alias of [`ServeOpts::default`]).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_pcie(mut self, pcie: PcieModel) -> Self {
+        self.pcie = pcie;
+        self
+    }
+
+    pub fn with_queue_depth(mut self, depth: usize) -> Self {
+        self.queue_depth = depth;
+        self
+    }
+
+    pub fn with_max_ticks(mut self, max_ticks: u64) -> Self {
+        self.max_ticks = max_ticks;
+        self
+    }
+
+    pub fn with_metric_interval(mut self, interval: u64) -> Self {
+        self.metric_interval = interval;
+        self
+    }
+
+    pub fn with_batch(mut self, batch: usize) -> Self {
+        self.batch = batch;
+        self
+    }
+
+    /// `None` clears a previously set spec; `Some`/bare `FaultSpec`
+    /// both work via `Into`.
+    pub fn with_faults(mut self, faults: impl Into<Option<FaultSpec>>) -> Self {
+        self.faults = faults.into();
+        self
+    }
+
+    pub fn with_shards(mut self, shards: usize) -> Self {
+        self.shards = shards;
+        self
     }
 }
 
@@ -370,6 +431,26 @@ pub fn serve_sources(
     }
     let total_jobs: usize = sources.iter().map(ArrivalSource::jobs).sum();
     let n_sources = sources.len();
+    // A shard request must match the engine's actual domain layout —
+    // refusing up front is what keeps `--shards K` from silently
+    // degrading to a single-domain run on the wrong engine.
+    if opts.shards > 1 {
+        match engine.shard_stats() {
+            Some(t) if t.shards() == opts.shards => {}
+            Some(t) => crate::bail!(
+                "opts.shards = {} but engine `{}` was built with {} shard(s)",
+                opts.shards,
+                engine.label(),
+                t.shards()
+            ),
+            None => crate::bail!(
+                "opts.shards = {} but engine `{}` is single-domain \
+                 (build it with EngineId::build_sharded / serve --shards)",
+                opts.shards,
+                engine.label()
+            ),
+        }
+    }
     // Arm the fault layer up front: plan validation (machine bounds,
     // storm synthesis) and engine support both fail before any thread
     // spawns. Drop clauses never reach the engine — they become
@@ -553,10 +634,14 @@ pub fn serve_sources(
             // transport accounting: one round-trip per scheduling
             // iteration that talks to the accelerator (assignment and/or
             // releases)
-            if out.assigned.is_some() || !out.released.is_empty() {
+            if out.assigned.is_some() || !out.co_assigned.is_empty() || !out.released.is_empty()
+            {
                 opts.pcie.charge(&mut pcie, machines, out.released.len());
             }
-            if let Some(a) = &out.assigned {
+            // multi-domain engines (the sharded coordinator) assign up
+            // to one job per shard per tick; co_assigned carries the
+            // extras beyond the historical single slot
+            for a in out.assigned.iter().chain(&out.co_assigned) {
                 metrics.record_assignment(a.machine, tick);
             }
             for (id, m) in &out.released {
@@ -612,6 +697,10 @@ pub fn serve_sources(
             s.dropped_arrivals = dropped;
             s
         });
+        // K = 1 sharded runs are bit-identical to unsharded runs, so
+        // they report (and record) as unsharded — telemetry surfaces
+        // only when there is more than one domain to tell apart.
+        let shards = engine.shard_stats().filter(|t| t.shards() > 1);
         Ok(ServeReport {
             engine: engine.label(),
             metrics: metrics.finish(),
@@ -627,6 +716,7 @@ pub fn serve_sources(
             batch_sizes,
             fault_key,
             faults,
+            shards,
         })
     })
 }
@@ -758,10 +848,7 @@ mod tests {
     #[test]
     fn batched_admission_caps_per_tick_submissions() {
         let spec = WorkloadSpec::default();
-        let opts = ServeOpts {
-            batch: 2,
-            ..ServeOpts::default()
-        };
+        let opts = ServeOpts::new().with_batch(2);
         let r = serve_sources(
             EngineId::Sos.build(5, 10, 0.5, Precision::Int8).unwrap(),
             vec![ArrivalSource::synthetic("s", spec, 5, 150, 5)],
@@ -791,10 +878,8 @@ mod tests {
     fn faulted_serve_completes_and_reports_recovery() {
         use crate::faults::FaultSpec;
         let spec = WorkloadSpec::default();
-        let opts = ServeOpts {
-            faults: Some(FaultSpec::parse("down=1@20+30,storm=4@25,seed=3").unwrap()),
-            ..ServeOpts::default()
-        };
+        let opts = ServeOpts::new()
+            .with_faults(FaultSpec::parse("down=1@20+30,storm=4@25,seed=3").unwrap());
         let r = serve_sources(
             EngineId::Sos.build(5, 10, 0.5, Precision::Int8).unwrap(),
             vec![ArrivalSource::synthetic("s", spec, 5, 80, 11)],
@@ -819,13 +904,9 @@ mod tests {
     fn faulted_serve_is_queue_depth_invariant() {
         use crate::faults::FaultSpec;
         let run = |depth: usize| {
-            let opts = ServeOpts {
-                queue_depth: depth,
-                faults: Some(
-                    FaultSpec::parse("down=0@15+20,slow=2@10+40x4,policy=lose").unwrap(),
-                ),
-                ..ServeOpts::default()
-            };
+            let opts = ServeOpts::new().with_queue_depth(depth).with_faults(
+                FaultSpec::parse("down=0@15+20,slow=2@10+40x4,policy=lose").unwrap(),
+            );
             serve_sources(
                 EngineId::Sos.build(5, 10, 0.5, Precision::Int8).unwrap(),
                 ArrivalSource::standard_mix(&WorkloadSpec::default(), 5, 90, 13, 2),
@@ -845,10 +926,7 @@ mod tests {
         use crate::faults::FaultSpec;
         // drop=0@1 silences the only source entirely: nothing completes,
         // and the pipeline still terminates with full accounting
-        let opts = ServeOpts {
-            faults: Some(FaultSpec::parse("drop=0@1").unwrap()),
-            ..ServeOpts::default()
-        };
+        let opts = ServeOpts::new().with_faults(FaultSpec::parse("drop=0@1").unwrap());
         let r = serve_sources(
             EngineId::Sos.build(5, 10, 0.5, Precision::Int8).unwrap(),
             vec![ArrivalSource::synthetic("s", WorkloadSpec::default(), 5, 40, 9)],
@@ -859,10 +937,7 @@ mod tests {
         assert_eq!(r.faults.expect("faulted run").dropped_arrivals, 40);
 
         // a drop clause naming a source that does not exist fails loudly
-        let opts = ServeOpts {
-            faults: Some(FaultSpec::parse("drop=7@5").unwrap()),
-            ..ServeOpts::default()
-        };
+        let opts = ServeOpts::new().with_faults(FaultSpec::parse("drop=7@5").unwrap());
         assert!(serve_sources(
             EngineId::Sos.build(5, 10, 0.5, Precision::Int8).unwrap(),
             vec![ArrivalSource::synthetic("s", WorkloadSpec::default(), 5, 10, 9)],
@@ -874,10 +949,7 @@ mod tests {
     #[test]
     fn non_golden_engine_rejects_fault_specs() {
         use crate::faults::FaultSpec;
-        let opts = ServeOpts {
-            faults: Some(FaultSpec::parse("down=0@5+5").unwrap()),
-            ..ServeOpts::default()
-        };
+        let opts = ServeOpts::new().with_faults(FaultSpec::parse("down=0@5+5").unwrap());
         let err = serve_sources(
             EngineId::Sosc.build(5, 10, 0.5, Precision::Int8).unwrap(),
             vec![ArrivalSource::synthetic("s", WorkloadSpec::default(), 5, 10, 1)],
@@ -885,6 +957,60 @@ mod tests {
         )
         .unwrap_err();
         assert!(err.to_string().contains("does not support fault injection"));
+    }
+
+    #[test]
+    fn sharded_pipeline_serves_and_reports_telemetry() {
+        let sources =
+            ArrivalSource::standard_mix(&WorkloadSpec::default(), 10, 120, 17, 2);
+        let engine = EngineId::Sos.build_sharded(2, 10, 10, 0.5, Precision::Int8).unwrap();
+        let r = serve_sources(engine, sources, &ServeOpts::new().with_shards(2)).unwrap();
+        assert_eq!(r.completions.len(), 120);
+        let t = r.shards.expect("sharded run reports shard telemetry");
+        assert_eq!(t.shards(), 2);
+        assert_eq!(t.per_shard.iter().map(|s| s.completed).sum::<u64>(), 120);
+        assert_eq!(t.per_shard.iter().map(|s| s.routed).sum::<u64>(), 120);
+        assert_eq!(t.per_shard[0].first_machine, 0);
+        assert_eq!(t.per_shard[1].first_machine, 5);
+        assert!(t.imbalance_cv >= 0.0);
+    }
+
+    #[test]
+    fn shard_request_refuses_single_domain_and_mismatched_engines() {
+        let opts = ServeOpts::new().with_shards(2);
+        let err = serve_sources(
+            EngineId::Sos.build(5, 10, 0.5, Precision::Int8).unwrap(),
+            vec![ArrivalSource::synthetic("s", WorkloadSpec::default(), 5, 10, 1)],
+            &opts,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("single-domain"), "{err}");
+        let err = serve_sources(
+            EngineId::Sos.build_sharded(3, 6, 10, 0.5, Precision::Int8).unwrap(),
+            vec![ArrivalSource::synthetic("s", WorkloadSpec::default(), 6, 10, 1)],
+            &opts,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("built with 3 shard(s)"), "{err}");
+    }
+
+    #[test]
+    fn unsharded_and_single_shard_reports_carry_no_shard_telemetry() {
+        let run = |sharded: bool| {
+            let engine = if sharded {
+                EngineId::Sos.build_sharded(1, 5, 10, 0.5, Precision::Int8).unwrap()
+            } else {
+                EngineId::Sos.build(5, 10, 0.5, Precision::Int8).unwrap()
+            };
+            serve_sources(
+                engine,
+                vec![ArrivalSource::synthetic("s", WorkloadSpec::default(), 5, 60, 4)],
+                &ServeOpts::default(),
+            )
+            .unwrap()
+        };
+        assert!(run(false).shards.is_none());
+        assert!(run(true).shards.is_none(), "K = 1 reports as unsharded");
     }
 
     #[test]

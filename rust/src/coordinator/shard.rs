@@ -1,0 +1,657 @@
+//! Sharded multi-park coordinator — the Agon-scale routing front-end.
+//!
+//! One golden `SosEngine` park is a single scheduling domain; serving
+//! millions of users needs many parks behind one front door. A
+//! [`ShardedEngine`] splits a park of `M` machines into `K` contiguous
+//! shards, each an independent tickless [`SosEngine`] with its own event
+//! horizon, and routes every merged arrival to exactly one shard. Agon
+//! (arXiv:2109.00665) is the blueprint: give each sub-scheduler a park
+//! it can be near-optimal over, and keep the top level cheap.
+//!
+//! # The routing + rebalance-barrier invariant
+//!
+//! Determinism survives sharding because of two rules:
+//!
+//! * **Routing is a pure function of the merged virtual-time order.**
+//!   The serve pipeline's merge already makes the arrival sequence
+//!   identical for any thread interleaving and any queue depth; the
+//!   router adds no new nondeterminism on top — each arrival goes to
+//!   the least-loaded shard (backlog + in-flight, ties to the lowest
+//!   shard index), a decision that depends only on the arrivals routed
+//!   before it. Storm jobs route exactly like real arrivals.
+//! * **Jobs move between shards only at global virtual-time barriers —
+//!   and only queued-but-unstarted jobs move.** Every
+//!   [`REBALANCE_INTERVAL`] ticks, the router drains each shard's
+//!   arrival FIFO (never its virtual schedules), and re-routes the
+//!   drained jobs in canonical order (shard 0's FIFO first, then shard
+//!   1's, …) through the same least-loaded rule. Between barriers the
+//!   shards are fully independent, so each shard's schedule — and its
+//!   per-shard FNV digest — is deterministic and diffable.
+//!
+//! The barriers cannot be jumped over: whenever any shard has a
+//! non-empty backlog its horizon is the very next tick (the golden
+//! engine reports `Some(tick + 1)` while its FIFO holds work), so the
+//! merged [`Horizon`] forces per-tick driving exactly while there is
+//! anything to rebalance. A barrier inside a provably-empty window is a
+//! no-op by construction.
+//!
+//! With `K = 1` the router degenerates to the identity — one shard
+//! owning the whole park, no rebalancing, full-width EPT slices — so
+//! `serve --shards 1` is bit-identical to the unsharded pipeline
+//! (digest, tick count, completions; pinned by `tests/sharding.rs`).
+//!
+//! # Faults
+//!
+//! Machine-scoped fault clauses (`down=`/`slow=`) address machines
+//! through the shard map: [`crate::faults::FaultPlan::split_shards`]
+//! remaps each event onto the owning shard's local machine index. Storm
+//! events stay at the routing layer and their jobs are routed like real
+//! arrivals. A known, documented consequence of barrier rebalancing: an
+//! evicted job that changes shards before reassignment leaves its
+//! re-queue latency sample unclosed (the destination shard never saw
+//! the eviction) — deterministic, and only the per-shard histograms are
+//! affected.
+
+use std::collections::{HashMap, VecDeque};
+
+use crate::artifact::fnv1a64_hex;
+use crate::core::{Job, JobId};
+use crate::error::Result;
+use crate::faults::{FaultEvent, FaultKind, FaultPlan, FaultStats};
+use crate::metrics::coefficient_of_variation;
+use crate::quant::Precision;
+use crate::scheduler::{Horizon, SosEngine, TickOutcome};
+
+use super::adapter::EngineAdapter;
+
+/// Global virtual-time barrier period: every this-many executed ticks
+/// the router may move queued-but-unstarted jobs between shards (and
+/// only then — see the module docs for why jumps cannot skip a barrier
+/// that has work to move).
+pub const REBALANCE_INTERVAL: u64 = 64;
+
+/// One shard's slice of the telemetry: its machine range, how much work
+/// the router sent it, what it completed, its schedule-identity digest,
+/// and how much rebalancing touched it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardSlice {
+    /// First global machine index this shard owns.
+    pub first_machine: usize,
+    /// Number of machines in the shard.
+    pub machines: usize,
+    /// Arrivals (incl. storm jobs) the router sent here first.
+    pub routed: u64,
+    /// Jobs this shard released to its machines.
+    pub completed: u64,
+    /// FNV-1a digest over this shard's `(tick, job, global machine)`
+    /// release stream — the per-shard schedule identity.
+    pub digest: String,
+    /// Jobs moved into this shard by rebalance barriers.
+    pub moved_in: u64,
+    /// Jobs moved out of this shard by rebalance barriers.
+    pub moved_out: u64,
+}
+
+/// Aggregated sharding telemetry, surfaced on `ServeReport` and (as
+/// parity cells) on the `stannic.serve.record.v1` artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardTelemetry {
+    pub per_shard: Vec<ShardSlice>,
+    /// Jobs that changed shard at a rebalance barrier.
+    pub rebalance_moves: u64,
+    /// Barriers at which at least one job was drained for re-routing.
+    pub rebalance_events: u64,
+    /// Coefficient of variation of per-shard completion counts — the
+    /// load-imbalance figure of merit (0 = perfectly balanced).
+    pub imbalance_cv: f64,
+}
+
+impl ShardTelemetry {
+    pub fn shards(&self) -> usize {
+        self.per_shard.len()
+    }
+}
+
+/// K independent tickless parks behind one [`EngineAdapter`] front end.
+#[derive(Debug)]
+pub struct ShardedEngine {
+    shards: Vec<SosEngine>,
+    /// `(first_machine, machines)` per shard — contiguous, covering the
+    /// park, remainder machines on the earlier shards.
+    ranges: Vec<(usize, usize)>,
+    tick: u64,
+    /// Full-park payload per in-flight job id: rebalancing re-slices a
+    /// drained job's EPT for its new shard, which needs the original
+    /// full-width vector. Entries drop on release.
+    full: HashMap<JobId, Job>,
+    /// Per-shard release log, digested lazily into [`ShardSlice::digest`].
+    release_log: Vec<String>,
+    routed: Vec<u64>,
+    completed: Vec<u64>,
+    moved_in: Vec<u64>,
+    moved_out: Vec<u64>,
+    rebalance_moves: u64,
+    rebalance_events: u64,
+    /// Shard-layer storm events (K > 1 only): storms route like real
+    /// arrivals instead of being pinned to one shard's plan.
+    storms: VecDeque<FaultEvent>,
+    storms_fired: u64,
+    storm_jobs_injected: u64,
+    faulted: bool,
+}
+
+impl ShardedEngine {
+    /// Split a park of `machines` into `shards` contiguous slices (the
+    /// remainder machines go to the earlier shards) and build one
+    /// tickless golden engine per slice.
+    pub fn new(
+        shards: usize,
+        machines: usize,
+        depth: usize,
+        alpha: f32,
+        precision: Precision,
+    ) -> Self {
+        assert!(shards >= 1, "at least one shard");
+        assert!(
+            shards <= machines,
+            "cannot split {machines} machines into {shards} shards"
+        );
+        let mut ranges = Vec::with_capacity(shards);
+        let (per, extra) = (machines / shards, machines % shards);
+        let mut base = 0;
+        for s in 0..shards {
+            let len = per + usize::from(s < extra);
+            ranges.push((base, len));
+            base += len;
+        }
+        let engines = ranges
+            .iter()
+            .map(|&(_, len)| SosEngine::new(len, depth, alpha, precision))
+            .collect();
+        ShardedEngine {
+            shards: engines,
+            ranges,
+            tick: 0,
+            full: HashMap::new(),
+            release_log: vec![String::new(); shards],
+            routed: vec![0; shards],
+            completed: vec![0; shards],
+            moved_in: vec![0; shards],
+            moved_out: vec![0; shards],
+            rebalance_moves: 0,
+            rebalance_events: 0,
+            storms: VecDeque::new(),
+            storms_fired: 0,
+            storm_jobs_injected: 0,
+            faulted: false,
+        }
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The shard map: `(first_machine, machines)` per shard.
+    pub fn ranges(&self) -> &[(usize, usize)] {
+        &self.ranges
+    }
+
+    /// Clone of `job` with its EPT vector cut down to shard `s`'s
+    /// machine range (identity slice when the shard owns the whole park).
+    fn slice_for(&self, job: &Job, s: usize) -> Job {
+        let (base, len) = self.ranges[s];
+        let mut local = job.clone();
+        local.ept = job.ept[base..base + len].to_vec();
+        local
+    }
+
+    /// Least-loaded shard (backlog + in-flight), ties to the lowest
+    /// index — the pure routing function of the merged arrival order.
+    fn pick_shard(&self) -> usize {
+        let mut best = 0;
+        let mut best_load = usize::MAX;
+        for (s, shard) in self.shards.iter().enumerate() {
+            let load = shard.backlog() + shard.in_flight();
+            if load < best_load {
+                best = s;
+                best_load = load;
+            }
+        }
+        best
+    }
+
+    /// Route a full-park job to a shard. `fresh` marks first-time
+    /// arrivals (counted in [`ShardSlice::routed`]); rebalanced jobs
+    /// re-route with `fresh = false`.
+    fn route(&mut self, job: Job, fresh: bool) -> usize {
+        let s = self.pick_shard();
+        if fresh {
+            self.routed[s] += 1;
+        }
+        let local = self.slice_for(&job, s);
+        self.full.insert(job.id, job);
+        self.shards[s].submit(local);
+        s
+    }
+
+    /// Drain every shard's arrival FIFO (queued-but-unstarted jobs
+    /// only) and re-route the drained jobs in canonical order. Runs
+    /// only at global barriers, so between barriers the shards stay
+    /// independent.
+    fn rebalance(&mut self) {
+        let mut drained: Vec<(usize, Job)> = Vec::new();
+        for s in 0..self.shards.len() {
+            for local in self.shards[s].drain_backlog() {
+                let job = self
+                    .full
+                    .get(&local.id)
+                    .expect("every queued job has a retained full payload")
+                    .clone();
+                drained.push((s, job));
+            }
+        }
+        if drained.is_empty() {
+            return;
+        }
+        self.rebalance_events += 1;
+        for (old, job) in drained {
+            let new = self.route(job, false);
+            if new != old {
+                self.rebalance_moves += 1;
+                self.moved_out[old] += 1;
+                self.moved_in[new] += 1;
+            }
+        }
+    }
+
+    /// One global tick: barrier rebalance (if due), shard-layer storm
+    /// routing, then one tick of every shard in index order, with the
+    /// per-shard outcomes merged into one machine-remapped
+    /// [`TickOutcome`].
+    pub fn tick(&mut self) -> TickOutcome {
+        self.tick += 1;
+        let now = self.tick;
+        if self.shards.len() > 1 && now % REBALANCE_INTERVAL == 0 {
+            self.rebalance();
+        }
+
+        let mut out = TickOutcome::default();
+
+        // Storm events route like real arrivals, before the shard ticks
+        // — the same point in the tick where the unsharded engine's
+        // fault layer appends storm jobs to its FIFO.
+        while self.storms.front().is_some_and(|e| e.tick <= now) {
+            let ev = self.storms.pop_front().expect("front checked");
+            let FaultKind::Storm(jobs) = ev.kind else {
+                unreachable!("only storm events are retained at the shard layer");
+            };
+            self.storms_fired += 1;
+            for job in jobs {
+                self.storm_jobs_injected += 1;
+                out.injected.push(job.clone());
+                self.route(job, true);
+            }
+        }
+
+        for s in 0..self.shards.len() {
+            let (base, _) = self.ranges[s];
+            let shard_out = self.shards[s].tick(None);
+            for (id, m) in shard_out.released {
+                let gm = base + m;
+                self.completed[s] += 1;
+                // `(tick:job:machine);` — the shard's schedule identity
+                use std::fmt::Write as _;
+                let _ = write!(self.release_log[s], "{now}:{id}:{gm};");
+                self.full.remove(&id);
+                out.released.push((id, gm));
+            }
+            for (id, m) in shard_out.evicted {
+                out.evicted.push((id, base + m));
+            }
+            for job in shard_out.injected {
+                // K = 1 keeps storms inside the shard's own plan; track
+                // the payload so the bookkeeping matches the routed path
+                self.full.entry(job.id).or_insert_with(|| job.clone());
+                out.injected.push(job);
+            }
+            for a in shard_out
+                .assigned
+                .into_iter()
+                .chain(shard_out.co_assigned)
+            {
+                let mut a = a;
+                a.machine += base;
+                if out.assigned.is_none() {
+                    out.assigned = Some(a);
+                } else {
+                    out.co_assigned.push(a);
+                }
+            }
+            out.stalled |= shard_out.stalled;
+        }
+        out
+    }
+
+    pub fn tick_no(&self) -> u64 {
+        self.tick
+    }
+
+    /// Merged horizon: the earliest event across every shard and the
+    /// shard-layer storm queue ([`Horizon::merge`] fold). Safe to jump
+    /// on exactly when every member's horizon is.
+    pub fn horizon(&mut self) -> Horizon {
+        let mut h = match self.storms.front() {
+            Some(ev) => Horizon::At(ev.tick.max(self.tick + 1)),
+            None => Horizon::Idle,
+        };
+        for shard in &mut self.shards {
+            h = h.merge(Horizon::of(shard.next_event_tick()));
+        }
+        h
+    }
+
+    /// Fast-forward every shard (and the global clock) over a window
+    /// the merged horizon proved event-free.
+    pub fn advance_to(&mut self, tick: u64) {
+        for shard in &mut self.shards {
+            shard.advance_to(tick);
+        }
+        self.tick = tick;
+    }
+
+    /// True when no work remains in any shard and no storm is pending.
+    pub fn is_idle(&self) -> bool {
+        self.storms.is_empty() && self.shards.iter().all(|s| s.is_idle())
+    }
+
+    /// Arm a park-wide fault plan. With one shard the plan installs
+    /// unchanged (bit-identical to the unsharded engine); with K > 1 it
+    /// splits through the shard map and storms stay here for routing.
+    pub fn install_faults(&mut self, plan: FaultPlan) {
+        assert_eq!(self.tick, 0, "install faults before driving the engine");
+        assert_eq!(
+            plan.machines(),
+            self.ranges.last().map_or(0, |&(b, l)| b + l),
+            "fault plan built for a different park size"
+        );
+        self.faulted = true;
+        if self.shards.len() == 1 {
+            self.shards[0].install_faults(plan);
+            return;
+        }
+        let (plans, storms) = plan.split_shards(&self.ranges);
+        for (shard, p) in self.shards.iter_mut().zip(plans) {
+            shard.install_faults(p);
+        }
+        self.storms = storms.into();
+    }
+
+    /// Aggregated recovery metrics: scalar sums plus merged re-queue
+    /// latency histograms across shards, with the shard-layer storm
+    /// counts added. `degraded_ticks` and `max_concurrent_down` are
+    /// per-shard sums, i.e. upper bounds on the global figures when
+    /// K > 1 (two shards degraded in the same tick count twice).
+    pub fn fault_stats(&self) -> Option<FaultStats> {
+        if !self.faulted {
+            return None;
+        }
+        let mut agg = FaultStats::default();
+        for shard in &self.shards {
+            if let Some(fs) = shard.fault_stats() {
+                agg.downs += fs.downs;
+                agg.ups += fs.ups;
+                agg.slow_events += fs.slow_events;
+                agg.storms += fs.storms;
+                agg.injected_jobs += fs.injected_jobs;
+                agg.evicted_jobs += fs.evicted_jobs;
+                agg.work_lost_cycles += fs.work_lost_cycles;
+                agg.requeue_latency.merge(&fs.requeue_latency);
+                agg.degraded_ticks += fs.degraded_ticks;
+                agg.down_machine_ticks += fs.down_machine_ticks;
+                agg.max_concurrent_down += fs.max_concurrent_down;
+                agg.dropped_arrivals += fs.dropped_arrivals;
+            }
+        }
+        agg.storms += self.storms_fired;
+        agg.injected_jobs += self.storm_jobs_injected;
+        Some(agg)
+    }
+
+    /// Snapshot the sharding telemetry (digests finalized here).
+    pub fn telemetry(&self) -> ShardTelemetry {
+        let per_shard: Vec<ShardSlice> = (0..self.shards.len())
+            .map(|s| ShardSlice {
+                first_machine: self.ranges[s].0,
+                machines: self.ranges[s].1,
+                routed: self.routed[s],
+                completed: self.completed[s],
+                digest: fnv1a64_hex(self.release_log[s].as_bytes()),
+                moved_in: self.moved_in[s],
+                moved_out: self.moved_out[s],
+            })
+            .collect();
+        let completions: Vec<f64> = self.completed.iter().map(|&c| c as f64).collect();
+        ShardTelemetry {
+            per_shard,
+            rebalance_moves: self.rebalance_moves,
+            rebalance_events: self.rebalance_events,
+            imbalance_cv: coefficient_of_variation(&completions),
+        }
+    }
+}
+
+impl EngineAdapter for ShardedEngine {
+    /// The sharded front end schedules with golden-engine semantics per
+    /// shard, and with `K = 1` it *is* the golden engine bit-for-bit —
+    /// so it shares the registry label. Sharded (K > 1) runs are kept
+    /// from pairing with unsharded baselines by the record's per-shard
+    /// parity cells and digest shard block, not by the label.
+    fn label(&self) -> &'static str {
+        "sos"
+    }
+    fn submit(&mut self, job: Job) {
+        self.route(job, true);
+    }
+    fn tick(&mut self) -> Result<TickOutcome> {
+        Ok(ShardedEngine::tick(self))
+    }
+    fn is_idle(&self) -> bool {
+        ShardedEngine::is_idle(self)
+    }
+    fn horizon(&mut self) -> Horizon {
+        ShardedEngine::horizon(self)
+    }
+    fn advance_to(&mut self, tick: u64) {
+        ShardedEngine::advance_to(self, tick);
+    }
+    fn install_faults(&mut self, plan: FaultPlan) -> Result<()> {
+        ShardedEngine::install_faults(self, plan);
+        Ok(())
+    }
+    fn fault_stats(&self) -> Option<FaultStats> {
+        ShardedEngine::fault_stats(self)
+    }
+    fn shard_stats(&self) -> Option<ShardTelemetry> {
+        Some(self.telemetry())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::JobNature;
+    use crate::faults::FaultSpec;
+
+    fn job(id: u64, w: f32, ept: Vec<f32>) -> Job {
+        Job::new(id, w, ept, JobNature::Mixed)
+    }
+
+    fn even_job(id: u64, machines: usize) -> Job {
+        job(id, 2.0, vec![20.0; machines])
+    }
+
+    #[test]
+    fn ranges_cover_the_park_with_remainder_up_front() {
+        let e = ShardedEngine::new(3, 10, 4, 0.5, Precision::Int8);
+        assert_eq!(e.ranges(), &[(0, 4), (4, 3), (7, 3)]);
+        let e = ShardedEngine::new(2, 8, 4, 0.5, Precision::Int8);
+        assert_eq!(e.ranges(), &[(0, 4), (4, 4)]);
+    }
+
+    #[test]
+    fn single_shard_matches_the_golden_engine_exactly() {
+        let mut golden = SosEngine::new(5, 4, 0.5, Precision::Int8);
+        let mut sharded = ShardedEngine::new(1, 5, 4, 0.5, Precision::Int8);
+        for i in 0..20u64 {
+            let j = job(i, 1.0 + (i % 5) as f32, (0..5).map(|m| 10.0 + ((i + m) % 7) as f32 * 9.0).collect());
+            golden.submit(j.clone());
+            sharded.route(j, true);
+            let a = golden.tick(None);
+            let b = sharded.tick();
+            assert_eq!(a, b, "tick {}", i + 1);
+        }
+        // drain both to idle, comparing every executed tick
+        while !golden.is_idle() || !sharded.is_idle() {
+            assert_eq!(golden.tick(None), sharded.tick());
+            assert!(golden.tick_no() < 10_000);
+        }
+        assert_eq!(golden.tick_no(), sharded.tick_no());
+    }
+
+    #[test]
+    fn routing_is_least_loaded_with_ties_to_the_lowest_shard() {
+        let mut e = ShardedEngine::new(2, 4, 4, 0.5, Precision::Int8);
+        assert_eq!(e.route(even_job(0, 4), true), 0, "empty park: tie -> shard 0");
+        assert_eq!(e.route(even_job(1, 4), true), 1, "shard 0 now loaded");
+        assert_eq!(e.route(even_job(2, 4), true), 0);
+        let t = e.telemetry();
+        assert_eq!(t.per_shard[0].routed, 2);
+        assert_eq!(t.per_shard[1].routed, 1);
+    }
+
+    #[test]
+    fn released_machines_are_remapped_to_global_indices() {
+        // 2 shards x 1 machine; make shard 1 the cheap one.
+        let mut e = ShardedEngine::new(2, 2, 4, 1.0, Precision::Fp32);
+        e.route(even_job(7, 2), true); // shard 0 (tie)
+        e.route(even_job(8, 2), true); // shard 1
+        let out = e.tick();
+        let mut machines: Vec<usize> = std::iter::once(out.assigned.unwrap().machine)
+            .chain(out.co_assigned.iter().map(|a| a.machine))
+            .collect();
+        machines.sort_unstable();
+        assert_eq!(machines, vec![0, 1], "one assignment per shard, remapped");
+        // drive to release: alpha_pt = 20 -> pops at tick 21
+        e.advance_to(20);
+        let out = e.tick();
+        let mut rel: Vec<usize> = out.released.iter().map(|&(_, m)| m).collect();
+        rel.sort_unstable();
+        assert_eq!(rel, vec![0, 1]);
+        assert!(e.is_idle());
+        let t = e.telemetry();
+        assert_eq!(t.per_shard[0].completed, 1);
+        assert_eq!(t.per_shard[1].completed, 1);
+        assert_eq!(t.imbalance_cv, 0.0, "perfectly balanced");
+        assert_ne!(t.per_shard[0].digest, t.per_shard[1].digest, "different release streams");
+    }
+
+    #[test]
+    fn horizon_folds_shards_and_storm_queue() {
+        let mut e = ShardedEngine::new(2, 4, 4, 0.5, Precision::Int8);
+        assert_eq!(e.horizon(), Horizon::Idle);
+        e.install_faults(FaultSpec::parse("storm=2@50,seed=3").unwrap().plan(4).unwrap());
+        assert!(!e.is_idle(), "pending storm keeps the engine live");
+        assert_eq!(e.horizon(), Horizon::At(50), "storm bounds the jump");
+        e.advance_to(49);
+        let out = e.tick();
+        assert_eq!(out.injected.len(), 2);
+        assert!(out.assigned.is_some(), "storm jobs route and assign same tick");
+        let fs = e.fault_stats().unwrap();
+        assert_eq!(fs.storms, 1);
+        assert_eq!(fs.injected_jobs, 2);
+        // both storm jobs routed like arrivals: one per shard (least loaded)
+        let t = e.telemetry();
+        assert_eq!(t.per_shard[0].routed + t.per_shard[1].routed, 2);
+    }
+
+    #[test]
+    fn machine_faults_address_shards_through_the_map() {
+        // Park of 4 split 2+2: global machine 3 is shard 1's local 1.
+        let mut e = ShardedEngine::new(2, 4, 4, 1.0, Precision::Fp32);
+        e.install_faults(FaultSpec::parse("down=3@2+5").unwrap().plan(4).unwrap());
+        // load shard 1 with a job queued behind a head so the down evicts it
+        e.route(job(1, 2.0, vec![90.0, 90.0, 10.0, 10.0]), true); // shard 0 (tie)
+        e.route(job(2, 4.0, vec![90.0, 90.0, 10.0, 10.0]), true); // shard 1, head on local 0 (tie)
+        e.tick(); // tick 1: both assigned
+        e.route(job(3, 8.0, vec![95.0, 95.0, 80.0, 12.0]), true); // shard 1 tie-break? loads equal -> shard 0
+        let out = e.tick(); // tick 2: down fires on global 3 (shard 1 local 1)
+        // nothing was queued on machine 3, so no evictions — but the
+        // dip accounting must land on shard 1's stats
+        assert!(out.evicted.is_empty());
+        let fs = e.fault_stats().unwrap();
+        assert_eq!(fs.downs, 1);
+        assert!(fs.degraded_ticks >= 1);
+        // drain; the up event must fire before idle
+        while !e.is_idle() {
+            e.tick();
+            assert!(e.tick_no() < 10_000);
+        }
+        assert_eq!(e.fault_stats().unwrap().ups, 1);
+    }
+
+    #[test]
+    fn rebalance_moves_queued_jobs_at_barriers_only() {
+        // 2 shards x 1 machine, depth 1: pile a deep backlog onto the
+        // park, then watch a barrier re-route the queued tail.
+        let mut e = ShardedEngine::new(2, 2, 1, 1.0, Precision::Fp32);
+        for i in 0..6u64 {
+            e.route(job(i, 2.0, vec![300.0, 300.0]), true);
+        }
+        let mut moves_before_barrier = 0;
+        for t in 1..REBALANCE_INTERVAL {
+            e.tick();
+            moves_before_barrier = e.telemetry().rebalance_moves;
+            assert_eq!(moves_before_barrier, 0, "no moves before the barrier (tick {t})");
+        }
+        e.tick(); // the barrier tick
+        let t = e.telemetry();
+        assert!(t.rebalance_events <= 1);
+        // moves only happen when the drain found queued work; with
+        // depth-1 schedules and 300-tick jobs the backlog is non-empty
+        assert_eq!(t.rebalance_events, 1, "barrier drained the queued tail");
+        assert_eq!(
+            t.per_shard.iter().map(|s| s.moved_in).sum::<u64>(),
+            t.rebalance_moves
+        );
+        assert_eq!(
+            t.per_shard.iter().map(|s| s.moved_out).sum::<u64>(),
+            t.rebalance_moves
+        );
+    }
+
+    #[test]
+    fn sharded_run_is_deterministic_across_reruns() {
+        let run = || {
+            let mut e = ShardedEngine::new(3, 9, 4, 0.5, Precision::Int8);
+            for i in 0..40u64 {
+                let j = job(
+                    i,
+                    1.0 + (i % 7) as f32,
+                    (0..9).map(|m| 10.0 + ((i * 3 + m) % 11) as f32 * 8.0).collect(),
+                );
+                e.route(j, true);
+                e.tick();
+            }
+            while !e.is_idle() {
+                e.tick();
+                assert!(e.tick_no() < 100_000);
+            }
+            (e.tick_no(), e.telemetry())
+        };
+        let (ticks_a, tel_a) = run();
+        let (ticks_b, tel_b) = run();
+        assert_eq!(ticks_a, ticks_b);
+        assert_eq!(tel_a, tel_b, "telemetry incl. digests is bit-stable");
+        assert_eq!(tel_a.per_shard.iter().map(|s| s.completed).sum::<u64>(), 40);
+    }
+}

@@ -23,9 +23,10 @@
 //!   can never drift from the parser again.
 
 use crate::baselines::{SimdSos, SoscEngine};
-use crate::coordinator::EngineAdapter;
+use crate::coordinator::{EngineAdapter, ShardedEngine};
 use crate::err;
 use crate::error::Result;
+use crate::bail;
 use crate::quant::Precision;
 use crate::runtime::{ArtifactRegistry, CostImpl, XlaSosEngine};
 use crate::scheduler::SosEngine;
@@ -153,6 +154,39 @@ impl EngineId {
             }
         })
     }
+
+    /// Construct the backend split across `shards` independent parks
+    /// behind the [`crate::coordinator::shard`] routing front end.
+    /// Sharding composes shard-local scheduling with top-level routing,
+    /// which only the golden tickless engine supports (each shard needs
+    /// its own event horizon and fault layer); every other backend is
+    /// refused up front so `serve --shards K` can never silently run
+    /// single-domain. `shards = 1` yields the front end in its
+    /// bit-identical-to-unsharded degenerate form.
+    pub fn build_sharded(
+        self,
+        shards: usize,
+        machines: usize,
+        depth: usize,
+        alpha: f32,
+        precision: Precision,
+    ) -> Result<Box<dyn EngineAdapter>> {
+        if self != EngineId::Sos {
+            bail!(
+                "engine `{}` does not support sharding (use --engine sos)",
+                self.name()
+            );
+        }
+        if shards == 0 {
+            bail!("--shards must be >= 1");
+        }
+        if shards > machines {
+            bail!("cannot split {machines} machines into {shards} shards");
+        }
+        Ok(Box::new(ShardedEngine::new(
+            shards, machines, depth, alpha, precision,
+        )))
+    }
 }
 
 #[cfg(test)]
@@ -208,6 +242,20 @@ mod tests {
             assert!(e.is_idle(), "{}", id.name());
             assert_eq!(e.label(), id.name(), "adapter label matches registry");
         }
+    }
+
+    #[test]
+    fn sharded_construction_is_golden_engine_only() {
+        let e = EngineId::Sos.build_sharded(4, 10, 4, 0.5, Precision::Int8).unwrap();
+        assert!(e.is_idle());
+        assert_eq!(e.label(), "sos");
+        assert_eq!(e.shard_stats().unwrap().shards(), 4);
+        for id in [EngineId::Sosc, EngineId::Simd, EngineId::StannicSim, EngineId::HerculesSim] {
+            let err = id.build_sharded(2, 10, 4, 0.5, Precision::Int8).unwrap_err();
+            assert!(err.to_string().contains("does not support sharding"), "{}", id.name());
+        }
+        assert!(EngineId::Sos.build_sharded(0, 10, 4, 0.5, Precision::Int8).is_err());
+        assert!(EngineId::Sos.build_sharded(11, 10, 4, 0.5, Precision::Int8).is_err());
     }
 
     #[test]

@@ -39,6 +39,7 @@ fn flag_specs() -> Vec<FlagSpec> {
         FlagSpec::new("sources", "serve: concurrent arrival-source threads (default 1; >1 rotates steady/bursty/heavy mixes)", true),
         FlagSpec::new("batch", "serve: max arrivals admitted per scheduler tick (default 0 = unbatched)", true),
         FlagSpec::new("queue-depth", "serve: bounded depth of arrival/merge/worker queues (default 256)", true),
+        FlagSpec::new("shards", "serve: split the park across K independent scheduling shards (default 1 = unsharded; sos engine only)", true),
         FlagSpec::new("faults", "serve/sweep: seeded fault spec, e.g. 'down=1@40+30,slow=0@20+40x4,storm=6@60,seed=7'", true),
         FlagSpec::new("quick", "reduced-effort runs for smoke testing", false),
         FlagSpec::new("scale", "sweep the Agon-scale grid (parks up to 140 machines)", false),
@@ -118,16 +119,19 @@ fn serve_opts_from(args: &Args) -> Result<ServeOpts> {
         .usize_flag("queue-depth", defaults.queue_depth)?
         .max(1);
     let batch = args.usize_flag("batch", 0)?;
-    let faults = match args.flag("faults") {
-        Some(spec) => Some(FaultSpec::parse(spec).with_ctx(|| "parsing --faults".to_string())?),
-        None => None,
-    };
-    Ok(ServeOpts {
-        queue_depth,
-        batch: if batch == 0 { usize::MAX } else { batch },
-        faults,
-        ..defaults
-    })
+    let shards = args.usize_flag("shards", defaults.shards)?;
+    if shards == 0 {
+        bail!("--shards must be >= 1");
+    }
+    let mut opts = ServeOpts::new()
+        .with_queue_depth(queue_depth)
+        .with_batch(if batch == 0 { usize::MAX } else { batch })
+        .with_shards(shards);
+    if let Some(spec) = args.flag("faults") {
+        opts =
+            opts.with_faults(FaultSpec::parse(spec).with_ctx(|| "parsing --faults".to_string())?);
+    }
+    Ok(opts)
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
@@ -140,9 +144,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if n_sources == 0 {
         bail!("--sources must be >= 1");
     }
-    let engine = cfg
-        .engine
-        .build(cfg.machines, cfg.depth, cfg.alpha, cfg.precision)?;
+    // --shards 1 stays on the plain engine (the sharded front end's
+    // K = 1 form is bit-identical anyway — pinned by tests/sharding.rs)
+    let engine = if opts.shards > 1 {
+        cfg.engine.build_sharded(
+            opts.shards,
+            cfg.machines,
+            cfg.depth,
+            cfg.alpha,
+            cfg.precision,
+        )?
+    } else {
+        cfg.engine
+            .build(cfg.machines, cfg.depth, cfg.alpha, cfg.precision)?
+    };
     let report: ServeReport = if n_sources == 1 {
         let trace = load_or_generate(args, &cfg)?;
         serve(engine, &trace, &opts)?
@@ -240,6 +255,27 @@ fn cmd_serve(args: &Args) -> Result<()> {
             f.degraded_ticks, f.down_machine_ticks, f.max_concurrent_down
         );
     }
+    if let Some(t) = report.shards.as_ref() {
+        println!(
+            "shards            : {} parks, {} rebalance moves at {} barriers, imbalance CV {:.3}",
+            t.shards(),
+            t.rebalance_moves,
+            t.rebalance_events,
+            t.imbalance_cv
+        );
+        for (i, sh) in t.per_shard.iter().enumerate() {
+            println!(
+                "  shard {i:<11}: machines {}..{}, {} routed, {} completed, +{}/-{} rebalanced, digest {}",
+                sh.first_machine,
+                sh.first_machine + sh.machines - 1,
+                sh.routed,
+                sh.completed,
+                sh.moved_in,
+                sh.moved_out,
+                sh.digest
+            );
+        }
+    }
     println!("host wall         : {:.2?}", report.wall);
     if args.has("json") {
         use stannic::jsonio::{arr, num, obj, s};
@@ -264,6 +300,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
             fields.push(("fault_injected", num(f.injected_jobs as f64)));
             fields.push(("fault_evicted", num(f.evicted_jobs as f64)));
             fields.push(("fault_dropped", num(f.dropped_arrivals as f64)));
+        }
+        if let Some(t) = report.shards.as_ref() {
+            fields.push(("shards", num(t.shards() as f64)));
+            fields.push(("rebalance_moves", num(t.rebalance_moves as f64)));
+            fields.push(("shard_imbalance_cv", num(t.imbalance_cv)));
         }
         let j = obj(fields);
         println!("{j}");

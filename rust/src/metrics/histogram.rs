@@ -66,6 +66,21 @@ impl Histogram {
         self.max = self.max.max(v);
     }
 
+    /// Fold another histogram into this one, element-wise: afterwards
+    /// this histogram reports exactly what it would had every sample of
+    /// `other` been recorded here directly (the bucket layout is fixed
+    /// at construction, so merging is pure addition). This is how the
+    /// sharded coordinator aggregates per-shard latency distributions
+    /// without losing percentile fidelity to pre-summarized scalars.
+    pub fn merge(&mut self, other: &Histogram) {
+        for (b, o) in self.buckets.iter_mut().zip(&other.buckets) {
+            *b += o;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.max = self.max.max(other.max);
+    }
+
     pub fn count(&self) -> u64 {
         self.count
     }
@@ -189,6 +204,30 @@ mod tests {
         let h = Histogram::new();
         assert_eq!(h.p99(), 0);
         assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn merge_equals_recording_everything_in_one_histogram() {
+        let mut merged = Histogram::new();
+        let mut oracle = Histogram::new();
+        let mut parts = [Histogram::new(), Histogram::new(), Histogram::new()];
+        for (i, v) in [0u64, 3, 42, 977, 7000, 12, 12, 1].iter().enumerate() {
+            parts[i % 3].record(*v);
+            oracle.record(*v);
+        }
+        for p in &parts {
+            merged.merge(p);
+        }
+        assert_eq!(merged.count(), oracle.count());
+        assert_eq!(merged.mean(), oracle.mean());
+        assert_eq!(merged.max(), oracle.max());
+        for q in [0.0, 0.5, 0.95, 0.99] {
+            assert_eq!(merged.quantile(q), oracle.quantile(q), "q{q}");
+        }
+        // merging an empty histogram is a no-op
+        let before = merged.count();
+        merged.merge(&Histogram::new());
+        assert_eq!(merged.count(), before);
     }
 
     #[test]

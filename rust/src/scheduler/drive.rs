@@ -49,6 +49,21 @@ impl Horizon {
         }
     }
 
+    /// Fold two horizons into the horizon of the combined system: if
+    /// either side cannot predict, neither can the pair; otherwise the
+    /// earliest predicted event wins and `Idle` is the identity. This
+    /// is the min-over-shards combinator the sharded coordinator folds
+    /// its per-shard horizons with — the merged horizon is safe to jump
+    /// on exactly when every member's is.
+    pub fn merge(self, other: Horizon) -> Horizon {
+        match (self, other) {
+            (Horizon::Unknown, _) | (_, Horizon::Unknown) => Horizon::Unknown,
+            (Horizon::At(a), Horizon::At(b)) => Horizon::At(a.min(b)),
+            (Horizon::At(t), Horizon::Idle) | (Horizon::Idle, Horizon::At(t)) => Horizon::At(t),
+            (Horizon::Idle, Horizon::Idle) => Horizon::Idle,
+        }
+    }
+
     /// The next tick a drive loop must actually execute, at virtual
     /// time `tick` with the next known arrival (if any): the earlier of
     /// the engine's horizon and the arrival, never before `tick + 1`.
@@ -215,6 +230,24 @@ mod tests {
         assert_eq!(At(5).jump_target(Some(3), 10), 11);
         assert_eq!(super::Horizon::of(Some(7)), At(7));
         assert_eq!(super::Horizon::of(None), Idle);
+    }
+
+    #[test]
+    fn merge_is_min_with_unknown_dominant_and_idle_identity() {
+        use super::Horizon::*;
+        assert_eq!(At(5).merge(At(9)), At(5));
+        assert_eq!(At(9).merge(At(5)), At(5));
+        assert_eq!(At(5).merge(Idle), At(5));
+        assert_eq!(Idle.merge(At(5)), At(5));
+        assert_eq!(Idle.merge(Idle), Idle);
+        // one unpredictable member poisons the whole fold
+        assert_eq!(Unknown.merge(At(5)), Unknown);
+        assert_eq!(Idle.merge(Unknown), Unknown);
+        // fold shape used by the sharded coordinator
+        let folded = [At(40), Idle, At(12)]
+            .into_iter()
+            .fold(Idle, Horizon::merge);
+        assert_eq!(folded, At(12));
     }
 
     #[test]

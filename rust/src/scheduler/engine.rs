@@ -77,6 +77,11 @@ pub struct TickOutcome {
     /// Storm jobs injected into the arrival FIFO this tick (fault
     /// layer; the serve pipeline registers their payloads from here).
     pub injected: Vec<Job>,
+    /// Additional same-tick assignments from a multi-domain engine (one
+    /// per extra scheduling domain, e.g. the sharded coordinator's
+    /// shards 1..K). Always empty for single-domain engines, so the
+    /// single `assigned` slot keeps its historical meaning.
+    pub co_assigned: Vec<Assignment>,
 }
 
 /// Golden software model of the discretized SOS algorithm.
@@ -205,6 +210,14 @@ impl SosEngine {
     /// Enqueue an arrival without running a tick (used by burst sources).
     pub fn submit(&mut self, job: Job) {
         self.pending.push_back(job);
+    }
+
+    /// Drain every queued-but-unstarted job out of the arrival FIFO, in
+    /// FIFO order. Assigned work (virtual-schedule slots) is untouched —
+    /// this is the rebalance surface of the sharded coordinator, which
+    /// may only move jobs that no machine has started costing against.
+    pub fn drain_backlog(&mut self) -> Vec<Job> {
+        self.pending.drain(..).collect()
     }
 
     /// The earliest future tick that can produce a non-empty

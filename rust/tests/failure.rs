@@ -57,7 +57,7 @@ fn coordinator_survives_saturating_burst() {
     }
     let trace = Trace::new(events, 5);
     let engine = EngineId::Sos.build(5, 3, 0.5, Precision::Int8).unwrap();
-    let r = serve(engine, &trace, &ServeOpts::default()).unwrap();
+    let r = serve(engine, &trace, &ServeOpts::new()).unwrap();
     assert_eq!(r.completions.len(), 100);
     assert!(r.stalls > 0);
 }
@@ -81,10 +81,7 @@ fn machine_down_mid_saturation_drains_without_losing_jobs() {
     let trace = Trace::new(events, 5);
     for policy in ["", ",policy=lose"] {
         let spec = FaultSpec::parse(&format!("down=2@10+40{policy}")).unwrap();
-        let opts = ServeOpts {
-            faults: Some(spec),
-            ..ServeOpts::default()
-        };
+        let opts = ServeOpts::new().with_faults(spec);
         let engine = EngineId::Sos.build(5, 3, 0.5, Precision::Int8).unwrap();
         let r = serve(engine, &trace, &opts).unwrap();
         assert_eq!(r.completions.len(), 100, "policy '{policy}' lost jobs");
@@ -160,11 +157,7 @@ fn bounded_arrival_queues_stall_sources_without_losing_jobs() {
         ArrivalSource::synthetic("s0", dense.clone(), 5, 150, 3),
         ArrivalSource::synthetic("s1", dense, 5, 150, 4),
     ];
-    let opts = ServeOpts {
-        queue_depth: 1,
-        batch: 1,
-        ..ServeOpts::default()
-    };
+    let opts = ServeOpts::new().with_queue_depth(1).with_batch(1);
     let engine = EngineId::Sos.build(5, 10, 0.5, Precision::Int8).unwrap();
     let r = serve_sources(engine, sources, &opts).unwrap();
     assert_eq!(r.completions.len(), 300, "backpressure must not lose jobs");
@@ -263,7 +256,7 @@ fn extreme_workloads_drain() {
         .with_idle(0, 0);
     let trace = generate_trace(&spec, &park, 500, 77);
     let engine = EngineId::Sos.build(5, 10, 0.5, Precision::Int8).unwrap();
-    let r = serve(engine, &trace, &ServeOpts::default()).unwrap();
+    let r = serve(engine, &trace, &ServeOpts::new()).unwrap();
     assert_eq!(r.completions.len(), 500);
 
     // pathological weights/EPTs at the representable extremes
@@ -285,7 +278,7 @@ fn alpha_one_and_tiny_alpha_both_terminate() {
     let trace = generate_trace(&WorkloadSpec::default(), &park, 100, 13);
     for alpha in [1.0f32, 0.01] {
         let engine = EngineId::Sos.build(5, 10, alpha, Precision::Int8).unwrap();
-        let r = serve(engine, &trace, &ServeOpts::default()).unwrap();
+        let r = serve(engine, &trace, &ServeOpts::new()).unwrap();
         assert_eq!(r.completions.len(), 100, "alpha={alpha}");
     }
 }

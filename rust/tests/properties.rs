@@ -288,11 +288,9 @@ fn prop_multisource_serve_deterministic_for_any_interleaving() {
                     seed,
                     n_sources,
                 );
-                let opts = ServeOpts {
-                    queue_depth,
-                    batch,
-                    ..ServeOpts::default()
-                };
+                let opts = ServeOpts::new()
+                    .with_queue_depth(queue_depth)
+                    .with_batch(batch);
                 let engine = EngineId::Sos.build(5, 8, 0.5, Precision::Int8).unwrap();
                 serve_sources(engine, sources, &opts).unwrap()
             };

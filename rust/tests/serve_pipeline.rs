@@ -99,6 +99,86 @@ fn deterministic_serve_fields_reproduce_across_runs() {
 }
 
 #[test]
+fn sharded_serve_records_per_shard_telemetry() {
+    let path = tmp("shardrec.json");
+    let out = bin()
+        .args([
+            "serve", "--sources", "2", "--shards", "4", "--machines", "12", "--jobs", "120",
+            "--seed", "7", "--label", "shtest", "--record",
+        ])
+        .arg(&path)
+        .output()
+        .expect("spawn stannic serve --shards");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        out.status.success(),
+        "serve --shards failed:\n{stdout}\n{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    assert!(
+        stdout.contains("jobs completed    : 120"),
+        "all jobs must complete:\n{stdout}"
+    );
+    assert!(
+        stdout.contains("shards            : 4 parks"),
+        "shard telemetry missing:\n{stdout}"
+    );
+    assert!(stdout.contains("  shard 0"), "{stdout}");
+    assert!(stdout.contains("  shard 3"), "{stdout}");
+
+    let rec = ServeRecord::parse(&std::fs::read_to_string(&path).expect("artifact written"))
+        .expect("sharded artifact parses as ServeRecord");
+    assert_eq!(rec.label, "shtest");
+    assert_eq!(rec.completed, 120);
+    assert_eq!(rec.shards.len(), 4);
+    assert_eq!(
+        rec.shards.iter().map(|sh| sh.machines).sum::<usize>(),
+        12,
+        "shard map covers the park"
+    );
+    assert_eq!(
+        rec.shards.iter().map(|sh| sh.completed).sum::<u64>(),
+        120,
+        "every completion owned by exactly one shard"
+    );
+    for sh in &rec.shards {
+        assert_eq!(sh.digest.len(), 16, "per-shard FNV digest recorded");
+    }
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn shard_misuse_fails_loudly() {
+    // non-golden engine: refused by the registry, never silently unsharded
+    let out = bin()
+        .args(["serve", "--shards", "3", "--engine", "sosc", "--jobs", "10"])
+        .output()
+        .expect("spawn stannic serve");
+    assert!(!out.status.success());
+    assert!(
+        String::from_utf8_lossy(&out.stderr).contains("does not support sharding"),
+        "{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    // zero shards and more shards than machines are parameter errors
+    let out = bin()
+        .args(["serve", "--shards", "0", "--jobs", "10"])
+        .output()
+        .expect("spawn stannic serve");
+    assert!(!out.status.success());
+    let out = bin()
+        .args(["serve", "--shards", "9", "--machines", "5", "--jobs", "10"])
+        .output()
+        .expect("spawn stannic serve");
+    assert!(!out.status.success());
+    assert!(
+        String::from_utf8_lossy(&out.stderr).contains("cannot split"),
+        "{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+}
+
+#[test]
 fn engine_errors_quote_the_registry_usage_everywhere() {
     for cmd in [["serve", "--engine", "warp-drive"], ["sweep", "--engines", "warp-drive"]] {
         let out = bin().args(cmd).output().expect("spawn stannic");

@@ -1,0 +1,252 @@
+//! Integration pins for the sharded multi-park coordinator
+//! (`serve --shards K`, [`stannic::coordinator::shard`]):
+//!
+//! * `--shards 1` is **bit-identical** to the unsharded pipeline —
+//!   completion stream, tick count, stall count and artifact digest —
+//!   across random seeds, parks and queue depths, clean and faulted;
+//! * shard routing is deterministic for any thread interleaving and any
+//!   bounded-queue depth (the routing + rebalance-barrier invariant);
+//! * every K splits the park exactly, completes every job exactly once,
+//!   and reports self-consistent telemetry;
+//! * saturated sharded runs exercise rebalance barriers and still
+//!   conserve jobs.
+
+use stannic::coordinator::{serve_sources, ArrivalSource, ServeOpts, ServeRecord};
+use stannic::engine::EngineId;
+use stannic::faults::FaultSpec;
+use stannic::quant::Precision;
+use stannic::testing::{check, property};
+use stannic::workload::{BurstType, WorkloadSpec};
+
+/// One sharded serve run over the standard source mix.
+fn run_serve(
+    shards: usize,
+    machines: usize,
+    depth: usize,
+    jobs: usize,
+    seed: u64,
+    n_sources: usize,
+    opts: &ServeOpts,
+) -> stannic::coordinator::ServeReport {
+    let engine = EngineId::Sos
+        .build_sharded(shards, machines, depth, 0.5, Precision::Int8)
+        .unwrap();
+    let sources =
+        ArrivalSource::standard_mix(&WorkloadSpec::default(), machines, jobs, seed, n_sources);
+    serve_sources(engine, sources, opts).unwrap()
+}
+
+#[test]
+fn prop_shards_one_is_bit_identical_to_unsharded() {
+    // The K = 1 sharded front end must be indistinguishable from the
+    // plain golden engine through the whole serve pipeline: same
+    // completion stream, same virtual clock, same artifact digest.
+    property("shards=1 identity", 4, |rng| {
+        let machines = rng.range(3, 8);
+        let depth = rng.range(4, 10);
+        let jobs = rng.range(40, 100);
+        let seed = rng.next_u64();
+        let queue_depth = rng.range(2, 64);
+        let batch = rng.range(1, 4);
+        let opts = ServeOpts::new()
+            .with_queue_depth(queue_depth)
+            .with_batch(batch)
+            .with_shards(1);
+        let run = |sharded: bool| {
+            let engine = if sharded {
+                EngineId::Sos
+                    .build_sharded(1, machines, depth, 0.5, Precision::Int8)
+                    .unwrap()
+            } else {
+                EngineId::Sos.build(machines, depth, 0.5, Precision::Int8).unwrap()
+            };
+            let sources = ArrivalSource::standard_mix(
+                &WorkloadSpec::default(),
+                machines,
+                jobs,
+                seed,
+                2,
+            );
+            serve_sources(engine, sources, &opts).unwrap()
+        };
+        let base = run(false);
+        let front = run(true);
+        check(
+            base.completions == front.completions,
+            "completion stream bit-identical",
+        )?;
+        check(base.ticks == front.ticks, "tick counts identical")?;
+        check(base.stalls == front.stalls, "stall counts identical")?;
+        check(front.shards.is_none(), "K = 1 reports as unsharded")?;
+        let a = ServeRecord::from_report("id", &base);
+        let b = ServeRecord::from_report("id", &front);
+        check(a.digest == b.digest, "artifact digests identical")?;
+        check(
+            a.jobs_per_machine == b.jobs_per_machine,
+            "per-machine distribution identical",
+        )?;
+        check(
+            (a.latency_p50, a.latency_p95, a.latency_p99)
+                == (b.latency_p50, b.latency_p95, b.latency_p99),
+            "latency trajectory identical",
+        )?;
+        Ok(())
+    });
+}
+
+#[test]
+fn shards_one_identity_holds_under_faults() {
+    // K = 1 installs the full fault plan directly into its single shard
+    // (no splitting, storms stay inside the shard's own plan), so even
+    // same-tick down+storm orderings reproduce bit-for-bit.
+    let spec = "down=1@20+30,slow=0@10+40x4,storm=5@35,seed=9";
+    let run = |sharded: bool| {
+        let engine = if sharded {
+            EngineId::Sos.build_sharded(1, 5, 8, 0.5, Precision::Int8).unwrap()
+        } else {
+            EngineId::Sos.build(5, 8, 0.5, Precision::Int8).unwrap()
+        };
+        let sources =
+            ArrivalSource::standard_mix(&WorkloadSpec::default(), 5, 90, 13, 2);
+        let opts = ServeOpts::new()
+            .with_shards(1)
+            .with_faults(FaultSpec::parse(spec).unwrap());
+        serve_sources(engine, sources, &opts).unwrap()
+    };
+    let base = run(false);
+    let front = run(true);
+    assert_eq!(base.completions, front.completions);
+    assert_eq!(base.ticks, front.ticks);
+    assert_eq!(base.fault_key, front.fault_key);
+    let (bf, ff) = (base.faults.as_ref().unwrap(), front.faults.as_ref().unwrap());
+    assert_eq!(bf.evicted_jobs, ff.evicted_jobs);
+    assert_eq!(bf.injected_jobs, ff.injected_jobs);
+    assert_eq!(bf.work_lost_cycles, ff.work_lost_cycles);
+    assert_eq!(bf.degraded_ticks, ff.degraded_ticks);
+    assert_eq!(
+        ServeRecord::from_report("id", &base).digest,
+        ServeRecord::from_report("id", &front).digest,
+        "faulted artifact digests identical"
+    );
+}
+
+#[test]
+fn prop_sharded_routing_deterministic_across_interleavings() {
+    // The routing decision happens post-merge, where the arrival order
+    // is already a pure function of virtual time — so the sharded
+    // schedule (and every per-shard digest) must reproduce for any
+    // source-thread interleaving and any bounded-queue depth.
+    property("sharded routing determinism", 3, |rng| {
+        let jobs = rng.range(50, 110);
+        let seed = rng.next_u64();
+        let shards = rng.range(2, 5);
+        let machines = shards * rng.range(2, 4);
+        for n_sources in [2usize, 8] {
+            let run = |queue_depth: usize| {
+                let opts = ServeOpts::new()
+                    .with_queue_depth(queue_depth)
+                    .with_batch(2)
+                    .with_shards(shards);
+                run_serve(shards, machines, 8, jobs, seed, n_sources, &opts)
+            };
+            let a = run(2);
+            let b = run(2);
+            let wide = run(256);
+            check(a.completions.len() == jobs, "all jobs complete")?;
+            check(
+                a.completions == b.completions,
+                "sharded schedule identical across reruns",
+            )?;
+            check(
+                a.completions == wide.completions,
+                "sharded schedule independent of queue depth",
+            )?;
+            check(a.ticks == b.ticks && a.ticks == wide.ticks, "tick counts identical")?;
+            let (ta, tb, tw) = (
+                a.shards.as_ref().expect("sharded run has telemetry"),
+                b.shards.as_ref().expect("sharded run has telemetry"),
+                wide.shards.as_ref().expect("sharded run has telemetry"),
+            );
+            check(ta == tb, "telemetry incl. per-shard digests reproduces")?;
+            check(ta == tw, "telemetry independent of queue depth")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn every_shard_count_splits_the_park_exactly_and_conserves_jobs() {
+    for shards in 2..=5usize {
+        let opts = ServeOpts::new().with_batch(3).with_shards(shards);
+        let r = run_serve(shards, 10, 8, 120, 21, 2, &opts);
+        assert_eq!(r.completions.len(), 120, "K = {shards} lost jobs");
+        let mut ids: Vec<u64> = r.completions.iter().map(|c| c.job.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 120, "K = {shards} duplicated a job");
+        let t = r.shards.as_ref().expect("sharded telemetry");
+        assert_eq!(t.shards(), shards);
+        assert_eq!(
+            t.per_shard.iter().map(|s| s.machines).sum::<usize>(),
+            10,
+            "shard map covers the park exactly"
+        );
+        // contiguous, in order
+        let mut next = 0;
+        for s in &t.per_shard {
+            assert_eq!(s.first_machine, next);
+            next += s.machines;
+        }
+        assert_eq!(
+            t.per_shard.iter().map(|s| s.completed).sum::<u64>(),
+            120,
+            "every completion owned by exactly one shard"
+        );
+        assert_eq!(
+            t.per_shard.iter().map(|s| s.routed).sum::<u64>(),
+            120,
+            "every arrival routed exactly once"
+        );
+        assert!(t.imbalance_cv.is_finite());
+        // completions land on machines the owning shard actually has
+        for c in &r.completions {
+            assert!(c.machine < 10);
+        }
+    }
+}
+
+#[test]
+fn saturated_sharded_run_hits_rebalance_barriers_and_conserves_jobs() {
+    // Two dense uniform-burst sources against a small sharded park:
+    // deep backlogs guarantee queued-but-unstarted work is present at
+    // the 64-tick barriers, so rebalancing must actually engage — and
+    // must never lose or duplicate a job while doing so.
+    let dense = WorkloadSpec::default()
+        .with_burst(6, BurstType::Uniform)
+        .with_idle(0, 0);
+    let sources = vec![
+        ArrivalSource::synthetic("s0", dense.clone(), 4, 150, 3),
+        ArrivalSource::synthetic("s1", dense, 4, 150, 4),
+    ];
+    let opts = ServeOpts::new().with_batch(2).with_shards(2);
+    let engine = EngineId::Sos.build_sharded(2, 4, 3, 0.5, Precision::Int8).unwrap();
+    let r = serve_sources(engine, sources, &opts).unwrap();
+    assert_eq!(r.completions.len(), 300, "rebalancing must not lose jobs");
+    let mut ids: Vec<u64> = r.completions.iter().map(|c| c.job.id).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), 300, "rebalancing must not duplicate a job");
+    let t = r.shards.as_ref().expect("sharded telemetry");
+    assert!(
+        t.rebalance_events >= 1,
+        "a saturated run must cross at least one draining barrier"
+    );
+    assert_eq!(
+        t.per_shard.iter().map(|s| s.moved_in).sum::<u64>(),
+        t.rebalance_moves
+    );
+    assert_eq!(
+        t.per_shard.iter().map(|s| s.moved_out).sum::<u64>(),
+        t.rebalance_moves
+    );
+}
