@@ -1,6 +1,9 @@
 #!/usr/bin/env bash
 # Repo CI: tier-1 verify plus the runnable smoke paths.
-#   tier-1 : cargo build --release && cargo test -q
+#   tier-1 : cargo build --release && cargo test -q, then the test suite
+#            again under --features strict-oracle (every wavefront
+#            Phase-II decision bit-compared against the scalar rescan
+#            oracle)
 #   smoke  : quickstart example + a reduced parallel scenario sweep
 #   serve  : 2-source pipeline smoke + an A/B self-diff through
 #            `serve diff` (same scenario twice must be parity-clean),
@@ -18,7 +21,11 @@
 #            shard vs four — completions must match and the 4-shard run
 #            must drain in fewer virtual ticks (deterministic, so the
 #            gate cannot flake; wall jobs/sec is printed for the trail).
-#   perf   : record the quick sweep and diff it against the committed
+#   perf   : hotpath bench in --bench-smoke mode (self-gating on
+#            deterministic engine-work counters: >=5x tickless iteration
+#            reduction, >=machines/2 wavefront schedule-touch reduction;
+#            both speedup lines grepped), then record the quick sweep
+#            and diff it against the committed
 #            BENCH_seed.json baseline; fails on >25% per-cell regression
 #            (override with STANNIC_PERF_THRESHOLD, e.g. =0.5) or on any
 #            schedule parity break. If the baseline is absent the run
@@ -40,6 +47,13 @@ if [ -z "${STANNIC_CI_SKIP_TIER1:-}" ]; then
 
   echo "== tier-1: test =="
   cargo test -q
+
+  echo "== tier-1: test (strict-oracle Phase-II cross-check) =="
+  # Re-runs the suite with every wavefront Phase-II decision re-derived
+  # through the scalar rescan oracle and bit-compared (plus the rescan
+  # debug_assert in cost.rs). -p is required: --features is rejected at
+  # the root of a virtual workspace.
+  cargo test -q -p stannic --features strict-oracle
 else
   echo "== tier-1: skipped (STANNIC_CI_SKIP_TIER1 set) =="
 fi
@@ -182,6 +196,19 @@ else
     echo "::warning file=ci.sh::perf gate inert: no committed BENCH_seed.json baseline; run tools/bless_bench_seed.sh and commit the result"
   fi
 fi
+
+echo "== perf: hotpath bench smoke (tickless + wavefront engine-work gates) =="
+# The hotpath driver self-gates on deterministic engine-work counters,
+# not wall clock: the sparse-arrival scenario asserts the >=5x tickless
+# iteration reduction, and the batched-admission scenario asserts the
+# wavefront kernel's >=machines/2 reduction in schedule touches while
+# pinning its assignment log bit-equal to the scalar Phase II. The greps
+# pin both speedup lines into the CI log so a silently-skipped scenario
+# cannot pass.
+cargo bench --bench hotpath -- --bench-smoke | tee /tmp/stannic_hotpath_smoke.txt
+grep -E "x fewer iterations" /tmp/stannic_hotpath_smoke.txt
+grep -E "x fewer schedule touches" /tmp/stannic_hotpath_smoke.txt
+echo "hotpath bench smoke OK (tickless + wavefront gates held)"
 
 echo "== sweep A/B self-diff: same grid recorded twice must be parity-clean =="
 # Runs every CI pass (not only when the committed baseline is missing):

@@ -104,6 +104,88 @@ fn main() {
         ]);
     }
 
+    // 1c. batched admission through the wavefront Phase-II kernel vs
+    // the scalar per-machine scan. Both kernels must produce the exact
+    // same schedule (asserted on the full assignment log and tick
+    // count); the batching win is gated on deterministic engine-work
+    // counters — schedule touches per admitted job — NOT wall clock,
+    // which is too noisy to assert in CI. The scalar loop syncs every
+    // machine per arrival plus the winner; the wavefront sweep reads
+    // only the SoA mirror and syncs the winner alone, so the expected
+    // reduction is ~(machines + 1)x and the gate is machines/2.
+    {
+        let (jobs_n, batch) = if smoke { (240, 8) } else { (1200, 16) };
+        let machines = 32usize;
+        let park = MachinePark::cycled(machines);
+        let trace = generate_trace(&WorkloadSpec::default(), &park, jobs_n, 23);
+        let jobs: Vec<_> = trace
+            .events()
+            .iter()
+            .filter_map(|ev| ev.job.clone())
+            .collect();
+
+        let drive = |scalar: bool| {
+            let mut e = SosEngine::new(machines, 8, 0.5, Precision::Int8);
+            if scalar {
+                e = e.with_scalar_phase2();
+            }
+            let mut log: Vec<(u64, u64, usize, usize)> = Vec::new();
+            for chunk in jobs.chunks(batch) {
+                e.assign_batch(chunk.to_vec());
+                while e.backlog() > 0 {
+                    let out = e.tick(None);
+                    if let Some(a) = &out.assigned {
+                        log.push((e.tick_no(), a.job, a.machine, a.position));
+                    }
+                }
+            }
+            while !e.is_idle() {
+                if let Some(next) = e.next_event_tick() {
+                    e.advance_to(next - 1);
+                }
+                std::hint::black_box(e.tick(None));
+            }
+            (e.tick_no(), log, e.phase2_work())
+        };
+        let (ticks_w, log_w, work_w) = drive(false);
+        let (ticks_s, log_s, work_s) = drive(true);
+        assert_eq!(ticks_w, ticks_s, "kernels disagree on virtual time");
+        assert_eq!(log_w, log_s, "wavefront and scalar assignments diverged");
+        assert_eq!(
+            work_w.probes, work_s.probes,
+            "cost probes are the B x M information floor for both kernels"
+        );
+        let per_job_w = work_w.schedule_syncs as f64 / jobs_n as f64;
+        let per_job_s = work_s.schedule_syncs as f64 / jobs_n as f64;
+        let ratio = work_s.schedule_syncs as f64 / work_w.schedule_syncs.max(1) as f64;
+        assert!(
+            ratio >= machines as f64 / 2.0,
+            "wavefront batching win regressed: only {ratio:.1}x fewer schedule \
+             touches ({per_job_s:.1} vs {per_job_w:.1} per job, {machines} machines)"
+        );
+        let m_wave = bench(opts, || {
+            std::hint::black_box(drive(false));
+        });
+        let m_scalar = bench(opts, || {
+            std::hint::black_box(drive(true));
+        });
+        t.row(vec![
+            format!("SosEngine wavefront batch ({jobs_n} jobs, B={batch}, {machines}x8)"),
+            fmt_ns(m_wave.mean_ns),
+            fmt_ns(m_wave.min_ns),
+            format!("{ratio:.0}x fewer schedule touches ({per_job_w:.1}/job vs {per_job_s:.1})"),
+        ]);
+        t.row(vec![
+            format!("SosEngine scalar Phase II baseline ({jobs_n} jobs)"),
+            fmt_ns(m_scalar.mean_ns),
+            fmt_ns(m_scalar.min_ns),
+            format!(
+                "{:.2}x wall vs wavefront",
+                m_scalar.mean_ns / m_wave.mean_ns.max(1.0)
+            ),
+        ]);
+    }
+
     // 2. stannic sim tick
     {
         let jobs = if smoke { 200 } else { 1000 };

@@ -29,6 +29,17 @@ use super::shard::ShardTelemetry;
 pub trait EngineAdapter {
     fn label(&self) -> &'static str;
     fn submit(&mut self, job: Job);
+    /// Enqueue one merged admission batch. Semantically identical to
+    /// submitting each job in order (the default does exactly that) —
+    /// engines with a batched Phase-II entry override this to hand the
+    /// whole burst over in one call (the golden engine routes it to
+    /// [`SosEngine::assign_batch`], whose wavefront kernel costs the
+    /// burst against resident SoA columns).
+    fn submit_batch(&mut self, jobs: Vec<Job>) {
+        for job in jobs {
+            self.submit(job);
+        }
+    }
     fn tick(&mut self) -> Result<TickOutcome>;
     fn is_idle(&self) -> bool;
     /// Simulated accelerator cycles consumed so far (0 for software
@@ -121,6 +132,9 @@ impl EngineAdapter for SosEngine {
     }
     fn submit(&mut self, job: Job) {
         SosEngine::submit(self, job);
+    }
+    fn submit_batch(&mut self, jobs: Vec<Job>) {
+        SosEngine::assign_batch(self, jobs);
     }
     fn tick(&mut self) -> Result<TickOutcome> {
         Ok(SosEngine::tick(self, None))

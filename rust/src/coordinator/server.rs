@@ -608,12 +608,18 @@ pub fn serve_sources(
                 if budget == 0 || staged.is_empty() {
                     break;
                 }
-                for _ in 0..budget.min(staged.len()) {
+                // hand the whole round over as one merged batch: same
+                // jobs, same FIFO order as per-job submits, but batched
+                // engines cost the burst through their wavefront kernel
+                let take = budget.min(staged.len());
+                let mut burst = Vec::with_capacity(take);
+                for _ in 0..take {
                     let job = staged.pop_front().expect("staged non-empty");
                     payloads.insert(job.id, job.clone());
-                    engine.submit(job);
-                    admitted += 1;
+                    burst.push(job);
                 }
+                admitted += burst.len();
+                engine.submit_batch(burst);
             }
             merge_depth.record(staged.len() as u64);
             if admitted > 0 {

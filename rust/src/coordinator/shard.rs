@@ -452,6 +452,17 @@ impl EngineAdapter for ShardedEngine {
     fn submit(&mut self, job: Job) {
         self.route(job, true);
     }
+    /// Routing decisions depend on the arrivals routed before them (the
+    /// least-loaded rule reads each shard's backlog), so a batch must be
+    /// routed job by job in arrival order — this override exists to pin
+    /// that, not to shortcut it. The batching win is unaffected: each
+    /// shard's Phase II runs the wavefront kernel over its own mirror
+    /// regardless of how its FIFO was fed.
+    fn submit_batch(&mut self, jobs: Vec<Job>) {
+        for job in jobs {
+            self.route(job, true);
+        }
+    }
     fn tick(&mut self) -> Result<TickOutcome> {
         Ok(ShardedEngine::tick(self))
     }

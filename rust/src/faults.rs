@@ -490,6 +490,22 @@ pub struct FaultState {
     pub stats: FaultStats,
 }
 
+/// Straggler EPT inflation (Phase II): a slow machine inflates the EPT
+/// of *newly assigned* jobs only — in-flight slots keep their contracted
+/// rate. This is the single definition both cost kernels share: the
+/// scalar loop applies it via `SosEngine::effective_ept` and the
+/// wavefront sweep via its mirrored slow column, so the two paths cannot
+/// drift. The `factor > 1` guard keeps the nominal path multiplication-
+/// free (though `* 1.0` would be bit-exact anyway).
+#[inline]
+pub fn inflate_ept(ept: f32, factor: u32) -> f32 {
+    if factor > 1 {
+        ept * factor as f32
+    } else {
+        ept
+    }
+}
+
 impl FaultState {
     pub fn new(plan: FaultPlan, machines: usize) -> Self {
         debug_assert_eq!(plan.machines(), machines, "plan built for a different park");

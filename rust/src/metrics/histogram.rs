@@ -231,6 +231,72 @@ mod tests {
     }
 
     #[test]
+    fn merge_is_associative_with_the_empty_histogram_as_identity() {
+        let fill = |vals: &[u64]| {
+            let mut h = Histogram::new();
+            for &v in vals {
+                h.record(v);
+            }
+            h
+        };
+        let a = fill(&[1, 9, 64, 64]);
+        let b = fill(&[0, 0, 4000]);
+        let c = fill(&[77]);
+        // (a + b) + c == a + (b + c), through every report surface
+        let mut left = a.clone();
+        left.merge(&b);
+        left.merge(&c);
+        let mut bc = b.clone();
+        bc.merge(&c);
+        let mut right = a.clone();
+        right.merge(&bc);
+        assert_eq!(left.count(), right.count());
+        assert_eq!(left.mean(), right.mean());
+        assert_eq!(left.max(), right.max());
+        for q in [0.0, 0.25, 0.5, 0.95, 0.99, 1.0] {
+            assert_eq!(left.quantile(q), right.quantile(q), "q{q}");
+        }
+        // the empty histogram is a left identity too (merging *into* a
+        // fresh one reports exactly the source)
+        let mut id = Histogram::new();
+        id.merge(&a);
+        assert_eq!(id.count(), a.count());
+        assert_eq!(id.mean(), a.mean());
+        assert_eq!(id.max(), a.max());
+        for q in [0.0, 0.5, 0.99] {
+            assert_eq!(id.quantile(q), a.quantile(q), "q{q}");
+        }
+    }
+
+    #[test]
+    fn merged_quantiles_reflect_combined_mass_not_averaged_summaries() {
+        // Two shards with disjoint latency regimes: the merged median
+        // must land in the low regime (half the combined mass) and the
+        // merged p95 in the high one — what pre-summarized per-shard
+        // scalars cannot reconstruct.
+        let mut low = Histogram::new();
+        for v in 1..=1000u64 {
+            low.record(v);
+        }
+        let mut high = Histogram::new();
+        for v in 9001..=10_000u64 {
+            high.record(v);
+        }
+        low.merge(&high);
+        assert_eq!(low.count(), 2000);
+        let p50 = low.p50() as f64;
+        assert!(
+            (p50 - 1000.0).abs() / 1000.0 < 0.13,
+            "merged p50 {p50} should sit at the low regime's edge"
+        );
+        let p95 = low.quantile(0.95) as f64;
+        assert!(
+            (9001.0..=10_000.0).contains(&p95),
+            "merged p95 {p95} should come from the high regime"
+        );
+    }
+
+    #[test]
     fn record_n_equals_repeated_record() {
         let mut bulk = Histogram::new();
         let mut looped = Histogram::new();

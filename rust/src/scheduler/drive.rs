@@ -251,6 +251,30 @@ mod tests {
     }
 
     #[test]
+    fn merge_is_commutative_associative_with_idle_identity() {
+        use super::Horizon::*;
+        // exhaustive over the variant shapes, including equal ticks:
+        // the shard fold's correctness must not depend on fold order
+        let vals = [Unknown, Idle, At(3), At(7), At(3)];
+        for a in vals {
+            for b in vals {
+                assert_eq!(a.merge(b), b.merge(a), "{a:?} merge {b:?} commutes");
+                assert_eq!(Idle.merge(a), a, "Idle is the identity");
+                for c in vals {
+                    assert_eq!(
+                        a.merge(b).merge(c),
+                        a.merge(b.merge(c)),
+                        "associativity over ({a:?}, {b:?}, {c:?})"
+                    );
+                }
+            }
+        }
+        // the empty fold (a zero-member coordinator) is the seed itself
+        let none: [Horizon; 0] = [];
+        assert_eq!(none.into_iter().fold(Idle, Horizon::merge), Idle);
+    }
+
+    #[test]
     fn empty_trace_drains_in_one_tick() {
         let trace = Trace::new(Vec::new(), 5);
         let mut engine = paper_engine();

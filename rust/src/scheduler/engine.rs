@@ -42,11 +42,12 @@ use std::cmp::Reverse;
 use std::collections::{BinaryHeap, VecDeque};
 
 use crate::core::{Job, JobId, MachineId};
-use crate::faults::{DownPolicy, FaultKind, FaultPlan, FaultState, FaultStats};
+use crate::faults::{inflate_ept, DownPolicy, FaultKind, FaultPlan, FaultState, FaultStats};
 use crate::quant::Precision;
 
 use super::cost::{cost_of, FULL_COST};
 use super::vschedule::{Slot, VirtualSchedule};
+use super::wavefront::{Phase2Kernel, Phase2Work, Wavefront};
 
 /// Result of assigning one job (Phase II). The full per-machine cost
 /// vector is not stored here (it cost a heap allocation per assignment);
@@ -108,6 +109,16 @@ pub struct SosEngine {
     /// fault-free engines pay one pointer of state and a null check per
     /// tick phase.
     faults: Option<Box<FaultState>>,
+    /// SoA mirror of per-machine cost-query state, swept by the
+    /// batch-wavefront Phase II (see [`Wavefront`]'s module docs for
+    /// the columns and the refresh invariant). Maintained only under
+    /// [`Phase2Kernel::Wavefront`].
+    wavefront: Wavefront,
+    /// Which Phase-II cost kernel this engine runs (fixed at build).
+    kernel: Phase2Kernel,
+    /// Engine-work counters for the assignment path (the hotpath bench
+    /// gates the wavefront batching win on these, not wall clock).
+    work: Phase2Work,
 }
 
 impl SosEngine {
@@ -130,7 +141,31 @@ impl SosEngine {
             horizon: BinaryHeap::with_capacity(machines),
             due_scratch: Vec::with_capacity(machines),
             faults: None,
+            wavefront: Wavefront::new(machines, depth, memoized),
+            kernel: Phase2Kernel::Wavefront,
+            work: Phase2Work::default(),
         }
+    }
+
+    /// Downgrade Phase II to the historical per-machine scalar loop —
+    /// the reference implementation the wavefront kernel is gated
+    /// against (`tests/wavefront.rs`, the hotpath bench). Must be
+    /// chosen before driving: the SoA mirror is not maintained in
+    /// scalar mode, so the kernels cannot be switched mid-run.
+    pub fn with_scalar_phase2(mut self) -> Self {
+        assert_eq!(self.tick_no, 0, "choose the Phase-II kernel before driving");
+        self.kernel = Phase2Kernel::Scalar;
+        self
+    }
+
+    /// The Phase-II cost kernel this engine runs.
+    pub fn phase2_kernel(&self) -> Phase2Kernel {
+        self.kernel
+    }
+
+    /// Engine-work counters accumulated by the assignment path.
+    pub fn phase2_work(&self) -> Phase2Work {
+        self.work
     }
 
     /// Arm a deterministic fault plan (see [`crate::faults`]). The plan
@@ -210,6 +245,24 @@ impl SosEngine {
     /// Enqueue an arrival without running a tick (used by burst sources).
     pub fn submit(&mut self, job: Job) {
         self.pending.push_back(job);
+    }
+
+    /// Enqueue one merged admission batch (a Phase-I burst) — the
+    /// batched entry the serve/shard admission loop feeds. Scheduling
+    /// semantics are identical to submitting each job in order: the
+    /// FIFO still serializes Phase II to one assignment per tick, so
+    /// batching changes how the burst is *costed*, never what is
+    /// scheduled. Under the wavefront kernel each of the burst's
+    /// Phase-II iterations sweeps the resident SoA columns (one winner
+    /// sync + one row refresh per job) instead of running an
+    /// independent scatter-gather scan over every machine's
+    /// [`VirtualSchedule`].
+    pub fn assign_batch(&mut self, jobs: impl IntoIterator<Item = Job>) {
+        let before = self.pending.len();
+        self.pending.extend(jobs);
+        if self.pending.len() > before {
+            self.work.batches += 1;
+        }
     }
 
     /// Drain every queued-but-unstarted job out of the arrival FIFO, in
@@ -296,6 +349,19 @@ impl SosEngine {
         }
     }
 
+    /// Re-mirror machine `m`'s row into the wavefront SoA columns.
+    /// Called after every *structural* schedule mutation (insert, pop,
+    /// eviction, up-skip); pure lazy syncs need no refresh — the sweep
+    /// re-derives accrual read-only from the row's own `synced_at`.
+    /// A no-op under the scalar kernel, which never reads the mirror.
+    #[inline]
+    fn mirror_refresh(&mut self, m: usize) {
+        if self.kernel == Phase2Kernel::Wavefront {
+            self.wavefront.refresh_row(m, &self.schedules[m]);
+            self.work.row_refreshes += 1;
+        }
+    }
+
     /// Run one scheduler tick; `arrival` is this tick's new job, if any.
     pub fn tick(&mut self, arrival: Option<&Job>) -> TickOutcome {
         self.tick_no += 1;
@@ -348,6 +414,7 @@ impl SosEngine {
                     }
                     out.released.push((slot.id, m));
                     self.arm_horizon(m); // successor head, if any
+                    self.mirror_refresh(m);
                 }
                 // else: a stale entry fired early; the machine's real
                 // head keeps its own (future) horizon entry.
@@ -417,6 +484,13 @@ impl SosEngine {
                         // tick, deterministically
                         self.pending.push_back(job);
                     }
+                    // mirror hooks inlined (the live `f` borrow rules
+                    // out the method call; these fields are disjoint)
+                    if self.kernel == Phase2Kernel::Wavefront {
+                        self.wavefront.set_down(m, true);
+                        self.wavefront.refresh_row(m, &self.schedules[m]);
+                        self.work.row_refreshes += 1;
+                    }
                 }
                 FaultKind::Up(m) => {
                     f.stats.ups += 1;
@@ -433,13 +507,24 @@ impl SosEngine {
                     if let Some(release) = vs.head_release_tick() {
                         self.horizon.push(Reverse((release, m)));
                     }
+                    if self.kernel == Phase2Kernel::Wavefront {
+                        self.wavefront.set_down(m, false);
+                        self.wavefront.refresh_row(m, &self.schedules[m]);
+                        self.work.row_refreshes += 1;
+                    }
                 }
                 FaultKind::SlowStart(m, factor) => {
                     f.stats.slow_events += 1;
                     f.slow[m] = factor.max(1);
+                    if self.kernel == Phase2Kernel::Wavefront {
+                        self.wavefront.set_slow(m, factor);
+                    }
                 }
                 FaultKind::SlowEnd(m) => {
                     f.slow[m] = 1;
+                    if self.kernel == Phase2Kernel::Wavefront {
+                        self.wavefront.set_slow(m, 1);
+                    }
                 }
                 FaultKind::Storm(jobs) => {
                     f.stats.storms += 1;
@@ -453,12 +538,24 @@ impl SosEngine {
         }
     }
 
-    /// Phase II machine assignment: cost all machines, argmin, insert.
-    fn assign(&mut self, job: &Job) -> Assignment {
-        debug_assert_eq!(job.fanout(), self.schedules.len());
-        let now = self.tick_no;
+    /// EPT the park quotes for `job` on machine `m`: the raw per-machine
+    /// EPT, inflated when the fault layer marks `m` as a straggler —
+    /// newly assigned jobs only; in-flight slots keep their contracted
+    /// rate. Single source for the scalar cost probe and the winner's
+    /// slot build; the wavefront sweep applies the same
+    /// [`inflate_ept`] through its mirrored slow column.
+    #[inline]
+    fn effective_ept(&self, m: usize, job: &Job) -> f32 {
+        inflate_ept(job.ept[m], self.faults.as_deref().map_or(1, |f| f.slow[m]))
+    }
+
+    /// The historical per-machine Phase-II scan — lazy-sync each
+    /// schedule, then `cost_of` over it — retained as the scalar
+    /// reference the wavefront kernel is gated against. Fills the cost
+    /// vector and returns the argmin.
+    fn scalar_scan(&mut self, job: &Job, now: u64) -> Option<(usize, f32, usize)> {
         let mut best: Option<(usize, f32, usize)> = None; // (machine, cost, pos)
-        for (m, vs) in self.schedules.iter_mut().enumerate() {
+        for m in 0..self.schedules.len() {
             if self.faults.as_deref().is_some_and(|f| f.down[m]) {
                 // a down machine is excluded from Phase II outright (its
                 // V_i is unreachable); do NOT sync it — downtime must
@@ -466,16 +563,12 @@ impl SosEngine {
                 self.cost_scratch[m] = FULL_COST;
                 continue;
             }
+            let (j_w, j_eps, j_t) = self.precision.q_job(job.weight, self.effective_ept(m, job));
             // cost is computed over the post-pop state with virtual work
             // through the previous tick's Phase III
+            let vs = &mut self.schedules[m];
             vs.sync_to(now - 1);
-            // a straggling machine inflates the EPTs of *newly assigned*
-            // jobs (in-flight slots keep their contracted rate)
-            let ept_m = match self.faults.as_deref() {
-                Some(f) if f.slow[m] > 1 => job.ept[m] * f.slow[m] as f32,
-                _ => job.ept[m],
-            };
-            let (j_w, j_eps, j_t) = self.precision.q_job(job.weight, ept_m);
+            self.work.schedule_syncs += 1;
             match cost_of(vs, j_w, j_eps, j_t) {
                 Some(c) => {
                     let total = c.total();
@@ -490,13 +583,81 @@ impl SosEngine {
                 }
             }
         }
+        best
+    }
+
+    /// `strict-oracle` cross-check: re-derive the whole Phase-II
+    /// decision through the scalar oracle (`cost_of` over a synced
+    /// clone of each live schedule) and require bit-equality with the
+    /// kernel's cost vector and argmin. Runs on every assignment when
+    /// the feature is enabled (CI's tier-1 test job).
+    #[cfg(feature = "strict-oracle")]
+    fn assert_kernel_matches_scalar_oracle(
+        &self,
+        job: &Job,
+        now: u64,
+        best: Option<(usize, f32, usize)>,
+    ) {
+        let mut oracle: Option<(usize, f32, usize)> = None;
+        for (m, vs) in self.schedules.iter().enumerate() {
+            if self.faults.as_deref().is_some_and(|f| f.down[m]) {
+                assert_eq!(self.cost_scratch[m], FULL_COST, "machine {m} is down");
+                continue;
+            }
+            let (j_w, j_eps, j_t) = self.precision.q_job(job.weight, self.effective_ept(m, job));
+            let mut synced = vs.clone();
+            synced.sync_to(now - 1);
+            match cost_of(&synced, j_w, j_eps, j_t) {
+                Some(c) => {
+                    assert_eq!(
+                        self.cost_scratch[m],
+                        c.total(),
+                        "machine {m}: kernel cost drifted from the scalar oracle"
+                    );
+                    if oracle.map_or(true, |(_, bc, _)| c.total() < bc) {
+                        oracle = Some((m, c.total(), c.position));
+                    }
+                }
+                None => {
+                    assert_eq!(self.cost_scratch[m], FULL_COST, "machine {m} is full");
+                }
+            }
+        }
+        assert_eq!(best, oracle, "Phase-II argmin drifted from the scalar oracle");
+    }
+
+    /// Phase II machine assignment: cost all machines, argmin, insert.
+    /// The cost pass runs on the configured kernel — one wavefront
+    /// sweep over the SoA mirror columns (default), or the scalar
+    /// per-machine scan — with bit-identical results: same per-machine
+    /// costs, same strict-`<` lowest-index argmin, same insert position.
+    fn assign(&mut self, job: &Job) -> Assignment {
+        debug_assert_eq!(job.fanout(), self.schedules.len());
+        let now = self.tick_no;
+        self.work.probes +=
+            (self.schedules.len() - self.faults.as_deref().map_or(0, |f| f.n_down)) as u64;
+        let best = match self.kernel {
+            Phase2Kernel::Wavefront => self.wavefront.sweep(
+                job.weight,
+                &job.ept,
+                self.precision,
+                now,
+                &mut self.cost_scratch,
+            ),
+            Phase2Kernel::Scalar => self.scalar_scan(job, now),
+        };
+        #[cfg(feature = "strict-oracle")]
+        self.assert_kernel_matches_scalar_oracle(job, now, best);
         let (machine, cost, position) =
             best.expect("assign() requires at least one non-full machine");
-        let ept_w = match self.faults.as_deref() {
-            Some(f) if f.slow[machine] > 1 => job.ept[machine] * f.slow[machine] as f32,
-            _ => job.ept[machine],
-        };
-        let (j_w, j_eps, j_t) = self.precision.q_job(job.weight, ept_w);
+        // the winner materializes through the previous tick before the
+        // insert (the wavefront sweep is read-only and never synced it;
+        // for the scalar scan this re-sync is a no-op)
+        self.schedules[machine].sync_to(now - 1);
+        self.work.schedule_syncs += 1;
+        let (j_w, j_eps, j_t) = self
+            .precision
+            .q_job(job.weight, self.effective_ept(machine, job));
         let slot = Slot {
             id: job.id,
             weight: j_w,
@@ -508,6 +669,7 @@ impl SosEngine {
         let inserted_at = self.schedules[machine].insert(slot);
         debug_assert_eq!(inserted_at, position, "cost position == insert position");
         debug_assert!(self.schedules[machine].is_properly_ordered());
+        self.mirror_refresh(machine);
         if inserted_at == 0 {
             // the newcomer is the head (fresh schedule or displacement):
             // its release defines the machine's next horizon event

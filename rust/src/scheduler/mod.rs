@@ -11,9 +11,11 @@ mod cost;
 mod drive;
 mod engine;
 mod vschedule;
+mod wavefront;
 
 pub use continuous::ContinuousSos;
 pub use cost::{cost_of, CostBreakdown, FULL_COST};
 pub use drive::{drive_trace, DriveStats, Horizon};
 pub use engine::{Assignment, SosEngine, TickOutcome};
 pub use vschedule::{Slot, VirtualSchedule};
+pub use wavefront::{Phase2Kernel, Phase2Work, Wavefront};

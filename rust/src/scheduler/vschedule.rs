@@ -443,6 +443,23 @@ impl VirtualSchedule {
             .sum()
     }
 
+    /// Live-range views of the memoized threshold sums and their shared
+    /// bias — the refresh source for the wavefront SoA mirror
+    /// ([`crate::scheduler::Wavefront`]), which copies these columns
+    /// verbatim on every structural mutation so its reads stay
+    /// bit-identical to [`Self::threshold_read`]. Empty slices (and a
+    /// zero bias) when memoization is off.
+    pub fn memo_view(&self) -> (&[f32], &[f32], f32) {
+        if !self.memoized {
+            return (&[], &[], 0.0);
+        }
+        (
+            &self.memo_hi[self.start..],
+            &self.memo_lo[self.start..],
+            self.hi_bias,
+        )
+    }
+
     /// Check the ordering invariant (used by tests and debug assertions).
     pub fn is_properly_ordered(&self) -> bool {
         self.slots[self.start..]

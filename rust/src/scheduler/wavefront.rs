@@ -1,0 +1,408 @@
+//! Batch-wavefront SoA cost kernel for Phase-II assignment.
+//!
+//! The tickless core left Phase II as the golden engine's hot path:
+//! [`SosEngine::assign`] walked the park one machine at a time per
+//! arrival, re-touching scattered per-machine [`VirtualSchedule`] state
+//! (a lazy-sync mutation plus a pointer-chased threshold read) for every
+//! candidate. The Stannic microarchitecture gets its per-iteration
+//! latency win by evaluating the whole machine array as one systolic
+//! wavefront (`sim/stannic/pe.rs` models the PE array doing exactly
+//! this), and HTS makes the same argument for parallel-prefix cost
+//! evaluation in hardware task schedulers. [`Wavefront`] is the software
+//! analogue: a struct-of-arrays mirror of every machine's cost-query
+//! state, laid out as contiguous columns so one sweep costs an arrival
+//! against the whole park — in the `baselines/simd.rs` idiom, with
+//! branchless inner loops the compiler can auto-vectorize — without
+//! touching a single `VirtualSchedule` object.
+//!
+//! # Columns
+//!
+//! Rows are machines; each machine owns a `depth`-strided segment of the
+//! slot-attribute columns (index `m * depth + i` for slot `i`):
+//!
+//! * `wspt` — the WSPT boundary keys the position scan runs over;
+//! * `ept` / `weight` / `n` — the attributes the floating datapaths'
+//!   fused rescan accumulates (`rem_hi = ept - n`, `rem_lo = weight -
+//!   n·wspt`, in slot order — bit-identical to
+//!   [`VirtualSchedule::threshold_read`]'s non-memoized pass);
+//! * `memo_hi` / `memo_lo` + per-machine `hi_bias` — the memoized
+//!   threshold sums (fixed-point datapaths), copied verbatim from
+//!   [`VirtualSchedule::memo_view`];
+//! * per-machine scalars: `len`, `full` flags, `synced_at` (head accrual
+//!   offsets), and the `down` / `slow` fault masks.
+//!
+//! # The mirror invariant
+//!
+//! The mirror is updated **on mutation, never per arrival**: the engine
+//! refreshes machine `m`'s row exactly when its schedule structurally
+//! changes — insert (the assignment winner), pop, tail/full eviction on
+//! a down event, and the up event's `skip_to` — and flips the fault
+//! masks on down/up/slow events. Pure lazy syncs (`sync_to`) do *not*
+//! refresh: the row snapshot plus its own `synced_at` stays
+//! value-consistent, because the head's pending accrual is applied at
+//! probe time from the offset column, read-only:
+//!
+//! * floating datapaths: the head's effective `n` is `n + k` (`u32` add,
+//!   exact for every datapath);
+//! * memoized datapaths: `sum_hi` reads `memo_hi[pos-1] - (hi_bias + k)`
+//!   and a `pos == 0` probe reads `memo_lo[0] - k·wspt[head]` — every
+//!   quantity is an exact integer or fixed-point multiple far inside
+//!   f32's exact range (the same argument that makes
+//!   [`VirtualSchedule::sync_to`] bit-equal to `k` unit accrues), so the
+//!   read-time adjustment equals the value a materializing sync would
+//!   have produced, bit for bit.
+//!
+//! # Bit-exactness contract
+//!
+//! [`Wavefront::sweep`] must reproduce the scalar Phase-II loop exactly
+//! on every precision datapath: same per-machine costs (same operation
+//! order), same argmin tie-break (strict `<`, lowest index), same insert
+//! positions. `cost_of` remains the scalar oracle — the engine's
+//! `strict-oracle` feature cross-checks every sweep against it, and
+//! `tests/wavefront.rs` pins wavefront == scalar across precisions,
+//! parks, admission batches and active fault plans.
+//!
+//! [`SosEngine::assign`]: crate::scheduler::SosEngine
+//! [`VirtualSchedule`]: crate::scheduler::VirtualSchedule
+//! [`VirtualSchedule::memo_view`]: crate::scheduler::VirtualSchedule::memo_view
+//! [`VirtualSchedule::sync_to`]: crate::scheduler::VirtualSchedule::sync_to
+//! [`VirtualSchedule::threshold_read`]: crate::scheduler::VirtualSchedule::threshold_read
+
+use crate::faults::inflate_ept;
+use crate::quant::Precision;
+
+use super::cost::FULL_COST;
+use super::vschedule::VirtualSchedule;
+
+/// Which Phase-II cost kernel an engine runs. Fixed at construction
+/// (the mirror is only maintained under `Wavefront`, so switching
+/// mid-run is not supported).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase2Kernel {
+    /// The batched SoA sweep over the [`Wavefront`] columns (default).
+    Wavefront,
+    /// The historical per-machine scatter-gather loop, retained as the
+    /// reference implementation the wavefront is gated against.
+    Scalar,
+}
+
+/// Engine-work counters for Phase II — the measured quantity the
+/// hotpath bench gates the batching win on (wall clock is too noisy to
+/// assert in CI; these are deterministic).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Phase2Work {
+    /// Cost probes evaluated (one per non-down machine per arrival —
+    /// the B×M information floor, identical for both kernels).
+    pub probes: u64,
+    /// `VirtualSchedule` objects touched (lazy-sync mutations) by the
+    /// assignment path. The scalar loop pays one per machine per
+    /// arrival plus the winner's pre-insert sync; the wavefront sweep
+    /// reads only mirror columns and pays the winner's sync alone.
+    pub schedule_syncs: u64,
+    /// Wavefront mirror rows rebuilt (one per structural mutation:
+    /// insert, pop, down-eviction, up-resume).
+    pub row_refreshes: u64,
+    /// Merged admission batches received via `assign_batch`.
+    pub batches: u64,
+}
+
+/// Struct-of-arrays mirror of per-machine cost-query state (see the
+/// module docs for the layout and the consistency invariant).
+#[derive(Debug, Clone)]
+pub struct Wavefront {
+    machines: usize,
+    /// Row stride == schedule depth (slot capacity per machine).
+    stride: usize,
+    /// Live slots per machine (row prefix length).
+    len: Vec<usize>,
+    /// `len == stride` flags, mirrored so the sweep's skip test never
+    /// derives state mid-loop.
+    full: Vec<bool>,
+    // slot-attribute columns, row-major per machine
+    wspt: Vec<f32>,
+    ept: Vec<f32>,
+    weight: Vec<f32>,
+    n: Vec<u32>,
+    // memoized threshold-sum columns (fixed-point datapaths only)
+    memo_hi: Vec<f32>,
+    memo_lo: Vec<f32>,
+    hi_bias: Vec<f32>,
+    /// Head accrual offsets: the owning schedule's `synced_at` at
+    /// snapshot time. A probe at tick `now` applies the outstanding
+    /// `k = (now - 1) - synced_at` cycles read-only.
+    synced_at: Vec<u64>,
+    /// Fault masks (mirrored from the engine's fault layer).
+    down: Vec<bool>,
+    slow: Vec<u32>,
+    /// Memoized threshold reads enabled (fixed-point datapaths); when
+    /// false every probe runs the ordered fused rescan, bit-identical
+    /// to the non-memoized `threshold_read`.
+    memoized: bool,
+}
+
+impl Wavefront {
+    pub fn new(machines: usize, depth: usize, memoized: bool) -> Self {
+        let cells = machines * depth;
+        Wavefront {
+            machines,
+            stride: depth,
+            len: vec![0; machines],
+            full: vec![false; machines],
+            wspt: vec![0.0; cells],
+            ept: vec![0.0; cells],
+            weight: vec![0.0; cells],
+            n: vec![0; cells],
+            memo_hi: if memoized { vec![0.0; cells] } else { Vec::new() },
+            memo_lo: if memoized { vec![0.0; cells] } else { Vec::new() },
+            hi_bias: vec![0.0; machines],
+            synced_at: vec![0; machines],
+            down: vec![false; machines],
+            slow: vec![1; machines],
+            memoized,
+        }
+    }
+
+    /// Rebuild machine `m`'s row from its schedule. Called by the
+    /// engine on every structural mutation (insert / pop / evict /
+    /// skip_to) — O(len), the same order as the mutation itself.
+    pub fn refresh_row(&mut self, m: usize, vs: &VirtualSchedule) {
+        let base = m * self.stride;
+        let slots = vs.slots();
+        self.len[m] = slots.len();
+        self.full[m] = slots.len() == self.stride;
+        self.synced_at[m] = vs.synced_at();
+        for (i, s) in slots.iter().enumerate() {
+            self.wspt[base + i] = s.wspt;
+            self.ept[base + i] = s.ept;
+            self.weight[base + i] = s.weight;
+            self.n[base + i] = s.n;
+        }
+        if self.memoized {
+            let (mhi, mlo, bias) = vs.memo_view();
+            self.memo_hi[base..base + mhi.len()].copy_from_slice(mhi);
+            self.memo_lo[base..base + mlo.len()].copy_from_slice(mlo);
+            self.hi_bias[m] = bias;
+        }
+    }
+
+    /// Flip the down mask for machine `m` (fault layer down/up events).
+    pub fn set_down(&mut self, m: usize, down: bool) {
+        self.down[m] = down;
+    }
+
+    /// Set the straggler inflation factor for machine `m` (1 = nominal).
+    pub fn set_slow(&mut self, m: usize, factor: u32) {
+        self.slow[m] = factor.max(1);
+    }
+
+    /// Threshold read for machine `m` at probe priority `t`, evaluated
+    /// at tick `now` purely from the mirror columns (no schedule
+    /// access): `(sum_hi, sum_lo, position)`, bit-identical to syncing
+    /// the schedule to `now - 1` and calling `threshold_read(t)`.
+    fn threshold_probe(&self, m: usize, t: f32, now: u64) -> (f32, f32, usize) {
+        let base = m * self.stride;
+        let len = self.len[m];
+        debug_assert!(
+            self.synced_at[m] <= now - 1,
+            "mirror row ahead of the probe tick"
+        );
+        let k = (now - 1) - self.synced_at[m];
+        debug_assert!(k <= u32::MAX as u64, "virtual-work jump overflows n");
+        if self.memoized {
+            // Branchless prefix count over the sorted boundary keys —
+            // equals `partition_point(|s| s.wspt >= t)` because the
+            // ordering invariant makes `wspt >= t` a prefix property.
+            // This is the auto-vectorizable inner loop: one contiguous
+            // f32 row, no branches, no data dependence across lanes.
+            let mut pos = 0usize;
+            for &w in &self.wspt[base..base + len] {
+                pos += (w >= t) as usize;
+            }
+            let kf = k as f32;
+            let sum_hi = if pos > 0 {
+                self.memo_hi[base + pos - 1] - (self.hi_bias[m] + kf)
+            } else {
+                0.0
+            };
+            let sum_lo = if pos < len {
+                let v = self.memo_lo[base + pos];
+                // only the pos == 0 suffix contains the head, so only
+                // it carries the outstanding accrual
+                if pos == 0 { v - kf * self.wspt[base] } else { v }
+            } else {
+                0.0
+            };
+            (sum_hi, sum_lo, pos)
+        } else {
+            // Floating datapaths: the ordered fused single pass, term
+            // for term the same accumulation as the scalar rescan (the
+            // f32 summation order is semantically load-bearing), with
+            // the head's effective n adjusted by the exact u32 offset.
+            let mut sum_hi = 0.0f32;
+            let mut sum_lo = 0.0f32;
+            let mut pos = 0usize;
+            for i in 0..len {
+                let idx = base + i;
+                let n_eff = self.n[idx] + if i == 0 { k as u32 } else { 0 };
+                if self.wspt[idx] >= t {
+                    sum_hi += self.ept[idx] - n_eff as f32;
+                    pos += 1;
+                } else {
+                    sum_lo += self.weight[idx] - n_eff as f32 * self.wspt[idx];
+                }
+            }
+            (sum_hi, sum_lo, pos)
+        }
+    }
+
+    /// One Phase-II wavefront pass: cost a job (raw `weight`, raw
+    /// per-machine `ept`) against the whole park at tick `now`, filling
+    /// `costs` (the engine's cost vector; `FULL_COST` for down or full
+    /// machines) and returning the argmin `(machine, cost, position)` —
+    /// strict `<`, lowest index on ties, `None` when every machine is
+    /// unavailable. Straggler inflation and per-machine quantization
+    /// happen per lane, exactly as in the scalar loop; the mirror is
+    /// never mutated (the engine syncs and refreshes only the winner).
+    pub fn sweep(
+        &self,
+        weight: f32,
+        ept: &[f32],
+        precision: Precision,
+        now: u64,
+        costs: &mut [f32],
+    ) -> Option<(usize, f32, usize)> {
+        debug_assert_eq!(ept.len(), self.machines);
+        debug_assert_eq!(costs.len(), self.machines);
+        let mut best: Option<(usize, f32, usize)> = None;
+        for m in 0..self.machines {
+            if self.down[m] || self.full[m] {
+                costs[m] = FULL_COST;
+                continue;
+            }
+            let (j_w, j_eps, j_t) = precision.q_job(weight, inflate_ept(ept[m], self.slow[m]));
+            let (sum_hi, sum_lo, pos) = self.threshold_probe(m, j_t, now);
+            // same expression, same order as CostBreakdown::total()
+            let total = j_w * (j_eps + sum_hi) + j_eps * sum_lo;
+            costs[m] = total;
+            if best.map_or(true, |(_, bc, _)| total < bc) {
+                best = Some((m, total, pos));
+            }
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::fixed_round;
+    use crate::scheduler::vschedule::Slot;
+    use crate::workload::Rng;
+
+    fn slot(id: u64, w: f32, e: f32, fixed: bool) -> Slot {
+        let t = if fixed { fixed_round(w / e, 4, 4) } else { w / e };
+        Slot {
+            id,
+            weight: w,
+            ept: e,
+            wspt: t,
+            alpha_pt: (0.5 * e).ceil() as u32,
+            n: 0,
+        }
+    }
+
+    /// Random interleaved insert/pop/sync drive: the mirror probe must
+    /// stay bit-identical to syncing the schedule and reading it, for
+    /// both datapaths, including rows refreshed long before the probe
+    /// tick (exercising the read-only accrual offsets).
+    #[test]
+    fn probe_matches_synced_threshold_read() {
+        for memoized in [false, true] {
+            let mut rng = Rng::new(99);
+            let depth = 6;
+            let mut vs = VirtualSchedule::with_memoization(depth, memoized);
+            let mut wf = Wavefront::new(1, depth, memoized);
+            let mut id = 1u64;
+            let mut now = 0u64;
+            for step in 0..2000 {
+                now += 1 + rng.below(4); // leave unsynced gaps
+                // pop phase
+                vs.sync_to(now - 1);
+                if vs.head().is_some_and(|h| h.ready()) {
+                    vs.pop_head();
+                    wf.refresh_row(0, &vs);
+                }
+                // occasional insert (the structural refresh)
+                if !vs.is_full() && rng.chance(0.5) {
+                    let w = rng.uniform(1.0, 255.0).round();
+                    let e = rng.uniform(10.0, 255.0).round();
+                    vs.insert(slot(id, w, e, memoized));
+                    wf.refresh_row(0, &vs);
+                    id += 1;
+                }
+                // probe from the mirror WITHOUT syncing a fresh oracle:
+                // clone, sync, read — the scalar path's exact sequence
+                let probe = if memoized {
+                    fixed_round(
+                        rng.uniform(1.0, 255.0).round() / rng.uniform(10.0, 255.0).round(),
+                        4,
+                        4,
+                    )
+                } else {
+                    rng.uniform(1.0, 255.0) / rng.uniform(10.0, 255.0)
+                };
+                let next = now + 1; // a Phase II at tick `next`
+                let got = wf.threshold_probe(0, probe, next);
+                let mut oracle = vs.clone();
+                oracle.sync_to(next - 1);
+                let want = oracle.threshold_read(probe);
+                assert_eq!(got, want, "step {step} memoized={memoized}");
+            }
+        }
+    }
+
+    #[test]
+    fn sweep_skips_down_and_full_lanes_and_breaks_ties_low() {
+        let depth = 2;
+        let mut wf = Wavefront::new(4, depth, true);
+        let mut schedules: Vec<VirtualSchedule> =
+            (0..4).map(|_| VirtualSchedule::with_memoization(depth, true)).collect();
+        // machine 2 full, machine 3 down; 0 and 1 identical -> tie to 0
+        schedules[2].insert(slot(1, 10.0, 20.0, true));
+        schedules[2].insert(slot(2, 10.0, 20.0, true));
+        for (m, vs) in schedules.iter().enumerate() {
+            wf.refresh_row(m, vs);
+        }
+        wf.set_down(3, true);
+        let mut costs = vec![0.0; 4];
+        let best = wf
+            .sweep(8.0, &[40.0, 40.0, 40.0, 40.0], Precision::Int8, 1, &mut costs)
+            .expect("machines 0/1 are free");
+        assert_eq!(best.0, 0, "tie goes to the lowest machine index");
+        assert_eq!(costs[2], FULL_COST);
+        assert_eq!(costs[3], FULL_COST);
+        assert_eq!(costs[0], costs[1]);
+    }
+
+    #[test]
+    fn sweep_applies_straggler_inflation_per_lane() {
+        let mut wf = Wavefront::new(2, 4, true);
+        let schedules: Vec<VirtualSchedule> =
+            (0..2).map(|_| VirtualSchedule::with_memoization(4, true)).collect();
+        for (m, vs) in schedules.iter().enumerate() {
+            wf.refresh_row(m, vs);
+        }
+        wf.set_slow(0, 4);
+        let mut costs = vec![0.0; 2];
+        // empty park: cost = W * eps; slow lane 0 sees eps * 4
+        let best = wf
+            .sweep(2.0, &[10.0, 30.0], Precision::Fp32, 1, &mut costs)
+            .unwrap();
+        assert_eq!(costs[0], 80.0, "lane 0 quoted the inflated EPT");
+        assert_eq!(costs[1], 60.0);
+        assert_eq!(best.0, 1);
+        wf.set_slow(0, 1);
+        wf.sweep(2.0, &[10.0, 30.0], Precision::Fp32, 1, &mut costs);
+        assert_eq!(costs[0], 20.0, "slow-end restores the nominal rate");
+    }
+}
