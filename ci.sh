@@ -21,6 +21,13 @@
 #            shard vs four — completions must match and the 4-shard run
 #            must drain in fewer virtual ticks (deterministic, so the
 #            gate cannot flake; wall jobs/sec is printed for the trail).
+#   portfolio : `serve --engine portfolio` on the rotating standard mix
+#            recorded twice and self-diffed — the meta-engine's window
+#            scores and switch sequence are pure functions of the merged
+#            arrival order, so the A/B diff must be parity-clean down to
+#            the switch-log digest, and the rotating mix must force at
+#            least one live-policy switch (grepped from the serve
+#            telemetry).
 #   perf   : hotpath bench in --bench-smoke mode (self-gating on
 #            deterministic engine-work counters: >=5x tickless iteration
 #            reduction, >=machines/2 wavefront schedule-touch reduction;
@@ -155,6 +162,27 @@ if cargo run --release -- serve diff /tmp/SERVE_scale_k1.json /tmp/SERVE_scale_k
   exit 1
 fi
 echo "sharded scaling OK (4 shards drain the burst in fewer virtual ticks; artifacts never pair)"
+
+echo "== portfolio smoke: policy racing on the rotating mix, A/B self-diff parity-clean =="
+# Three rotating arrival sources drift the workload from steady through
+# bursty to heavy-tailed — the regime change the portfolio meta-engine
+# exists to catch. The switch sequence is a pure function of the merged
+# virtual-time arrival order, so two recordings must agree on every
+# parity cell including the portfolio one (windows, wins, live policy,
+# switch-log digest); the grep below additionally pins that the rotating
+# mix forced at least one live-policy switch.
+cargo run --release -- serve --engine portfolio --sources 3 --jobs 150 \
+  --record /tmp/SERVE_portfolio_a.json --label ci-portfolio \
+  | tee /tmp/stannic_serve_portfolio.txt
+grep -E "jobs completed    : 150" /tmp/stannic_serve_portfolio.txt
+grep -E "[1-9][0-9]* policy switches" /tmp/stannic_serve_portfolio.txt
+grep -E "switch digest" /tmp/stannic_serve_portfolio.txt
+cargo run --release -- serve --engine portfolio --sources 3 --jobs 150 \
+  --record /tmp/SERVE_portfolio_b.json --label ci-portfolio2 > /dev/null
+cargo run --release -- serve diff /tmp/SERVE_portfolio_a.json /tmp/SERVE_portfolio_b.json \
+  | tee /tmp/stannic_serve_portfolio_diff.txt
+grep -E ", 0 parity breaks," /tmp/stannic_serve_portfolio_diff.txt
+echo "portfolio A/B self-diff OK (zero parity breaks incl. the switch-log digest cell)"
 
 if [ -f SERVE_seed.json ]; then
   echo "== perf: diff serve smoke against committed SERVE_seed.json =="

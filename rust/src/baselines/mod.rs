@@ -12,6 +12,16 @@
 //!   recomputation) that must produce schedules identical to the golden
 //!   engine while being much slower (it is the ST column of Fig. 16b).
 //! * [`simd`] — the AVX-style lane-vectorised SOS of Fig. 17.
+//!
+//! These schedulers are no longer report fodder only: the competitive
+//! portfolio meta-engine ([`crate::engine::portfolio`]) races
+//! [`GreedyScheduler`], [`RoundRobin`], [`WsGreedy`] and
+//! [`WsRoundRobin`] against the golden engine as live candidates,
+//! shadow-replaying each decision window's arrivals through every
+//! policy and switching the serving policy to the window winner. Any
+//! behavioural change here therefore shifts portfolio switch decisions
+//! — the determinism gates in `tests/portfolio.rs` and the ci.sh
+//! portfolio A/B smoke will surface it as a switch-log digest change.
 
 mod greedy;
 mod rr;

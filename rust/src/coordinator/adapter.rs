@@ -14,6 +14,7 @@
 use crate::baselines::{SimdSos, SoscEngine};
 use crate::bail;
 use crate::core::Job;
+use crate::engine::portfolio::PortfolioTelemetry;
 use crate::error::Result;
 use crate::faults::{FaultPlan, FaultStats};
 use crate::runtime::XlaSosEngine;
@@ -83,6 +84,14 @@ pub trait EngineAdapter {
     /// `serve --shards K>1` refuses any engine that returns `None`, so
     /// a shard request can never silently run single-domain.
     fn shard_stats(&self) -> Option<ShardTelemetry> {
+        None
+    }
+    /// Portfolio meta-engine telemetry (window wins, switch log,
+    /// shadow-replay work counters). `Some` only for
+    /// [`crate::engine::portfolio::PortfolioEngine`]; plain engines
+    /// return `None` so their serve reports and records stay
+    /// byte-identical.
+    fn portfolio_stats(&self) -> Option<PortfolioTelemetry> {
         None
     }
 }

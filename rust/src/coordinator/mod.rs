@@ -45,6 +45,15 @@
 //!   is bit-identical to the unsharded pipeline; per-shard telemetry
 //!   (completions, schedule digests, rebalance counts, imbalance CV)
 //!   rides on [`ServeReport`] and, as parity cells, on the artifact.
+//! * **Policy racing** ([`crate::engine::portfolio`]): `serve --engine
+//!   portfolio` serves through the competitive meta-engine, which
+//!   shadow-replays each 64-tick window's merged arrivals through the
+//!   golden engine and the baseline schedulers and switches the live
+//!   policy to the window winner at boundaries only. Its telemetry
+//!   (windows, wins, switch log, shadow-replay work) rides on
+//!   [`ServeReport`] and, compat-gated, on [`ServeRecord`] — the
+//!   switch-log digest is a parity cell, so two portfolio runs diff
+//!   down to the exact switch sequence.
 
 mod adapter;
 pub mod pcie;

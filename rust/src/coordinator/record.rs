@@ -26,6 +26,13 @@
 //! pre-shard recordings, and the extra parity cells guarantee a sharded
 //! recording can never silently gate-pass against an unsharded
 //! baseline.
+//!
+//! Portfolio runs (`serve --engine portfolio`) follow the same compat
+//! discipline with a third gated block: decision-window count, switch
+//! count, per-candidate win table, and the FNV-1a switch-log digest are
+//! identity (parity-gated down to the exact switch *sequence*), while
+//! the shadow-replay tick counter is a deterministic perf cell. Plain
+//! engine recordings carry none of it and stay byte-identical.
 
 use std::fmt::Write as _;
 use std::time::{SystemTime, UNIX_EPOCH};
@@ -140,6 +147,29 @@ pub struct ServeRecord {
     /// (0 = perfectly balanced). Deterministic, parity-gated with fixed
     /// 4-decimal rendering.
     pub shard_imbalance_cv: f64,
+    /// Portfolio block ([`crate::engine::portfolio::PortfolioTelemetry`]);
+    /// `window_ticks` doubles as the presence marker — 0 for every plain
+    /// engine run, which keeps plain artifacts byte-identical to
+    /// pre-portfolio recordings. Folded into the digest and the parity
+    /// cells only when present, so a portfolio recording can never
+    /// silently pair with a plain one.
+    pub portfolio_window_ticks: u64,
+    /// Decision windows evaluated (windows with at least one arrival).
+    pub portfolio_windows: u64,
+    /// Live-policy switches performed.
+    pub portfolio_switches: u64,
+    /// Policy live at the end of the run.
+    pub portfolio_live: String,
+    /// Per-candidate window wins, in registry order.
+    pub portfolio_wins: Vec<(String, u64)>,
+    /// FNV-1a digest of the canonical switch log
+    /// ([`crate::engine::portfolio::PortfolioTelemetry::switch_digest`]).
+    pub portfolio_switch_digest: String,
+    /// Virtual ticks simulated across all shadow replays — deterministic
+    /// engine work, perf-gated (never wall clock).
+    pub portfolio_replay_ticks: u64,
+    /// Jobs fed to shadow candidates across all replays.
+    pub portfolio_replay_submissions: u64,
 }
 
 impl ServeRecord {
@@ -212,6 +242,21 @@ impl ServeRecord {
             rebalance_moves: r.shards.as_ref().map_or(0, |t| t.rebalance_moves),
             rebalance_events: r.shards.as_ref().map_or(0, |t| t.rebalance_events),
             shard_imbalance_cv: r.shards.as_ref().map_or(0.0, |t| t.imbalance_cv),
+            // only the portfolio meta-engine reports telemetry; plain
+            // engines leave the whole block zero/empty (unrendered)
+            portfolio_window_ticks: r.portfolio.as_ref().map_or(0, |p| p.window_ticks),
+            portfolio_windows: r.portfolio.as_ref().map_or(0, |p| p.windows),
+            portfolio_switches: r.portfolio.as_ref().map_or(0, |p| p.switches),
+            portfolio_live: r.portfolio.as_ref().map_or_else(String::new, |p| p.live.to_string()),
+            portfolio_wins: r.portfolio.as_ref().map_or_else(Vec::new, |p| {
+                p.wins.iter().map(|&(name, w)| (name.to_string(), w)).collect()
+            }),
+            portfolio_switch_digest: r
+                .portfolio
+                .as_ref()
+                .map_or_else(String::new, |p| p.switch_digest()),
+            portfolio_replay_ticks: r.portfolio.as_ref().map_or(0, |p| p.replay_ticks),
+            portfolio_replay_submissions: r.portfolio.as_ref().map_or(0, |p| p.replay_submissions),
         };
         rec.digest = rec.compute_digest();
         rec
@@ -269,6 +314,24 @@ impl ServeRecord {
                 "|rb:{}/{}",
                 self.rebalance_moves, self.rebalance_events
             );
+        }
+        // the portfolio decision trail (window/switch counts, final live
+        // policy, switch-sequence digest, win table) is identity — only
+        // for portfolio runs, so plain-engine digests are unchanged (and
+        // a portfolio record can never collide with a plain one)
+        if self.portfolio_window_ticks > 0 {
+            let _ = write!(
+                canon,
+                "|p:{}:{}:{}:{}:{}",
+                self.portfolio_window_ticks,
+                self.portfolio_windows,
+                self.portfolio_switches,
+                self.portfolio_live,
+                self.portfolio_switch_digest
+            );
+            for (name, wins) in &self.portfolio_wins {
+                let _ = write!(canon, "|pw:{name}={wins}");
+            }
         }
         fnv1a64_hex(canon.as_bytes())
     }
@@ -392,6 +455,30 @@ impl Artifact for ServeRecord {
             fields.push(("rebalance_events", num(self.rebalance_events as f64)));
             fields.push(("shard_imbalance_cv", num(self.shard_imbalance_cv)));
         }
+        // only portfolio runs carry the portfolio block (same compat
+        // pattern as the fault and shard blocks above)
+        if self.portfolio_window_ticks > 0 {
+            fields.push(("portfolio_window_ticks", num(self.portfolio_window_ticks as f64)));
+            fields.push(("portfolio_windows", num(self.portfolio_windows as f64)));
+            fields.push(("portfolio_switches", num(self.portfolio_switches as f64)));
+            fields.push(("portfolio_live", s(self.portfolio_live.clone())));
+            fields.push((
+                "portfolio_wins",
+                arr(self
+                    .portfolio_wins
+                    .iter()
+                    .map(|(name, wins)| {
+                        obj(vec![("name", s(name.clone())), ("wins", num(*wins as f64))])
+                    })
+                    .collect()),
+            ));
+            fields.push(("portfolio_switch_digest", s(self.portfolio_switch_digest.clone())));
+            fields.push(("portfolio_replay_ticks", num(self.portfolio_replay_ticks as f64)));
+            fields.push((
+                "portfolio_replay_submissions",
+                num(self.portfolio_replay_submissions as f64),
+            ));
+        }
         obj(fields)
     }
 
@@ -471,6 +558,31 @@ impl Artifact for ServeRecord {
             rebalance_moves: opt_uint(j, "rebalance_moves")?,
             rebalance_events: opt_uint(j, "rebalance_events")?,
             shard_imbalance_cv: opt_f64(j, "shard_imbalance_cv")?,
+            // absent on plain-engine artifacts; present fields are still
+            // strictly validated
+            portfolio_window_ticks: opt_uint(j, "portfolio_window_ticks")?,
+            portfolio_windows: opt_uint(j, "portfolio_windows")?,
+            portfolio_switches: opt_uint(j, "portfolio_switches")?,
+            portfolio_live: if j.get("portfolio_live").is_some() {
+                get_str(j, "portfolio_live")?
+            } else {
+                String::new()
+            },
+            portfolio_wins: if j.get("portfolio_wins").is_some() {
+                get_arr(j, "portfolio_wins")?
+                    .iter()
+                    .map(|w| Ok((get_str(w, "name")?, get_uint(w, "wins")?)))
+                    .collect::<Result<Vec<(String, u64)>>>()?
+            } else {
+                Vec::new()
+            },
+            portfolio_switch_digest: if j.get("portfolio_switch_digest").is_some() {
+                get_str(j, "portfolio_switch_digest")?
+            } else {
+                String::new()
+            },
+            portfolio_replay_ticks: opt_uint(j, "portfolio_replay_ticks")?,
+            portfolio_replay_submissions: opt_uint(j, "portfolio_replay_submissions")?,
         };
         // Pre-digest v1 artifacts (recorded before the artifact-layer
         // redesign) lack the field; recompute so they stay loadable and
@@ -568,6 +680,35 @@ impl Diffable for ServeRecord {
                 format!("{:.4}", self.shard_imbalance_cv),
             ));
         }
+        // portfolio runs add a parity cell pinning the decision trail —
+        // window/switch counts, final live policy, switch-sequence
+        // digest, per-candidate win table — plus a deterministic
+        // replay-overhead perf cell. Both are unmatched against any
+        // plain-engine baseline, so a portfolio record never silently
+        // gate-passes against one
+        if self.portfolio_window_ticks > 0 {
+            let wins = self
+                .portfolio_wins
+                .iter()
+                .map(|(name, w)| format!("{name}={w}"))
+                .collect::<Vec<String>>()
+                .join(",");
+            cells.push(PerfCell::parity(
+                format!("portfolio[w{}]", self.portfolio_window_ticks),
+                format!(
+                    "{}|{}|{}|{}|{}",
+                    self.portfolio_windows,
+                    self.portfolio_switches,
+                    self.portfolio_live,
+                    self.portfolio_switch_digest,
+                    wins
+                ),
+            ));
+            cells.push(PerfCell::lower(
+                "portfolio_replay_ticks",
+                self.portfolio_replay_ticks.max(1) as f64,
+            ));
+        }
         cells
     }
 }
@@ -618,6 +759,61 @@ mod tests {
         )
         .unwrap();
         ServeRecord::from_report("test", &report)
+    }
+
+    fn portfolio_record() -> ServeRecord {
+        let report = serve_sources(
+            EngineId::Portfolio.build(5, 10, 0.5, Precision::Int8).unwrap(),
+            ArrivalSource::standard_mix(&WorkloadSpec::default(), 5, 150, 42, 3),
+            &ServeOpts::new().with_batch(3),
+        )
+        .unwrap();
+        ServeRecord::from_report("test", &report)
+    }
+
+    #[test]
+    fn portfolio_record_round_trips_and_self_diffs_clean() {
+        let rec = portfolio_record();
+        assert_eq!(
+            rec.portfolio_window_ticks,
+            crate::engine::portfolio::WINDOW_TICKS,
+            "window length doubles as the presence marker"
+        );
+        assert!(rec.portfolio_windows >= 1, "rotating mix evaluates windows");
+        assert_eq!(rec.portfolio_wins.len(), 5, "one win row per candidate");
+        assert_eq!(
+            rec.portfolio_wins.iter().map(|&(_, w)| w).sum::<u64>(),
+            rec.portfolio_windows,
+            "every evaluated window has exactly one winner"
+        );
+        assert!(!rec.portfolio_switch_digest.is_empty());
+        assert!(rec.portfolio_replay_ticks > 0, "replay work is measured");
+        let back = ServeRecord::parse(&rec.render()).expect("portfolio artifact parses");
+        assert_eq!(rec, back);
+        let report = diff_records(&rec, &rec, &DiffOpts::default());
+        assert!(report.ok(), "{}", report.render());
+        assert_eq!(report.parity_breaks(), 0);
+        assert_eq!(
+            report.cells.len(),
+            10,
+            "8 standard + portfolio parity + replay perf cells"
+        );
+    }
+
+    #[test]
+    fn portfolio_and_plain_records_never_pair_silently() {
+        let clean = small_record();
+        assert!(
+            !clean.render().contains("portfolio"),
+            "plain artifact carries no portfolio block"
+        );
+        let portfolio = portfolio_record();
+        assert_ne!(clean.digest, portfolio.digest, "the decision trail is identity");
+        let report = diff_records(&clean, &portfolio, &DiffOpts::default());
+        assert!(
+            !report.ok(),
+            "a portfolio run must never gate-pass against a plain baseline"
+        );
     }
 
     #[test]

@@ -60,6 +60,7 @@ impl Hasher for IdHasher {
 type JobMap = std::collections::HashMap<u64, Job, BuildHasherDefault<IdHasher>>;
 
 use crate::core::{Job, MachineId, MachinePark};
+use crate::engine::portfolio::PortfolioTelemetry;
 use crate::error::Result;
 use crate::faults::{FaultSpec, FaultStats};
 use crate::metrics::{Histogram, MetricSet, ScheduleMetrics};
@@ -241,6 +242,56 @@ pub struct ServeReport {
     /// with more than one shard (`None` for single-domain runs — keeps
     /// unsharded reports and artifacts byte-stable).
     pub shards: Option<ShardTelemetry>,
+    /// Portfolio meta-engine telemetry (window wins, switch log,
+    /// shadow-replay work counters). `None` for plain engines — keeps
+    /// non-portfolio reports and artifacts byte-stable.
+    pub portfolio: Option<PortfolioTelemetry>,
+}
+
+impl ServeReport {
+    /// The `serve --json` payload. The gated blocks follow the record's
+    /// compat discipline: fault, shard, and portfolio keys appear only
+    /// when the run carried them, so a clean plain-engine summary is
+    /// byte-identical to pre-feature builds (pinned by tests here).
+    pub fn json_summary(&self) -> crate::jsonio::Json {
+        use crate::jsonio::{arr, num, obj, s};
+        let m = &self.metrics;
+        let mut fields = vec![
+            ("engine", s(self.engine)),
+            ("completed", num(self.completions.len() as f64)),
+            ("ticks", num(self.ticks as f64)),
+            ("avg_latency", num(m.avg_latency)),
+            ("fairness", num(m.fairness)),
+            ("load_cv", num(m.load_balance_cv)),
+            ("throughput", num(m.throughput)),
+            (
+                "jobs_per_machine",
+                arr(m.jobs_per_machine.iter().map(|&c| num(c as f64)).collect()),
+            ),
+            ("pcie_us", num(self.pcie.total_ns / 1000.0)),
+            ("accel_cycles", num(self.accel_cycles as f64)),
+            ("sources", num(self.sources.len() as f64)),
+        ];
+        if let Some(f) = self.faults.as_ref() {
+            fields.push(("fault", s(self.fault_key.clone())));
+            fields.push(("fault_injected", num(f.injected_jobs as f64)));
+            fields.push(("fault_evicted", num(f.evicted_jobs as f64)));
+            fields.push(("fault_dropped", num(f.dropped_arrivals as f64)));
+        }
+        if let Some(t) = self.shards.as_ref() {
+            fields.push(("shards", num(t.shards() as f64)));
+            fields.push(("rebalance_moves", num(t.rebalance_moves as f64)));
+            fields.push(("shard_imbalance_cv", num(t.imbalance_cv)));
+        }
+        if let Some(p) = self.portfolio.as_ref() {
+            fields.push(("portfolio_windows", num(p.windows as f64)));
+            fields.push(("portfolio_switches", num(p.switches as f64)));
+            fields.push(("portfolio_live", s(p.live)));
+            fields.push(("portfolio_switch_digest", s(p.switch_digest())));
+            fields.push(("portfolio_replay_ticks", num(p.replay_ticks as f64)));
+        }
+        obj(fields)
+    }
 }
 
 /// Coordinator options.
@@ -707,6 +758,7 @@ pub fn serve_sources(
         // they report (and record) as unsharded — telemetry surfaces
         // only when there is more than one domain to tell apart.
         let shards = engine.shard_stats().filter(|t| t.shards() > 1);
+        let portfolio = engine.portfolio_stats();
         Ok(ServeReport {
             engine: engine.label(),
             metrics: metrics.finish(),
@@ -723,6 +775,7 @@ pub fn serve_sources(
             fault_key,
             faults,
             shards,
+            portfolio,
         })
     })
 }
@@ -1017,6 +1070,113 @@ mod tests {
         };
         assert!(run(false).shards.is_none());
         assert!(run(true).shards.is_none(), "K = 1 reports as unsharded");
+    }
+
+    #[test]
+    fn portfolio_serve_drains_reports_telemetry_and_switches() {
+        // The rotating standard mix (steady + bursty + heavy-tailed)
+        // is exactly the drifting arrival regime the portfolio exists
+        // for: at least one loaded window must hand the win to a
+        // non-SOS candidate.
+        let r = serve_sources(
+            EngineId::Portfolio.build(5, 10, 0.5, Precision::Int8).unwrap(),
+            ArrivalSource::standard_mix(&WorkloadSpec::default(), 5, 150, 42, 3),
+            &ServeOpts::default(),
+        )
+        .unwrap();
+        assert_eq!(r.engine, "portfolio");
+        assert_eq!(r.completions.len(), 150);
+        let t = r.portfolio.expect("portfolio run reports telemetry");
+        assert!(t.windows >= 1, "loaded run must evaluate windows");
+        assert!(t.switches >= 1, "rotating mix must trigger a policy switch");
+        assert_eq!(t.wins.iter().map(|(_, w)| *w).sum::<u64>(), t.windows);
+        assert_eq!(t.switch_log.len() as u64, t.switches);
+        assert!(t.replay_ticks > 0);
+    }
+
+    #[test]
+    fn portfolio_serve_is_queue_depth_invariant() {
+        let run = |depth: usize| {
+            serve_sources(
+                EngineId::Portfolio.build(5, 10, 0.5, Precision::Int8).unwrap(),
+                ArrivalSource::standard_mix(&WorkloadSpec::default(), 5, 120, 7, 2),
+                &ServeOpts::new().with_queue_depth(depth),
+            )
+            .unwrap()
+        };
+        let a = run(2);
+        let b = run(256);
+        assert_eq!(a.completions, b.completions);
+        assert_eq!(a.ticks, b.ticks);
+        let (ta, tb) = (a.portfolio.unwrap(), b.portfolio.unwrap());
+        assert_eq!(ta, tb, "switch sequence is interleaving-independent");
+        assert_eq!(ta.switch_digest(), tb.switch_digest());
+    }
+
+    #[test]
+    fn plain_engine_reports_carry_no_portfolio_telemetry() {
+        let r = run(EngineId::Sos, 60, 4);
+        assert!(r.portfolio.is_none());
+    }
+
+    #[test]
+    fn json_summary_of_a_clean_run_carries_no_gated_blocks() {
+        let r = run(EngineId::Sos, 60, 4);
+        let text = r.json_summary().to_string();
+        let j = crate::jsonio::Json::parse(&text).expect("summary parses");
+        assert!(j.get("engine").is_some());
+        assert!(j.get("completed").is_some());
+        for gated in [
+            "fault",
+            "fault_injected",
+            "shards",
+            "rebalance_moves",
+            "portfolio_windows",
+            "portfolio_switch_digest",
+        ] {
+            assert!(
+                j.get(gated).is_none(),
+                "clean summary must not carry gated key {gated}: {text}"
+            );
+        }
+        // the clean payload is byte-stable: re-running the same scenario
+        // renders the identical string (no timing field leaks in)
+        assert_eq!(text, run(EngineId::Sos, 60, 4).json_summary().to_string());
+    }
+
+    #[test]
+    fn json_summary_carries_fault_and_portfolio_blocks_when_present() {
+        let faulted = {
+            let park = MachinePark::paper_m1_m5();
+            let trace = generate_trace(&WorkloadSpec::default(), &park, 120, 11);
+            let engine = EngineId::Sos.build(5, 10, 0.5, Precision::Int8).unwrap();
+            let opts =
+                ServeOpts::new().with_faults(FaultSpec::parse("down=1@30+20,seed=3").unwrap());
+            serve(engine, &trace, &opts).unwrap()
+        };
+        let j = crate::jsonio::Json::parse(&faulted.json_summary().to_string()).unwrap();
+        assert!(j.get("fault").is_some(), "faulted summary names the spec");
+        assert!(j.get("fault_evicted").is_some());
+        assert!(j.get("portfolio_windows").is_none());
+
+        let portfolio = serve_sources(
+            EngineId::Portfolio.build(5, 10, 0.5, Precision::Int8).unwrap(),
+            ArrivalSource::standard_mix(&WorkloadSpec::default(), 5, 120, 7, 2),
+            &ServeOpts::default(),
+        )
+        .unwrap();
+        let j = crate::jsonio::Json::parse(&portfolio.json_summary().to_string()).unwrap();
+        for key in [
+            "portfolio_windows",
+            "portfolio_switches",
+            "portfolio_live",
+            "portfolio_switch_digest",
+            "portfolio_replay_ticks",
+        ] {
+            assert!(j.get(key).is_some(), "portfolio summary must carry {key}");
+        }
+        assert!(j.get("fault").is_none());
+        assert!(j.get("shards").is_none());
     }
 
     #[test]

@@ -22,6 +22,8 @@
 //!   every parse error and the CLI flag help, so the accepted-name list
 //!   can never drift from the parser again.
 
+pub mod portfolio;
+
 use crate::baselines::{SimdSos, SoscEngine};
 use crate::coordinator::{EngineAdapter, ShardedEngine};
 use crate::err;
@@ -31,6 +33,8 @@ use crate::quant::Precision;
 use crate::runtime::{ArtifactRegistry, CostImpl, XlaSosEngine};
 use crate::scheduler::SosEngine;
 use crate::sim::{hercules::HerculesSim, stannic::StannicSim};
+
+use portfolio::PortfolioEngine;
 
 /// Identifier of one scheduling backend.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -45,30 +49,49 @@ pub enum EngineId {
     StannicSim,
     /// Cycle-accurate Hercules simulator (alias `hercules`).
     HerculesSim,
+    /// Competitive portfolio meta-engine: races the golden SOS engine
+    /// against the baseline schedulers in shadow replays and switches
+    /// the live policy at window boundaries ([`portfolio`]).
+    Portfolio,
     /// XLA/PJRT-offloaded cost engine (requires compiled artifacts).
     Xla,
 }
 
 impl EngineId {
     /// Every backend, including the artifact-gated XLA engine.
-    pub const ALL: [EngineId; 6] = [
+    pub const ALL: [EngineId; 7] = [
         EngineId::Sos,
         EngineId::Sosc,
         EngineId::Simd,
         EngineId::StannicSim,
         EngineId::HerculesSim,
+        EngineId::Portfolio,
         EngineId::Xla,
     ];
 
     /// The artifact-free backends — what `--engines all` selects and
     /// what the sweep grid fans across (XLA needs a PJRT runtime that
-    /// does not exist offline).
+    /// does not exist offline). The portfolio meta-engine is also
+    /// excluded on purpose: it *wraps* these candidates rather than
+    /// reimplementing SOS, its schedules intentionally diverge from
+    /// the cross-engine parity group, and keeping it out of `all`
+    /// keeps historical sweep/serve artifacts byte-identical — name it
+    /// explicitly (`--engine portfolio`) to race the policies.
     pub const SOFTWARE: [EngineId; 5] = [
         EngineId::Sos,
         EngineId::Sosc,
         EngineId::Simd,
         EngineId::StannicSim,
         EngineId::HerculesSim,
+    ];
+
+    /// Every documented alias and the canonical name it maps to —
+    /// [`EngineId::parse`] accepts these; the round-trip test pins the
+    /// table against the parser so neither can drift.
+    pub const ALIASES: [(&str, EngineId); 3] = [
+        ("native", EngineId::Sos),
+        ("stannic", EngineId::StannicSim),
+        ("hercules", EngineId::HerculesSim),
     ];
 
     /// The one accepted-names string: interpolated into every parse
@@ -78,7 +101,7 @@ impl EngineId {
     /// the call site (see the `--engines` help) rather than here, so
     /// single-engine errors never advertise a spelling they reject.
     pub const USAGE: &'static str =
-        "sos(=native)|sosc|simd|stannic-sim(=stannic)|hercules-sim(=hercules)|xla";
+        "sos(=native)|sosc|simd|stannic-sim(=stannic)|hercules-sim(=hercules)|portfolio|xla";
 
     /// Canonical name — the spelling used in CLI output, sweep record
     /// keys, and `RunConfig` JSON.
@@ -89,6 +112,7 @@ impl EngineId {
             EngineId::Simd => "simd",
             EngineId::StannicSim => "stannic-sim",
             EngineId::HerculesSim => "hercules-sim",
+            EngineId::Portfolio => "portfolio",
             EngineId::Xla => "xla",
         }
     }
@@ -101,6 +125,7 @@ impl EngineId {
             "simd" => Ok(EngineId::Simd),
             "stannic" | "stannic-sim" => Ok(EngineId::StannicSim),
             "hercules" | "hercules-sim" => Ok(EngineId::HerculesSim),
+            "portfolio" => Ok(EngineId::Portfolio),
             "xla" => Ok(EngineId::Xla),
             other => Err(err!(
                 "unknown engine '{other}' (expected {})",
@@ -141,6 +166,9 @@ impl EngineId {
             EngineId::Simd => Box::new(SimdSos::new(machines, depth, alpha, precision)),
             EngineId::StannicSim => Box::new(StannicSim::new(machines, depth, alpha, precision)),
             EngineId::HerculesSim => Box::new(HerculesSim::new(machines, depth, alpha, precision)),
+            EngineId::Portfolio => {
+                Box::new(PortfolioEngine::new(machines, depth, alpha, precision))
+            }
             EngineId::Xla => {
                 let reg = ArtifactRegistry::open_default()?;
                 Box::new(XlaSosEngine::new(
@@ -207,6 +235,74 @@ mod tests {
         assert_eq!(EngineId::parse("hercules").unwrap(), EngineId::HerculesSim);
     }
 
+    /// The anti-drift gate: every canonical name and every documented
+    /// alias must parse back to its variant, and every canonical name
+    /// must appear verbatim in [`EngineId::USAGE`] — so registering a
+    /// new engine (like `portfolio`) can never leave the help text or
+    /// the parser stale. Whitespace robustness is exercised alongside,
+    /// since `parse` trims and `parse_list` splits on commas.
+    #[test]
+    fn registry_names_round_trip_and_usage_stays_complete() {
+        crate::testing::property("engine-name-round-trip", 64, |rng| {
+            for id in EngineId::ALL {
+                crate::testing::check(
+                    EngineId::parse(id.name()) == Ok(id),
+                    "canonical name parses back to its variant",
+                )?;
+                crate::testing::check(
+                    EngineId::USAGE.contains(id.name()),
+                    "canonical name appears verbatim in USAGE",
+                )?;
+                let padded = format!("  {}\t", id.name());
+                crate::testing::check(
+                    EngineId::parse(&padded) == Ok(id),
+                    "parse trims surrounding whitespace",
+                )?;
+            }
+            for (alias, id) in EngineId::ALIASES {
+                crate::testing::check(
+                    EngineId::parse(alias) == Ok(id),
+                    "documented alias parses to its variant",
+                )?;
+                crate::testing::check(
+                    EngineId::USAGE.contains(alias),
+                    "documented alias appears verbatim in USAGE",
+                )?;
+            }
+            // A random 2-engine list drawn from ALL round-trips too.
+            let a = EngineId::ALL[rng.range(0, EngineId::ALL.len() - 1)];
+            let b = EngineId::ALL[rng.range(0, EngineId::ALL.len() - 1)];
+            let list = format!("{}, {}", a.name(), b.name());
+            crate::testing::check(
+                EngineId::parse_list(&list) == Ok(vec![a, b]),
+                "comma-separated canonical names parse as a list",
+            )?;
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn portfolio_is_registered_software_and_builds() {
+        assert_eq!(EngineId::Portfolio.name(), "portfolio");
+        assert_eq!(EngineId::parse("portfolio").unwrap(), EngineId::Portfolio);
+        assert!(EngineId::Portfolio.is_software());
+        assert!(
+            !EngineId::SOFTWARE.contains(&EngineId::Portfolio),
+            "portfolio must stay out of `all` so historical grids/artifacts are unchanged"
+        );
+        let mut e = EngineId::Portfolio.build(3, 4, 0.5, Precision::Int8).unwrap();
+        assert!(e.is_idle());
+        assert_eq!(e.label(), "portfolio");
+        assert!(e.portfolio_stats().is_some(), "portfolio telemetry surfaced");
+        assert!(
+            e.install_faults(
+                crate::faults::FaultSpec::parse("down=0@5+2").unwrap().plan(3).unwrap()
+            )
+            .is_err(),
+            "portfolio refuses fault plans like every non-golden engine"
+        );
+    }
+
     #[test]
     fn parse_error_carries_the_usage_string() {
         let err = EngineId::parse("warp-drive").unwrap_err().to_string();
@@ -250,7 +346,13 @@ mod tests {
         assert!(e.is_idle());
         assert_eq!(e.label(), "sos");
         assert_eq!(e.shard_stats().unwrap().shards(), 4);
-        for id in [EngineId::Sosc, EngineId::Simd, EngineId::StannicSim, EngineId::HerculesSim] {
+        for id in [
+            EngineId::Sosc,
+            EngineId::Simd,
+            EngineId::StannicSim,
+            EngineId::HerculesSim,
+            EngineId::Portfolio,
+        ] {
             let err = id.build_sharded(2, 10, 4, 0.5, Precision::Int8).unwrap_err();
             assert!(err.to_string().contains("does not support sharding"), "{}", id.name());
         }

@@ -21,6 +21,7 @@
 //! | clause          | meaning                                                        |
 //! |-----------------|----------------------------------------------------------------|
 //! | `down=M@T+D`    | machine `M` goes down at tick `T`, back up at `T+D`            |
+//! | `down=M..N@T+D` | rack-scale correlated failure: machines `M..=N` down together  |
 //! | `slow=M@T+DxF`  | machine `M` straggles ×`F` for arrivals assigned in `[T, T+D)` |
 //! | `storm=K@T`     | `K` correlated synthetic jobs injected at tick `T`             |
 //! | `drop=S@T`      | arrival source `S` drops every event with tick ≥ `T` (serve)   |
@@ -72,6 +73,15 @@ pub enum DownPolicy {
 #[derive(Debug, Clone, PartialEq)]
 pub enum FaultClause {
     Down { machine: MachineId, at: u64, dur: u64 },
+    /// Rack-scale correlated failure: the contiguous machines
+    /// `first..=last` all go down at `at`, back up at `at + dur`.
+    /// [`FaultSpec::plan`] expands the range to per-machine down/up
+    /// events (ascending machine order within the tick), so the engine's
+    /// fault loop — and [`FaultPlan::split_shards`], which remaps
+    /// per-machine events — need no range awareness. A degenerate
+    /// `M..M` range is canonicalized to a plain [`FaultClause::Down`]
+    /// at parse time.
+    DownRange { first: MachineId, last: MachineId, at: u64, dur: u64 },
     Slow { machine: MachineId, at: u64, dur: u64, factor: u32 },
     Storm { jobs: usize, at: u64 },
     Drop { source: usize, at: u64 },
@@ -87,7 +97,7 @@ pub struct FaultSpec {
 
 /// Accepted clause vocabulary, interpolated into every parse error.
 pub const USAGE: &str =
-    "down=M@T+D, slow=M@T+DxF, storm=K@T, drop=S@T, policy=lose|resume, seed=N";
+    "down=M@T+D, down=M..N@T+D, slow=M@T+DxF, storm=K@T, drop=S@T, policy=lose|resume, seed=N";
 
 fn parse_u64(what: &str, s: &str) -> Result<u64> {
     s.trim()
@@ -123,15 +133,29 @@ impl FaultSpec {
                 "down" => {
                     let (m, rest) = val
                         .split_once('@')
-                        .ok_or_else(|| err!("fault spec: down=`{val}` wants M@T+D"))?;
+                        .ok_or_else(|| err!("fault spec: down=`{val}` wants M@T+D or M..N@T+D"))?;
                     let (at, dur) = rest
                         .split_once('+')
-                        .ok_or_else(|| err!("fault spec: down=`{val}` wants M@T+D"))?;
-                    spec.clauses.push(FaultClause::Down {
-                        machine: parse_u64("machine", m)? as usize,
-                        at: parse_u64("tick", at)?,
-                        dur: parse_u64("duration", dur)?,
-                    });
+                        .ok_or_else(|| err!("fault spec: down=`{val}` wants M@T+D or M..N@T+D"))?;
+                    let at = parse_u64("tick", at)?;
+                    let dur = parse_u64("duration", dur)?;
+                    if let Some((first, last)) = m.split_once("..") {
+                        let first = parse_u64("machine", first)? as usize;
+                        let last = parse_u64("machine", last)? as usize;
+                        if first == last {
+                            // canonicalize the degenerate range so render()
+                            // emits the minimal spelling
+                            spec.clauses.push(FaultClause::Down { machine: first, at, dur });
+                        } else {
+                            spec.clauses.push(FaultClause::DownRange { first, last, at, dur });
+                        }
+                    } else {
+                        spec.clauses.push(FaultClause::Down {
+                            machine: parse_u64("machine", m)? as usize,
+                            at,
+                            dur,
+                        });
+                    }
                 }
                 "slow" => {
                     let (m, rest) = val
@@ -179,6 +203,17 @@ impl FaultSpec {
         for c in &self.clauses {
             match *c {
                 FaultClause::Down { at, dur, .. } => {
+                    if at == 0 {
+                        bail!("fault spec: down at tick 0 (scheduler ticks start at 1)");
+                    }
+                    if dur == 0 {
+                        bail!("fault spec: down duration must be >= 1");
+                    }
+                }
+                FaultClause::DownRange { first, last, at, dur } => {
+                    if first > last {
+                        bail!("fault spec: down range {first}..{last} is reversed (want M <= N)");
+                    }
                     if at == 0 {
                         bail!("fault spec: down at tick 0 (scheduler ticks start at 1)");
                     }
@@ -234,6 +269,9 @@ impl FaultSpec {
             .iter()
             .map(|c| match *c {
                 FaultClause::Down { machine, at, dur } => format!("down={machine}@{at}+{dur}"),
+                FaultClause::DownRange { first, last, at, dur } => {
+                    format!("down={first}..{last}@{at}+{dur}")
+                }
                 FaultClause::Slow { machine, at, dur, factor } => {
                     format!("slow={machine}@{at}+{dur}x{factor}")
                 }
@@ -291,6 +329,20 @@ impl FaultSpec {
                     }
                     events.push(FaultEvent { tick: at, kind: FaultKind::Down(machine) });
                     events.push(FaultEvent { tick: at + dur, kind: FaultKind::Up(machine) });
+                }
+                FaultClause::DownRange { first, last, at, dur } => {
+                    if last >= machines {
+                        bail!(
+                            "fault spec: down range {first}..{last} out of range (park has {machines})"
+                        );
+                    }
+                    // expand to per-machine events (ascending machine
+                    // order within the tick): the engine's fault loop and
+                    // split_shards stay range-oblivious
+                    for machine in first..=last {
+                        events.push(FaultEvent { tick: at, kind: FaultKind::Down(machine) });
+                        events.push(FaultEvent { tick: at + dur, kind: FaultKind::Up(machine) });
+                    }
                 }
                 FaultClause::Slow { machine, at, dur, factor } => {
                     if machine >= machines {
@@ -636,6 +688,58 @@ mod tests {
             }
             other => panic!("expected storm, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn down_range_parses_canonically_and_expands_per_machine() {
+        let spec = FaultSpec::parse("down=2..4@10+5,seed=3").unwrap();
+        assert_eq!(spec.render(), "down=2..4@10+5,seed=3");
+        assert_eq!(FaultSpec::parse(&spec.render()).unwrap(), spec);
+        // the plan expands the rack to per-machine down/up pairs, in
+        // ascending machine order within each tick
+        let mut plan = spec.plan(5).unwrap();
+        for m in 2..=4usize {
+            let ev = plan.pop_due(10).unwrap();
+            assert!(matches!(ev.kind, FaultKind::Down(got) if got == m), "machine {m}");
+        }
+        for m in 2..=4usize {
+            let ev = plan.pop_due(15).unwrap();
+            assert!(matches!(ev.kind, FaultKind::Up(got) if got == m), "machine {m}");
+        }
+        assert!(plan.is_done());
+        // the whole range must fit the park
+        assert!(spec.plan(4).is_err(), "machine 4 does not exist in a 4-park");
+        // degenerate and malformed ranges
+        assert_eq!(
+            FaultSpec::parse("down=3..3@5+5").unwrap().render(),
+            "down=3@5+5",
+            "M..M canonicalizes to the plain clause"
+        );
+        assert!(FaultSpec::parse("down=3..2@5+5").is_err(), "reversed range");
+        assert!(FaultSpec::parse("down=1..4@0+5").is_err(), "tick 0");
+        assert!(FaultSpec::parse("down=1..4@5+0").is_err(), "zero duration");
+        assert!(FaultSpec::parse("down=a..4@5+5").is_err(), "non-numeric bound");
+    }
+
+    #[test]
+    fn down_range_splits_across_shards_like_per_machine_downs() {
+        // Park of 5 split 3 + 2: the rack 1..3 straddles the boundary —
+        // machines 1, 2 stay shard-0-local, machine 3 becomes shard 1's
+        // local machine 0.
+        let spec = FaultSpec::parse("down=1..3@10+5").unwrap();
+        let plan = spec.plan(5).unwrap();
+        let (plans, storms) = plan.split_shards(&[(0, 3), (3, 2)]);
+        assert!(storms.is_empty());
+        let mut p0 = plans[0].clone();
+        assert!(matches!(p0.pop_due(10).unwrap().kind, FaultKind::Down(1)));
+        assert!(matches!(p0.pop_due(10).unwrap().kind, FaultKind::Down(2)));
+        assert!(matches!(p0.pop_due(15).unwrap().kind, FaultKind::Up(1)));
+        assert!(matches!(p0.pop_due(15).unwrap().kind, FaultKind::Up(2)));
+        assert!(p0.is_done());
+        let mut p1 = plans[1].clone();
+        assert!(matches!(p1.pop_due(10).unwrap().kind, FaultKind::Down(0)));
+        assert!(matches!(p1.pop_due(15).unwrap().kind, FaultKind::Up(0)));
+        assert!(p1.is_done());
     }
 
     #[test]

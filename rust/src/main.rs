@@ -276,38 +276,35 @@ fn cmd_serve(args: &Args) -> Result<()> {
             );
         }
     }
+    if let Some(p) = report.portfolio.as_ref() {
+        println!(
+            "portfolio         : {} windows of {} ticks, {} policy switches, live policy {}",
+            p.windows, p.window_ticks, p.switches, p.live
+        );
+        let wins = p
+            .wins
+            .iter()
+            .map(|&(name, w)| format!("{name}={w}"))
+            .collect::<Vec<String>>()
+            .join(" ");
+        println!("  window wins     : {wins}");
+        for e in &p.switch_log {
+            println!(
+                "  switch          : window {} @ tick {}: {} -> {}",
+                e.window, e.tick, e.from, e.to
+            );
+        }
+        println!(
+            "  shadow replay   : {} ticks, {} submissions, max score spread {:.2}, switch digest {}",
+            p.replay_ticks,
+            p.replay_submissions,
+            p.max_score_spread,
+            p.switch_digest()
+        );
+    }
     println!("host wall         : {:.2?}", report.wall);
     if args.has("json") {
-        use stannic::jsonio::{arr, num, obj, s};
-        let mut fields = vec![
-            ("engine", s(report.engine)),
-            ("completed", num(report.completions.len() as f64)),
-            ("ticks", num(report.ticks as f64)),
-            ("avg_latency", num(m.avg_latency)),
-            ("fairness", num(m.fairness)),
-            ("load_cv", num(m.load_balance_cv)),
-            ("throughput", num(m.throughput)),
-            (
-                "jobs_per_machine",
-                arr(m.jobs_per_machine.iter().map(|&c| num(c as f64)).collect()),
-            ),
-            ("pcie_us", num(report.pcie.total_ns / 1000.0)),
-            ("accel_cycles", num(report.accel_cycles as f64)),
-            ("sources", num(report.sources.len() as f64)),
-        ];
-        if let Some(f) = report.faults.as_ref() {
-            fields.push(("fault", s(report.fault_key.clone())));
-            fields.push(("fault_injected", num(f.injected_jobs as f64)));
-            fields.push(("fault_evicted", num(f.evicted_jobs as f64)));
-            fields.push(("fault_dropped", num(f.dropped_arrivals as f64)));
-        }
-        if let Some(t) = report.shards.as_ref() {
-            fields.push(("shards", num(t.shards() as f64)));
-            fields.push(("rebalance_moves", num(t.rebalance_moves as f64)));
-            fields.push(("shard_imbalance_cv", num(t.imbalance_cv)));
-        }
-        let j = obj(fields);
-        println!("{j}");
+        println!("{}", report.json_summary());
     }
     if let Some(path) = args.flag("record") {
         let label = args.str_flag("label", "serve");

@@ -146,8 +146,13 @@ impl SweepConfig {
     /// only pull away from greedy ones on parks of ~140 machines, far
     /// beyond the default grid. Three park sizes up to 140, the even mix
     /// plus the two stress mixes (bursty arrivals, heavy-tailed service
-    /// times), single alpha, all engines: 3 × 3 × 1 × 1 × 5 = 45 cells.
-    /// Selected by `sweep --scale`; deliberately not the CI default.
+    /// times), single alpha, all engines: 3 × 3 × 1 × 1 × 5 = 45 clean
+    /// cells, plus a rack-scale correlated-failure axis (a 5-machine
+    /// rack drops mid-run) appended as one golden-engine cell per clean
+    /// scenario — clean ids and artifacts are unchanged by the axis.
+    /// The rack sits at machines 30..34 so the same canonical key is
+    /// valid for every park size in the grid. Selected by
+    /// `sweep --scale`; deliberately not the CI default.
     pub fn at_scale() -> Self {
         SweepConfig {
             workloads: vec![
@@ -158,6 +163,7 @@ impl SweepConfig {
             machine_counts: vec![35, 70, 140],
             alphas: vec![0.5],
             jobs: 400,
+            faults: vec!["down=30..34@60+40,seed=11".to_string()],
             ..Self::default()
         }
     }
@@ -264,7 +270,11 @@ pub fn run_cell(cell: &SweepCell) -> CellResult {
         if out.stalled {
             stalls += 1;
         }
-        if let Some(a) = &out.assigned {
+        // co_assigned carries the portfolio meta-engine's same-tick
+        // secondary dispatches (work-stealing moves land several jobs in
+        // one tick); plain engines leave it empty, so chaining is a no-op
+        // for every historical cell
+        for a in out.assigned.iter().chain(&out.co_assigned) {
             metrics.record_assignment(a.machine, tick);
             in_flight[a.machine] += 1;
         }
@@ -371,6 +381,12 @@ impl SweepResults {
         let mut groups: HashMap<ScenarioKey, &CellResult> = HashMap::new();
         let mut checked = 0usize;
         for r in &self.cells {
+            // the portfolio meta-engine races policies and switches
+            // mid-run — its schedule *intentionally* diverges from the
+            // single-policy group, so it is excluded from parity
+            if r.cell.engine == EngineId::Portfolio {
+                continue;
+            }
             let key = (
                 r.cell.workload.clone(),
                 r.cell.machines,
@@ -439,7 +455,9 @@ impl SweepResults {
         let mut t = Table::new(&[
             "engine", "cells", "mean avg lat", "mean util", "mean fair", "total cycles",
         ]);
-        for engine in EngineId::SOFTWARE {
+        // portfolio rides after the parity group: it only appears when
+        // the sweep explicitly named it, so clean grids render unchanged
+        for engine in EngineId::SOFTWARE.into_iter().chain([EngineId::Portfolio]) {
             let rs: Vec<&CellResult> = self
                 .cells
                 .iter()
@@ -538,6 +556,23 @@ mod tests {
         assert!(cells.len() >= 24, "scale grid has {} cells", cells.len());
         for (i, c) in cells.iter().enumerate() {
             assert_eq!(c.id, i, "dense ids");
+        }
+        // the rack-failure axis: one golden cell per clean scenario,
+        // appended after the clean grid so clean ids are unchanged
+        let faulted: Vec<&SweepCell> = cells.iter().filter(|c| !c.fault.is_empty()).collect();
+        assert_eq!(faulted.len(), 9, "3 workloads x 3 park sizes");
+        assert!(faulted.iter().all(|c| c.engine == EngineId::Sos));
+        let mut clean_cfg = cfg.clone();
+        clean_cfg.faults.clear();
+        for (a, b) in clean_cfg.cells().iter().zip(&cells) {
+            assert_eq!(a.id, b.id, "clean ids unchanged by the fault axis");
+            assert_eq!(a.engine, b.engine);
+        }
+        // the rack key is canonical and fits every park size in the grid
+        for c in &faulted {
+            let spec = crate::faults::FaultSpec::parse(&c.fault).unwrap();
+            assert_eq!(spec.render(), c.fault);
+            assert!(spec.plan(c.machines).is_ok(), "rack fits the {}-park", c.machines);
         }
     }
 
@@ -654,6 +689,30 @@ mod tests {
         assert_eq!((again.p50, again.p95, again.p99), (f.p50, f.p95, f.p99));
         // and the render names the faulted cell with its canonical key
         assert!(results.render().contains("down=0@10+15,storm=3@12,seed=5"));
+    }
+
+    #[test]
+    fn portfolio_column_sweeps_and_stays_out_of_parity() {
+        let mut cfg = tiny();
+        cfg.engines = vec![EngineId::Sos, EngineId::Sosc, EngineId::Portfolio];
+        let results = run_sweep(&cfg);
+        // parity still checks exactly the single-policy pair; the
+        // portfolio column's intentional divergence is not a violation
+        assert_eq!(results.check_parity().unwrap(), 1, "sos vs sosc only");
+        let p = results
+            .cells
+            .iter()
+            .find(|r| r.cell.engine == EngineId::Portfolio)
+            .expect("portfolio cell ran");
+        assert_eq!(p.metrics.total_scheduled, 40, "portfolio cell conserves jobs");
+        assert_eq!(p.metrics.jobs_per_machine.iter().sum::<usize>(), 40);
+        // bit-reproducible: re-running the cell gives the identical result
+        let again = run_cell(&p.cell);
+        assert_eq!(again.metrics.jobs_per_machine, p.metrics.jobs_per_machine);
+        assert_eq!(again.metrics.avg_latency, p.metrics.avg_latency);
+        assert_eq!(again.ticks, p.ticks);
+        // the aggregates table carries the portfolio column by name
+        assert!(results.render().contains("portfolio"));
     }
 
     #[test]

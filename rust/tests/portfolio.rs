@@ -1,0 +1,135 @@
+//! Integration pins for the competitive portfolio meta-engine
+//! (`serve --engine portfolio`, [`stannic::engine::portfolio`]):
+//!
+//! * the switch sequence, schedule digest and tick count are
+//!   **deterministic** for any source-thread interleaving, any bounded
+//!   queue depth, and across reruns (the ISSUE's property gate);
+//! * the rotating standard mix (steady → bursty → heavy-tailed) forces
+//!   at least one live-policy switch;
+//! * every job is completed exactly once across switches;
+//! * two recordings of the same scenario `serve diff` parity-clean down
+//!   to the switch-log digest (the in-process mirror of the ci.sh
+//!   portfolio smoke).
+
+use stannic::artifact::{diff_records, DiffOpts};
+use stannic::coordinator::{serve_sources, ArrivalSource, ServeOpts, ServeRecord, ServeReport};
+use stannic::engine::EngineId;
+use stannic::quant::Precision;
+use stannic::testing::{check, property};
+use stannic::workload::WorkloadSpec;
+
+fn run_portfolio(
+    machines: usize,
+    depth: usize,
+    jobs: usize,
+    seed: u64,
+    n_sources: usize,
+    opts: &ServeOpts,
+) -> ServeReport {
+    let engine = EngineId::Portfolio.build(machines, depth, 0.5, Precision::Int8).unwrap();
+    let sources =
+        ArrivalSource::standard_mix(&WorkloadSpec::default(), machines, jobs, seed, n_sources);
+    serve_sources(engine, sources, opts).unwrap()
+}
+
+#[test]
+fn prop_portfolio_deterministic_across_interleavings() {
+    // The determinism invariant: window boundaries, shadow scores and
+    // the switch sequence are a pure function of the merged arrival
+    // order — so reruns, different queue depths, and different source
+    // interleavings must all produce bit-identical switch logs,
+    // schedule digests and tick counts.
+    property("portfolio determinism", 3, |rng| {
+        let machines = rng.range(2, 6);
+        let depth = rng.range(4, 10);
+        let jobs = rng.range(40, 100);
+        let seed = rng.next_u64();
+        let batch = rng.range(1, 4);
+        for n_sources in [2usize, 4] {
+            let run = |queue_depth: usize| {
+                let opts = ServeOpts::new().with_queue_depth(queue_depth).with_batch(batch);
+                run_portfolio(machines, depth, jobs, seed, n_sources, &opts)
+            };
+            let a = run(2);
+            let b = run(2);
+            let wide = run(256);
+            check(a.completions.len() == jobs, "all jobs complete")?;
+            check(a.completions == b.completions, "completion stream identical across reruns")?;
+            check(
+                a.completions == wide.completions,
+                "completion stream independent of queue depth",
+            )?;
+            check(a.ticks == b.ticks && a.ticks == wide.ticks, "tick counts identical")?;
+            let (ta, tb, tw) = (
+                a.portfolio.as_ref().expect("portfolio run has telemetry"),
+                b.portfolio.as_ref().expect("portfolio run has telemetry"),
+                wide.portfolio.as_ref().expect("portfolio run has telemetry"),
+            );
+            check(ta == tb, "telemetry incl. the switch log reproduces")?;
+            check(ta == tw, "telemetry independent of queue depth")?;
+            check(ta.switch_digest() == tw.switch_digest(), "switch-sequence digest identical")?;
+            let ra = ServeRecord::from_report("id", &a);
+            let rw = ServeRecord::from_report("id", &wide);
+            check(ra.digest == rw.digest, "artifact digests identical")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn rotating_mix_forces_a_policy_switch() {
+    // Three rotating sources hand the engine a drifting steady → bursty
+    // → heavy-tailed arrival regime — the exact setting the portfolio
+    // exists for. At least one evaluated window must hand the win to a
+    // different candidate than the live one.
+    let r = run_portfolio(5, 10, 150, 42, 3, &ServeOpts::default());
+    let t = r.portfolio.as_ref().expect("telemetry");
+    assert!(t.windows >= 1, "loaded run evaluates at least one window");
+    assert!(t.switches >= 1, "rotating mix must switch at least once");
+    assert_eq!(t.switch_log.len() as u64, t.switches);
+    assert_eq!(
+        t.wins.iter().map(|&(_, w)| w).sum::<u64>(),
+        t.windows,
+        "every evaluated window has exactly one winner"
+    );
+    assert!(t.replay_ticks > 0 && t.replay_submissions > 0, "replay work measured");
+}
+
+#[test]
+fn switches_never_lose_or_duplicate_jobs() {
+    for (jobs, seed) in [(80usize, 5u64), (150, 42), (120, 99)] {
+        let r = run_portfolio(4, 8, jobs, seed, 3, &ServeOpts::new().with_batch(2));
+        assert_eq!(r.completions.len(), jobs, "seed {seed} lost jobs");
+        let mut ids: Vec<u64> = r.completions.iter().map(|c| c.job.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), jobs, "seed {seed} duplicated a job");
+        for c in &r.completions {
+            assert!(c.machine < 4, "completion on a machine outside the park");
+        }
+    }
+}
+
+#[test]
+fn ab_recordings_diff_parity_clean_to_the_switch_digest() {
+    // The in-process mirror of the ci.sh portfolio smoke: two
+    // independent runs of the same scenario recorded and diffed must be
+    // parity-clean — including the portfolio cell that pins the switch
+    // sequence digest and the per-candidate win table.
+    fn record() -> ServeRecord {
+        ServeRecord::from_report("ab", &run_portfolio(5, 10, 150, 42, 3, &ServeOpts::default()))
+    }
+    let a = record();
+    let b = record();
+    assert_eq!(a.digest, b.digest, "schedule identity reproduces");
+    assert_eq!(a.portfolio_switch_digest, b.portfolio_switch_digest);
+    assert_eq!(a.portfolio_wins, b.portfolio_wins);
+    let report = diff_records(&a, &b, &DiffOpts::default());
+    assert!(report.ok(), "{}", report.render());
+    assert_eq!(report.parity_breaks(), 0);
+    assert!(
+        report.cells.iter().any(|c| c.key.starts_with("portfolio[")),
+        "the portfolio parity cell must be present: {}",
+        report.render()
+    );
+}

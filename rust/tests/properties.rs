@@ -240,6 +240,7 @@ fn prop_sweep_identical_across_worker_counts() {
             jobs: rng.range(20, 50),
             seed: rng.next_u64(),
             threads: 1,
+            faults: Vec::new(),
         };
         let one = run_sweep(&cfg);
         cfg.threads = 2;
