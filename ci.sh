@@ -28,6 +28,13 @@
 #            the switch-log digest, and the rotating mix must force at
 #            least one live-policy switch (grepped from the serve
 #            telemetry).
+#   link   : `serve --link-width 4` on the bursty mix recorded twice —
+#            the timed interconnect throttles admission via backpressure
+#            tickets, so the constrained schedule must be parity-clean
+#            across the A/B pair, the telemetry must carry a nonzero
+#            typed stall-reason line, and the constrained record must
+#            FAIL pairing against an unconstrained recording of the
+#            same scenario (the service law is schedule identity).
 #   perf   : hotpath bench in --bench-smoke mode (self-gating on
 #            deterministic engine-work counters: >=5x tickless iteration
 #            reduction, >=machines/2 wavefront schedule-touch reduction;
@@ -183,6 +190,34 @@ cargo run --release -- serve diff /tmp/SERVE_portfolio_a.json /tmp/SERVE_portfol
   | tee /tmp/stannic_serve_portfolio_diff.txt
 grep -E ", 0 parity breaks," /tmp/stannic_serve_portfolio_diff.txt
 echo "portfolio A/B self-diff OK (zero parity breaks incl. the switch-log digest cell)"
+
+echo "== link smoke: narrow interconnect (4 B/tick), A/B self-diff parity-clean =="
+# A 4-byte/tick wire under the bursty mix is coordinator-bound: admission
+# throttles on backpressure tickets (jobs park in the merge queue, never
+# dropped), and the typed stall counters, occupancy histogram and ticket
+# waits are virtual-time facts — bit-identical between recordings.
+cargo run --release -- serve --sources 2 --workload bursty --jobs 150 --batch 4 \
+  --link-width 4 --record /tmp/SERVE_link_a.json --label ci-link \
+  | tee /tmp/stannic_serve_link.txt
+grep -E "jobs completed    : 150" /tmp/stannic_serve_link.txt
+# the wire must actually push back, with the reason typed in telemetry
+grep -E "link stalls       : [1-9]" /tmp/stannic_serve_link.txt
+cargo run --release -- serve --sources 2 --workload bursty --jobs 150 --batch 4 \
+  --link-width 4 --record /tmp/SERVE_link_b.json --label ci-link2 > /dev/null
+cargo run --release -- serve diff /tmp/SERVE_link_a.json /tmp/SERVE_link_b.json \
+  | tee /tmp/stannic_serve_link_diff.txt
+grep -E ", 0 parity breaks," /tmp/stannic_serve_link_diff.txt
+# the same scenario unconstrained must never gate-pass against the
+# constrained record: the service law is schedule identity, not telemetry
+cargo run --release -- serve --sources 2 --workload bursty --jobs 150 --batch 4 \
+  --record /tmp/SERVE_link_clean.json --label ci-link-clean > /dev/null
+if cargo run --release -- serve diff /tmp/SERVE_link_clean.json /tmp/SERVE_link_a.json \
+  > /tmp/stannic_link_pair_diff.txt 2>&1; then
+  echo "ERROR: link-constrained artifact gate-passed against an unconstrained baseline"
+  cat /tmp/stannic_link_pair_diff.txt
+  exit 1
+fi
+echo "link smoke OK (typed backpressure stalls, parity-clean A/B, artifacts never pair)"
 
 if [ -f SERVE_seed.json ]; then
   echo "== perf: diff serve smoke against committed SERVE_seed.json =="

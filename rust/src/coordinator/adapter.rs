@@ -10,6 +10,13 @@
 //! Engines with real capabilities (the golden tickless [`SosEngine`],
 //! the sharded [`super::shard::ShardedEngine`], the fallible
 //! [`XlaSosEngine`]) keep hand-written impls.
+//!
+//! The timed interconnect ([`super::link::TimedLink`]) sits *above*
+//! this interface: the serve loop acquires a backpressure ticket
+//! before `submit_batch`/`submit` is ever called, so adapters stay
+//! wire-oblivious — an engine sees exactly the admission sequence the
+//! link let through, and an unconstrained run's call stream is
+//! untouched.
 
 use crate::baselines::{SimdSos, SoscEngine};
 use crate::bail;

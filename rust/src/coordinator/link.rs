@@ -1,0 +1,431 @@
+//! Timed host↔accelerator interconnect with backpressure tickets — the
+//! active counterpart to the passive [`super::pcie`] cost ledger.
+//!
+//! The paper's deployment argument lives on the PCIe link (Section 8.2:
+//! ~479 ns per scheduled job), but a cost ledger alone never pushes
+//! back: the serve loop would happily admit batches as if dispatch were
+//! free and only bill the time after the fact. [`TimedLink`] closes the
+//! loop with a deterministic virtual-time service law:
+//!
+//! * **Service law**: a round trip of `B` bytes that starts at tick `S`
+//!   occupies the wire for `ceil(B / width)` ticks and completes at
+//!   `S + ceil(B / width) + latency`. The wire is serial — a transfer
+//!   starts at `max(now, free_at)` where `free_at` is when the previous
+//!   transfer leaves the wire — so link state is a pure function of the
+//!   virtual-time issue sequence, never of host thread interleaving.
+//! * **Tickets**: every admission round trip acquires a [`Ticket`]
+//!   carrying its explicit start and completion tick. Tickets retire in
+//!   FIFO order when virtual time reaches their completion tick, so
+//!   `issued == completed` holds whenever the link is drained — the
+//!   conservation invariant the tests pin.
+//! * **Backpressure**: when capacity is exhausted the link refuses
+//!   admission with a typed [`Backpressure`] reason instead of a bare
+//!   bool — [`Backpressure::LinkBusy`] (wire still transmitting),
+//!   [`Backpressure::WindowFull`] (in-flight window exhausted), or
+//!   [`Backpressure::ResponseStalled`] (a response had to queue behind
+//!   the backlog; responses are never refused outright, because dropped
+//!   completions would lose jobs). Stalled work waits in the caller's
+//!   merge queue — never dropped, never reordered.
+//! * **Horizon**: [`TimedLink::next_completion`] feeds the pending
+//!   completion tick into [`crate::scheduler::Horizon::merge`], so
+//!   tickless drive loops jump over idle gaps without skipping a ticket
+//!   retirement — link completions are release-class events exactly
+//!   like machine-up faults.
+//!
+//! The unconstrained coordinator (`--link-width 0`, the default) does
+//! not construct a `TimedLink` at all, which keeps every historical
+//! surface byte-identical; the [`super::pcie`] ledger keeps billing in
+//! both regimes (now in exact integer units — see
+//! [`super::pcie::PcieStats`]).
+
+use std::collections::VecDeque;
+
+use crate::metrics::Histogram;
+
+/// Default round-trip setup latency (ticks added after the wire frees).
+pub const LINK_LATENCY: u64 = 2;
+/// Default bound on in-flight (issued, not yet completed) tickets.
+pub const LINK_WINDOW: usize = 8;
+
+/// The interconnect service law: `width` bytes leave the wire per
+/// virtual tick, every round trip pays `latency` setup ticks, and at
+/// most `window` tickets may be in flight at once.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LinkModel {
+    /// Wire service rate in bytes per virtual tick (must be >= 1; the
+    /// unconstrained regime is modeled by not constructing a link).
+    pub width: u64,
+    /// Fixed setup ticks added to every round trip after wire service.
+    pub latency: u64,
+    /// Maximum in-flight tickets before admission sees `WindowFull`.
+    pub window: usize,
+}
+
+impl LinkModel {
+    /// The standard constrained model at a given wire width, with the
+    /// default latency and window — what `serve --link-width W` arms.
+    pub fn with_width(width: u64) -> LinkModel {
+        LinkModel {
+            width,
+            latency: LINK_LATENCY,
+            window: LINK_WINDOW,
+        }
+    }
+}
+
+/// Why the link refused (or delayed) a transfer at a given tick.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backpressure {
+    /// The wire is still transmitting an earlier transfer.
+    LinkBusy,
+    /// The in-flight ticket window is exhausted.
+    WindowFull,
+    /// A response could not start immediately and queued behind the
+    /// backlog (responses are delayed, never refused).
+    ResponseStalled,
+}
+
+impl Backpressure {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Backpressure::LinkBusy => "link-busy",
+            Backpressure::WindowFull => "window-full",
+            Backpressure::ResponseStalled => "response-stalled",
+        }
+    }
+}
+
+/// One admitted round trip: issued at a tick, wire service from
+/// `start`, retired when virtual time reaches `complete`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Ticket {
+    /// Tick the ticket was acquired.
+    pub issued: u64,
+    /// Tick wire service began (`>= issued`; later when queued).
+    pub start: u64,
+    /// Tick the round trip completes — an event-horizon event.
+    pub complete: u64,
+    /// Round-trip payload in bytes (request + response).
+    pub bytes: u64,
+}
+
+/// Aggregated link telemetry for [`super::ServeReport`] — present only
+/// on constrained runs.
+#[derive(Debug, Clone)]
+pub struct LinkTelemetry {
+    /// Wire width in bytes per tick (always >= 1 when present).
+    pub width: u64,
+    /// Setup latency in ticks.
+    pub latency: u64,
+    /// In-flight window bound.
+    pub window: u64,
+    /// Tickets issued over the run.
+    pub issued: u64,
+    /// Tickets retired over the run (== issued once drained).
+    pub completed: u64,
+    /// Admission stalls refused because the wire was busy.
+    pub stall_busy: u64,
+    /// Admission stalls refused because the window was full.
+    pub stall_window: u64,
+    /// Responses that had to queue behind the backlog.
+    pub stall_response: u64,
+    /// In-flight ticket count, sampled once per executed tick.
+    pub occupancy: Histogram,
+    /// Per-ticket wait (`complete - issued`) in ticks.
+    pub wait: Histogram,
+}
+
+impl LinkTelemetry {
+    /// Total typed stalls across all three reasons.
+    pub fn total_stalls(&self) -> u64 {
+        self.stall_busy + self.stall_window + self.stall_response
+    }
+}
+
+/// Deterministic virtual-time link state. All mutation is keyed by the
+/// caller's virtual tick, so two runs that issue the same byte sequence
+/// at the same ticks hold bit-identical link state regardless of host
+/// thread count or queue depth.
+#[derive(Debug, Clone)]
+pub struct TimedLink {
+    model: LinkModel,
+    /// First tick the wire is free for a new transfer.
+    free_at: u64,
+    /// FIFO in-flight tickets; completion ticks are non-decreasing
+    /// because the wire is serial.
+    in_flight: VecDeque<Ticket>,
+    issued: u64,
+    completed: u64,
+    stall_busy: u64,
+    stall_window: u64,
+    stall_response: u64,
+    occupancy: Histogram,
+    wait: Histogram,
+}
+
+impl TimedLink {
+    /// `model.width` and `model.window` must be >= 1 (callers validate
+    /// at the CLI/opts boundary; 0 widths mean "no link at all").
+    pub fn new(model: LinkModel) -> TimedLink {
+        debug_assert!(model.width >= 1 && model.window >= 1);
+        TimedLink {
+            model,
+            free_at: 0,
+            in_flight: VecDeque::new(),
+            issued: 0,
+            completed: 0,
+            stall_busy: 0,
+            stall_window: 0,
+            stall_response: 0,
+            occupancy: Histogram::new(),
+            wait: Histogram::new(),
+        }
+    }
+
+    pub fn model(&self) -> &LinkModel {
+        &self.model
+    }
+
+    /// Retire every ticket whose completion tick has been reached.
+    /// Call once at the top of each executed tick (and after a jump —
+    /// retirement depends only on `now`, so bulk retirement after a
+    /// jump is bit-identical to per-tick retirement).
+    pub fn begin_tick(&mut self, now: u64) {
+        while self.in_flight.front().is_some_and(|t| t.complete <= now) {
+            let t = self.in_flight.pop_front().expect("checked front");
+            self.completed += 1;
+            self.wait.record(t.complete - t.issued);
+        }
+    }
+
+    /// Sample end-of-tick occupancy. Call once per executed tick, after
+    /// any issue.
+    pub fn end_tick(&mut self) {
+        self.occupancy.record(self.in_flight.len() as u64);
+    }
+
+    /// Account `skipped` jumped ticks in the occupancy histogram. A
+    /// jump never crosses a ticket completion (pending completions are
+    /// merged into the event horizon) and never issues, so every
+    /// skipped tick would have sampled exactly the current in-flight
+    /// count — bulk recording keeps the histogram bit-identical to
+    /// per-tick driving.
+    pub fn bulk_occupancy(&mut self, skipped: u64) {
+        self.occupancy.record_n(self.in_flight.len() as u64, skipped);
+    }
+
+    /// May a new request round trip start at `now`? Pure query — the
+    /// caller records the refusal via [`Self::note_admission_stall`]
+    /// only when work was actually waiting, so stall counts measure
+    /// real backpressure rather than idle polling.
+    pub fn try_acquire(&self, now: u64) -> Result<(), Backpressure> {
+        if self.in_flight.len() >= self.model.window {
+            return Err(Backpressure::WindowFull);
+        }
+        if self.free_at > now {
+            return Err(Backpressure::LinkBusy);
+        }
+        Ok(())
+    }
+
+    /// Count one admission stall with its typed reason.
+    pub fn note_admission_stall(&mut self, why: Backpressure) {
+        match why {
+            Backpressure::LinkBusy => self.stall_busy += 1,
+            Backpressure::WindowFull => self.stall_window += 1,
+            Backpressure::ResponseStalled => self.stall_response += 1,
+        }
+    }
+
+    /// Issue a round trip of `bytes` at tick `now` and return its
+    /// ticket. Never refuses: a transfer that cannot start immediately
+    /// (response-only ticks racing a busy wire) queues behind the
+    /// backlog and is counted as [`Backpressure::ResponseStalled`].
+    /// Admission paths call [`Self::try_acquire`] first, in which case
+    /// the issue is immediate and stall-free.
+    pub fn issue(&mut self, now: u64, bytes: u64) -> Ticket {
+        if self.free_at > now || self.in_flight.len() >= self.model.window {
+            self.stall_response += 1;
+        }
+        let start = self.free_at.max(now);
+        let busy = bytes.div_ceil(self.model.width).max(1);
+        let complete = start + busy + self.model.latency;
+        self.free_at = start + busy;
+        let ticket = Ticket {
+            issued: now,
+            start,
+            complete,
+            bytes,
+        };
+        self.issued += 1;
+        self.in_flight.push_back(ticket);
+        ticket
+    }
+
+    /// The earliest pending completion tick — release-class on the
+    /// event horizon, so drive loops merge it before jumping.
+    pub fn next_completion(&self) -> Option<u64> {
+        self.in_flight.front().map(|t| t.complete)
+    }
+
+    /// True when no tickets are in flight (`issued == completed`).
+    pub fn is_drained(&self) -> bool {
+        self.in_flight.is_empty()
+    }
+
+    pub fn issued(&self) -> u64 {
+        self.issued
+    }
+
+    pub fn completed(&self) -> u64 {
+        self.completed
+    }
+
+    /// Fold the run's link state into report telemetry.
+    pub fn into_telemetry(self) -> LinkTelemetry {
+        LinkTelemetry {
+            width: self.model.width,
+            latency: self.model.latency,
+            window: self.model.window as u64,
+            issued: self.issued,
+            completed: self.completed,
+            stall_busy: self.stall_busy,
+            stall_window: self.stall_window,
+            stall_response: self.stall_response,
+            occupancy: self.occupancy,
+            wait: self.wait,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn narrow() -> TimedLink {
+        TimedLink::new(LinkModel {
+            width: 4,
+            latency: 2,
+            window: 2,
+        })
+    }
+
+    #[test]
+    fn service_law_is_latency_plus_bytes_per_tick() {
+        let mut link = narrow();
+        // 10 bytes over a 4 B/tick wire: ceil(10/4) = 3 busy ticks,
+        // + 2 latency => completes at 1 + 3 + 2 = 6.
+        let t = link.issue(1, 10);
+        assert_eq!(t, Ticket { issued: 1, start: 1, complete: 6, bytes: 10 });
+        assert_eq!(link.next_completion(), Some(6));
+        // zero-byte round trips still occupy the wire for one tick
+        let mut idle = narrow();
+        let z = idle.issue(5, 0);
+        assert_eq!((z.start, z.complete), (5, 5 + 1 + 2));
+    }
+
+    #[test]
+    fn wire_is_serial_and_queued_transfers_count_as_response_stalls() {
+        let mut link = narrow();
+        link.issue(1, 8); // busy ticks 1..=2, wire frees at 3
+        assert_eq!(link.try_acquire(2), Err(Backpressure::LinkBusy));
+        // a response forced onto the busy wire queues behind it
+        let t = link.issue(2, 4);
+        assert_eq!((t.issued, t.start), (2, 3));
+        assert_eq!(t.complete, 3 + 1 + 2);
+        assert_eq!(link.into_telemetry().stall_response, 1);
+    }
+
+    #[test]
+    fn window_bounds_in_flight_tickets() {
+        let mut link = TimedLink::new(LinkModel {
+            width: 100,
+            latency: 10,
+            window: 2,
+        });
+        link.issue(1, 4);
+        assert_eq!(link.try_acquire(2), Ok(()));
+        link.issue(2, 4);
+        assert_eq!(link.try_acquire(3), Err(Backpressure::WindowFull));
+        link.note_admission_stall(Backpressure::WindowFull);
+        // retiring the first ticket reopens the window
+        link.begin_tick(12); // first completes at 1 + 1 + 10 = 12
+        assert_eq!(link.completed(), 1);
+        assert_eq!(link.try_acquire(12), Ok(()));
+        assert_eq!(link.into_telemetry().stall_window, 1);
+    }
+
+    #[test]
+    fn tickets_retire_in_fifo_order_and_conserve_counts() {
+        let mut link = narrow();
+        let mut completes = Vec::new();
+        for (tick, bytes) in [(1u64, 4u64), (3, 12), (9, 1)] {
+            link.begin_tick(tick);
+            completes.push(link.issue(tick, bytes).complete);
+        }
+        assert!(completes.windows(2).all(|w| w[0] <= w[1]), "FIFO wire");
+        link.begin_tick(*completes.last().unwrap());
+        assert!(link.is_drained());
+        assert_eq!(link.issued(), link.completed());
+        let t = link.into_telemetry();
+        assert_eq!(t.wait.count(), 3);
+        assert_eq!(t.total_stalls(), 0);
+    }
+
+    #[test]
+    fn bulk_retirement_after_a_jump_matches_per_tick_retirement() {
+        let mut jumped = narrow();
+        let mut stepped = narrow();
+        for l in [&mut jumped, &mut stepped] {
+            l.issue(1, 16);
+            l.issue(1, 16);
+        }
+        for t in 2..=20 {
+            stepped.begin_tick(t);
+        }
+        jumped.begin_tick(20);
+        assert_eq!(jumped.completed(), stepped.completed());
+        assert_eq!(jumped.is_drained(), stepped.is_drained());
+        let (a, b) = (jumped.into_telemetry(), stepped.into_telemetry());
+        assert_eq!(a.wait.p50(), b.wait.p50());
+        assert_eq!(a.wait.p95(), b.wait.p95());
+    }
+
+    #[test]
+    fn backpressure_reasons_carry_stable_labels() {
+        assert_eq!(Backpressure::LinkBusy.label(), "link-busy");
+        assert_eq!(Backpressure::WindowFull.label(), "window-full");
+        assert_eq!(Backpressure::ResponseStalled.label(), "response-stalled");
+    }
+
+    #[test]
+    fn link_state_is_a_pure_function_of_the_issue_sequence() {
+        // Same (tick, bytes) sequence => bit-identical telemetry, no
+        // matter how many times begin_tick is polled in between (the
+        // thread-interleaving invariance the serve loop relies on).
+        let seq = [(1u64, 7u64), (2, 30), (6, 3), (6, 3), (40, 1)];
+        let run = |poll_every_tick: bool| {
+            let mut link = narrow();
+            let mut now = 0;
+            for &(tick, bytes) in &seq {
+                if poll_every_tick {
+                    while now < tick {
+                        now += 1;
+                        link.begin_tick(now);
+                    }
+                } else {
+                    link.begin_tick(tick);
+                }
+                link.issue(tick, bytes);
+            }
+            link.begin_tick(1000);
+            link.into_telemetry()
+        };
+        let (a, b) = (run(false), run(true));
+        assert_eq!(a.issued, b.issued);
+        assert_eq!(a.completed, b.completed);
+        assert_eq!(a.stall_response, b.stall_response);
+        assert_eq!(a.wait.p50(), b.wait.p50());
+        assert_eq!(a.wait.max(), b.wait.max());
+    }
+}

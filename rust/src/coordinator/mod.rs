@@ -24,6 +24,16 @@
 //! * **Transport + workers**: the PCIe round-trip model ([`pcie`]) and
 //!   one virtual-time worker thread per machine, reporting
 //!   [`CompletionRecord`]s.
+//! * **Timed interconnect** ([`link`]): `serve --link-width W` wraps
+//!   the dispatch path in a deterministic virtual-time service law —
+//!   every admission round trip acquires a [`Ticket`] with an explicit
+//!   completion tick, a bounded in-flight window, and a typed
+//!   [`Backpressure`] reason when capacity is exhausted. Stalled jobs
+//!   wait in the merge queue (never dropped or reordered), stall
+//!   reasons ride [`ServeReport`] and a compat-gated artifact block,
+//!   and pending completion ticks merge into the event horizon so
+//!   tickless jumps stay bit-exact. The default (width 0) constructs
+//!   no link and is byte-identical to the historical pipeline.
 //! * **Persistence + diffing** ([`ServeRecord`]): `serve --record`
 //!   archives a run through the shared [`crate::artifact`] layer
 //!   (schema-checked, parse-back-verified, schedule-identity digest),
@@ -56,12 +66,14 @@
 //!   down to the exact switch sequence.
 
 mod adapter;
+pub mod link;
 pub mod pcie;
 mod record;
 mod server;
 pub mod shard;
 
 pub use adapter::EngineAdapter;
+pub use link::{Backpressure, LinkModel, LinkTelemetry, Ticket, TimedLink};
 // Horizon lives in the scheduler (it describes the golden engine's
 // event horizon); re-exported here because EngineAdapter::horizon is
 // the coordinator-facing way to read it.

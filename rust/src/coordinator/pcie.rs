@@ -7,6 +7,20 @@
 //! rather than payload size. The model charges a fixed per-transaction
 //! cost plus a small per-byte cost, which reproduces both the magnitude
 //! and the (near-)configuration-independence the paper observed.
+//!
+//! This module is the *passive* cost ledger: it bills round trips after
+//! the fact and never pushes back. The *active* counterpart is
+//! [`super::link`] — a timed virtual-time service law that throttles
+//! admission with backpressure tickets when the wire saturates
+//! (`serve --link-width W`). Both regimes bill through [`PcieStats`];
+//! the ledger accumulates in exact integer femtoseconds, so the total
+//! is independent of charge order and can gate as a deterministic perf
+//! cell in `serve diff`.
+
+/// Femtoseconds per nanosecond — the ledger's fixed-point scale. The
+/// default model's costs are whole femtosecond counts (470 ns and
+/// 1/16 ns both are), so accumulation is exact and order-independent.
+const FS_PER_NS: f64 = 1e6;
 
 /// Transport model parameters.
 #[derive(Debug, Clone, Copy)]
@@ -26,12 +40,26 @@ impl Default for PcieModel {
     }
 }
 
-/// Accumulated transport accounting for one run.
+/// Accumulated transport accounting for one run. Time accrues in
+/// integer femtoseconds ([`PcieStats::total_fs`]); the rendered
+/// [`PcieStats::total_ns`] is derived on read and is numerically
+/// identical to the historical f64 accumulator for the default model
+/// (every charge is an exact multiple of 1/16 ns).
 #[derive(Debug, Clone, Default)]
 pub struct PcieStats {
     pub transactions: u64,
     pub bytes: u64,
-    pub total_ns: f64,
+    /// Total transport time in integer femtoseconds — exact, so the sum
+    /// is the same for any charge order (the property the f64
+    /// accumulator it replaced could not guarantee).
+    pub total_fs: u64,
+}
+
+impl PcieStats {
+    /// Total transport time in nanoseconds, for rendering.
+    pub fn total_ns(&self) -> f64 {
+        self.total_fs as f64 / FS_PER_NS
+    }
 }
 
 impl PcieModel {
@@ -47,12 +75,19 @@ impl PcieModel {
         4 + 8 * released as u64
     }
 
+    /// One round trip's cost in integer femtoseconds.
+    pub fn round_trip_fs(&self, bytes: u64) -> u64 {
+        let per_txn_fs = (self.per_txn_ns * FS_PER_NS).round() as u64;
+        let per_byte_fs = (self.per_byte_ns * FS_PER_NS).round() as u64;
+        per_txn_fs + per_byte_fs * bytes
+    }
+
     /// Charge one scheduling round-trip.
     pub fn charge(&self, stats: &mut PcieStats, machines: usize, released: usize) {
         let bytes = self.request_bytes(machines) + self.response_bytes(released);
         stats.transactions += 1;
         stats.bytes += bytes;
-        stats.total_ns += self.per_txn_ns + self.per_byte_ns * bytes as f64;
+        stats.total_fs += self.round_trip_fs(bytes);
     }
 }
 
@@ -71,7 +106,7 @@ mod tests {
             for _ in 0..10_000 {
                 model.charge(&mut s, m, 1);
             }
-            totals.push(s.total_ns / 1000.0); // us
+            totals.push(s.total_ns() / 1000.0); // us
         }
         let avg = totals.iter().sum::<f64>() / totals.len() as f64;
         assert!(
@@ -91,6 +126,32 @@ mod tests {
         model.charge(&mut s, 10, 2);
         assert_eq!(s.transactions, 1);
         assert_eq!(s.bytes, model.request_bytes(10) + model.response_bytes(2));
-        assert!(s.total_ns > model.per_txn_ns);
+        assert!(s.total_ns() > model.per_txn_ns);
+    }
+
+    #[test]
+    fn integer_accumulation_is_order_independent_and_ns_exact() {
+        let model = PcieModel::default();
+        // forward and reverse charge orders land on the same integer
+        let mut fwd = PcieStats::default();
+        let mut rev = PcieStats::default();
+        let loads: Vec<(usize, usize)> = (0..200).map(|i| (5 + i % 17, i % 5)).collect();
+        for &(m, r) in &loads {
+            model.charge(&mut fwd, m, r);
+        }
+        for &(m, r) in loads.iter().rev() {
+            model.charge(&mut rev, m, r);
+        }
+        assert_eq!(fwd.total_fs, rev.total_fs);
+        // the rendered value matches the historical f64 accumulator
+        let mut f64_total = 0.0;
+        for &(m, r) in &loads {
+            let bytes = model.request_bytes(m) + model.response_bytes(r);
+            f64_total += model.per_txn_ns + model.per_byte_ns * bytes as f64;
+        }
+        assert_eq!(fwd.total_ns(), f64_total);
+        // default-model costs are exact femtosecond counts
+        assert_eq!(model.round_trip_fs(0), 470_000_000);
+        assert_eq!(model.round_trip_fs(16), 470_000_000 + 16 * 62_500);
     }
 }

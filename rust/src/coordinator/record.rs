@@ -33,6 +33,15 @@
 //! identity (parity-gated down to the exact switch *sequence*), while
 //! the shadow-replay tick counter is a deterministic perf cell. Plain
 //! engine recordings carry none of it and stay byte-identical.
+//!
+//! Link-constrained runs (`serve --link-width W`) add a fourth gated
+//! block: the service-law parameters (width, latency, window), the
+//! ticket conservation counters (issued always equals completed on a
+//! finished run), the per-reason backpressure stall counts, the
+//! occupancy/ticket-wait percentiles, and the exact integer transport
+//! time ([`crate::coordinator::PcieStats::total_fs`]) as a
+//! deterministic perf cell. Unconstrained recordings carry none of it
+//! and stay byte-identical to pre-link artifacts.
 
 use std::fmt::Write as _;
 use std::time::{SystemTime, UNIX_EPOCH};
@@ -170,6 +179,36 @@ pub struct ServeRecord {
     pub portfolio_replay_ticks: u64,
     /// Jobs fed to shadow candidates across all replays.
     pub portfolio_replay_submissions: u64,
+    /// Link block ([`crate::coordinator::LinkTelemetry`]); the width
+    /// doubles as the presence marker — 0 for every unconstrained run,
+    /// which keeps default artifacts byte-identical to pre-link
+    /// recordings. Folded into the digest and the parity cells only
+    /// when present, so a narrow-link recording can never silently
+    /// pair with an unconstrained baseline.
+    pub link_width: u64,
+    /// Fixed per-transfer latency of the service law (ticks).
+    pub link_latency: u64,
+    /// Bounded in-flight ticket window.
+    pub link_window: u64,
+    /// Tickets issued; equals `link_completed` on a finished run.
+    pub link_issued: u64,
+    pub link_completed: u64,
+    /// Admission ticks refused because the wire was busy.
+    pub link_stall_busy: u64,
+    /// Admission ticks refused because the ticket window was full.
+    pub link_stall_window: u64,
+    /// Issued transfers that had to queue behind the serial wire.
+    pub link_stall_response: u64,
+    /// In-flight ticket occupancy percentiles (per-tick samples).
+    pub link_occupancy_p50: u64,
+    pub link_occupancy_max: u64,
+    /// Ticket wait (issue -> completion tick) percentiles.
+    pub link_wait_p50: u64,
+    pub link_wait_p95: u64,
+    /// Exact integer transport time (femtoseconds) — deterministic, so
+    /// it gates as a perf cell; rendered only on constrained records
+    /// to keep unconstrained artifacts byte-stable.
+    pub pcie_fs: u64,
 }
 
 impl ServeRecord {
@@ -257,6 +296,21 @@ impl ServeRecord {
                 .map_or_else(String::new, |p| p.switch_digest()),
             portfolio_replay_ticks: r.portfolio.as_ref().map_or(0, |p| p.replay_ticks),
             portfolio_replay_submissions: r.portfolio.as_ref().map_or(0, |p| p.replay_submissions),
+            // only link-constrained runs report telemetry; unbounded
+            // runs leave the whole block zero (unrendered)
+            link_width: r.link.as_ref().map_or(0, |l| l.width),
+            link_latency: r.link.as_ref().map_or(0, |l| l.latency),
+            link_window: r.link.as_ref().map_or(0, |l| l.window),
+            link_issued: r.link.as_ref().map_or(0, |l| l.issued),
+            link_completed: r.link.as_ref().map_or(0, |l| l.completed),
+            link_stall_busy: r.link.as_ref().map_or(0, |l| l.stall_busy),
+            link_stall_window: r.link.as_ref().map_or(0, |l| l.stall_window),
+            link_stall_response: r.link.as_ref().map_or(0, |l| l.stall_response),
+            link_occupancy_p50: r.link.as_ref().map_or(0, |l| l.occupancy.p50()),
+            link_occupancy_max: r.link.as_ref().map_or(0, |l| l.occupancy.max()),
+            link_wait_p50: r.link.as_ref().map_or(0, |l| l.wait.p50()),
+            link_wait_p95: r.link.as_ref().map_or(0, |l| l.wait.p95()),
+            pcie_fs: if r.link.is_some() { r.pcie.total_fs } else { 0 },
         };
         rec.digest = rec.compute_digest();
         rec
@@ -332,6 +386,25 @@ impl ServeRecord {
             for (name, wins) in &self.portfolio_wins {
                 let _ = write!(canon, "|pw:{name}={wins}");
             }
+        }
+        // the link service law and its deterministic ticket/stall
+        // outcome are identity — only when constrained, so unbounded
+        // digests are unchanged (and a narrow-link record can never
+        // collide with an unconstrained one). The exact transport time
+        // is deliberately excluded: `pcie_fs` is perf-gated.
+        if self.link_width > 0 {
+            let _ = write!(
+                canon,
+                "|l:{}/{}/{}:{}/{}:{}/{}/{}",
+                self.link_width,
+                self.link_latency,
+                self.link_window,
+                self.link_issued,
+                self.link_completed,
+                self.link_stall_busy,
+                self.link_stall_window,
+                self.link_stall_response
+            );
         }
         fnv1a64_hex(canon.as_bytes())
     }
@@ -479,6 +552,24 @@ impl Artifact for ServeRecord {
                 num(self.portfolio_replay_submissions as f64),
             ));
         }
+        // only link-constrained runs carry the link block (same compat
+        // pattern as the fault, shard and portfolio blocks above)
+        if self.link_width > 0 {
+            fields.push(("link_width", num(self.link_width as f64)));
+            fields.push(("link_latency", num(self.link_latency as f64)));
+            fields.push(("link_window", num(self.link_window as f64)));
+            fields.push(("link_issued", num(self.link_issued as f64)));
+            fields.push(("link_completed", num(self.link_completed as f64)));
+            fields.push(("link_stall_busy", num(self.link_stall_busy as f64)));
+            fields.push(("link_stall_window", num(self.link_stall_window as f64)));
+            fields.push(("link_stall_response", num(self.link_stall_response as f64)));
+            fields.push(("link_occupancy_p50", num(self.link_occupancy_p50 as f64)));
+            fields.push(("link_occupancy_max", num(self.link_occupancy_max as f64)));
+            fields.push(("link_wait_p50", num(self.link_wait_p50 as f64)));
+            fields.push(("link_wait_p95", num(self.link_wait_p95 as f64)));
+            // femtosecond counts overflow f64 exactness; go via string
+            fields.push(("pcie_fs", s(self.pcie_fs.to_string())));
+        }
         obj(fields)
     }
 
@@ -583,6 +674,25 @@ impl Artifact for ServeRecord {
             },
             portfolio_replay_ticks: opt_uint(j, "portfolio_replay_ticks")?,
             portfolio_replay_submissions: opt_uint(j, "portfolio_replay_submissions")?,
+            // absent on unconstrained artifacts; present fields are
+            // still strictly validated
+            link_width: opt_uint(j, "link_width")?,
+            link_latency: opt_uint(j, "link_latency")?,
+            link_window: opt_uint(j, "link_window")?,
+            link_issued: opt_uint(j, "link_issued")?,
+            link_completed: opt_uint(j, "link_completed")?,
+            link_stall_busy: opt_uint(j, "link_stall_busy")?,
+            link_stall_window: opt_uint(j, "link_stall_window")?,
+            link_stall_response: opt_uint(j, "link_stall_response")?,
+            link_occupancy_p50: opt_uint(j, "link_occupancy_p50")?,
+            link_occupancy_max: opt_uint(j, "link_occupancy_max")?,
+            link_wait_p50: opt_uint(j, "link_wait_p50")?,
+            link_wait_p95: opt_uint(j, "link_wait_p95")?,
+            pcie_fs: if j.get("pcie_fs").is_some() {
+                get_u64_str(j, "pcie_fs")?
+            } else {
+                0
+            },
         };
         // Pre-digest v1 artifacts (recorded before the artifact-layer
         // redesign) lack the field; recompute so they stay loadable and
@@ -709,6 +819,29 @@ impl Diffable for ServeRecord {
                 self.portfolio_replay_ticks.max(1) as f64,
             ));
         }
+        // link-constrained runs add a parity cell keyed by the service
+        // law, pinning the deterministic ticket and per-reason stall
+        // outcome, plus the exact integer transport-time perf cell
+        // (order-independent, hence deterministic — unlike wall time).
+        // Both are unmatched against any unconstrained baseline, so a
+        // narrow-link record never silently gate-passes against one
+        if self.link_width > 0 {
+            cells.push(PerfCell::parity(
+                format!(
+                    "link[w{}l{}q{}]",
+                    self.link_width, self.link_latency, self.link_window
+                ),
+                format!(
+                    "{}|{}|{}|{}|{}",
+                    self.link_issued,
+                    self.link_completed,
+                    self.link_stall_busy,
+                    self.link_stall_window,
+                    self.link_stall_response
+                ),
+            ));
+            cells.push(PerfCell::lower("pcie_fs", self.pcie_fs.max(1) as f64));
+        }
         cells
     }
 }
@@ -769,6 +902,63 @@ mod tests {
         )
         .unwrap();
         ServeRecord::from_report("test", &report)
+    }
+
+    fn link_record() -> ServeRecord {
+        let opts = ServeOpts::new()
+            .with_batch(3)
+            .with_link(super::super::link::LinkModel::with_width(4));
+        let report = serve_sources(
+            EngineId::Sos.build(5, 10, 0.5, Precision::Int8).unwrap(),
+            ArrivalSource::standard_mix(&WorkloadSpec::default(), 5, 90, 7, 2),
+            &opts,
+        )
+        .unwrap();
+        ServeRecord::from_report("test", &report)
+    }
+
+    #[test]
+    fn link_record_round_trips_and_self_diffs_clean() {
+        let rec = link_record();
+        assert_eq!(rec.link_width, 4, "the width doubles as the presence marker");
+        assert!(rec.link_issued > 0, "a served run issued tickets");
+        assert_eq!(
+            rec.link_issued, rec.link_completed,
+            "ticket conservation: every issued ticket retired"
+        );
+        assert!(rec.pcie_fs > 0, "transport time is billed on the link path");
+        let back = ServeRecord::parse(&rec.render()).expect("link artifact parses");
+        assert_eq!(rec, back);
+        let report = diff_records(&rec, &rec, &DiffOpts::default());
+        assert!(report.ok(), "{}", report.render());
+        assert_eq!(report.parity_breaks(), 0);
+        assert_eq!(
+            report.cells.len(),
+            10,
+            "8 standard + link parity + pcie_fs perf cells"
+        );
+    }
+
+    #[test]
+    fn link_and_unconstrained_records_never_pair_silently() {
+        let clean = small_record();
+        assert!(
+            !clean.render().contains("link"),
+            "unconstrained artifact carries no link block"
+        );
+        assert!(
+            !clean.render().contains("pcie_fs"),
+            "unconstrained artifact carries no transport-time cell"
+        );
+        let link = link_record();
+        assert_ne!(clean.digest, link.digest, "the service law is identity");
+        let report = diff_records(&clean, &link, &DiffOpts::default());
+        assert!(
+            !report.ok(),
+            "a narrow-link run must never gate-pass against an unconstrained baseline"
+        );
+        let reverse = diff_records(&link, &clean, &DiffOpts::default());
+        assert!(!reverse.ok(), "nor the other way around");
     }
 
     #[test]

@@ -67,6 +67,7 @@ use crate::metrics::{Histogram, MetricSet, ScheduleMetrics};
 use crate::workload::{generate_trace, Trace, WorkloadSpec};
 
 use super::adapter::EngineAdapter;
+use super::link::{LinkModel, LinkTelemetry, TimedLink};
 use super::pcie::{PcieModel, PcieStats};
 use super::shard::ShardTelemetry;
 
@@ -246,6 +247,11 @@ pub struct ServeReport {
     /// shadow-replay work counters). `None` for plain engines — keeps
     /// non-portfolio reports and artifacts byte-stable.
     pub portfolio: Option<PortfolioTelemetry>,
+    /// Timed-interconnect telemetry (ticket counts, typed stall
+    /// reasons, occupancy and wait histograms) when the run was
+    /// link-constrained (`serve --link-width W`). `None` for unbounded
+    /// runs — keeps historical reports and artifacts byte-stable.
+    pub link: Option<LinkTelemetry>,
 }
 
 impl ServeReport {
@@ -268,7 +274,7 @@ impl ServeReport {
                 "jobs_per_machine",
                 arr(m.jobs_per_machine.iter().map(|&c| num(c as f64)).collect()),
             ),
-            ("pcie_us", num(self.pcie.total_ns / 1000.0)),
+            ("pcie_us", num(self.pcie.total_ns() / 1000.0)),
             ("accel_cycles", num(self.accel_cycles as f64)),
             ("sources", num(self.sources.len() as f64)),
         ];
@@ -289,6 +295,15 @@ impl ServeReport {
             fields.push(("portfolio_live", s(p.live)));
             fields.push(("portfolio_switch_digest", s(p.switch_digest())));
             fields.push(("portfolio_replay_ticks", num(p.replay_ticks as f64)));
+        }
+        if let Some(l) = self.link.as_ref() {
+            fields.push(("link_width", num(l.width as f64)));
+            fields.push(("link_issued", num(l.issued as f64)));
+            fields.push(("link_completed", num(l.completed as f64)));
+            fields.push(("link_stall_busy", num(l.stall_busy as f64)));
+            fields.push(("link_stall_window", num(l.stall_window as f64)));
+            fields.push(("link_stall_response", num(l.stall_response as f64)));
+            fields.push(("link_wait_p95", num(l.wait.p95() as f64)));
         }
         obj(fields)
     }
@@ -324,6 +339,11 @@ pub struct ServeOpts {
     /// shard count — the pipeline refuses a mismatch up front, so a
     /// shard request can never silently run single-domain.
     pub shards: usize,
+    /// Timed-interconnect service law ([`super::link`]). `None` (the
+    /// default, the CLI's `--link-width 0`) runs unbounded and is
+    /// byte-identical to a build without the link layer; `Some(model)`
+    /// gates admission through backpressure tickets.
+    pub link: Option<LinkModel>,
 }
 
 impl Default for ServeOpts {
@@ -336,6 +356,7 @@ impl Default for ServeOpts {
             batch: usize::MAX,
             faults: None,
             shards: 1,
+            link: None,
         }
     }
 }
@@ -380,6 +401,13 @@ impl ServeOpts {
 
     pub fn with_shards(mut self, shards: usize) -> Self {
         self.shards = shards;
+        self
+    }
+
+    /// `None` clears a previously set model; `Some`/bare `LinkModel`
+    /// both work via `Into`.
+    pub fn with_link(mut self, link: impl Into<Option<LinkModel>>) -> Self {
+        self.link = link.into();
         self
     }
 }
@@ -502,6 +530,19 @@ pub fn serve_sources(
             ),
         }
     }
+    // A constrained link must describe a servable wire: zero-width or
+    // zero-window models would deadlock admission forever, so they are
+    // refused up front (the unbounded regime is spelled `link: None`).
+    if let Some(l) = opts.link.as_ref() {
+        if l.width == 0 || l.window == 0 {
+            crate::bail!(
+                "link model needs width >= 1 byte/tick and window >= 1 \
+                 (got width {}, window {})",
+                l.width,
+                l.window
+            );
+        }
+    }
     // Arm the fault layer up front: plan validation (machine bounds,
     // storm synthesis) and engine support both fail before any thread
     // spawns. Drop clauses never reach the engine — they become
@@ -597,6 +638,12 @@ pub fn serve_sources(
             std::collections::VecDeque::with_capacity(depth);
 
         let mut pcie = PcieStats::default();
+        // The timed interconnect, when constrained. Link state depends
+        // only on (virtual tick, issued byte sequence) — both pure
+        // functions of the merged arrival order — so everything it
+        // feeds back (admission gating, stall counts, completion ticks)
+        // is interleaving- and queue-depth-invariant by construction.
+        let mut link: Option<TimedLink> = opts.link.map(TimedLink::new);
         let mut metrics = MetricSet::new(machines, opts.metric_interval);
         let mut merge_depth = Histogram::new();
         let mut batch_sizes = Histogram::new();
@@ -617,22 +664,42 @@ pub fn serve_sources(
             // schedule and tick count stay interleaving-independent.
             if staged.is_empty() {
                 let next_arrival = heads.iter().flatten().map(|e| e.tick).min();
-                let target = engine
-                    .horizon()
-                    .jump_target(next_arrival, tick)
-                    .min(opts.max_ticks);
+                // Pending link completions are release-class events:
+                // merging them into the horizon means a jump can never
+                // skip a ticket retirement, so bulk accounting below
+                // stays bit-identical to per-tick driving.
+                let mut horizon = engine.horizon();
+                if let Some(l) = link.as_ref() {
+                    horizon = horizon.merge(super::Horizon::of(l.next_completion()));
+                }
+                let target = horizon.jump_target(next_arrival, tick).min(opts.max_ticks);
                 if target > tick + 1 {
                     merge_depth.record_n(0, target - 1 - tick);
+                    if let Some(l) = link.as_mut() {
+                        l.bulk_occupancy(target - 1 - tick);
+                    }
                     engine.advance_to(target - 1);
                     tick = target - 1;
                 }
             }
             tick += 1;
+            if let Some(l) = link.as_mut() {
+                l.begin_tick(tick);
+            }
             // arrivals for this tick: deterministic ordered merge into
             // the bounded merge queue, then batched admission (burst
             // serialization continues inside the engine's FIFO,
             // matching the hardware's host interface)
             let mut admitted = 0usize;
+            // Consume an admission ticket before any job may enter the
+            // engine this tick: a refused acquire throttles the whole
+            // tick's admission with its typed reason, and the refused
+            // jobs simply stay in the merge queue — never dropped,
+            // never reordered (the merge itself keeps running below).
+            let admission = match link.as_ref() {
+                Some(l) => l.try_acquire(tick),
+                None => Ok(()),
+            };
             loop {
                 while staged.len() < depth {
                     let next = heads
@@ -654,6 +721,14 @@ pub fn serve_sources(
                     }
                     job.id += (src as u64) << 32;
                     staged.push_back(job);
+                }
+                if let Err(why) = admission {
+                    if !staged.is_empty() {
+                        link.as_mut()
+                            .expect("gate refusals only come from a link")
+                            .note_admission_stall(why);
+                    }
+                    break;
                 }
                 let budget = batch.saturating_sub(admitted);
                 if budget == 0 || staged.is_empty() {
@@ -690,10 +765,22 @@ pub fn serve_sources(
             }
             // transport accounting: one round-trip per scheduling
             // iteration that talks to the accelerator (assignment and/or
-            // releases)
+            // releases). Under a constrained link the same round trip
+            // additionally acquires a ticket: admission ticks start it
+            // on a wire try_acquire just proved free, while
+            // response-only ticks may queue behind the backlog (counted
+            // as ResponseStalled — responses are delayed, never lost).
             if out.assigned.is_some() || !out.co_assigned.is_empty() || !out.released.is_empty()
             {
                 opts.pcie.charge(&mut pcie, machines, out.released.len());
+                if let Some(l) = link.as_mut() {
+                    let bytes = opts.pcie.request_bytes(machines)
+                        + opts.pcie.response_bytes(out.released.len());
+                    l.issue(tick, bytes);
+                }
+            }
+            if let Some(l) = link.as_mut() {
+                l.end_tick();
             }
             // multi-domain engines (the sharded coordinator) assign up
             // to one job per shard per tick; co_assigned carries the
@@ -714,10 +801,19 @@ pub fn serve_sources(
                     .expect("worker alive");
             }
 
+            // A constrained run also waits for the wire to drain, so
+            // `issued == completed` holds on every finished report (the
+            // ticket-conservation invariant) and `ticks` covers the
+            // final response's flight time.
+            let link_drained = match link.as_ref() {
+                Some(l) => l.is_drained(),
+                None => true,
+            };
             if released_count + dropped as usize == total_jobs + injected_total
                 && engine.is_idle()
                 && staged.is_empty()
                 && heads.iter().all(Option::is_none)
+                && link_drained
             {
                 break;
             }
@@ -759,6 +855,7 @@ pub fn serve_sources(
         // only when there is more than one domain to tell apart.
         let shards = engine.shard_stats().filter(|t| t.shards() > 1);
         let portfolio = engine.portfolio_stats();
+        let link = link.map(TimedLink::into_telemetry);
         Ok(ServeReport {
             engine: engine.label(),
             metrics: metrics.finish(),
@@ -776,6 +873,7 @@ pub fn serve_sources(
             faults,
             shards,
             portfolio,
+            link,
         })
     })
 }
@@ -1133,6 +1231,10 @@ mod tests {
             "rebalance_moves",
             "portfolio_windows",
             "portfolio_switch_digest",
+            "link_width",
+            "link_issued",
+            "link_stall_busy",
+            "link_wait_p95",
         ] {
             assert!(
                 j.get(gated).is_none(),
@@ -1177,6 +1279,91 @@ mod tests {
         }
         assert!(j.get("fault").is_none());
         assert!(j.get("shards").is_none());
+    }
+
+    #[test]
+    fn narrow_link_throttles_but_never_drops_jobs() {
+        use super::super::link::LinkModel;
+        let spec = WorkloadSpec::bursty();
+        let r = serve_sources(
+            EngineId::Sos.build(5, 10, 0.5, Precision::Int8).unwrap(),
+            vec![ArrivalSource::synthetic("s", spec.clone(), 5, 120, 5)],
+            &ServeOpts::new().with_link(LinkModel::with_width(4)),
+        )
+        .unwrap();
+        // graceful degradation: every job still completes, exactly once
+        assert_eq!(r.completions.len(), 120);
+        let mut ids: Vec<u64> = r.completions.iter().map(|c| c.job.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 120, "no job completed twice");
+        let l = r.link.expect("constrained run reports link telemetry");
+        assert_eq!(l.width, 4);
+        // ticket conservation: the loop drains the wire before exiting
+        assert_eq!(l.issued, l.completed);
+        assert!(l.issued > 0);
+        // a 4 B/tick wire under the bursty mix must actually push back
+        assert!(l.total_stalls() > 0, "narrow link must report stalls");
+        assert!(l.wait.count() == l.completed);
+        // and the same scenario unbounded carries no link block at all
+        let clean = serve_sources(
+            EngineId::Sos.build(5, 10, 0.5, Precision::Int8).unwrap(),
+            vec![ArrivalSource::synthetic("s", spec, 5, 120, 5)],
+            &ServeOpts::default(),
+        )
+        .unwrap();
+        assert!(clean.link.is_none());
+        assert!(
+            r.ticks > clean.ticks,
+            "a saturated wire must stretch virtual drain time ({} vs {})",
+            r.ticks,
+            clean.ticks
+        );
+    }
+
+    #[test]
+    fn constrained_serve_is_queue_depth_invariant() {
+        use super::super::link::LinkModel;
+        let run = |depth: usize| {
+            serve_sources(
+                EngineId::Sos.build(5, 10, 0.5, Precision::Int8).unwrap(),
+                ArrivalSource::standard_mix(&WorkloadSpec::default(), 5, 100, 23, 2),
+                &ServeOpts::new()
+                    .with_queue_depth(depth)
+                    .with_link(LinkModel::with_width(6)),
+            )
+            .unwrap()
+        };
+        let a = run(2);
+        let b = run(256);
+        assert_eq!(a.completions, b.completions);
+        assert_eq!(a.ticks, b.ticks);
+        let (la, lb) = (a.link.unwrap(), b.link.unwrap());
+        assert_eq!(la.issued, lb.issued);
+        assert_eq!(
+            (la.stall_busy, la.stall_window, la.stall_response),
+            (lb.stall_busy, lb.stall_window, lb.stall_response),
+            "typed stall counts are interleaving-invariant"
+        );
+        assert_eq!(la.occupancy.p50(), lb.occupancy.p50());
+        assert_eq!(la.wait.p95(), lb.wait.p95());
+    }
+
+    #[test]
+    fn degenerate_link_models_are_refused() {
+        use super::super::link::LinkModel;
+        for model in [
+            LinkModel { width: 0, latency: 1, window: 8 },
+            LinkModel { width: 8, latency: 1, window: 0 },
+        ] {
+            let err = serve_sources(
+                EngineId::Sos.build(5, 10, 0.5, Precision::Int8).unwrap(),
+                vec![ArrivalSource::synthetic("s", WorkloadSpec::default(), 5, 10, 1)],
+                &ServeOpts::new().with_link(model),
+            )
+            .unwrap_err();
+            assert!(err.to_string().contains("link model"), "{err}");
+        }
     }
 
     #[test]

@@ -40,6 +40,13 @@
 //! `serve --shards 1` is bit-identical to the unsharded pipeline
 //! (digest, tick count, completions; pinned by `tests/sharding.rs`).
 //!
+//! Under `serve --link-width W` the sharded router consumes
+//! backpressure tickets through the same admission gate as a single
+//! park: one [`super::link::TimedLink`] fronts the whole router, the
+//! serve loop parks merged arrivals until the wire grants a ticket,
+//! and the routed sequence the shards see is the admitted sequence —
+//! so per-shard digests stay deterministic with or without the link.
+//!
 //! # Faults
 //!
 //! Machine-scoped fault clauses (`down=`/`slow=`) address machines

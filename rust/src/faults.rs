@@ -22,6 +22,7 @@
 //! |-----------------|----------------------------------------------------------------|
 //! | `down=M@T+D`    | machine `M` goes down at tick `T`, back up at `T+D`            |
 //! | `down=M..N@T+D` | rack-scale correlated failure: machines `M..=N` down together  |
+//! | `downs=K@T+D`   | correlated random failure: `K` distinct seed-sampled machines  |
 //! | `slow=M@T+DxF`  | machine `M` straggles ×`F` for arrivals assigned in `[T, T+D)` |
 //! | `storm=K@T`     | `K` correlated synthetic jobs injected at tick `T`             |
 //! | `drop=S@T`      | arrival source `S` drops every event with tick ≥ `T` (serve)   |
@@ -30,7 +31,8 @@
 //!
 //! Determinism: the spec is the only input — storm jobs are synthesized
 //! from `seed` via the same [`crate::workload::Rng`] substrate as the
-//! workload generators, events fire in (tick, clause-order) order, and a
+//! workload generators (and `downs=` samples its machine set from the
+//! same per-clause streams), events fire in (tick, clause-order) order, and a
 //! down machine's evicted slots re-enter the arrival FIFO in schedule
 //! order. Two runs with the same spec produce identical schedules for
 //! any thread count or queue depth; the canonical [`FaultSpec::render`]
@@ -82,6 +84,15 @@ pub enum FaultClause {
     /// `M..M` range is canonicalized to a plain [`FaultClause::Down`]
     /// at parse time.
     DownRange { first: MachineId, last: MachineId, at: u64, dur: u64 },
+    /// Correlated *random* failure: `count` distinct machines — sampled
+    /// at plan time from the spec seed via the clause's own RNG stream,
+    /// then sorted ascending — all go down at `at`, back up at
+    /// `at + dur`. Like [`FaultClause::DownRange`], the plan expands it
+    /// to per-machine down/up events, so the engine fault loop and
+    /// [`FaultPlan::split_shards`] stay sampling-oblivious and a
+    /// sharded run sees exactly the per-machine events a single park
+    /// would.
+    Downs { count: usize, at: u64, dur: u64 },
     Slow { machine: MachineId, at: u64, dur: u64, factor: u32 },
     Storm { jobs: usize, at: u64 },
     Drop { source: usize, at: u64 },
@@ -96,8 +107,8 @@ pub struct FaultSpec {
 }
 
 /// Accepted clause vocabulary, interpolated into every parse error.
-pub const USAGE: &str =
-    "down=M@T+D, down=M..N@T+D, slow=M@T+DxF, storm=K@T, drop=S@T, policy=lose|resume, seed=N";
+pub const USAGE: &str = "down=M@T+D, down=M..N@T+D, downs=K@T+D, slow=M@T+DxF, storm=K@T, \
+                         drop=S@T, policy=lose|resume, seed=N";
 
 fn parse_u64(what: &str, s: &str) -> Result<u64> {
     s.trim()
@@ -156,6 +167,19 @@ impl FaultSpec {
                             dur,
                         });
                     }
+                }
+                "downs" => {
+                    let (k, rest) = val
+                        .split_once('@')
+                        .ok_or_else(|| err!("fault spec: downs=`{val}` wants K@T+D"))?;
+                    let (at, dur) = rest
+                        .split_once('+')
+                        .ok_or_else(|| err!("fault spec: downs=`{val}` wants K@T+D"))?;
+                    spec.clauses.push(FaultClause::Downs {
+                        count: parse_u64("machine count", k)? as usize,
+                        at: parse_u64("tick", at)?,
+                        dur: parse_u64("duration", dur)?,
+                    });
                 }
                 "slow" => {
                     let (m, rest) = val
@@ -221,6 +245,17 @@ impl FaultSpec {
                         bail!("fault spec: down duration must be >= 1");
                     }
                 }
+                FaultClause::Downs { count, at, dur } => {
+                    if count == 0 {
+                        bail!("fault spec: downs count must be >= 1");
+                    }
+                    if at == 0 {
+                        bail!("fault spec: downs at tick 0 (scheduler ticks start at 1)");
+                    }
+                    if dur == 0 {
+                        bail!("fault spec: downs duration must be >= 1");
+                    }
+                }
                 FaultClause::Slow { at, dur, factor, .. } => {
                     if at == 0 {
                         bail!("fault spec: slow at tick 0 (scheduler ticks start at 1)");
@@ -272,6 +307,7 @@ impl FaultSpec {
                 FaultClause::DownRange { first, last, at, dur } => {
                     format!("down={first}..{last}@{at}+{dur}")
                 }
+                FaultClause::Downs { count, at, dur } => format!("downs={count}@{at}+{dur}"),
                 FaultClause::Slow { machine, at, dur, factor } => {
                     format!("slow={machine}@{at}+{dur}x{factor}")
                 }
@@ -340,6 +376,28 @@ impl FaultSpec {
                     // order within the tick): the engine's fault loop and
                     // split_shards stay range-oblivious
                     for machine in first..=last {
+                        events.push(FaultEvent { tick: at, kind: FaultKind::Down(machine) });
+                        events.push(FaultEvent { tick: at + dur, kind: FaultKind::Up(machine) });
+                    }
+                }
+                FaultClause::Downs { count, at, dur } => {
+                    if count > machines {
+                        bail!("fault spec: downs={count} exceeds the park ({machines} machines)");
+                    }
+                    // Sample `count` distinct machines with a partial
+                    // Fisher-Yates over 0..machines, driven by the same
+                    // per-clause RNG stream scheme as storms — then sort
+                    // ascending so the per-machine expansion (and hence
+                    // split_shards) is canonical regardless of draw order.
+                    let mut rng = Rng::new(self.seed.wrapping_add((ci as u64 + 1) << 32));
+                    let mut pool: Vec<MachineId> = (0..machines).collect();
+                    for i in 0..count {
+                        let j = i + rng.below((machines - i) as u64) as usize;
+                        pool.swap(i, j);
+                    }
+                    let mut victims = pool[..count].to_vec();
+                    victims.sort_unstable();
+                    for machine in victims {
                         events.push(FaultEvent { tick: at, kind: FaultKind::Down(machine) });
                         events.push(FaultEvent { tick: at + dur, kind: FaultKind::Up(machine) });
                     }
@@ -605,6 +663,10 @@ mod tests {
             "down=1@2",          // missing +D
             "down=1@0+5",        // tick 0
             "down=1@5+0",        // zero duration
+            "downs=0@5+5",       // empty sample
+            "downs=2@0+5",       // tick 0
+            "downs=2@5+0",       // zero duration
+            "downs=2@5",         // missing +D
             "slow=1@5+5x1",      // factor 1 is a no-op
             "slow=1@5+5",        // missing xF
             "storm=0@5",         // empty storm
@@ -719,6 +781,41 @@ mod tests {
         assert!(FaultSpec::parse("down=1..4@0+5").is_err(), "tick 0");
         assert!(FaultSpec::parse("down=1..4@5+0").is_err(), "zero duration");
         assert!(FaultSpec::parse("down=a..4@5+5").is_err(), "non-numeric bound");
+    }
+
+    #[test]
+    fn downs_samples_distinct_machines_deterministically() {
+        let spec = FaultSpec::parse("downs=3@10+5,seed=11").unwrap();
+        assert_eq!(spec.render(), "downs=3@10+5,seed=11");
+        assert_eq!(FaultSpec::parse(&spec.render()).unwrap(), spec);
+        let victims = |p: &mut FaultPlan| -> Vec<MachineId> {
+            let mut out = Vec::new();
+            while let Some(ev) = p.pop_due(10) {
+                match ev.kind {
+                    FaultKind::Down(m) => out.push(m),
+                    other => panic!("expected down, got {other:?}"),
+                }
+            }
+            out
+        };
+        let a = victims(&mut spec.plan(8).unwrap());
+        let b = victims(&mut spec.plan(8).unwrap());
+        assert_eq!(a, b, "same spec, same sampled machine set");
+        assert_eq!(a.len(), 3);
+        assert!(a.windows(2).all(|w| w[0] < w[1]), "distinct + ascending: {a:?}");
+        assert!(a.iter().all(|&m| m < 8), "in range: {a:?}");
+        // the paired ups retire the same set, in the same order
+        let mut plan = spec.plan(8).unwrap();
+        let _ = victims(&mut plan);
+        for &m in &a {
+            assert!(matches!(plan.pop_due(15).unwrap().kind, FaultKind::Up(got) if got == m));
+        }
+        assert!(plan.is_done());
+        // K == park size downs every machine, whatever the seed
+        let all = victims(&mut FaultSpec::parse("downs=4@10+5,seed=99").unwrap().plan(4).unwrap());
+        assert_eq!(all, vec![0, 1, 2, 3]);
+        // the sample must fit the park — caught at plan time, like down=M
+        assert!(spec.plan(2).is_err(), "3 machines from a 2-park");
     }
 
     #[test]

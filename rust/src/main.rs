@@ -6,7 +6,7 @@ use stannic::artifact::{self, diff_records, resolve_threshold, Artifact, Diffabl
 use stannic::cli::{usage, Args, FlagSpec};
 use stannic::config::RunConfig;
 use stannic::coordinator::{
-    serve, serve_sources, ArrivalSource, ServeOpts, ServeRecord, ServeReport,
+    serve, serve_sources, ArrivalSource, LinkModel, ServeOpts, ServeRecord, ServeReport,
 };
 use stannic::core::MachinePark;
 use stannic::engine::EngineId;
@@ -41,6 +41,7 @@ fn flag_specs() -> Vec<FlagSpec> {
         FlagSpec::new("queue-depth", "serve: bounded depth of arrival/merge/worker queues (default 256)", true),
         FlagSpec::new("shards", "serve: split the park across K independent scheduling shards (default 1 = unsharded; sos engine only)", true),
         FlagSpec::new("faults", "serve/sweep: seeded fault spec, e.g. 'down=1@40+30,slow=0@20+40x4,storm=6@60,seed=7'", true),
+        FlagSpec::new("link-width", "serve/sweep: interconnect width in bytes/tick (default 0 = unbounded; admission throttles on backpressure tickets)", true),
         FlagSpec::new("quick", "reduced-effort runs for smoke testing", false),
         FlagSpec::new("scale", "sweep the Agon-scale grid (parks up to 140 machines)", false),
         FlagSpec::new("record", "persist results (sweep: BENCH_<label>.json, serve: serve record) at this path", true),
@@ -130,6 +131,12 @@ fn serve_opts_from(args: &Args) -> Result<ServeOpts> {
     if let Some(spec) = args.flag("faults") {
         opts =
             opts.with_faults(FaultSpec::parse(spec).with_ctx(|| "parsing --faults".to_string())?);
+    }
+    // width 0 is the unbounded default: no link is constructed and the
+    // pipeline stays byte-identical to the pre-link coordinator
+    let link_width = args.u64_flag("link-width", 0)?;
+    if link_width > 0 {
+        opts = opts.with_link(LinkModel::with_width(link_width));
     }
     Ok(opts)
 }
@@ -223,8 +230,28 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "PCIe              : {} txns, {} bytes, {:.1} us",
         report.pcie.transactions,
         report.pcie.bytes,
-        report.pcie.total_ns / 1000.0
+        report.pcie.total_ns() / 1000.0
     );
+    if let Some(l) = report.link.as_ref() {
+        println!(
+            "link              : {} B/tick, latency {} ticks, window {} ({} issued / {} completed)",
+            l.width, l.latency, l.window, l.issued, l.completed
+        );
+        println!(
+            "link stalls       : {} total ({} link-busy, {} window-full, {} response-stalled)",
+            l.total_stalls(),
+            l.stall_busy,
+            l.stall_window,
+            l.stall_response
+        );
+        println!(
+            "link occupancy    : p50 {} / max {} in flight; ticket wait p50 {} / p95 {} ticks",
+            l.occupancy.p50(),
+            l.occupancy.max(),
+            l.wait.p50(),
+            l.wait.p95()
+        );
+    }
     if report.accel_cycles > 0 {
         println!(
             "accelerator       : {} cycles = {:.3} ms at 371.47 MHz",
@@ -544,6 +571,11 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     }
     if let Some(name) = args.flag("workload") {
         cfg.workloads = vec![(name.to_string(), parse_workload(name)?)];
+    }
+    if args.flag("link-width").is_some() {
+        // 0 clears the axis (no link cells); any other value pins it
+        let w = args.u64_flag("link-width", 0)?;
+        cfg.link_widths = if w == 0 { Vec::new() } else { vec![w] };
     }
     if let Some(list) = args.flag("engines").or_else(|| args.flag("engine")) {
         cfg.engines = EngineId::parse_list(list)?;

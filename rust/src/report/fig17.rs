@@ -76,7 +76,7 @@ fn run_stannic(machines: usize, depth: usize, trace: &Trace) -> (f64, f64) {
     }
     (
         sim.stats().seconds_at(CLOCK_HZ),
-        pcie_stats.total_ns / 1e9,
+        pcie_stats.total_ns() / 1e9,
     )
 }
 

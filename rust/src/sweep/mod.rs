@@ -31,7 +31,8 @@ use std::sync::Mutex;
 use std::time::Instant;
 
 use crate::bench::Table;
-use crate::core::{JobId, MachinePark};
+use crate::coordinator::{LinkModel, PcieModel, TimedLink};
+use crate::core::{Job, JobId, MachinePark};
 use crate::engine::EngineId;
 use crate::faults::FaultSpec;
 use crate::metrics::{Histogram, MetricSet, ScheduleMetrics};
@@ -57,6 +58,11 @@ pub struct SweepCell {
     /// Faulted cells run the golden engine only (the fault layer lives
     /// there) and never pair with clean cells in parity or diff.
     pub fault: String,
+    /// Interconnect width in bytes/tick; 0 = unbounded (the historical
+    /// cell, bit-for-bit). Constrained cells run the golden engine only
+    /// behind a [`TimedLink`] admission gate and never pair with
+    /// unconstrained cells in parity or diff.
+    pub link_width: u64,
 }
 
 /// Measured outcome of one cell.
@@ -103,6 +109,12 @@ pub struct SweepConfig {
     /// scenario, *appended after* every clean cell so clean ids (and
     /// therefore clean artifacts) are unchanged by the axis.
     pub faults: Vec<String>,
+    /// Interconnect-width axis (bytes/tick): for each width the grid
+    /// gains one golden-engine cell per clean scenario, appended after
+    /// the fault axis — clean and faulted ids are unchanged, and an
+    /// empty axis (the default) leaves the grid bit-identical to
+    /// pre-link sweeps.
+    pub link_widths: Vec<u64>,
 }
 
 impl Default for SweepConfig {
@@ -124,6 +136,7 @@ impl Default for SweepConfig {
             seed: 42,
             threads: 0,
             faults: Vec::new(),
+            link_widths: Vec::new(),
         }
     }
 }
@@ -132,12 +145,14 @@ impl SweepConfig {
     /// A reduced grid for smoke runs: one park size, fewer jobs
     /// (3 workloads × 2 alphas × 5 engines = 30 clean cells), plus one
     /// chaos scenario (down + straggler + storm) fanned across the
-    /// clean scenarios on the golden engine — 6 faulted cells.
+    /// clean scenarios on the golden engine — 6 faulted cells — and a
+    /// narrow-interconnect axis (4 bytes/tick) — 6 link cells.
     pub fn quick() -> Self {
         SweepConfig {
             machine_counts: vec![5],
             jobs: 60,
             faults: vec!["down=1@40+30,slow=0@20+40x4,storm=6@60,seed=7".to_string()],
+            link_widths: vec![4],
             ..Self::default()
         }
     }
@@ -170,10 +185,12 @@ impl SweepConfig {
 
     /// Expand the grid into cells, id-ordered: every clean cell first
     /// (ids identical to a fault-free grid), then the fault axis —
-    /// golden-engine cells only, one per (scenario × fault).
+    /// golden-engine cells only, one per (scenario × fault) — then the
+    /// interconnect-width axis, golden-engine cells only again, one per
+    /// (scenario × width).
     pub fn cells(&self) -> Vec<SweepCell> {
         let mut out = Vec::new();
-        let push = |out: &mut Vec<SweepCell>, engines: &[EngineId], fault: &str| {
+        let push = |out: &mut Vec<SweepCell>, engines: &[EngineId], fault: &str, width: u64| {
             for (name, spec) in &self.workloads {
                 for &machines in &self.machine_counts {
                     for &alpha in &self.alphas {
@@ -191,6 +208,7 @@ impl SweepConfig {
                                     jobs: self.jobs,
                                     seed: self.seed,
                                     fault: fault.to_string(),
+                                    link_width: width,
                                 });
                             }
                         }
@@ -198,9 +216,12 @@ impl SweepConfig {
                 }
             }
         };
-        push(&mut out, &self.engines, "");
+        push(&mut out, &self.engines, "", 0);
         for fault in &self.faults {
-            push(&mut out, &[EngineId::Sos], fault);
+            push(&mut out, &[EngineId::Sos], fault, 0);
+        }
+        for &width in &self.link_widths {
+            push(&mut out, &[EngineId::Sos], "", width);
         }
         out
     }
@@ -218,6 +239,13 @@ impl SweepConfig {
 /// bulk-accounted since occupancy cannot change inside a jumped
 /// window). [`crate::scheduler::Horizon::Unknown`] engines run
 /// per-tick, which is the historical loop unchanged.
+///
+/// Link-constrained cells (`link_width > 0`) put a [`TimedLink`] in
+/// front of the engine: arrivals park in an admission queue until the
+/// wire is free, one ticket is issued per engine round trip, pending
+/// completion ticks merge into the jump horizon, and the cell only
+/// drains once the wire does. Width 0 constructs no link and is the
+/// historical loop, bit for bit.
 pub fn run_cell(cell: &SweepCell) -> CellResult {
     let wall_started = Instant::now();
     // cycled(5) is exactly the paper M1-M5 park, so one constructor
@@ -236,6 +264,10 @@ pub fn run_cell(cell: &SweepCell) -> CellResult {
             .install_faults(plan)
             .expect("faulted cells run the golden engine");
     }
+    let pcie = PcieModel::default();
+    let mut link = (cell.link_width > 0)
+        .then(|| TimedLink::new(LinkModel::with_width(cell.link_width)));
+    let mut pending: VecDeque<Job> = VecDeque::new();
 
     let mut metrics = MetricSet::new(cell.machines, 64);
     let mut hist = Histogram::new();
@@ -248,20 +280,53 @@ pub fn run_cell(cell: &SweepCell) -> CellResult {
 
     loop {
         let next_arrival = events.peek().map(|e| e.tick);
-        let target = engine.horizon().jump_target(next_arrival, tick);
+        let mut horizon = engine.horizon();
+        if let Some(l) = link.as_ref() {
+            horizon = horizon.merge(crate::scheduler::Horizon::of(l.next_completion()));
+        }
+        // parked arrivals retry admission every tick: a jump may never
+        // skip a tick on which the wire could have freed up
+        let target = if pending.is_empty() {
+            horizon.jump_target(next_arrival, tick)
+        } else {
+            tick + 1
+        };
         if target > tick + 1 {
             // event-free window: machine occupancy cannot change, so the
             // per-tick utilization samples are all equal — bulk them
             let busy = in_flight.iter().filter(|&&n| n > 0).count() as u64;
             busy_machine_ticks += (target - 1 - tick) * busy;
+            if let Some(l) = link.as_mut() {
+                l.bulk_occupancy(target - 1 - tick);
+            }
             engine.advance_to(target - 1);
         }
         tick = target;
+        if let Some(l) = link.as_mut() {
+            l.begin_tick(tick);
+        }
         while events.peek().is_some_and(|e| e.tick <= tick) {
             let e = events.next().expect("peeked");
             if let Some(job) = &e.job {
                 arrivals.insert(job.id, job.arrival);
-                engine.submit(job.clone());
+                match link.as_ref() {
+                    // the timed link gates admission: arrivals park in
+                    // order and enter the engine on a free wire only
+                    Some(_) => pending.push_back(job.clone()),
+                    None => engine.submit(job.clone()),
+                }
+            }
+        }
+        if let Some(l) = link.as_mut() {
+            if !pending.is_empty() {
+                match l.try_acquire(tick) {
+                    Ok(()) => {
+                        while let Some(job) = pending.pop_front() {
+                            engine.submit(job);
+                        }
+                    }
+                    Err(why) => l.note_admission_stall(why),
+                }
             }
         }
         let out = engine
@@ -292,8 +357,21 @@ pub fn run_cell(cell: &SweepCell) -> CellResult {
             hist.record(tick - arrived);
             in_flight[*machine] -= 1;
         }
+        if let Some(l) = link.as_mut() {
+            // one round trip per active engine tick, billed with the
+            // PCIe byte model (mirrors the serve loop's dispatch path)
+            if out.assigned.is_some() || !out.released.is_empty() {
+                let bytes =
+                    pcie.request_bytes(cell.machines) + pcie.response_bytes(out.released.len());
+                l.issue(tick, bytes);
+            }
+            l.end_tick();
+        }
         busy_machine_ticks += in_flight.iter().filter(|&&n| n > 0).count() as u64;
-        if engine.is_idle() && events.peek().is_none() {
+        // a constrained cell drains only once the wire does: parked
+        // arrivals admitted and every issued ticket retired
+        let link_drained = link.as_ref().map_or(true, |l| l.is_drained());
+        if engine.is_idle() && events.peek().is_none() && pending.is_empty() && link_drained {
             break;
         }
         assert!(tick < 50_000_000, "sweep cell {} did not drain", cell.id);
@@ -375,9 +453,10 @@ impl SweepResults {
     /// a scenario must produce identical schedules. Returns the number
     /// of multi-engine scenario groups checked, or the first divergence.
     pub fn check_parity(&self) -> Result<usize, String> {
-        // the fault key is part of the scenario: a faulted cell can
-        // never be compared against (or pair with) a clean one
-        type ScenarioKey = (String, usize, u32, &'static str, String);
+        // the fault key and the link width are part of the scenario: a
+        // faulted or link-constrained cell can never be compared
+        // against (or pair with) a clean one
+        type ScenarioKey = (String, usize, u32, &'static str, String, u64);
         let mut groups: HashMap<ScenarioKey, &CellResult> = HashMap::new();
         let mut checked = 0usize;
         for r in &self.cells {
@@ -393,6 +472,7 @@ impl SweepResults {
                 r.cell.alpha.to_bits(),
                 r.cell.precision.name(),
                 r.cell.fault.clone(),
+                r.cell.link_width,
             );
             match groups.get(&key) {
                 None => {
@@ -461,7 +541,9 @@ impl SweepResults {
             let rs: Vec<&CellResult> = self
                 .cells
                 .iter()
-                .filter(|r| r.cell.engine == engine && r.cell.fault.is_empty())
+                .filter(|r| {
+                    r.cell.engine == engine && r.cell.fault.is_empty() && r.cell.link_width == 0
+                })
                 .collect();
             if rs.is_empty() {
                 continue;
@@ -498,6 +580,28 @@ impl SweepResults {
             }
             out.push_str(&t.render());
         }
+
+        // link widths per cell id, only when the sweep had a link axis —
+        // a default sweep's render stays byte-identical to earlier
+        // versions
+        let constrained: Vec<&CellResult> = self
+            .cells
+            .iter()
+            .filter(|r| r.cell.link_width > 0)
+            .collect();
+        if !constrained.is_empty() {
+            out.push_str("\nlink-constrained cells (golden engine)\n");
+            let mut t = Table::new(&["cell", "workload", "M", "link B/tick"]);
+            for r in &constrained {
+                t.row(vec![
+                    r.cell.id.to_string(),
+                    r.cell.workload.clone(),
+                    r.cell.machines.to_string(),
+                    r.cell.link_width.to_string(),
+                ]);
+            }
+            out.push_str(&t.render());
+        }
         out
     }
 }
@@ -518,6 +622,7 @@ mod tests {
             seed: 9,
             threads: 2,
             faults: Vec::new(),
+            link_widths: Vec::new(),
         }
     }
 
@@ -638,11 +743,24 @@ mod tests {
     fn fault_axis_appends_sos_only_cells_after_the_clean_grid() {
         let q = SweepConfig::quick();
         let cells = q.cells();
-        let clean: Vec<&SweepCell> = cells.iter().filter(|c| c.fault.is_empty()).collect();
+        let clean: Vec<&SweepCell> = cells
+            .iter()
+            .filter(|c| c.fault.is_empty() && c.link_width == 0)
+            .collect();
         let faulted: Vec<&SweepCell> = cells.iter().filter(|c| !c.fault.is_empty()).collect();
-        assert_eq!(clean.len(), 30, "clean quick grid unchanged by the axis");
+        let linked: Vec<&SweepCell> = cells.iter().filter(|c| c.link_width > 0).collect();
+        assert_eq!(clean.len(), 30, "clean quick grid unchanged by the axes");
         assert_eq!(faulted.len(), 6, "one chaos scenario x 6 clean scenarios");
         assert!(faulted.iter().all(|c| c.engine == EngineId::Sos));
+        // the link axis rides after the fault axis, golden engine only,
+        // never combined with a fault key
+        assert_eq!(linked.len(), 6, "one width x 6 clean scenarios");
+        assert!(linked.iter().all(|c| c.engine == EngineId::Sos));
+        assert!(linked.iter().all(|c| c.fault.is_empty()));
+        assert!(
+            faulted.iter().map(|c| c.id).max() < linked.iter().map(|c| c.id).min(),
+            "link cells are appended after the fault axis"
+        );
         // clean cells come first with the same dense ids a fault-free
         // grid would assign, so clean artifacts are unaffected
         let mut no_faults = q.clone();
@@ -713,6 +831,41 @@ mod tests {
         assert_eq!(again.ticks, p.ticks);
         // the aggregates table carries the portfolio column by name
         assert!(results.render().contains("portfolio"));
+    }
+
+    #[test]
+    fn link_axis_appends_sos_only_cells_and_throttles_deterministically() {
+        let mut cfg = tiny();
+        cfg.engines = vec![EngineId::Sos];
+        cfg.link_widths = vec![4];
+        let results = run_sweep(&cfg);
+        // clean and constrained cells are singleton scenario groups:
+        // parity never compares across the link axis
+        assert_eq!(results.check_parity().unwrap(), 0);
+        let clean = &results.cells[0];
+        let linked = &results.cells[1];
+        assert_eq!(clean.cell.link_width, 0);
+        assert_eq!(linked.cell.link_width, 4);
+        assert_eq!(linked.cell.engine, EngineId::Sos);
+        assert_eq!(
+            linked.metrics.jobs_per_machine.iter().sum::<usize>(),
+            40,
+            "the narrow link throttles admission but never drops jobs"
+        );
+        assert!(
+            linked.ticks > clean.ticks,
+            "a 4 B/tick wire costs virtual time: {} vs {}",
+            linked.ticks,
+            clean.ticks
+        );
+        // bit-reproducible: re-running the cell gives the identical result
+        let again = run_cell(&linked.cell);
+        assert_eq!(again.metrics.jobs_per_machine, linked.metrics.jobs_per_machine);
+        assert_eq!(again.metrics.avg_latency, linked.metrics.avg_latency);
+        assert_eq!(again.ticks, linked.ticks);
+        assert_eq!((again.p50, again.p95, again.p99), (linked.p50, linked.p95, linked.p99));
+        // and the render carries the constrained-cell table
+        assert!(results.render().contains("link-constrained cells"));
     }
 
     #[test]

@@ -53,6 +53,12 @@ pub struct CellRecord {
     /// non-empty, so clean artifacts stay byte-identical to pre-fault
     /// recordings (and `v1` files without the field keep parsing).
     pub fault: String,
+    /// Interconnect width in bytes/tick; 0 for unconstrained cells.
+    /// Same compat discipline as the fault key: part of the scenario
+    /// key, digest and rendered JSON only when non-zero, so
+    /// unconstrained artifacts stay byte-identical to pre-link
+    /// recordings.
+    pub link_width: u64,
     /// FNV-1a digest of the deterministic outcome; equal scenarios with
     /// different digests mean scheduling semantics changed.
     pub digest: String,
@@ -84,6 +90,7 @@ impl CellRecord {
             jobs: r.cell.jobs,
             seed: r.cell.seed,
             fault: r.cell.fault.clone(),
+            link_width: r.cell.link_width,
             digest: String::new(),
             jobs_per_machine: r.metrics.jobs_per_machine.clone(),
             avg_latency: r.metrics.avg_latency,
@@ -122,6 +129,11 @@ impl CellRecord {
         if !self.fault.is_empty() {
             let _ = write!(key, "|f:{}", self.fault);
         }
+        // the link width is scenario identity too: a constrained cell
+        // must never be diffed against its unconstrained twin
+        if self.link_width > 0 {
+            let _ = write!(key, "|lw:{}", self.link_width);
+        }
         key
     }
 
@@ -147,6 +159,9 @@ impl CellRecord {
         );
         if !self.fault.is_empty() {
             let _ = write!(canon, "|{}", self.fault);
+        }
+        if self.link_width > 0 {
+            let _ = write!(canon, "|lw:{}", self.link_width);
         }
         fnv1a64_hex(canon.as_bytes())
     }
@@ -191,6 +206,10 @@ impl CellRecord {
         if !self.fault.is_empty() {
             fields.push(("fault", s(self.fault.clone())));
         }
+        // only link-constrained cells carry the width, same discipline
+        if self.link_width > 0 {
+            fields.push(("link_width", num(self.link_width as f64)));
+        }
         obj(fields)
     }
 
@@ -205,6 +224,7 @@ impl CellRecord {
             jobs: get_uint(j, "jobs")? as usize,
             seed: get_u64_str(j, "seed")?,
             fault: get_str(j, "fault").unwrap_or_default(),
+            link_width: get_uint(j, "link_width").unwrap_or(0),
             digest: get_str(j, "digest")?,
             jobs_per_machine: get_usize_arr(j, "jobs_per_machine")?,
             avg_latency: get_f64(j, "avg_latency")?,
@@ -336,6 +356,7 @@ mod tests {
             seed: 11,
             threads: 2,
             faults: Vec::new(),
+            link_widths: Vec::new(),
         };
         SweepRecord::from_results("test", &run_sweep(&cfg))
     }
@@ -357,6 +378,7 @@ mod tests {
             seed: 11,
             threads: 1,
             faults: vec!["storm=2@8,seed=3".to_string()],
+            link_widths: Vec::new(),
         };
         let rec = SweepRecord::from_results("test", &run_sweep(&cfg));
         assert_eq!(rec.cells.len(), 2, "one clean + one faulted cell");
@@ -371,6 +393,40 @@ mod tests {
         let back = SweepRecord::parse(&rec.render()).unwrap();
         assert_eq!(rec, back);
         assert_eq!(back.cells[1].fault, "storm=2@8,seed=3");
+    }
+
+    #[test]
+    fn link_cells_round_trip_and_never_pair_with_unconstrained() {
+        // unconstrained artifacts carry no link field at all
+        let clean = small_record();
+        assert!(!clean.render().contains("link_width"));
+
+        let cfg = SweepConfig {
+            engines: vec![EngineId::Sos],
+            workloads: vec![("even".to_string(), WorkloadSpec::even())],
+            machine_counts: vec![3],
+            alphas: vec![0.5],
+            precisions: vec![Precision::Int8],
+            depth: 6,
+            jobs: 30,
+            seed: 11,
+            threads: 1,
+            faults: Vec::new(),
+            link_widths: vec![4],
+        };
+        let rec = SweepRecord::from_results("test", &run_sweep(&cfg));
+        assert_eq!(rec.cells.len(), 2, "one clean + one constrained cell");
+        let (c, l) = (&rec.cells[0], &rec.cells[1]);
+        assert_eq!((c.link_width, l.link_width), (0, 4));
+        // same scenario otherwise, yet the keys (and digests) diverge:
+        // diff can never pair the constrained cell with the clean one
+        assert_ne!(c.key(), l.key());
+        assert!(l.key().ends_with("|lw:4"));
+        assert_ne!(c.digest, l.digest);
+        // the width survives the artifact round trip digest-checked
+        let back = SweepRecord::parse(&rec.render()).unwrap();
+        assert_eq!(rec, back);
+        assert_eq!(back.cells[1].link_width, 4);
     }
 
     #[test]

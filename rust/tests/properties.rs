@@ -241,6 +241,7 @@ fn prop_sweep_identical_across_worker_counts() {
             seed: rng.next_u64(),
             threads: 1,
             faults: Vec::new(),
+            link_widths: Vec::new(),
         };
         let one = run_sweep(&cfg);
         cfg.threads = 2;
